@@ -1,0 +1,94 @@
+//! End-to-end serving driver (the system-prop validation run): build an
+//! IVF-PQ index over a realistic synthetic collection, bring up the full
+//! three-layer stack — rust coordinator + PJRT engine executing the
+//! AOT-compiled JAX/Pallas coarse kernel — and serve batched queries,
+//! reporting latency percentiles, throughput and recall.
+//!
+//!     make artifacts && cargo run --release --example serving
+//!
+//! Flags: --n --nq --k --nprobe --codec --no-engine
+
+use std::sync::Arc;
+use zann::coordinator::{Coordinator, ServeConfig};
+use zann::datasets::{generate, groundtruth, Kind};
+use zann::index::{IvfBuildParams, IvfIndex, SearchParams, VectorMode};
+use zann::runtime::{default_artifact_dir, EngineHandle};
+use zann::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize("n", 200_000);
+    let nq = args.usize("nq", 4096);
+    let k = args.usize("k", 1024);
+    let dim = 32; // matches the shipped coarse__b64_k1024_d32 artifact
+    let codec = args.get_or("codec", "roc");
+
+    println!("[1/4] generating {} deep-like vectors (dim {dim})...", n);
+    let ds = generate(Kind::DeepLike, n, nq, dim, 7);
+
+    println!("[2/4] building IVF{k} + PQ16, ids via {codec}...");
+    let idx = Arc::new(IvfIndex::build(
+        &ds.data,
+        dim,
+        &IvfBuildParams {
+            k,
+            id_codec: codec.into(),
+            vectors: VectorMode::Pq { m: 16, bits: 8 },
+            ..Default::default()
+        },
+    ));
+    println!(
+        "      id payload {:.2} bits/id ({:.1}x vs 64-bit), codes {:.1} bits/vec",
+        idx.bits_per_id(),
+        64.0 / idx.bits_per_id(),
+        idx.code_bits() as f64 / idx.n as f64
+    );
+
+    println!("[3/4] starting engine + coordinator...");
+    let engine = if args.bool("no-engine") {
+        None
+    } else {
+        match EngineHandle::spawn(&default_artifact_dir()) {
+            Ok(h) => {
+                println!("      PJRT engine: {} compiled executables", h.num_executables);
+                Some(h)
+            }
+            Err(e) => {
+                println!("      engine unavailable ({e}); falling back to rust coarse path");
+                None
+            }
+        }
+    };
+    let coord = Coordinator::start(
+        idx.clone(),
+        engine,
+        ServeConfig {
+            batch_size: 64,
+            search: SearchParams { nprobe: args.usize("nprobe", 32), k: 10 },
+            ..Default::default()
+        },
+    );
+
+    println!("[4/4] serving {} queries...", nq);
+    let queries: Vec<Vec<f32>> = (0..nq).map(|qi| ds.query(qi).to_vec()).collect();
+    let t0 = std::time::Instant::now();
+    let responses = coord.client.search_many(queries).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+
+    // Recall against exact ground truth on a subset.
+    let sub = nq.min(500);
+    let gt = groundtruth::exact_knn(&ds.data, &ds.queries[..sub * dim], dim, 10, 8);
+    let results: Vec<Vec<u32>> = responses[..sub]
+        .iter()
+        .map(|r| r.results.iter().map(|&(_, id)| id).collect())
+        .collect();
+    let recall = groundtruth::recall_at_k(&gt, 10, &results, 10);
+
+    println!("---------------------------------------------");
+    println!("throughput: {:.0} queries/s ({} queries in {:.3}s)", nq as f64 / wall, nq, wall);
+    println!("metrics:    {}", coord.metrics.summary());
+    println!("recall@10:  {recall:.3} (IVF-PQ, nprobe={})", args.usize("nprobe", 32));
+    let pjrt = responses.iter().filter(|r| r.via_pjrt).count();
+    println!("pjrt path:  {pjrt}/{} responses", responses.len());
+    coord.stop();
+}

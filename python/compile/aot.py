@@ -1,0 +1,106 @@
+"""AOT lowering: JAX (L2+L1) -> HLO text artifacts for the rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` crate) rejects; the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Each artifact is named ``<entry>__<shape-sig>.hlo.txt`` so the rust engine
+can key executables by (entry point, operand shapes).  A manifest file lists
+everything that was emitted.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Shape grid the benchmarks and the serving coordinator use.
+# (batch, K, d) for coarse assignment — K spans the paper's IVF sweep for
+# d=32 (the timing-bench dim) plus the per-dataset dims at K=1024.
+COARSE_SHAPES = [
+    (64, 256, 32),
+    (64, 512, 32),
+    (64, 1024, 32),
+    (64, 2048, 32),
+    (64, 1024, 64),
+    (64, 1024, 128),
+    (1, 1024, 32),
+]
+# (batch, M, KS, DS) for PQ LUTs — the PQ variants of Table 2 / Fig 2 at d=32.
+LUT_SHAPES = [
+    (64, 4, 256, 8),
+    (64, 8, 256, 4),
+    (64, 16, 256, 2),
+    (64, 32, 256, 1),
+    (64, 8, 1024, 4),  # PQ8x10: 10-bit sub-quantizers
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(fn, args, name: str, out_dir: str) -> dict:
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    sig = [list(a.shape) for a in args]
+    return {"file": fname, "entry": name.split("__")[0], "arg_shapes": sig}
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--quick", action="store_true", help="emit only the smoke-test artifact"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    coarse = COARSE_SHAPES[:1] if args.quick else COARSE_SHAPES
+    luts = [] if args.quick else LUT_SHAPES
+    for b, k, d in coarse:
+        name = f"coarse__b{b}_k{k}_d{d}"
+        manifest.append(
+            emit(model.coarse_assign, (f32(b, d), f32(k, d)), name, args.out_dir)
+        )
+        print(f"emitted {name}")
+    for b, m, ks, ds in luts:
+        name = f"pqlut__b{b}_m{m}_ks{ks}_ds{ds}"
+        manifest.append(
+            emit(
+                model.pq_lut_model,
+                (f32(b, m, ds), f32(m, ks, ds)),
+                name,
+                args.out_dir,
+            )
+        )
+        print(f"emitted {name}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Layer-1 Pallas kernel: blocked pairwise squared-L2 distance.
+
+The search-time hot spot of IVF coarse assignment is scoring a batch of
+queries against all K coarse centroids.  On TPU this is MXU work: we tile
+the (Q, D) x (D, K) contraction into VMEM-resident blocks of
+(BQ, D) x (D, BK) and accumulate ``-2 q . c^T`` on the systolic array,
+adding the squared norms on the way out.  The paper runs this part of the
+pipeline on CPU; the kernel is lowered with ``interpret=True`` so the same
+HLO executes on the PJRT CPU plugin (see DESIGN.md §Hardware-Adaptation).
+
+VMEM accounting (per grid step, f32):
+    BQ*D + D*BK + BQ*BK  floats.
+With the default BQ=64, BK=128 and D<=128 this is at most
+64*128 + 128*128 + 64*128 = 32K floats = 128 KiB, comfortably inside the
+~16 MiB VMEM budget; the block shapes are MXU-aligned (multiples of 8x128).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block sizes. BK is the lane dimension (128 = TPU lane width);
+# BQ is the sublane dimension (multiple of 8 for f32).
+DEFAULT_BQ = 64
+DEFAULT_BK = 128
+
+
+def _l2dist_kernel(q_ref, c_ref, qn_ref, cn_ref, o_ref):
+    """One (BQ, BK) output tile: qn + cn - 2 * q @ c^T."""
+    q = q_ref[...].astype(jnp.float32)  # (BQ, D)
+    c = c_ref[...].astype(jnp.float32)  # (BK, D)
+    # MXU contraction. preferred_element_type keeps accumulation in f32
+    # even for bf16 inputs.
+    dot = jax.lax.dot_general(
+        q,
+        c,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (BQ, BK)
+    o_ref[...] = qn_ref[...] + cn_ref[...] - 2.0 * dot
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk"))
+def l2dist(
+    queries: jnp.ndarray,
+    centroids: jnp.ndarray,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+) -> jnp.ndarray:
+    """Pairwise squared-L2 distances via the blocked Pallas kernel.
+
+    Args:
+      queries:   (Q, D) float array.
+      centroids: (K, D) float array.
+      bq, bk:    block sizes along Q and K.
+    Returns:
+      (Q, K) float32 distances.
+    """
+    if queries.ndim != 2 or centroids.ndim != 2:
+        raise ValueError("l2dist expects 2-D operands")
+    if queries.shape[1] != centroids.shape[1]:
+        raise ValueError(
+            f"dim mismatch: {queries.shape[1]} vs {centroids.shape[1]}"
+        )
+    nq, _ = queries.shape
+    nk, _ = centroids.shape
+
+    q = queries.astype(jnp.float32)
+    c = centroids.astype(jnp.float32)
+    # Squared norms are computed once outside the grid (O(ND) vs O(NKD))
+    # and streamed into each tile.
+    qn = jnp.sum(q * q, axis=1, keepdims=True)  # (Q, 1)
+    cn = jnp.sum(c * c, axis=1, keepdims=True).T  # (1, K)
+
+    # Pad every operand to block multiples; padded rows produce garbage
+    # rows/cols that are sliced away at the end.
+    qp = _pad_to(q, 0, bq)
+    cp = _pad_to(c, 0, bk)
+    qnp_ = _pad_to(qn, 0, bq)
+    cnp_ = _pad_to(cn, 1, bk)
+    gq = qp.shape[0] // bq
+    gk = cp.shape[0] // bk
+    d = qp.shape[1]
+
+    out = pl.pallas_call(
+        _l2dist_kernel,
+        grid=(gq, gk),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),  # queries: row block
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),  # centroids: col block
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),  # |q|^2
+            pl.BlockSpec((1, bk), lambda i, j: (0, j)),  # |c|^2
+        ],
+        out_specs=pl.BlockSpec((bq, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qp.shape[0], cp.shape[0]), jnp.float32),
+        interpret=True,  # CPU-PJRT target; see module docstring.
+    )(qp, cp, qnp_, cnp_)
+    return out[:nq, :nk]

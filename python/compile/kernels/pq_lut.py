@@ -1,0 +1,84 @@
+"""Layer-1 Pallas kernel: PQ ADC look-up-table construction.
+
+For asymmetric distance computation, each query needs a table
+``lut[m, k] = ||q[m] - C[m][k]||^2`` over the M sub-quantizers and their KS
+centroids.  The kernel grids over (query block, sub-quantizer) and computes
+one (BQ, KS) tile per step with a single MXU contraction over the sub-vector
+dimension DS.
+
+VMEM per step (f32): BQ*DS + KS*DS + BQ*KS floats — for BQ=64, KS=256,
+DS<=16: 64*16 + 256*16 + 64*256 = 21.5K floats = 86 KiB.  The KS=256 lane
+dimension is 2x the 128-lane width, i.e. two registers per sublane — fine.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 64
+
+
+def _pq_lut_kernel(q_ref, c_ref, o_ref):
+    """One (BQ, KS) tile of the LUT for a single sub-quantizer m."""
+    q = q_ref[0].astype(jnp.float32)  # (BQ, DS)   [m axis is blocked to 1]
+    c = c_ref[0].astype(jnp.float32)  # (KS, DS)
+    qn = jnp.sum(q * q, axis=1, keepdims=True)  # (BQ, 1)
+    cn = jnp.sum(c * c, axis=1, keepdims=True).T  # (1, KS)
+    dot = jax.lax.dot_general(
+        q,
+        c,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[0] = qn + cn - 2.0 * dot
+
+
+def _pad_axis0(x: jnp.ndarray, mult: int) -> jnp.ndarray:
+    rem = (-x.shape[0]) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[0] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("bq",))
+def pq_lut(
+    queries: jnp.ndarray, codebooks: jnp.ndarray, bq: int = DEFAULT_BQ
+) -> jnp.ndarray:
+    """ADC look-up tables.
+
+    Args:
+      queries:   (Q, M, DS) — queries split into sub-vectors.
+      codebooks: (M, KS, DS) — PQ codebooks.
+      bq:        query block size.
+    Returns:
+      (Q, M, KS) float32 tables.
+    """
+    if queries.ndim != 3 or codebooks.ndim != 3:
+        raise ValueError("pq_lut expects (Q,M,DS) and (M,KS,DS)")
+    nq, m, ds = queries.shape
+    mc, ks, dsc = codebooks.shape
+    if (m, ds) != (mc, dsc):
+        raise ValueError(f"shape mismatch: {queries.shape} vs {codebooks.shape}")
+
+    q = _pad_axis0(queries.astype(jnp.float32), bq)  # (Qp, M, DS)
+    # Kernel wants the m axis leading per tile: (M, BQ, DS).
+    qt = jnp.swapaxes(q, 0, 1)  # (M, Qp, DS)
+    c = codebooks.astype(jnp.float32)  # (M, KS, DS)
+    gq = q.shape[0] // bq
+
+    out = pl.pallas_call(
+        _pq_lut_kernel,
+        grid=(gq, m),
+        in_specs=[
+            pl.BlockSpec((1, bq, ds), lambda i, j: (j, i, 0)),
+            pl.BlockSpec((1, ks, ds), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, ks), lambda i, j: (j, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, q.shape[0], ks), jnp.float32),
+        interpret=True,
+    )(qt, c)
+    return jnp.swapaxes(out, 0, 1)[:nq]  # (Q, M, KS)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must match its oracle here to float32 tolerance for all shapes/dtypes the
+hypothesis sweep in python/tests generates.
+"""
+
+import jax.numpy as jnp
+
+
+def l2dist_ref(queries: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """Exact pairwise squared-L2 distances.
+
+    Args:
+      queries:   (Q, D) float array.
+      centroids: (K, D) float array.
+    Returns:
+      (Q, K) float32 array with ``out[i, j] = ||q_i - c_j||^2``.
+    """
+    q = queries.astype(jnp.float32)
+    c = centroids.astype(jnp.float32)
+    # Expanded form; numerically matches the kernel's |q|^2 + |c|^2 - 2qc.
+    qn = jnp.sum(q * q, axis=1, keepdims=True)  # (Q, 1)
+    cn = jnp.sum(c * c, axis=1, keepdims=True).T  # (1, K)
+    return qn + cn - 2.0 * (q @ c.T)
+
+
+def pq_lut_ref(queries: jnp.ndarray, codebooks: jnp.ndarray) -> jnp.ndarray:
+    """ADC look-up tables for a product quantizer.
+
+    Args:
+      queries:   (Q, M, DS)    — queries split into M sub-vectors of dim DS.
+      codebooks: (M, KS, DS)   — per-subquantizer codebooks (KS centroids).
+    Returns:
+      (Q, M, KS) float32, ``out[i, m, k] = ||q_i[m] - C[m][k]||^2``.
+    """
+    q = queries.astype(jnp.float32)  # (Q, M, DS)
+    c = codebooks.astype(jnp.float32)  # (M, KS, DS)
+    qn = jnp.sum(q * q, axis=2)[:, :, None]  # (Q, M, 1)
+    cn = jnp.sum(c * c, axis=2)[None, :, :]  # (1, M, KS)
+    dot = jnp.einsum("qmd,mkd->qmk", q, c)  # (Q, M, KS)
+    return qn + cn - 2.0 * dot

@@ -1,0 +1,43 @@
+"""Layer-2 JAX compute graphs.
+
+Two request-path computations are lowered to HLO and executed by the rust
+runtime (`rust/src/runtime/`):
+
+* ``coarse_assign``  — batched query -> coarse-centroid scoring for IVF
+  probe selection.  Returns the full (Q, K) distance matrix; the rust side
+  selects the nprobe smallest (cheap, K <= a few thousand) so the HLO stays
+  free of data-dependent shapes.
+* ``pq_lut_model``   — per-query ADC tables used by the IVF scan loop.
+
+Both call the Layer-1 Pallas kernels so the kernels lower into the same HLO
+module that rust loads.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.l2dist import l2dist
+from compile.kernels.pq_lut import pq_lut
+
+
+def coarse_assign(queries: jnp.ndarray, centroids: jnp.ndarray):
+    """(Q, D), (K, D) -> (Q, K) float32 squared-L2 distances."""
+    return (l2dist(queries, centroids),)
+
+
+def pq_lut_model(queries: jnp.ndarray, codebooks: jnp.ndarray):
+    """(Q, M, DS), (M, KS, DS) -> (Q, M, KS) float32 ADC tables."""
+    return (pq_lut(queries, codebooks),)
+
+
+def coarse_and_lut(
+    queries: jnp.ndarray, centroids: jnp.ndarray, codebooks: jnp.ndarray
+):
+    """Fused variant: one device round-trip per batch.
+
+    (Q, D), (K, D), (M, KS, DS) -> ((Q, K), (Q, M, KS)).
+    The query is reshaped to sub-vectors inside the graph so the rust side
+    feeds a single flat (Q, D) buffer for both outputs.
+    """
+    m, _, ds = codebooks.shape
+    qsub = queries.reshape(queries.shape[0], m, ds)
+    return (l2dist(queries, centroids), pq_lut(qsub, codebooks))

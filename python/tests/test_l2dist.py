@@ -1,0 +1,88 @@
+"""Pallas l2dist kernel vs pure-jnp oracle — the core L1 correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.l2dist import l2dist
+from compile.kernels.ref import l2dist_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32) * 3.0
+    return jnp.asarray(x, dtype=dtype)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    nq=st.integers(1, 130),
+    nk=st.integers(1, 300),
+    d=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_shape_sweep(nq, nk, d, seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (nq, d), jnp.float32)
+    c = _rand(rng, (nk, d), jnp.float32)
+    got = l2dist(q, c)
+    want = l2dist_ref(q, c)
+    assert got.shape == (nq, nk)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (33, 16), dtype)
+    c = _rand(rng, (70, 16), dtype)
+    got = l2dist(q, c)
+    want = l2dist_ref(q, c)
+    tol = 1e-3 if dtype == jnp.float32 else 0.35
+    np.testing.assert_allclose(got, want, rtol=0.05 if dtype != jnp.float32 else 1e-5, atol=tol)
+    assert got.dtype == jnp.float32
+
+
+@pytest.mark.parametrize(
+    "nq,nk,d", [(64, 128, 32), (64, 1024, 32), (1, 1, 1), (65, 129, 33)]
+)
+def test_exact_and_offbyone_blocks(nq, nk, d):
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (nq, d), jnp.float32)
+    c = _rand(rng, (nk, d), jnp.float32)
+    np.testing.assert_allclose(l2dist(q, c), l2dist_ref(q, c), rtol=1e-5, atol=1e-3)
+
+
+def test_identical_vectors_zero_distance():
+    rng = np.random.default_rng(2)
+    q = _rand(rng, (16, 24), jnp.float32)
+    dist = np.asarray(l2dist(q, q))
+    assert np.all(np.abs(np.diag(dist)) < 1e-2)
+
+
+def test_nearest_neighbor_agrees_with_ref():
+    rng = np.random.default_rng(3)
+    q = _rand(rng, (40, 32), jnp.float32)
+    c = _rand(rng, (200, 32), jnp.float32)
+    got = np.argmin(np.asarray(l2dist(q, c)), axis=1)
+    want = np.argmin(np.asarray(l2dist_ref(q, c)), axis=1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_block_size_invariance():
+    rng = np.random.default_rng(4)
+    q = _rand(rng, (50, 20), jnp.float32)
+    c = _rand(rng, (90, 20), jnp.float32)
+    a = l2dist(q, c, bq=8, bk=16)
+    b = l2dist(q, c, bq=64, bk=128)
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-4)
+
+
+def test_dim_mismatch_raises():
+    q = jnp.zeros((4, 8))
+    c = jnp.zeros((4, 9))
+    with pytest.raises(ValueError):
+        l2dist(q, c)

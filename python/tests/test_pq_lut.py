@@ -1,0 +1,59 @@
+"""Pallas pq_lut kernel vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.pq_lut import pq_lut
+from compile.kernels.ref import pq_lut_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nq=st.integers(1, 100),
+    m=st.integers(1, 16),
+    ks=st.sampled_from([16, 64, 256]),
+    ds=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_shape_sweep(nq, m, ks, ds, seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (nq, m, ds))
+    c = _rand(rng, (m, ks, ds))
+    got = pq_lut(q, c)
+    want = pq_lut_ref(q, c)
+    assert got.shape == (nq, m, ks)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("shape", [(64, 16, 256, 2), (64, 4, 256, 8), (3, 8, 1024, 4)])
+def test_paper_pq_variants(shape):
+    nq, m, ks, ds = shape
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (nq, m, ds))
+    c = _rand(rng, (m, ks, ds))
+    np.testing.assert_allclose(pq_lut(q, c), pq_lut_ref(q, c), rtol=1e-5, atol=1e-3)
+
+
+def test_lut_argmin_is_code_assignment():
+    """The LUT argmin must equal brute-force sub-vector assignment."""
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (20, 8, 4))
+    c = _rand(rng, (8, 64, 4))
+    lut = np.asarray(pq_lut(q, c))
+    got = np.argmin(lut, axis=2)  # (Q, M)
+    want = np.argmin(np.asarray(pq_lut_ref(q, c)), axis=2)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        pq_lut(jnp.zeros((4, 2, 3)), jnp.zeros((2, 16, 4)))

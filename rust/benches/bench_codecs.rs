@@ -1,0 +1,87 @@
+//! Codec microbenchmarks: encode/decode throughput per codec, plus wavelet
+//! select throughput (paper §5.2 discussion: "Most of the wall-time spent
+//! with ROC is due to the Fenwick Tree").
+//!
+//! `cargo bench --bench bench_codecs -- [--n 4096] [--universe 1000000]`
+
+use std::time::Instant;
+use zann::codecs::codec_by_name;
+use zann::eval::{fmt3, Table};
+use zann::util::cli::Args;
+use zann::util::Rng;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let universe = args.u64("universe", 1_000_000) as u32;
+    let n = args.usize("n", 4096);
+    let lists = args.usize("lists", 64);
+    let reps = args.usize("reps", 5);
+
+    let mut rng = Rng::new(args.u64("seed", 42));
+    let data: Vec<Vec<u32>> = (0..lists)
+        .map(|_| rng.sample_distinct(universe as u64, n).into_iter().map(|v| v as u32).collect())
+        .collect();
+    let total_ids = (lists * n) as f64;
+
+    println!("== codec microbench: {lists} lists x {n} ids from [0, {universe}) ==");
+    let mut t = Table::new(&["codec", "bits/id", "enc Mids/s", "dec Mids/s"]);
+    for name in ["unc64", "unc32", "compact", "ef", "roc"] {
+        let codec = codec_by_name(name).unwrap();
+        let mut enc_best = f64::INFINITY;
+        let mut blobs = Vec::new();
+        let mut bits = 0u64;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            blobs.clear();
+            bits = 0;
+            for l in &data {
+                let e = codec.encode(l, universe);
+                bits += e.bits;
+                blobs.push(e.bytes);
+            }
+            enc_best = enc_best.min(t0.elapsed().as_secs_f64());
+        }
+        let mut dec_best = f64::INFINITY;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            for blob in &blobs {
+                out.clear();
+                codec.decode(blob, universe, n, &mut out);
+            }
+            dec_best = dec_best.min(t0.elapsed().as_secs_f64());
+        }
+        t.row(vec![
+            name.into(),
+            fmt3(bits as f64 / total_ids),
+            fmt3(total_ids / enc_best / 1e6),
+            fmt3(total_ids / dec_best / 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Wavelet tree select throughput (the full-random-access path).
+    let seq: Vec<u32> = (0..(lists * n)).map(|_| rng.below(1024) as u32).collect();
+    for (label, storage) in [
+        ("wt", zann::codecs::wavelet::WtStorage::Flat),
+        ("wt1", zann::codecs::wavelet::WtStorage::Rrr),
+    ] {
+        let wt = zann::codecs::wavelet::WaveletTree::new(&seq, 1024, storage);
+        let t0 = Instant::now();
+        let mut acc = 0usize;
+        let queries = 100_000;
+        for i in 0..queries {
+            let sym = (i % 1024) as u32;
+            let cnt = wt.count(sym);
+            if cnt > 0 {
+                acc += wt.select(sym, (i as u64) % cnt).unwrap();
+            }
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{label}: {} selects/s (bits/id {}), checksum {acc}",
+            fmt3(queries as f64 / dt),
+            fmt3(wt.size_bits() as f64 / seq.len() as f64)
+        );
+    }
+}

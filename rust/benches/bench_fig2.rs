@@ -1,0 +1,5 @@
+//! Regenerates the paper's Figure 2 (slowdown vs PQ dimensionality).
+fn main() {
+    let args = zann::util::cli::Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    zann::eval::bench_entries::fig2(&args);
+}

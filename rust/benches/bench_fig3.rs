@@ -1,0 +1,5 @@
+//! Regenerates the paper's Figure 3 (cluster-conditioned PQ code compression).
+fn main() {
+    let args = zann::util::cli::Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    zann::eval::bench_entries::fig3(&args);
+}

@@ -1,0 +1,6 @@
+//! Regenerates the paper's Table 1 (bits/id for IVF and NSG indices).
+//! `cargo bench --bench bench_table1 -- [--full] [--dataset sift] [--n N]`
+fn main() {
+    let args = zann::util::cli::Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    zann::eval::bench_entries::table1(&args);
+}

@@ -1,0 +1,5 @@
+//! Regenerates the paper's Table 3 (offline graph compression: REC vs Zuckerli).
+fn main() {
+    let args = zann::util::cli::Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    zann::eval::bench_entries::table3(&args);
+}

@@ -1,0 +1,5 @@
+//! Regenerates the paper's Table 4 (scaled large-N IVF-PQ: bits/id + search time).
+fn main() {
+    let args = zann::util::cli::Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    zann::eval::bench_entries::table4(&args);
+}

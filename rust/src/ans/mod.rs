@@ -1,0 +1,457 @@
+//! Asymmetric numeral systems (range variant), 64-bit head with 32-bit
+//! stream words — the coder behind ROC, REC and the PQ-code compressor.
+//!
+//! The state is a stack: `encode` pushes symbols, `decode` pops them in
+//! reverse order.  Crucially for bits-back coding (paper §3.2), `decode`
+//! can also be called on an *arbitrary* distribution to "sample" a symbol
+//! while removing `-log2 p(symbol)` bits from the state; re-encoding the
+//! symbol restores the state exactly.  [`Ans::decode_uniform`] /
+//! [`Ans::encode_uniform`] are that primitive for `Uniform([0, m))`, the
+//! only model ROC needs; quantized-frequency models back REC's Pólya urn
+//! and the Fig.-3 code compressor.
+//!
+//! Invariant: `head` is in `[2^32, 2^64)` except transiently before the
+//! first renormalization-in; encode renormalizes *out* (pushing low 32 bits
+//! to the stream) exactly when decode would renormalize *in*, which makes
+//! every (encode, decode) pair a perfect inverse — the property all codecs
+//! here rely on and the tests assert.
+
+pub mod adaptive;
+
+pub use adaptive::ReverseAdaptiveCoder;
+
+/// Lower bound of the normalized interval.
+const LOW: u64 = 1 << 32;
+
+/// rANS coder state: 64-bit head plus a stack of 32-bit words.
+#[derive(Clone, Debug)]
+pub struct Ans {
+    pub head: u64,
+    pub stream: Vec<u32>,
+}
+
+impl Default for Ans {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Ans {
+    /// Fresh state. Starting at `LOW` costs 32 bits that are never
+    /// recovered — the "initial bits" of the paper's §3.2 (visible in the
+    /// NSG16 row of Table 1).
+    pub fn new() -> Self {
+        Ans { head: LOW, stream: Vec::new() }
+    }
+
+    /// Rescaled cumulative boundary: `C(z) = floor(z·2^32 / m)`.
+    ///
+    /// Every op's `(f, c, m)` interval is mapped to `[C(c), C(c+f))` out of
+    /// a 2^32 total before touching the state. Streaming rANS renorm is
+    /// only exactly bijective when the denominator divides the word base;
+    /// with arbitrary `m` the floor in the renorm threshold desyncs
+    /// encoder and decoder with ~2^-20 probability per op — invisible in
+    /// small tests, fatal on a 10^6-op REC stream. The rescaling costs
+    /// ≤ `m/(f·2^32)` bits/op of rate.
+    #[inline]
+    fn boundary(z: u64, m: u32) -> u64 {
+        // z <= m < 2^32, so z << 32 < 2^64: plain u64 division suffices
+        // (u128 division here costs ~3x on the ROC/REC hot path).
+        debug_assert!(z <= m as u64);
+        (z << 32) / m as u64
+    }
+
+    /// Encode a symbol with quantized frequency `f`, cumulative frequency
+    /// `c` and total `m` (i.e. model probability f/m). Requires 0 < f <= m,
+    /// c + f <= m.
+    #[inline]
+    pub fn encode(&mut self, f: u32, c: u32, m: u32) {
+        debug_assert!(f > 0 && m > 0);
+        debug_assert!(c as u64 + f as u64 <= m as u64);
+        let c32 = Self::boundary(c as u64, m);
+        let f32 = Self::boundary(c as u64 + f as u64, m) - c32;
+        // Standard power-of-two renorm: total = 2^32, word = 32 bits.
+        let limit = f32 << 32; // f32 <= 2^32 so this fits u64 iff f32 < 2^32
+        if f32 < LOW {
+            while self.head >= limit {
+                self.stream.push(self.head as u32);
+                self.head >>= 32;
+            }
+        } // f32 == 2^32 (probability one): no renorm, update is identity.
+        self.head = (self.head / f32) * LOW + c32 + self.head % f32;
+        // Note: in the bits-back regime (decode on a near-fresh state) the
+        // head may legitimately sit below LOW with an empty stream; encode
+        // then also ends below LOW. The (encode, decode) bijection holds
+        // because the renormalization conditions mirror exactly.
+    }
+
+    /// Peek the current slot in `[0, m)`; the caller maps it to a symbol
+    /// via the model's inverse CDF and calls [`Ans::pop`] with that
+    /// symbol's (f, c).
+    #[inline]
+    pub fn peek(&self, m: u32) -> u32 {
+        let slot32 = self.head & (LOW - 1);
+        // Invert C: largest v with C(v) <= slot32 (the estimate below is
+        // off by at most one).
+        let mut v = ((slot32 as u128 * m as u128) >> 32) as u64;
+        if Self::boundary(v + 1, m) <= slot32 {
+            v += 1;
+        }
+        debug_assert!(Self::boundary(v, m) <= slot32 && slot32 < Self::boundary(v + 1, m));
+        v as u32
+    }
+
+    /// Complete a decode started with [`Ans::peek`].
+    #[inline]
+    pub fn pop(&mut self, f: u32, c: u32, m: u32) {
+        let c32 = Self::boundary(c as u64, m);
+        let f32 = Self::boundary(c as u64 + f as u64, m) - c32;
+        let slot32 = self.head & (LOW - 1);
+        debug_assert!(c32 <= slot32 && slot32 < c32 + f32);
+        self.head = f32 * (self.head >> 32) + slot32 - c32;
+        while self.head < LOW {
+            match self.stream.pop() {
+                Some(w) => self.head = (self.head << 32) | w as u64,
+                // Popping past the initial state: keep head as-is. Codecs
+                // never do this for well-formed inputs.
+                None => break,
+            }
+        }
+    }
+
+    /// Encode `x` under `Uniform([0, m))`. Adds ~log2(m) bits.
+    #[inline]
+    pub fn encode_uniform(&mut self, x: u32, m: u32) {
+        debug_assert!(x < m);
+        let c32 = Self::boundary(x as u64, m);
+        let f32 = Self::boundary(x as u64 + 1, m) - c32;
+        if f32 < LOW {
+            let limit = f32 << 32;
+            while self.head >= limit {
+                self.stream.push(self.head as u32);
+                self.head >>= 32;
+            }
+        }
+        self.head = (self.head / f32) * LOW + c32 + self.head % f32;
+    }
+
+    /// Decode under `Uniform([0, m))`. Removes ~log2(m) bits. This is the
+    /// bits-back "sampling" primitive. (Specialized: shares the boundary
+    /// computations between peek and pop — the ROC/REC hot path.)
+    #[inline]
+    pub fn decode_uniform(&mut self, m: u32) -> u32 {
+        let slot32 = self.head & (LOW - 1);
+        let mut v = ((slot32 as u128 * m as u128) >> 32) as u64;
+        let mut lo = Self::boundary(v, m);
+        let mut hi = Self::boundary(v + 1, m);
+        if hi <= slot32 {
+            v += 1;
+            lo = hi;
+            hi = Self::boundary(v + 1, m);
+        }
+        self.head = (hi - lo) * (self.head >> 32) + slot32 - lo;
+        while self.head < LOW {
+            match self.stream.pop() {
+                Some(w) => self.head = (self.head << 32) | w as u64,
+                None => break,
+            }
+        }
+        v as u32
+    }
+
+    /// Exact size of the serialized state in bits: stream words plus the
+    /// 64-bit head. A fresh state therefore reports 64 bits — the
+    /// "initial bits" overhead of §3.2 that short lists cannot amortize.
+    pub fn size_bits(&self) -> usize {
+        self.stream.len() * 32 + 64
+    }
+
+    /// Net information content in bits relative to a fresh state
+    /// (fractional; useful for rate accounting in tests).
+    pub fn content_bits(&self) -> f64 {
+        self.stream.len() as f64 * 32.0 + (self.head as f64).log2() - 32.0
+    }
+
+    /// Serialize to bytes (stream words then head, little-endian).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.stream.len() * 4 + 12);
+        out.extend_from_slice(&(self.stream.len() as u32).to_le_bytes());
+        for w in &self.stream {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out.extend_from_slice(&self.head.to_le_bytes());
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
+        use anyhow::Context;
+        let n = u32::from_le_bytes(bytes.get(0..4).context("len")?.try_into()?) as usize;
+        let mut stream = Vec::with_capacity(n);
+        for i in 0..n {
+            let off = 4 + i * 4;
+            stream.push(u32::from_le_bytes(bytes.get(off..off + 4).context("word")?.try_into()?));
+        }
+        let off = 4 + n * 4;
+        let head = u64::from_le_bytes(bytes.get(off..off + 8).context("head")?.try_into()?);
+        Ok(Ans { head, stream })
+    }
+}
+
+/// A quantized probability model over `[0, n)` symbols with total mass `m`
+/// (not necessarily a power of two — rANS handles arbitrary denominators).
+pub trait FreqModel {
+    /// (frequency, cumulative frequency) of `x`.
+    fn f_c(&self, x: u32) -> (u32, u32);
+    /// Symbol whose cumulative interval contains `slot`.
+    fn symbol_of(&self, slot: u32) -> u32;
+    /// Total mass.
+    fn total(&self) -> u32;
+}
+
+/// Encode `x` under a [`FreqModel`].
+pub fn encode_sym<M: FreqModel>(ans: &mut Ans, model: &M, x: u32) {
+    let (f, c) = model.f_c(x);
+    ans.encode(f, c, model.total());
+}
+
+/// Decode a symbol under a [`FreqModel`].
+pub fn decode_sym<M: FreqModel>(ans: &mut Ans, model: &M) -> u32 {
+    let slot = ans.peek(model.total());
+    let x = model.symbol_of(slot);
+    let (f, c) = model.f_c(x);
+    ans.pop(f, c, model.total());
+    x
+}
+
+/// Dense count-based model (alphabet small enough to hold counts).
+#[derive(Clone, Debug)]
+pub struct CountModel {
+    pub freqs: Vec<u32>,
+    cum: Vec<u32>,
+}
+
+impl CountModel {
+    /// Build from raw frequencies (each > 0 to be encodable; zeros allowed
+    /// for symbols that never occur).
+    pub fn new(freqs: Vec<u32>) -> Self {
+        let mut cum = Vec::with_capacity(freqs.len() + 1);
+        let mut acc = 0u32;
+        for &f in &freqs {
+            cum.push(acc);
+            acc = acc.checked_add(f).expect("frequency overflow");
+        }
+        cum.push(acc);
+        CountModel { freqs, cum }
+    }
+
+    /// Laplace-smoothed model from symbol counts.
+    pub fn from_counts(counts: &[u64], alpha: u32) -> Self {
+        // Scale counts down if they would overflow the u32 total.
+        let total: u64 = counts.iter().sum::<u64>() + (alpha as u64) * counts.len() as u64;
+        let shift = (64 - (total.leading_zeros() as usize)).saturating_sub(30);
+        let freqs = counts
+            .iter()
+            .map(|&c| (((c >> shift) as u32).saturating_add(alpha)).max(alpha.max(1)))
+            .collect();
+        CountModel::new(freqs)
+    }
+}
+
+impl FreqModel for CountModel {
+    fn f_c(&self, x: u32) -> (u32, u32) {
+        (self.freqs[x as usize], self.cum[x as usize])
+    }
+
+    fn symbol_of(&self, slot: u32) -> u32 {
+        // Binary search the cumulative table: last index with cum <= slot.
+        match self.cum.binary_search(&slot) {
+            Ok(mut i) => {
+                // Skip zero-frequency symbols that share the boundary.
+                while self.freqs[i] == 0 {
+                    i += 1;
+                }
+                i as u32
+            }
+            Err(i) => (i - 1) as u32,
+        }
+    }
+
+    fn total(&self) -> u32 {
+        *self.cum.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn uniform_roundtrip_lifo() {
+        let mut ans = Ans::new();
+        let mut rng = Rng::new(1);
+        let mut sym = Vec::new();
+        for _ in 0..10_000 {
+            let m = 2 + rng.below(1 << 20) as u32;
+            let x = rng.below(m as u64) as u32;
+            ans.encode_uniform(x, m);
+            sym.push((x, m));
+        }
+        for &(x, m) in sym.iter().rev() {
+            assert_eq!(ans.decode_uniform(m), x);
+        }
+        // Fully drained back to the initial state.
+        assert_eq!(ans.head, 1 << 32);
+        assert!(ans.stream.is_empty());
+    }
+
+    #[test]
+    fn uniform_rate_is_log_m() {
+        let mut ans = Ans::new();
+        let m = 1000u32;
+        let n = 20_000;
+        let mut rng = Rng::new(2);
+        for _ in 0..n {
+            ans.encode_uniform(rng.below(m as u64) as u32, m);
+        }
+        let bits = ans.content_bits();
+        let ideal = n as f64 * (m as f64).log2();
+        assert!((bits - ideal).abs() / ideal < 1e-3, "bits={bits} ideal={ideal}");
+    }
+
+    #[test]
+    fn bits_back_decode_then_encode_restores_state() {
+        // The fundamental invertible-sampling property.
+        let mut ans = Ans::new();
+        let mut rng = Rng::new(3);
+        for _ in 0..2000 {
+            ans.encode_uniform(rng.below(1 << 16) as u32, 1 << 16);
+        }
+        let before_head = ans.head;
+        let before_stream = ans.stream.clone();
+        let mut drawn = Vec::new();
+        for i in 0..500u32 {
+            drawn.push(ans.decode_uniform(i + 2));
+        }
+        for i in (0..500u32).rev() {
+            ans.encode_uniform(drawn[i as usize], i + 2);
+        }
+        assert_eq!(ans.head, before_head);
+        assert_eq!(ans.stream, before_stream);
+    }
+
+    #[test]
+    fn count_model_roundtrip_and_rate() {
+        // Skewed model: check both correctness and near-entropy rate.
+        let freqs = vec![1u32, 2, 4, 8, 16, 32, 64, 128];
+        let model = CountModel::new(freqs.clone());
+        let total: u32 = freqs.iter().sum();
+        let probs: Vec<f64> = freqs.iter().map(|&f| f as f64 / total as f64).collect();
+        let entropy: f64 = probs.iter().map(|p| -p * p.log2()).sum();
+
+        let mut rng = Rng::new(4);
+        // Sample from the model itself.
+        let syms: Vec<u32> = (0..50_000)
+            .map(|_| {
+                let r = rng.below(total as u64) as u32;
+                model.symbol_of(r)
+            })
+            .collect();
+        let mut ans = Ans::new();
+        for &s in &syms {
+            encode_sym(&mut ans, &model, s);
+        }
+        let rate = ans.content_bits() / syms.len() as f64;
+        assert!((rate - entropy).abs() < 0.02, "rate={rate} H={entropy}");
+        for &s in syms.iter().rev() {
+            assert_eq!(decode_sym(&mut ans, &model), s);
+        }
+    }
+
+    #[test]
+    fn count_model_symbol_of_with_zero_freqs() {
+        let model = CountModel::new(vec![0, 3, 0, 0, 5, 0, 1]);
+        for slot in 0..model.total() {
+            let x = model.symbol_of(slot);
+            let (f, c) = model.f_c(x);
+            assert!(f > 0);
+            assert!(c <= slot && slot < c + f, "slot={slot} x={x}");
+        }
+    }
+
+    #[test]
+    fn large_stream_arbitrary_denominators_exact() {
+        // Regression: with arbitrary (non-power-of-two) denominators the
+        // pre-rescaling coder desynced with ~2^-20 probability per op —
+        // invisible at small scale, fatal on REC-sized streams. Push a
+        // million mixed ops through and drain back.
+        let mut ans = Ans::new();
+        let mut rng = Rng::new(0xbeef);
+        let mut log = Vec::with_capacity(1_000_000);
+        for i in 0..1_000_000u32 {
+            // Denominators sweep awkward values incl. primes and near-2^32.
+            let m = match i % 4 {
+                0 => 218_560,
+                1 => 3 + rng.below(1 << 27) as u32,
+                2 => u32::MAX - rng.below(1000) as u32,
+                _ => 2 + (i % 97),
+            };
+            let x = rng.below(m as u64) as u32;
+            ans.encode_uniform(x, m);
+            log.push((x, m));
+        }
+        for &(x, m) in log.iter().rev() {
+            assert_eq!(ans.decode_uniform(m), x);
+        }
+        assert_eq!(ans.head, 1 << 32);
+        assert!(ans.stream.is_empty());
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let mut ans = Ans::new();
+        let mut rng = Rng::new(5);
+        for _ in 0..1000 {
+            ans.encode_uniform(rng.below(1 << 24) as u32, 1 << 24);
+        }
+        let bytes = ans.to_bytes();
+        let back = Ans::from_bytes(&bytes).unwrap();
+        assert_eq!(back.head, ans.head);
+        assert_eq!(back.stream, ans.stream);
+    }
+
+    #[test]
+    fn size_bits_accounting() {
+        let ans = Ans::new();
+        assert_eq!(ans.size_bits(), 64); // fresh state: 64-bit head, no words
+        assert!(ans.content_bits().abs() < 1e-9);
+    }
+
+    #[test]
+    fn interleaved_models_roundtrip() {
+        // Mix uniform and count-model symbols in one state.
+        let model = CountModel::new(vec![5, 1, 9, 2, 7]);
+        let mut ans = Ans::new();
+        let mut rng = Rng::new(6);
+        let mut log = Vec::new();
+        for _ in 0..5000 {
+            if rng.f64() < 0.5 {
+                let m = 2 + rng.below(1000) as u32;
+                let x = rng.below(m as u64) as u32;
+                ans.encode_uniform(x, m);
+                log.push((true, x, m));
+            } else {
+                let x = rng.below(5) as u32;
+                encode_sym(&mut ans, &model, x);
+                log.push((false, x, 0));
+            }
+        }
+        for &(uni, x, m) in log.iter().rev() {
+            if uni {
+                assert_eq!(ans.decode_uniform(m), x);
+            } else {
+                assert_eq!(decode_sym(&mut ans, &model), x);
+            }
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Succinct bitvectors: plain rank/select ([`RsBitVec`]) and an
+//! RRR-compressed variant ([`rrr::RrrVec`]).
+//!
+//! These back the Elias-Fano codec (select1 over the unary upper-bits
+//! stream) and the wavelet tree (rank0/rank1 per level; WT1 swaps the flat
+//! bitmaps for RRR ones, trading select speed for space exactly as the
+//! paper describes).
+
+pub mod rrr;
+
+use crate::util::bits::BitBuf;
+
+/// Plain bitvector with o(n) rank and sampled select.
+///
+/// Layout: one absolute 64-bit rank sample per 512-bit superblock, plus the
+/// raw words; select1/select0 binary-search the samples then scan words.
+#[derive(Clone, Debug)]
+pub struct RsBitVec {
+    buf: BitBuf,
+    /// rank1 at the start of each 512-bit superblock.
+    rank_samples: Vec<u64>,
+    ones: u64,
+}
+
+const SUPER: usize = 512; // bits per superblock (8 words)
+
+impl RsBitVec {
+    pub fn new(buf: BitBuf) -> Self {
+        let n_super = buf.len.div_ceil(SUPER);
+        let mut rank_samples = Vec::with_capacity(n_super + 1);
+        let mut acc = 0u64;
+        for sb in 0..=n_super {
+            rank_samples.push(acc);
+            if sb == n_super {
+                break;
+            }
+            let w0 = sb * (SUPER / 64);
+            for w in w0..(w0 + SUPER / 64).min(buf.words.len()) {
+                let mut word = buf.words[w];
+                // Mask tail bits beyond len in the last word.
+                let bit0 = w * 64;
+                if bit0 + 64 > buf.len {
+                    let valid = buf.len - bit0;
+                    word &= if valid == 0 { 0 } else { u64::MAX >> (64 - valid) };
+                }
+                acc += word.count_ones() as u64;
+            }
+        }
+        RsBitVec { ones: acc, buf, rank_samples }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.len == 0
+    }
+
+    pub fn count_ones(&self) -> u64 {
+        self.ones
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        self.buf.get_bit(i)
+    }
+
+    /// Number of ones in `[0, i)`.
+    #[inline]
+    pub fn rank1(&self, i: usize) -> u64 {
+        debug_assert!(i <= self.buf.len);
+        let sb = i / SUPER;
+        let mut r = self.rank_samples[sb];
+        let w0 = sb * (SUPER / 64);
+        let wi = i / 64;
+        for w in w0..wi {
+            r += self.buf.words[w].count_ones() as u64;
+        }
+        let bit = i & 63;
+        if bit != 0 {
+            r += (self.buf.words[wi] & ((1u64 << bit) - 1)).count_ones() as u64;
+        }
+        r
+    }
+
+    /// Number of zeros in `[0, i)`.
+    #[inline]
+    pub fn rank0(&self, i: usize) -> u64 {
+        i as u64 - self.rank1(i)
+    }
+
+    /// Position of the k-th one (0-based); `None` if k >= count_ones.
+    pub fn select1(&self, k: u64) -> Option<usize> {
+        if k >= self.ones {
+            return None;
+        }
+        // Binary search superblock samples.
+        let mut lo = 0usize;
+        let mut hi = self.rank_samples.len() - 1;
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if self.rank_samples[mid] <= k {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        let mut rem = k - self.rank_samples[lo];
+        let w0 = lo * (SUPER / 64);
+        for w in w0..self.buf.words.len() {
+            let mut word = self.buf.words[w];
+            let bit0 = w * 64;
+            if bit0 + 64 > self.buf.len {
+                let valid = self.buf.len - bit0;
+                word &= if valid == 0 { 0 } else { u64::MAX >> (64 - valid) };
+            }
+            let c = word.count_ones() as u64;
+            if rem < c {
+                return Some(bit0 + select_in_word(word, rem as u32) as usize);
+            }
+            rem -= c;
+        }
+        None
+    }
+
+    /// Position of the k-th zero (0-based).
+    pub fn select0(&self, k: u64) -> Option<usize> {
+        let zeros = self.buf.len as u64 - self.ones;
+        if k >= zeros {
+            return None;
+        }
+        let mut lo = 0usize;
+        let mut hi = self.rank_samples.len() - 1;
+        // rank0 at superblock s = s*SUPER - rank_samples[s].
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            let r0 = (mid * SUPER).min(self.buf.len) as u64 - self.rank_samples[mid];
+            if r0 <= k {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        let mut rem = k - ((lo * SUPER).min(self.buf.len) as u64 - self.rank_samples[lo]);
+        let w0 = lo * (SUPER / 64);
+        for w in w0..self.buf.words.len() {
+            let bit0 = w * 64;
+            let valid = (self.buf.len - bit0).min(64);
+            let mask = if valid == 64 { u64::MAX } else { (1u64 << valid) - 1 };
+            let word = !self.buf.words[w] & mask;
+            let c = word.count_ones() as u64;
+            if rem < c {
+                return Some(bit0 + select_in_word(word, rem as u32) as usize);
+            }
+            rem -= c;
+        }
+        None
+    }
+
+    /// Size of the structure in bits (payload + rank samples).
+    pub fn size_bits(&self) -> usize {
+        self.buf.words.len() * 64 + self.rank_samples.len() * 64
+    }
+
+    /// Payload-only size in bits.
+    pub fn payload_bits(&self) -> usize {
+        self.buf.len
+    }
+}
+
+/// Position (0..64) of the k-th set bit of `word` (k < popcount).
+#[inline]
+pub fn select_in_word(mut word: u64, mut k: u32) -> u32 {
+    // Clear the k lowest set bits, then count trailing zeros.
+    while k > 0 {
+        word &= word - 1;
+        k -= 1;
+    }
+    word.trailing_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bits::BitWriter;
+    use crate::util::Rng;
+
+    fn make(bits: &[bool]) -> RsBitVec {
+        let mut w = BitWriter::new();
+        for &b in bits {
+            w.push_bit(b);
+        }
+        RsBitVec::new(w.finish())
+    }
+
+    fn naive_rank1(bits: &[bool], i: usize) -> u64 {
+        bits[..i].iter().filter(|&&b| b).count() as u64
+    }
+
+    #[test]
+    fn rank_select_small() {
+        let bits = vec![true, false, true, true, false, false, true];
+        let v = make(&bits);
+        assert_eq!(v.count_ones(), 4);
+        for i in 0..=bits.len() {
+            assert_eq!(v.rank1(i), naive_rank1(&bits, i), "rank1({i})");
+            assert_eq!(v.rank0(i), i as u64 - naive_rank1(&bits, i));
+        }
+        assert_eq!(v.select1(0), Some(0));
+        assert_eq!(v.select1(1), Some(2));
+        assert_eq!(v.select1(3), Some(6));
+        assert_eq!(v.select1(4), None);
+        assert_eq!(v.select0(0), Some(1));
+        assert_eq!(v.select0(2), Some(5));
+        assert_eq!(v.select0(3), None);
+    }
+
+    #[test]
+    fn rank_select_random_property() {
+        let mut rng = Rng::new(5);
+        for &density in &[0.02, 0.5, 0.93] {
+            for &n in &[1usize, 63, 64, 65, 511, 512, 513, 5000] {
+                let bits: Vec<bool> = (0..n).map(|_| rng.f64() < density).collect();
+                let v = make(&bits);
+                // rank at every position
+                let mut ones = 0u64;
+                for i in 0..n {
+                    assert_eq!(v.rank1(i), ones);
+                    if bits[i] {
+                        // select of this one must return i
+                        assert_eq!(v.select1(ones), Some(i));
+                        ones += 1;
+                    } else {
+                        assert_eq!(v.select0(i as u64 - v.rank1(i)), Some(i));
+                    }
+                }
+                assert_eq!(v.rank1(n), ones);
+                assert_eq!(v.count_ones(), ones);
+            }
+        }
+    }
+
+    #[test]
+    fn select_in_word_all_positions() {
+        let w = 0b1011_0100_1000u64;
+        let positions: Vec<u32> = (0..64).filter(|i| (w >> i) & 1 == 1).collect();
+        for (k, &p) in positions.iter().enumerate() {
+            assert_eq!(select_in_word(w, k as u32), p);
+        }
+    }
+
+    #[test]
+    fn empty_and_all_ones() {
+        let v = make(&[]);
+        assert_eq!(v.count_ones(), 0);
+        assert_eq!(v.select1(0), None);
+        let v = make(&vec![true; 1000]);
+        assert_eq!(v.count_ones(), 1000);
+        for k in 0..1000 {
+            assert_eq!(v.select1(k as u64), Some(k));
+        }
+    }
+}

@@ -1,0 +1,372 @@
+//! RRR compressed bitvector (Raman–Raman–Rao).
+//!
+//! Bits are grouped into 63-bit blocks; each block is stored as a
+//! (class, offset) pair where `class` is the popcount (6 bits) and `offset`
+//! is the block's index in the enumeration of all `C(63, class)` patterns
+//! (`ceil(log2 C(63, class))` bits — the combinatorial number system).
+//! Every `SAMPLE` blocks we store an absolute rank and a pointer into the
+//! offset stream, giving O(SAMPLE) rank/select with the usual
+//! entropy-compressed payload: `n H0 + o(n)` bits.
+//!
+//! This is the structure behind the paper's **WT1** variant: swapping the
+//! wavelet tree's flat bitmaps for RRR ones buys compression below
+//! `log2 K` bits/id at the cost of slower select (Table 1 / Table 2).
+
+use crate::util::bits::{BitBuf, BitWriter};
+
+pub const BLOCK: usize = 63;
+const SAMPLE: usize = 32; // blocks per rank/pointer sample
+
+/// Pascal's triangle up to n=63, C(n,k) as u64 (C(63,31) < 2^63).
+fn binomials() -> &'static [[u64; BLOCK + 1]; BLOCK + 1] {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<Box<[[u64; BLOCK + 1]; BLOCK + 1]>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = Box::new([[0u64; BLOCK + 1]; BLOCK + 1]);
+        for n in 0..=BLOCK {
+            t[n][0] = 1;
+            for k in 1..=n {
+                t[n][k] = t[n - 1][k - 1] + if k <= n - 1 { t[n - 1][k] } else { 0 };
+            }
+        }
+        t
+    })
+}
+
+/// Bits needed for the offset of a class-k block (precomputed — this is
+/// on the rank/select hot path of WT1).
+#[inline]
+fn offset_bits(k: usize) -> u32 {
+    static BITS: std::sync::OnceLock<[u32; BLOCK + 1]> = std::sync::OnceLock::new();
+    BITS.get_or_init(|| {
+        let bin = binomials();
+        let mut t = [0u32; BLOCK + 1];
+        for (k, slot) in t.iter_mut().enumerate() {
+            let c = bin[BLOCK][k];
+            *slot = if c <= 1 { 0 } else { 64 - (c - 1).leading_zeros() };
+        }
+        t
+    })[k]
+}
+
+/// Enumerative encode: 63-bit pattern -> offset within its class.
+/// offset = sum over set bits (in increasing position p, 1-based index i)
+/// of C(p, i).
+fn encode_block(word: u64) -> (usize, u64) {
+    let k = word.count_ones() as usize;
+    let bin = binomials();
+    let mut offset = 0u64;
+    let mut i = 0usize; // how many set bits seen so far
+    let mut w = word;
+    while w != 0 {
+        let p = w.trailing_zeros() as usize;
+        i += 1;
+        offset += bin[p][i];
+        w &= w - 1;
+    }
+    (k, offset)
+}
+
+/// Enumerative decode: (class, offset) -> 63-bit pattern.
+fn decode_block(k: usize, mut offset: u64) -> u64 {
+    let bin = binomials();
+    let mut word = 0u64;
+    let mut rem = k;
+    // Choose set-bit positions from highest to lowest.
+    let mut p = BLOCK;
+    while rem > 0 {
+        p -= 1;
+        let c = bin[p][rem];
+        if offset >= c {
+            offset -= c;
+            word |= 1u64 << p;
+            rem -= 1;
+        }
+    }
+    word
+}
+
+/// RRR-compressed bitvector with rank/select.
+#[derive(Clone, Debug)]
+pub struct RrrVec {
+    len: usize,
+    ones: u64,
+    /// 6-bit class per block, packed.
+    classes: BitBuf,
+    /// Variable-width offsets, concatenated.
+    offsets: BitBuf,
+    /// Every SAMPLE blocks: (rank1 so far, bit position in `offsets`).
+    samples: Vec<(u64, u64)>,
+}
+
+impl RrrVec {
+    pub fn new(buf: &BitBuf) -> Self {
+        let n_blocks = buf.len.div_ceil(BLOCK);
+        let mut classes = BitWriter::with_capacity(n_blocks * 6);
+        let mut offsets = BitWriter::new();
+        let mut samples = Vec::with_capacity(n_blocks / SAMPLE + 1);
+        let mut ones = 0u64;
+        for b in 0..n_blocks {
+            if b % SAMPLE == 0 {
+                samples.push((ones, offsets.len_bits() as u64));
+            }
+            let word = read_block(buf, b);
+            let (k, off) = encode_block(word);
+            classes.write(k as u64, 6);
+            offsets.write(off, offset_bits(k));
+            ones += k as u64;
+        }
+        samples.push((ones, offsets.len_bits() as u64));
+        RrrVec {
+            len: buf.len,
+            ones,
+            classes: classes.finish(),
+            offsets: offsets.finish(),
+            samples,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn count_ones(&self) -> u64 {
+        self.ones
+    }
+
+    #[inline]
+    fn class_of(&self, block: usize) -> usize {
+        self.classes.read(block * 6, 6) as usize
+    }
+
+    /// Decode block `b`, given the offset-stream bit position of its sample
+    /// predecessor; returns (word, updated stream pos after this block).
+    fn walk_to_block(&self, block: usize) -> (u64, u64) {
+        let s = block / SAMPLE;
+        let (mut rank, mut pos) = self.samples[s];
+        for b in (s * SAMPLE)..block {
+            let k = self.class_of(b);
+            rank += k as u64;
+            pos += offset_bits(k) as u64;
+        }
+        (rank, pos)
+    }
+
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        let block = i / BLOCK;
+        let (_, pos) = self.walk_to_block(block);
+        let k = self.class_of(block);
+        let off = self.offsets.read(pos as usize, offset_bits(k));
+        let word = decode_block(k, off);
+        (word >> (i % BLOCK)) & 1 == 1
+    }
+
+    /// Number of ones in `[0, i)`.
+    pub fn rank1(&self, i: usize) -> u64 {
+        debug_assert!(i <= self.len);
+        if i == 0 {
+            return 0;
+        }
+        let block = i / BLOCK;
+        let (rank, pos) = self.walk_to_block(block.min(self.blocks() - 1));
+        if block >= self.blocks() {
+            return self.ones;
+        }
+        let k = self.class_of(block);
+        let off = self.offsets.read(pos as usize, offset_bits(k));
+        let word = decode_block(k, off);
+        let bit = i % BLOCK;
+        let mask = if bit == 0 { 0 } else { (1u64 << bit) - 1 };
+        rank + (word & mask).count_ones() as u64
+    }
+
+    pub fn rank0(&self, i: usize) -> u64 {
+        i as u64 - self.rank1(i)
+    }
+
+    /// Position of the k-th one (0-based).
+    pub fn select1(&self, k: u64) -> Option<usize> {
+        if k >= self.ones {
+            return None;
+        }
+        // Binary search rank samples.
+        let mut lo = 0usize;
+        let mut hi = self.samples.len() - 1;
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if self.samples[mid].0 <= k {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        let (mut rank, mut pos) = self.samples[lo];
+        for b in (lo * SAMPLE)..self.blocks() {
+            let kc = self.class_of(b);
+            if rank + kc as u64 > k {
+                let off = self.offsets.read(pos as usize, offset_bits(kc));
+                let word = decode_block(kc, off);
+                let j = super::select_in_word(word, (k - rank) as u32);
+                return Some(b * BLOCK + j as usize);
+            }
+            rank += kc as u64;
+            pos += offset_bits(kc) as u64;
+        }
+        None
+    }
+
+    /// Position of the k-th zero (0-based).
+    pub fn select0(&self, k: u64) -> Option<usize> {
+        let zeros = self.len as u64 - self.ones;
+        if k >= zeros {
+            return None;
+        }
+        let mut lo = 0usize;
+        let mut hi = self.samples.len() - 1;
+        // rank0 before sample s = s*SAMPLE*BLOCK - rank1 (clamped to len).
+        let r0 = |s: usize| -> u64 {
+            let bits = ((s * SAMPLE * BLOCK) as u64).min(self.len as u64);
+            bits - self.samples[s].0
+        };
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if r0(mid) <= k {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        let (mut rank1, mut pos) = self.samples[lo];
+        for b in (lo * SAMPLE)..self.blocks() {
+            let kc = self.class_of(b);
+            let block_bits = (self.len - b * BLOCK).min(BLOCK) as u64;
+            let zeros_before = (b * BLOCK) as u64 - rank1;
+            let zeros_in = block_bits - kc as u64;
+            if zeros_before + zeros_in > k {
+                let off = self.offsets.read(pos as usize, offset_bits(kc));
+                let word = decode_block(kc, off);
+                // block_bits <= 63 so the mask below never shifts by 64.
+                let inv = !word & ((1u64 << block_bits) - 1);
+                let j = super::select_in_word(inv, (k - zeros_before) as u32);
+                return Some(b * BLOCK + j as usize);
+            }
+            rank1 += kc as u64;
+            pos += offset_bits(kc) as u64;
+        }
+        None
+    }
+
+    fn blocks(&self) -> usize {
+        self.len.div_ceil(BLOCK)
+    }
+
+    /// Total structure size in bits (classes + offsets + samples).
+    pub fn size_bits(&self) -> usize {
+        self.classes.size_bits() + self.offsets.size_bits() + self.samples.len() * 128
+    }
+}
+
+fn read_block(buf: &BitBuf, block: usize) -> u64 {
+    let start = block * BLOCK;
+    let n = (buf.len - start).min(BLOCK) as u32;
+    buf.read(start, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bits::BitWriter;
+    use crate::util::Rng;
+
+    fn bitbuf(bits: &[bool]) -> BitBuf {
+        let mut w = BitWriter::new();
+        for &b in bits {
+            w.push_bit(b);
+        }
+        w.finish()
+    }
+
+    #[test]
+    fn block_codec_roundtrip_exhaustive_small_classes() {
+        // All 0/1/2-bit patterns plus random dense words.
+        for p in 0..BLOCK {
+            let w = 1u64 << p;
+            let (k, off) = encode_block(w);
+            assert_eq!(k, 1);
+            assert_eq!(decode_block(k, off), w);
+            for q in (p + 1)..BLOCK {
+                let w2 = w | (1u64 << q);
+                let (k2, off2) = encode_block(w2);
+                assert_eq!(k2, 2);
+                assert_eq!(decode_block(k2, off2), w2);
+            }
+        }
+        let mut rng = Rng::new(1);
+        for _ in 0..2000 {
+            let w = rng.next_u64() & (u64::MAX >> 1); // 63 bits
+            let (k, off) = encode_block(w);
+            assert!(off < binomials()[BLOCK][k]);
+            assert_eq!(decode_block(k, off), w);
+        }
+    }
+
+    #[test]
+    fn offset_is_dense_enumeration() {
+        // For class 1 the offsets must be a permutation of 0..63.
+        let mut seen = vec![false; BLOCK];
+        for p in 0..BLOCK {
+            let (_, off) = encode_block(1u64 << p);
+            assert!(!seen[off as usize]);
+            seen[off as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn rank_select_matches_plain() {
+        let mut rng = Rng::new(2);
+        for &density in &[0.05, 0.5, 0.95] {
+            for &n in &[1usize, 62, 63, 64, 200, 63 * 33, 10_000] {
+                let bits: Vec<bool> = (0..n).map(|_| rng.f64() < density).collect();
+                let buf = bitbuf(&bits);
+                let rrr = RrrVec::new(&buf);
+                assert_eq!(rrr.len(), n);
+                let mut ones = 0u64;
+                for i in 0..n {
+                    assert_eq!(rrr.rank1(i), ones, "rank1({i}) n={n}");
+                    assert_eq!(rrr.get(i), bits[i]);
+                    if bits[i] {
+                        assert_eq!(rrr.select1(ones), Some(i));
+                        ones += 1;
+                    } else {
+                        assert_eq!(rrr.select0(i as u64 - ones), Some(i));
+                    }
+                }
+                assert_eq!(rrr.rank1(n), ones);
+                assert_eq!(rrr.count_ones(), ones);
+                assert_eq!(rrr.select1(ones), None);
+            }
+        }
+    }
+
+    #[test]
+    fn compresses_sparse_bitmaps() {
+        // 1% density: RRR must be far below the plain 1 bit/bit payload.
+        let mut rng = Rng::new(3);
+        let n = 200_000;
+        let bits: Vec<bool> = (0..n).map(|_| rng.f64() < 0.01).collect();
+        let rrr = RrrVec::new(&bitbuf(&bits));
+        let plain_bits = n as f64;
+        let rrr_bits = rrr.size_bits() as f64;
+        // H0(0.01) ~ 0.081 bits; allow generous structural overhead.
+        assert!(
+            rrr_bits < 0.35 * plain_bits,
+            "rrr {rrr_bits} vs plain {plain_bits}"
+        );
+    }
+}

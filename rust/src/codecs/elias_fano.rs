@@ -1,0 +1,195 @@
+//! Elias-Fano encoding of monotone id lists (paper §A.1, **EF** columns).
+//!
+//! Ids are sorted (the set interpretation), split into `l = ⌊log₂(u/n)⌋`
+//! low bits stored verbatim and high bits stored as a unary-coded
+//! non-decreasing sequence.  Total ≈ `n(2 + log₂(u/n))` bits — within
+//! ~0.56 bits/id of the set-information optimum for large n, which is the
+//! gap to ROC visible in Table 1.
+//!
+//! Supports O(1)-ish random access (`decode_nth`) through select1 on the
+//! upper-bits bitvector, which the IVF search path uses to resolve
+//! (cluster, offset) pairs without decoding whole lists.
+
+use super::{Encoded, IdCodec};
+use crate::bitvec::RsBitVec;
+use crate::util::bits::{BitBuf, BitWriter};
+use crate::util::{ReadBuf, WriteBuf};
+
+pub struct EliasFano;
+
+/// Number of low bits: floor(log2(u / n)) (0 when u <= n).
+fn low_bits(universe: u32, n: usize) -> u32 {
+    if n == 0 || universe as u64 <= n as u64 {
+        return 0;
+    }
+    let ratio = universe as u64 / n as u64;
+    if ratio <= 1 {
+        0
+    } else {
+        63 - ratio.leading_zeros()
+    }
+}
+
+impl IdCodec for EliasFano {
+    fn name(&self) -> &'static str {
+        "ef"
+    }
+
+    fn encode(&self, ids: &[u32], universe: u32) -> Encoded {
+        let n = ids.len();
+        let mut sorted = ids.to_vec();
+        sorted.sort_unstable();
+        let l = low_bits(universe, n);
+
+        let mut lower = BitWriter::with_capacity(n * l as usize);
+        let mut upper = BitWriter::with_capacity(2 * n + 64);
+        let mut prev_hi = 0u64;
+        for &id in &sorted {
+            lower.write(id as u64, l);
+            let hi = (id as u64) >> l;
+            upper.write_unary(hi - prev_hi);
+            prev_hi = hi;
+        }
+        let bits = (lower.len_bits() + upper.len_bits()) as u64;
+
+        let mut w = WriteBuf::new();
+        let lower = lower.finish();
+        let upper = upper.finish();
+        w.put_u32(l);
+        w.put_u64(lower.len as u64);
+        w.put_u64s(&lower.words);
+        w.put_u64(upper.len as u64);
+        w.put_u64s(&upper.words);
+        Encoded { bytes: w.bytes, bits }
+    }
+
+    fn decode(&self, bytes: &[u8], _universe: u32, n: usize, out: &mut Vec<u32>) {
+        let (l, lower, upper) = parse(bytes).expect("corrupt EF blob");
+        let mut lr = crate::util::BitReader::new(&lower);
+        let mut ur = crate::util::BitReader::new(&upper);
+        let mut hi = 0u64;
+        for _ in 0..n {
+            let lo = lr.read(l);
+            hi += ur.read_unary();
+            out.push(((hi << l) | lo) as u32);
+        }
+    }
+
+    fn supports_random_access(&self) -> bool {
+        true
+    }
+
+    fn decode_nth(&self, bytes: &[u8], _universe: u32, n: usize, k: usize) -> Option<u32> {
+        if k >= n {
+            return None;
+        }
+        let (l, lower, upper) = parse(bytes).ok()?;
+        // k-th high value = select1(k) - k on the unary stream.
+        let rs = RsBitVec::new(upper);
+        let pos = rs.select1(k as u64)? as u64;
+        let hi = pos - k as u64;
+        let lo = lower.read(k * l as usize, l);
+        Some(((hi << l) | lo) as u32)
+    }
+}
+
+/// Elias-Fano list pre-parsed for repeated random access (IVF hot path).
+pub struct EfReader {
+    l: u32,
+    lower: BitBuf,
+    upper: RsBitVec,
+}
+
+impl EfReader {
+    pub fn new(bytes: &[u8]) -> anyhow::Result<Self> {
+        let (l, lower, upper) = parse(bytes)?;
+        Ok(EfReader { l, lower, upper: RsBitVec::new(upper) })
+    }
+
+    /// k-th smallest id.
+    pub fn get(&self, k: usize) -> Option<u32> {
+        let pos = self.upper.select1(k as u64)? as u64;
+        let hi = pos - k as u64;
+        let lo = self.lower.read(k * self.l as usize, self.l);
+        Some(((hi << self.l) | lo) as u32)
+    }
+}
+
+fn parse(bytes: &[u8]) -> anyhow::Result<(u32, BitBuf, BitBuf)> {
+    let mut r = ReadBuf::new(bytes);
+    let l = r.get_u32()?;
+    let lower_len = r.get_u64()? as usize;
+    let lower_words = r.get_u64s()?;
+    let upper_len = r.get_u64()? as usize;
+    let upper_words = r.get_u64s()?;
+    Ok((
+        l,
+        BitBuf { words: lower_words, len: lower_len },
+        BitBuf { words: upper_words, len: upper_len },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::testutil::check_roundtrip;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip() {
+        check_roundtrip(&EliasFano, 4);
+    }
+
+    #[test]
+    fn decode_is_sorted() {
+        let mut rng = Rng::new(5);
+        let ids: Vec<u32> = rng.sample_distinct(1 << 22, 500).iter().map(|&v| v as u32).collect();
+        let enc = EliasFano.encode(&ids, 1 << 22);
+        let mut out = Vec::new();
+        EliasFano.decode(&enc.bytes, 1 << 22, 500, &mut out);
+        let mut want = ids;
+        want.sort_unstable();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn rate_matches_formula() {
+        // n ids from [0, u): exact bits must be n*l + n + max_hi where
+        // l = floor(log2(u/n)); check the ~2 + log2(u/n) bits/id claim.
+        let mut rng = Rng::new(6);
+        let (u, n) = (1_000_000u32, 3906usize); // IVF256-like cluster
+        let ids: Vec<u32> = rng.sample_distinct(u as u64, n).iter().map(|&v| v as u32).collect();
+        let enc = EliasFano.encode(&ids, u);
+        let bpe = enc.bits as f64 / n as f64;
+        let expect = 2.0 + (u as f64 / n as f64).log2();
+        assert!((bpe - expect).abs() < 0.7, "bpe={bpe} expect~{expect}");
+        // Table 1 ballpark: ~9.85 bits for IVF256 at N=1e6.
+        assert!(bpe > 9.0 && bpe < 10.6, "bpe={bpe}");
+    }
+
+    #[test]
+    fn ef_reader_random_access() {
+        let mut rng = Rng::new(7);
+        let ids: Vec<u32> = rng.sample_distinct(1 << 20, 777).iter().map(|&v| v as u32).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        let enc = EliasFano.encode(&ids, 1 << 20);
+        let reader = EfReader::new(&enc.bytes).unwrap();
+        for (k, &want) in sorted.iter().enumerate() {
+            assert_eq!(reader.get(k), Some(want));
+        }
+        assert_eq!(reader.get(777), None);
+    }
+
+    #[test]
+    fn dense_universe_all_elements() {
+        // n == u: l = 0, ids are 0..n, upper stream is alternating.
+        let ids: Vec<u32> = (0..256).collect();
+        let enc = EliasFano.encode(&ids, 256);
+        let mut out = Vec::new();
+        EliasFano.decode(&enc.bytes, 256, 256, &mut out);
+        assert_eq!(out, ids);
+        // Dense sets are nearly free: ~2 bits/id.
+        assert!(enc.bits <= 2 * 256 + 64, "{}", enc.bits);
+    }
+}

@@ -1,0 +1,181 @@
+//! Fixed-width id storage: the paper's **Unc.** (64/32-bit machine words)
+//! and **Comp.** (⌈log₂N⌉-bit packed) baselines.
+
+use super::{Encoded, IdCodec};
+use crate::util::bits::{BitBuf, BitWriter};
+use crate::util::bits_for;
+
+/// 64-bit words per id — Faiss's default representation.
+pub struct Unc64;
+
+impl IdCodec for Unc64 {
+    fn name(&self) -> &'static str {
+        "unc64"
+    }
+
+    fn encode(&self, ids: &[u32], _universe: u32) -> Encoded {
+        let mut bytes = Vec::with_capacity(ids.len() * 8);
+        for &id in ids {
+            bytes.extend_from_slice(&(id as u64).to_le_bytes());
+        }
+        Encoded { bits: ids.len() as u64 * 64, bytes }
+    }
+
+    fn decode(&self, bytes: &[u8], _universe: u32, n: usize, out: &mut Vec<u32>) {
+        for i in 0..n {
+            let v = u64::from_le_bytes(bytes[i * 8..i * 8 + 8].try_into().unwrap());
+            out.push(v as u32);
+        }
+    }
+
+    fn supports_random_access(&self) -> bool {
+        true
+    }
+
+    fn decode_nth(&self, bytes: &[u8], _universe: u32, n: usize, k: usize) -> Option<u32> {
+        if k >= n {
+            return None;
+        }
+        Some(u64::from_le_bytes(bytes[k * 8..k * 8 + 8].try_into().unwrap()) as u32)
+    }
+}
+
+/// 32-bit words per id — the graph-index default.
+pub struct Unc32;
+
+impl IdCodec for Unc32 {
+    fn name(&self) -> &'static str {
+        "unc32"
+    }
+
+    fn encode(&self, ids: &[u32], _universe: u32) -> Encoded {
+        let mut bytes = Vec::with_capacity(ids.len() * 4);
+        for &id in ids {
+            bytes.extend_from_slice(&id.to_le_bytes());
+        }
+        Encoded { bits: ids.len() as u64 * 32, bytes }
+    }
+
+    fn decode(&self, bytes: &[u8], _universe: u32, n: usize, out: &mut Vec<u32>) {
+        for i in 0..n {
+            out.push(u32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap()));
+        }
+    }
+
+    fn supports_random_access(&self) -> bool {
+        true
+    }
+
+    fn decode_nth(&self, bytes: &[u8], _universe: u32, n: usize, k: usize) -> Option<u32> {
+        if k >= n {
+            return None;
+        }
+        Some(u32::from_le_bytes(bytes[k * 4..k * 4 + 4].try_into().unwrap()))
+    }
+}
+
+/// ⌈log₂(universe)⌉ bits per id, bit-packed — the **Comp.** baseline
+/// ("a basic improvement is to store them as ⌈log N⌉ bits").
+pub struct Compact;
+
+impl Compact {
+    fn width(universe: u32) -> u32 {
+        bits_for(universe as u64).max(1)
+    }
+}
+
+impl IdCodec for Compact {
+    fn name(&self) -> &'static str {
+        "compact"
+    }
+
+    fn encode(&self, ids: &[u32], universe: u32) -> Encoded {
+        let w = Self::width(universe);
+        let mut bw = BitWriter::with_capacity(ids.len() * w as usize);
+        for &id in ids {
+            debug_assert!(id < universe || universe == 0);
+            bw.write(id as u64, w);
+        }
+        let bits = bw.len_bits() as u64;
+        let buf = bw.finish();
+        let mut bytes = Vec::with_capacity(buf.words.len() * 8);
+        for word in &buf.words {
+            bytes.extend_from_slice(&word.to_le_bytes());
+        }
+        Encoded { bytes, bits }
+    }
+
+    fn decode(&self, bytes: &[u8], universe: u32, n: usize, out: &mut Vec<u32>) {
+        let buf = buf_from_bytes(bytes, n * Self::width(universe) as usize);
+        let w = Self::width(universe);
+        let mut r = crate::util::BitReader::new(&buf);
+        for _ in 0..n {
+            out.push(r.read(w) as u32);
+        }
+    }
+
+    fn supports_random_access(&self) -> bool {
+        true
+    }
+
+    fn decode_nth(&self, bytes: &[u8], universe: u32, n: usize, k: usize) -> Option<u32> {
+        if k >= n {
+            return None;
+        }
+        let w = Self::width(universe) as usize;
+        let buf = buf_from_bytes(bytes, n * w);
+        Some(buf.read(k * w, w as u32) as u32)
+    }
+}
+
+/// Reinterpret a byte blob as a BitBuf of `len` bits.
+pub(crate) fn buf_from_bytes(bytes: &[u8], len: usize) -> BitBuf {
+    let mut words = Vec::with_capacity(bytes.len().div_ceil(8));
+    for chunk in bytes.chunks(8) {
+        let mut w = [0u8; 8];
+        w[..chunk.len()].copy_from_slice(chunk);
+        words.push(u64::from_le_bytes(w));
+    }
+    BitBuf { words, len }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::testutil::check_roundtrip;
+
+    #[test]
+    fn unc64_roundtrip() {
+        check_roundtrip(&Unc64, 1);
+    }
+
+    #[test]
+    fn unc32_roundtrip() {
+        check_roundtrip(&Unc32, 2);
+    }
+
+    #[test]
+    fn compact_roundtrip() {
+        check_roundtrip(&Compact, 3);
+    }
+
+    #[test]
+    fn compact_bits_match_formula() {
+        // N = 1e6 -> 20 bits/id, the paper's "Comp." reference.
+        let ids: Vec<u32> = (0..1000).map(|i| i * 997).collect();
+        let enc = Compact.encode(&ids, 1_000_000);
+        assert_eq!(enc.bits, 1000 * 20);
+        let enc64 = Unc64.encode(&ids, 1_000_000);
+        assert_eq!(enc64.bits, 1000 * 64);
+    }
+
+    #[test]
+    fn compact_preserves_order() {
+        // Fixed-width codecs are order-preserving (unlike set codecs).
+        let ids = vec![5u32, 1, 9, 3];
+        let enc = Compact.encode(&ids, 10);
+        let mut out = Vec::new();
+        Compact.decode(&enc.bytes, 10, 4, &mut out);
+        assert_eq!(out, ids);
+    }
+}

@@ -1,0 +1,119 @@
+//! Lossless codecs for the integer payloads of ANN indexes.
+//!
+//! Two codec families exist, mirroring the paper's settings (§4):
+//!
+//! * **Per-list codecs** ([`IdCodec`]) compress one inverted list or friend
+//!   list into its own bit stream — the *online* setting. Implementations:
+//!   [`fixed::Unc64`]/[`fixed::Unc32`] (uncompressed baselines),
+//!   [`fixed::Compact`] (⌈log₂N⌉-bit packing), [`elias_fano::EliasFano`]
+//!   and [`roc::Roc`] (bits-back ANS, the paper's main contribution).
+//! * **Whole-structure codecs** compress an entire index component into one
+//!   stream: [`wavelet::WaveletTree`] (full random access over the IVF
+//!   assignment sequence), [`rec::Rec`] and [`zuckerli::Zuckerli`]
+//!   (offline graph blobs), and [`pcodes::ClusterCodeCodec`]
+//!   (cluster-conditioned PQ codes, Fig. 3).
+//!
+//! Bit accounting: `Encoded::bits` is the *exact* payload size in bits
+//! (the paper reports "the sum of bits in all bit streams … without
+//! overheads"); `bytes` is the byte-aligned serialized form actually stored.
+
+pub mod fixed;
+pub mod elias_fano;
+pub mod roc;
+pub mod wavelet;
+pub mod rec;
+pub mod zuckerli;
+pub mod pcodes;
+
+/// A compressed list plus its exact size in bits.
+#[derive(Clone, Debug)]
+pub struct Encoded {
+    pub bytes: Vec<u8>,
+    pub bits: u64,
+}
+
+/// Codec for one list of distinct ids drawn from `[0, universe)`.
+///
+/// Implementations may emit the ids in any order on decode (the data is a
+/// *set*; that invariance is exactly what ROC monetizes), but the order
+/// must be deterministic. `decode` appends exactly `n` ids to `out`.
+pub trait IdCodec: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    fn encode(&self, ids: &[u32], universe: u32) -> Encoded;
+
+    fn decode(&self, bytes: &[u8], universe: u32, n: usize, out: &mut Vec<u32>);
+
+    /// Whether `decode_nth` is supported (random access within a list).
+    fn supports_random_access(&self) -> bool {
+        false
+    }
+
+    /// Random access to the k-th id of the *decoded order*.
+    fn decode_nth(&self, _bytes: &[u8], _universe: u32, _n: usize, _k: usize) -> Option<u32> {
+        None
+    }
+}
+
+/// Look up a per-list codec by the names used in benches/CLI.
+pub fn codec_by_name(name: &str) -> Option<Box<dyn IdCodec>> {
+    match name {
+        "unc64" | "unc" => Some(Box::new(fixed::Unc64)),
+        "unc32" => Some(Box::new(fixed::Unc32)),
+        "compact" | "comp" => Some(Box::new(fixed::Compact)),
+        "ef" => Some(Box::new(elias_fano::EliasFano)),
+        "roc" => Some(Box::new(roc::Roc)),
+        _ => None,
+    }
+}
+
+/// All per-list codec names, in the column order of Table 1.
+pub const PER_LIST_CODECS: [&str; 5] = ["unc64", "compact", "ef", "unc32", "roc"];
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Exhaustive-ish roundtrip property check for a per-list codec.
+    pub fn check_roundtrip(codec: &dyn IdCodec, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let cases: Vec<(u32, usize)> = vec![
+            (1, 0),
+            (1, 1),
+            (2, 1),
+            (100, 100), // the full universe
+            (1000, 1),
+            (1000, 17),
+            (1 << 20, 1000),
+            (1_000_000, 4096),
+            (u32::MAX, 64),
+        ];
+        for (universe, n) in cases {
+            let ids: Vec<u32> = rng
+                .sample_distinct(universe as u64, n)
+                .into_iter()
+                .map(|v| v as u32)
+                .collect();
+            let enc = codec.encode(&ids, universe);
+            let mut out = Vec::new();
+            codec.decode(&enc.bytes, universe, n, &mut out);
+            let mut got = out.clone();
+            got.sort_unstable();
+            let mut want = ids.clone();
+            want.sort_unstable();
+            assert_eq!(got, want, "{} universe={universe} n={n}", codec.name());
+            assert!(
+                enc.bits as usize <= enc.bytes.len() * 8,
+                "bit accounting exceeds storage"
+            );
+            if codec.supports_random_access() {
+                for k in 0..n {
+                    let v = codec.decode_nth(&enc.bytes, universe, n, k).unwrap();
+                    assert_eq!(v, out[k], "nth({k})");
+                }
+                assert_eq!(codec.decode_nth(&enc.bytes, universe, n, n), None);
+            }
+        }
+    }
+}

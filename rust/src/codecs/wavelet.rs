@@ -1,0 +1,351 @@
+//! Wavelet tree over the IVF cluster-assignment sequence (paper §3.3/§4.1,
+//! the **WT**/**WT1** columns).
+//!
+//! Instead of storing per-cluster id lists, the whole database is described
+//! by one sequence `S ∈ [K)^N` where `S[id] = cluster(id)`.  The wavelet
+//! tree indexes S so that `select(k, o)` — the id of the o-th member of
+//! cluster k — runs in `O(log K)` rank/select steps.  That is *full random
+//! access*: IVF search collects (cluster, offset) pairs and resolves only
+//! the final top-k ids (paper §4.1).
+//!
+//! Two bitmap backends mirror the paper's variants: **WT** uses plain
+//! rank/select bitvectors, **WT1** compresses every level with RRR —
+//! smaller (it exploits the dependence between lists: together they
+//! partition `[N)`), but each rank/select costs a block decode, the 2-3×
+//! select slowdown of Table 2.
+
+use crate::bitvec::rrr::RrrVec;
+use crate::bitvec::RsBitVec;
+use crate::util::bits::BitWriter;
+use crate::util::bits_for;
+
+/// Bitmap backend selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WtStorage {
+    /// Plain bitvectors (paper's WT).
+    Flat,
+    /// RRR-compressed bitvectors (paper's WT1).
+    Rrr,
+}
+
+enum Bitmap {
+    Flat(RsBitVec),
+    Rrr(RrrVec),
+}
+
+impl Bitmap {
+    #[inline]
+    fn rank1(&self, i: usize) -> u64 {
+        match self {
+            Bitmap::Flat(b) => b.rank1(i),
+            Bitmap::Rrr(b) => b.rank1(i),
+        }
+    }
+
+    #[inline]
+    fn rank0(&self, i: usize) -> u64 {
+        match self {
+            Bitmap::Flat(b) => b.rank0(i),
+            Bitmap::Rrr(b) => b.rank0(i),
+        }
+    }
+
+    #[inline]
+    fn select1(&self, k: u64) -> Option<usize> {
+        match self {
+            Bitmap::Flat(b) => b.select1(k),
+            Bitmap::Rrr(b) => b.select1(k),
+        }
+    }
+
+    #[inline]
+    fn select0(&self, k: u64) -> Option<usize> {
+        match self {
+            Bitmap::Flat(b) => b.select0(k),
+            Bitmap::Rrr(b) => b.select0(k),
+        }
+    }
+
+    #[inline]
+    fn get(&self, i: usize) -> bool {
+        match self {
+            Bitmap::Flat(b) => b.get(i),
+            Bitmap::Rrr(b) => b.get(i),
+        }
+    }
+
+    fn size_bits(&self) -> usize {
+        match self {
+            Bitmap::Flat(b) => b.size_bits(),
+            Bitmap::Rrr(b) => b.size_bits(),
+        }
+    }
+}
+
+/// Levelwise (pointerless) wavelet tree.
+pub struct WaveletTree {
+    n: usize,
+    levels: Vec<Bitmap>,
+    /// Bits per symbol = number of levels.
+    depth: u32,
+    /// Occurrences per symbol (cluster sizes) — kept for bounds checks and
+    /// as the IVF list-length table.
+    counts: Vec<u64>,
+}
+
+impl WaveletTree {
+    /// Build over `seq` with alphabet `[0, alphabet)`.
+    pub fn new(seq: &[u32], alphabet: u32, storage: WtStorage) -> Self {
+        assert!(alphabet >= 1);
+        let depth = bits_for(alphabet as u64).max(1);
+        let n = seq.len();
+        let mut counts = vec![0u64; alphabet as usize];
+        for &s in seq {
+            assert!(s < alphabet, "symbol {s} out of [0,{alphabet})");
+            counts[s as usize] += 1;
+        }
+
+        let mut levels = Vec::with_capacity(depth as usize);
+        let mut cur: Vec<u32> = seq.to_vec();
+        let mut next: Vec<u32> = Vec::with_capacity(n);
+        for l in 0..depth {
+            let shift = depth - 1 - l;
+            let mut bw = BitWriter::with_capacity(n);
+            for &s in &cur {
+                bw.push_bit((s >> shift) & 1 == 1);
+            }
+            let buf = bw.finish();
+            levels.push(match storage {
+                WtStorage::Flat => Bitmap::Flat(RsBitVec::new(buf)),
+                WtStorage::Rrr => Bitmap::Rrr(RrrVec::new(&buf)),
+            });
+            if l + 1 == depth {
+                break;
+            }
+            // Stable partition within each node (same top-l bits run):
+            // zeros first, then ones — the level-(l+1) layout.
+            next.clear();
+            let node_of = |s: u32| s >> (shift + 1);
+            let mut i = 0;
+            while i < n {
+                let node = node_of(cur[i]);
+                let mut j = i;
+                while j < n && node_of(cur[j]) == node {
+                    j += 1;
+                }
+                for &s in &cur[i..j] {
+                    if (s >> shift) & 1 == 0 {
+                        next.push(s);
+                    }
+                }
+                for &s in &cur[i..j] {
+                    if (s >> shift) & 1 == 1 {
+                        next.push(s);
+                    }
+                }
+                i = j;
+            }
+            std::mem::swap(&mut cur, &mut next);
+        }
+        WaveletTree { n, levels, depth, counts }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn alphabet(&self) -> u32 {
+        self.counts.len() as u32
+    }
+
+    /// Occurrences of `sym` (cluster size).
+    pub fn count(&self, sym: u32) -> u64 {
+        self.counts[sym as usize]
+    }
+
+    /// `S[i]` — the cluster of id `i`.
+    pub fn access(&self, i: usize) -> u32 {
+        debug_assert!(i < self.n);
+        let (mut a, mut b) = (0usize, self.n);
+        let mut pos = i;
+        let mut sym = 0u32;
+        for level in &self.levels {
+            let zeros = level.rank0(b) - level.rank0(a);
+            let bit = level.get(pos);
+            sym <<= 1;
+            if bit {
+                sym |= 1;
+                pos = a + zeros as usize + (level.rank1(pos) - level.rank1(a)) as usize;
+                a += zeros as usize;
+            } else {
+                pos = a + (level.rank0(pos) - level.rank0(a)) as usize;
+                b = a + zeros as usize;
+            }
+        }
+        sym
+    }
+
+    /// Occurrences of `sym` in `S[0, i)`.
+    pub fn rank(&self, sym: u32, i: usize) -> u64 {
+        debug_assert!(i <= self.n);
+        let (mut a, mut b) = (0usize, self.n);
+        let mut pos = i;
+        for (l, level) in self.levels.iter().enumerate() {
+            let shift = self.depth - 1 - l as u32;
+            let zeros = level.rank0(b) - level.rank0(a);
+            if (sym >> shift) & 1 == 0 {
+                pos = a + (level.rank0(pos) - level.rank0(a)) as usize;
+                b = a + zeros as usize;
+            } else {
+                pos = a + zeros as usize + (level.rank1(pos) - level.rank1(a)) as usize;
+                a += zeros as usize;
+            }
+        }
+        (pos - a) as u64
+    }
+
+    /// Position (= vector id) of the k-th occurrence of `sym` — the
+    /// random-access operation of the paper's §4.1.
+    pub fn select(&self, sym: u32, k: u64) -> Option<usize> {
+        if sym >= self.alphabet() || k >= self.counts[sym as usize] {
+            return None;
+        }
+        // Top-down: record each level's node interval on the path.
+        let mut intervals = Vec::with_capacity(self.depth as usize);
+        let (mut a, mut b) = (0usize, self.n);
+        for (l, level) in self.levels.iter().enumerate() {
+            intervals.push((a, b));
+            let shift = self.depth - 1 - l as u32;
+            let zeros = (level.rank0(b) - level.rank0(a)) as usize;
+            if (sym >> shift) & 1 == 0 {
+                b = a + zeros;
+            } else {
+                a += zeros;
+            }
+        }
+        // Bottom-up: map offset within leaf back to a root position.
+        let mut pos = k as usize; // offset within the leaf interval
+        for (l, level) in self.levels.iter().enumerate().rev() {
+            let (a, _b) = intervals[l];
+            let shift = self.depth - 1 - l as u32;
+            let abs = if (sym >> shift) & 1 == 0 {
+                level.select0(level.rank0(a) + pos as u64)?
+            } else {
+                level.select1(level.rank1(a) + pos as u64)?
+            };
+            pos = abs - a;
+        }
+        Some(pos)
+    }
+
+    /// Total structure size in bits (all levels incl. rank/select support).
+    pub fn size_bits(&self) -> usize {
+        self.levels.iter().map(|l| l.size_bits()).sum()
+    }
+
+    /// Payload-only bits (N × depth for the flat variant) — matches the
+    /// paper's note that the union of level bitmaps is N·log K bits.
+    pub fn payload_bits(&self) -> usize {
+        self.n * self.depth as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn check_all_ops(seq: &[u32], alphabet: u32, storage: WtStorage) {
+        let wt = WaveletTree::new(seq, alphabet, storage);
+        let n = seq.len();
+        // access
+        for (i, &s) in seq.iter().enumerate() {
+            assert_eq!(wt.access(i), s, "access({i})");
+        }
+        // rank at sampled positions + select of every occurrence
+        let mut occ = vec![0u64; alphabet as usize];
+        for (i, &s) in seq.iter().enumerate() {
+            assert_eq!(wt.rank(s, i), occ[s as usize], "rank({s},{i})");
+            assert_eq!(wt.select(s, occ[s as usize]), Some(i), "select({s})");
+            occ[s as usize] += 1;
+        }
+        for s in 0..alphabet {
+            assert_eq!(wt.count(s), occ[s as usize]);
+            assert_eq!(wt.select(s, occ[s as usize]), None);
+            assert_eq!(wt.rank(s, n), occ[s as usize]);
+        }
+    }
+
+    #[test]
+    fn ops_small_alphabet_flat_and_rrr() {
+        let seq = vec![3u32, 1, 0, 3, 2, 1, 1, 0, 3, 3, 2, 0];
+        check_all_ops(&seq, 4, WtStorage::Flat);
+        check_all_ops(&seq, 4, WtStorage::Rrr);
+    }
+
+    #[test]
+    fn ops_non_power_of_two_alphabet() {
+        let mut rng = Rng::new(14);
+        for &k in &[1u32, 3, 5, 1000] {
+            let seq: Vec<u32> = (0..2000).map(|_| rng.below(k as u64) as u32).collect();
+            check_all_ops(&seq, k, WtStorage::Flat);
+        }
+    }
+
+    #[test]
+    fn ops_random_property_rrr() {
+        let mut rng = Rng::new(15);
+        for &k in &[2u32, 17, 256] {
+            let seq: Vec<u32> = (0..3000).map(|_| rng.below(k as u64) as u32).collect();
+            check_all_ops(&seq, k, WtStorage::Rrr);
+        }
+    }
+
+    #[test]
+    fn skewed_distribution_compresses_with_rrr() {
+        // Highly skewed cluster sizes -> low H0 per level -> RRR wins.
+        let mut rng = Rng::new(16);
+        let seq: Vec<u32> = (0..100_000)
+            .map(|_| if rng.f64() < 0.95 { 0 } else { 1 + rng.below(255) as u32 })
+            .collect();
+        let flat = WaveletTree::new(&seq, 256, WtStorage::Flat);
+        let rrr = WaveletTree::new(&seq, 256, WtStorage::Rrr);
+        assert!(
+            (rrr.size_bits() as f64) < 0.5 * flat.size_bits() as f64,
+            "rrr={} flat={}",
+            rrr.size_bits(),
+            flat.size_bits()
+        );
+    }
+
+    #[test]
+    fn uniform_ivf_sequence_sizes() {
+        // IVF1024-like: N=20k, K=1024. Flat payload = N * 10 bits.
+        let mut rng = Rng::new(17);
+        let n = 20_000;
+        let seq: Vec<u32> = (0..n).map(|_| rng.below(1024) as u32).collect();
+        let wt = WaveletTree::new(&seq, 1024, WtStorage::Flat);
+        assert_eq!(wt.payload_bits(), n * 10);
+        // Structure overhead (rank samples) should be bounded (~35%).
+        assert!(wt.size_bits() < wt.payload_bits() * 14 / 10);
+        let wt1 = WaveletTree::new(&seq, 1024, WtStorage::Rrr);
+        // Uniform assignment: RRR can't go below ~N log K, but must not
+        // blow up either.
+        assert!(wt1.size_bits() < wt.size_bits() * 13 / 10);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let wt = WaveletTree::new(&[], 8, WtStorage::Flat);
+        assert_eq!(wt.len(), 0);
+        assert_eq!(wt.select(3, 0), None);
+        let wt = WaveletTree::new(&[5], 8, WtStorage::Flat);
+        assert_eq!(wt.access(0), 5);
+        assert_eq!(wt.select(5, 0), Some(0));
+        assert_eq!(wt.rank(5, 1), 1);
+    }
+}

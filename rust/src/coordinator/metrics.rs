@@ -1,0 +1,100 @@
+//! Serving metrics: query/batch counters and a latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Default)]
+pub struct Metrics {
+    queries: AtomicU64,
+    batches: AtomicU64,
+    pjrt_queries: AtomicU64,
+    batch_fill: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    pub fn record_batch(&self, fill: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_fill.fetch_add(fill as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_query(&self, latency: Duration, via_pjrt: bool) {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        if via_pjrt {
+            self.pjrt_queries.fetch_add(1, Ordering::Relaxed);
+        }
+        self.latencies_us.lock().unwrap().push(latency.as_micros() as u64);
+    }
+
+    pub fn queries(&self) -> u64 {
+        self.queries.load(Ordering::Relaxed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn pjrt_fraction(&self) -> f64 {
+        let q = self.queries().max(1);
+        self.pjrt_queries.load(Ordering::Relaxed) as f64 / q as f64
+    }
+
+    pub fn mean_batch_fill(&self) -> f64 {
+        let b = self.batches().max(1);
+        self.batch_fill.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Latency percentile in microseconds (p in [0, 100]).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let mut v = self.latencies_us.lock().unwrap().clone();
+        if v.is_empty() {
+            return 0;
+        }
+        v.sort_unstable();
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "queries={} batches={} mean_fill={:.1} pjrt={:.0}% p50={}us p95={}us p99={}us",
+            self.queries(),
+            self.batches(),
+            self.mean_batch_fill(),
+            100.0 * self.pjrt_fraction(),
+            self.latency_percentile_us(50.0),
+            self.latency_percentile_us(95.0),
+            self.latency_percentile_us(99.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_and_counters() {
+        let m = Metrics::default();
+        for i in 1..=100u64 {
+            m.record_query(Duration::from_micros(i), i % 2 == 0);
+        }
+        m.record_batch(10);
+        assert_eq!(m.queries(), 100);
+        assert_eq!(m.batches(), 1);
+        assert!((m.pjrt_fraction() - 0.5).abs() < 1e-9);
+        assert_eq!(m.mean_batch_fill(), 10.0);
+        let p50 = m.latency_percentile_us(50.0);
+        assert!((49..=51).contains(&p50), "p50={p50}");
+        assert_eq!(m.latency_percentile_us(100.0), 100);
+        assert!(m.summary().contains("queries=100"));
+    }
+
+    #[test]
+    fn empty_metrics() {
+        let m = Metrics::default();
+        assert_eq!(m.latency_percentile_us(99.0), 0);
+        assert_eq!(m.pjrt_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,291 @@
+//! L3 serving coordinator: request router, dynamic batcher, worker pool.
+//!
+//! Topology (std threads + channels; the offline vendor set has no tokio):
+//!
+//! ```text
+//!   clients ──(mpsc)──▶ batcher ──▶ engine thread (PJRT coarse scoring)
+//!                          │                │
+//!                          └──▶ worker pool ◀┘   (scan + id resolution)
+//!                                   │
+//!                            reply channels
+//! ```
+//!
+//! The batcher accumulates queries up to the artifact batch size (or a
+//! wait deadline), ships one PJRT call for the whole batch — the L2/L1
+//! compute — and fans the per-query coarse rows out to scan workers that
+//! walk the compressed inverted lists (the paper's id-decode path).
+
+pub mod metrics;
+
+use crate::index::{IvfIndex, SearchParams, SearchScratch};
+use crate::runtime::EngineHandle;
+use crate::util::pool::default_threads;
+use anyhow::Result;
+use metrics::Metrics;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One search request: query vector + reply channel.
+pub struct Request {
+    pub query: Vec<f32>,
+    pub reply: mpsc::Sender<Response>,
+    pub submitted: Instant,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub results: Vec<(f32, u32)>,
+    pub latency: Duration,
+    /// Whether the coarse stage ran on the PJRT executable.
+    pub via_pjrt: bool,
+}
+
+pub struct ServeConfig {
+    /// Batch size — must match an artifact batch for the PJRT path.
+    pub batch_size: usize,
+    /// Max time the batcher waits to fill a batch.
+    pub max_wait: Duration,
+    pub search: SearchParams,
+    pub scan_threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            batch_size: 64,
+            max_wait: Duration::from_millis(2),
+            search: SearchParams::default(),
+            scan_threads: default_threads(),
+        }
+    }
+}
+
+/// Handle used by clients to submit queries.
+#[derive(Clone)]
+pub struct CoordinatorClient {
+    tx: mpsc::Sender<Request>,
+}
+
+impl CoordinatorClient {
+    /// Blocking search round-trip.
+    pub fn search(&self, query: Vec<f32>) -> Result<Response> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request { query, reply, submitted: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("coordinator dropped reply"))
+    }
+
+    /// Fire-and-collect a whole batch (examples / benches).
+    pub fn search_many(&self, queries: Vec<Vec<f32>>) -> Result<Vec<Response>> {
+        let mut rxs = Vec::with_capacity(queries.len());
+        for q in queries {
+            let (reply, rx) = mpsc::channel();
+            self.tx
+                .send(Request { query: q, reply, submitted: Instant::now() })
+                .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+            rxs.push(rx);
+        }
+        rxs.into_iter()
+            .map(|rx| rx.recv().map_err(|_| anyhow::anyhow!("reply dropped")))
+            .collect()
+    }
+}
+
+pub struct Coordinator {
+    pub client: CoordinatorClient,
+    pub metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start serving `index`. `engine` may be `None` (pure-rust coarse).
+    pub fn start(index: Arc<IvfIndex>, engine: Option<EngineHandle>, cfg: ServeConfig) -> Coordinator {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let metrics = Arc::new(Metrics::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let m = metrics.clone();
+        let s = stop.clone();
+        let centroids = Arc::new(index.centroids.clone());
+        let batcher = std::thread::Builder::new()
+            .name("zann-batcher".into())
+            .spawn(move || batcher_loop(rx, index, engine, centroids, cfg, m, s))
+            .expect("spawn batcher");
+        Coordinator { client: CoordinatorClient { tx }, metrics, stop, batcher: Some(batcher) }
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Drop the implicit sender by taking the thread handle and joining.
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn batcher_loop(
+    rx: mpsc::Receiver<Request>,
+    index: Arc<IvfIndex>,
+    engine: Option<EngineHandle>,
+    centroids: Arc<Vec<f32>>,
+    cfg: ServeConfig,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+) {
+    let dim = index.dim;
+    let k = index.k;
+    let scratches: Vec<Mutex<SearchScratch>> =
+        (0..cfg.scan_threads.max(1)).map(|_| Mutex::new(SearchScratch::default())).collect();
+    let mut batch: Vec<Request> = Vec::with_capacity(cfg.batch_size);
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        // Block for the first request (with timeout so `stop` is seen).
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(r) => batch.push(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+        // Fill up to batch_size or deadline.
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < cfg.batch_size {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
+        metrics.record_batch(batch.len());
+
+        // Coarse scoring for the whole batch, padded to batch_size so the
+        // fixed-shape PJRT executable applies.
+        let b = cfg.batch_size;
+        let mut flat = vec![0f32; b * dim];
+        for (i, r) in batch.iter().enumerate() {
+            flat[i * dim..(i + 1) * dim].copy_from_slice(&r.query);
+        }
+        let (coarse, via_pjrt) = match &engine {
+            Some(h) => match h.coarse(flat, b, dim, centroids.clone(), k) {
+                Ok(v) => v,
+                Err(_) => (crate::runtime::coarse_fallback(
+                    &{
+                        let mut f = vec![0f32; b * dim];
+                        for (i, r) in batch.iter().enumerate() {
+                            f[i * dim..(i + 1) * dim].copy_from_slice(&r.query);
+                        }
+                        f
+                    },
+                    b,
+                    dim,
+                    &centroids,
+                    k,
+                ), false),
+            },
+            None => (crate::runtime::coarse_fallback(&flat, b, dim, &centroids, k), false),
+        };
+
+        // Fan out scans to the worker pool.
+        let nb = batch.len();
+        let reqs: Vec<Request> = batch.drain(..).collect();
+        let coarse_ref = &coarse;
+        let index_ref = &index;
+        let sp = &cfg.search;
+        let scratches_ref = &scratches;
+        let metrics_ref = &metrics;
+        crate::util::pool::parallel_chunks(nb, cfg.scan_threads, |t, range| {
+            let mut scratch = scratches_ref[t % scratches_ref.len()].lock().unwrap();
+            for i in range {
+                let r = &reqs[i];
+                let results = index_ref.search_with_coarse(
+                    &r.query,
+                    &coarse_ref[i * k..(i + 1) * k],
+                    sp,
+                    &mut scratch,
+                );
+                let latency = r.submitted.elapsed();
+                metrics_ref.record_query(latency, via_pjrt);
+                let _ = r.reply.send(Response { results, latency, via_pjrt });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{generate, groundtruth, Kind};
+    use crate::index::IvfBuildParams;
+
+    #[test]
+    fn serves_correct_results_without_engine() {
+        let ds = generate(Kind::DeepLike, 2000, 40, 16, 21);
+        let idx = Arc::new(IvfIndex::build(
+            &ds.data,
+            ds.dim,
+            &IvfBuildParams { k: 32, id_codec: "roc".into(), threads: 2, ..Default::default() },
+        ));
+        let cfg = ServeConfig {
+            batch_size: 8,
+            max_wait: Duration::from_millis(1),
+            search: SearchParams { nprobe: 8, k: 10 },
+            scan_threads: 2,
+        };
+        let coord = Coordinator::start(idx.clone(), None, cfg);
+        // Compare against direct index search.
+        let sp = SearchParams { nprobe: 8, k: 10 };
+        let mut scratch = SearchScratch::default();
+        let queries: Vec<Vec<f32>> = (0..ds.nq).map(|qi| ds.query(qi).to_vec()).collect();
+        let responses = coord.client.search_many(queries).unwrap();
+        for (qi, resp) in responses.iter().enumerate() {
+            let want = idx.search(ds.query(qi), &sp, &mut scratch);
+            assert_eq!(resp.results, want, "query {qi}");
+            assert!(!resp.via_pjrt);
+        }
+        // Recall sanity end-to-end.
+        let gt = groundtruth::exact_knn(&ds.data, &ds.queries, ds.dim, 10, 2);
+        let res: Vec<Vec<u32>> = responses
+            .iter()
+            .map(|r| r.results.iter().map(|&(_, id)| id).collect())
+            .collect();
+        assert!(groundtruth::recall_at_k(&gt, 10, &res, 10) > 0.8);
+        assert!(coord.metrics.queries() >= 40);
+        coord.stop();
+    }
+
+    #[test]
+    fn batcher_groups_requests() {
+        let ds = generate(Kind::DeepLike, 500, 30, 8, 22);
+        let idx = Arc::new(IvfIndex::build(
+            &ds.data,
+            ds.dim,
+            &IvfBuildParams { k: 8, id_codec: "compact".into(), threads: 1, ..Default::default() },
+        ));
+        let cfg = ServeConfig {
+            batch_size: 16,
+            max_wait: Duration::from_millis(20),
+            search: SearchParams { nprobe: 4, k: 5 },
+            scan_threads: 2,
+        };
+        let coord = Coordinator::start(idx, None, cfg);
+        let queries: Vec<Vec<f32>> = (0..30).map(|qi| ds.query(qi).to_vec()).collect();
+        let _ = coord.client.search_many(queries).unwrap();
+        // 30 requests in ≤ a handful of batches (not 30 singletons).
+        assert!(coord.metrics.batches() <= 6, "batches={}", coord.metrics.batches());
+        coord.stop();
+    }
+}

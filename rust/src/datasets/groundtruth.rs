@@ -1,0 +1,91 @@
+//! Exact nearest-neighbor ground truth (brute force, parallel) and recall.
+
+use crate::quant::top_k;
+use crate::util::pool::parallel_map;
+
+/// Exact top-`k` neighbors for every query (row-major inputs).
+/// Returns `nq × k` ids, row-major.
+pub fn exact_knn(
+    data: &[f32],
+    queries: &[f32],
+    dim: usize,
+    k: usize,
+    threads: usize,
+) -> Vec<u32> {
+    let nq = queries.len() / dim;
+    let rows = parallel_map(nq, threads, |qi| {
+        top_k(&queries[qi * dim..(qi + 1) * dim], data, dim, k)
+            .into_iter()
+            .map(|(_, id)| id)
+            .collect::<Vec<u32>>()
+    });
+    rows.into_iter().flatten().collect()
+}
+
+/// recall@k: fraction of queries whose true nearest neighbor appears in
+/// the first `k` results (the paper's recall@10 metric in Table 4).
+pub fn recall_at_k(gt: &[u32], gt_k: usize, results: &[Vec<u32>], k: usize) -> f64 {
+    let nq = results.len();
+    assert_eq!(gt.len(), nq * gt_k);
+    let mut hits = 0usize;
+    for (qi, res) in results.iter().enumerate() {
+        let truth = gt[qi * gt_k]; // the single true NN
+        if res.iter().take(k).any(|&id| id == truth) {
+            hits += 1;
+        }
+    }
+    hits as f64 / nq as f64
+}
+
+/// Intersection recall: |result ∩ gt| / k averaged over queries
+/// (the stricter "k-recall@k" used for kNN-graph quality checks).
+pub fn intersection_recall(gt: &[u32], gt_k: usize, results: &[Vec<u32>], k: usize) -> f64 {
+    let nq = results.len();
+    let mut acc = 0f64;
+    for (qi, res) in results.iter().enumerate() {
+        let truth: std::collections::HashSet<u32> =
+            gt[qi * gt_k..qi * gt_k + k.min(gt_k)].iter().copied().collect();
+        let inter = res.iter().take(k).filter(|id| truth.contains(id)).count();
+        acc += inter as f64 / k.min(gt_k) as f64;
+    }
+    acc / nq as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn exact_knn_finds_planted_neighbor() {
+        let mut rng = Rng::new(80);
+        let dim = 8;
+        let n = 500;
+        let mut data: Vec<f32> = (0..n * dim).map(|_| rng.normal()).collect();
+        // Plant each query as a tiny perturbation of a known row.
+        let mut queries = Vec::new();
+        let mut planted = Vec::new();
+        for q in 0..20 {
+            let target = (q * 13) % n;
+            planted.push(target as u32);
+            for d in 0..dim {
+                queries.push(data[target * dim + d] + 1e-4 * rng.normal());
+            }
+        }
+        let _ = &mut data;
+        let gt = exact_knn(&data, &queries, dim, 5, 4);
+        for q in 0..20 {
+            assert_eq!(gt[q * 5], planted[q], "query {q}");
+        }
+    }
+
+    #[test]
+    fn recall_metrics() {
+        let gt = vec![1u32, 9, 9, 9, 2, 9, 9, 9]; // 2 queries, gt_k=4
+        let results = vec![vec![5u32, 1, 7], vec![3u32, 4, 8]];
+        assert_eq!(recall_at_k(&gt, 4, &results, 3), 0.5);
+        assert_eq!(recall_at_k(&gt, 4, &results, 1), 0.0);
+        let r2 = intersection_recall(&gt, 4, &results, 2);
+        assert!((r2 - 0.25).abs() < 1e-9); // q0 hits {1}, q1 hits none
+    }
+}

@@ -1,0 +1,208 @@
+//! Synthetic stand-ins for the paper's datasets, plus exact ground truth.
+//!
+//! The paper evaluates on SIFT1M, Deep1M and FB-ssnpp1M; none are
+//! redistributable here, so `generate` synthesizes Gaussian-mixture
+//! datasets that preserve the properties each experiment depends on
+//! (DESIGN.md "Substitutions" maps each):
+//!
+//! * [`Kind::SiftLike`] — clustered, *anisotropic within clusters* with a
+//!   per-subspace structure (half the dimensions nearly constant within a
+//!   concept): PQ sub-codes concentrate within IVF clusters, giving the
+//!   Fig.-3 conditional-coding gains, like real SIFT's 4×4×8 layout.
+//! * [`Kind::DeepLike`] — clustered, mildly anisotropic, L2-normalized
+//!   (CNN-embedding-like): intermediate conditional compressibility.
+//! * [`Kind::SsnppLike`] — heavily overlapping mixture (centers small
+//!   vs noise): PQ codes stay near max entropy, no conditional gain — the
+//!   paper's negative control.
+
+pub mod groundtruth;
+
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    SiftLike,
+    DeepLike,
+    SsnppLike,
+}
+
+impl Kind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kind::SiftLike => "sift-like",
+            Kind::DeepLike => "deep-like",
+            Kind::SsnppLike => "ssnpp-like",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Kind> {
+        match s {
+            "sift" | "sift-like" | "sift1m" => Some(Kind::SiftLike),
+            "deep" | "deep-like" | "deep1m" => Some(Kind::DeepLike),
+            "ssnpp" | "ssnpp-like" | "fb-ssnpp" => Some(Kind::SsnppLike),
+            _ => None,
+        }
+    }
+
+    /// The three paper datasets, in table column order.
+    pub fn all() -> [Kind; 3] {
+        [Kind::SiftLike, Kind::DeepLike, Kind::SsnppLike]
+    }
+}
+
+/// A generated dataset: base vectors + query vectors, row-major.
+pub struct Dataset {
+    pub kind: Kind,
+    pub dim: usize,
+    pub n: usize,
+    pub nq: usize,
+    pub data: Vec<f32>,
+    pub queries: Vec<f32>,
+}
+
+/// Number of latent concepts (mixture components); chosen ≫ the IVF K
+/// values so cluster structure is non-trivial at every K in the sweep.
+fn n_concepts(n: usize) -> usize {
+    (n / 200).clamp(16, 4096)
+}
+
+pub fn generate(kind: Kind, n: usize, nq: usize, dim: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0xda7a_5eed);
+    let nc = n_concepts(n);
+
+    // Concept centers.
+    let center_scale = match kind {
+        Kind::SiftLike => 3.0f32,
+        Kind::DeepLike => 2.0,
+        Kind::SsnppLike => 0.4, // heavy overlap
+    };
+    let centers: Vec<f32> = (0..nc * dim).map(|_| center_scale * rng.normal()).collect();
+
+    // Per-dimension within-cluster noise. Sift-like: strongly anisotropic
+    // with a 4-dim subspace period (half the dims nearly frozen per
+    // concept); others: isotropic.
+    let sigma: Vec<f32> = (0..dim)
+        .map(|d| match kind {
+            Kind::SiftLike => {
+                if d % 4 < 2 {
+                    0.05
+                } else {
+                    0.6
+                }
+            }
+            Kind::DeepLike => 0.35,
+            Kind::SsnppLike => 1.0,
+        })
+        .collect();
+
+    let emit = |rng: &mut Rng, count: usize| -> Vec<f32> {
+        let mut out = Vec::with_capacity(count * dim);
+        for _ in 0..count {
+            let c = rng.below(nc as u64) as usize;
+            let center = &centers[c * dim..(c + 1) * dim];
+            let start = out.len();
+            for d in 0..dim {
+                out.push(center[d] + sigma[d] * rng.normal());
+            }
+            if kind == Kind::DeepLike {
+                // L2-normalize, like CNN descriptors.
+                let row = &mut out[start..start + dim];
+                let norm = row.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-9);
+                for v in row {
+                    *v /= norm;
+                }
+            }
+        }
+        out
+    };
+
+    let data = emit(&mut rng, n);
+    let queries = emit(&mut rng, nq);
+    Dataset { kind, dim, n, nq, data, queries }
+}
+
+impl Dataset {
+    pub fn vector(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn query(&self, i: usize) -> &[f32] {
+        &self.queries[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let a = generate(Kind::SiftLike, 500, 20, 16, 7);
+        assert_eq!(a.data.len(), 500 * 16);
+        assert_eq!(a.queries.len(), 20 * 16);
+        let b = generate(Kind::SiftLike, 500, 20, 16, 7);
+        assert_eq!(a.data, b.data);
+        let c = generate(Kind::SiftLike, 500, 20, 16, 8);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn deep_like_is_normalized() {
+        let d = generate(Kind::DeepLike, 200, 5, 24, 1);
+        for i in 0..200 {
+            let norm: f32 = d.vector(i).iter().map(|v| v * v).sum::<f32>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-4, "norm={norm}");
+        }
+    }
+
+    #[test]
+    fn cluster_separation_ordering() {
+        // sift-like must be far more clustered than ssnpp-like: compare
+        // k-means quantization error relative to data variance.
+        use crate::quant::kmeans;
+        let dim = 16;
+        for (kind, max_ratio) in [(Kind::SiftLike, 0.45), (Kind::SsnppLike, 1.1)] {
+            let ds = generate(kind, 3000, 10, dim, 3);
+            let cfg = kmeans::KmeansConfig { k: 32, iters: 8, seed: 1, threads: 2, ..Default::default() };
+            let cents = kmeans::train(&ds.data, dim, &cfg);
+            let assign = kmeans::assign(&ds.data, dim, &cents, 2);
+            let mse = kmeans::quantization_mse(&ds.data, dim, &cents, &assign);
+            let var: f64 = {
+                let mean: f64 = ds.data.iter().map(|&v| v as f64).sum::<f64>() / ds.data.len() as f64;
+                ds.data.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / ds.data.len() as f64 * dim as f64
+            };
+            let ratio = mse / var;
+            assert!(ratio < max_ratio, "{}: ratio={ratio}", kind.name());
+            if kind == Kind::SsnppLike {
+                assert!(ratio > 0.5, "ssnpp should be hard to cluster: {ratio}");
+            }
+        }
+    }
+
+    #[test]
+    fn sift_like_pq_codes_are_cluster_conditioned() {
+        // The Fig.-3 property: within an IVF cluster, PQ sub-codes must be
+        // concentrated for sift-like data.
+        use crate::codecs::pcodes::ClusterCodeCodec;
+        use crate::quant::{kmeans, pq::Pq};
+        let dim = 16;
+        let ds = generate(Kind::SiftLike, 4000, 10, dim, 4);
+        let cfg = kmeans::KmeansConfig { k: 16, iters: 6, seed: 1, threads: 2, ..Default::default() };
+        let cents = kmeans::train(&ds.data, dim, &cfg);
+        let assign = kmeans::assign(&ds.data, dim, &cents, 2);
+        let pq = Pq::train(&ds.data, dim, 4, 8, 1, 2);
+        let codes = pq.encode_batch(&ds.data, 2);
+        // Collect the largest cluster's codes.
+        let mut by_cluster: Vec<Vec<u16>> = vec![Vec::new(); 16];
+        for (i, &c) in assign.iter().enumerate() {
+            by_cluster[c as usize].extend_from_slice(&codes[i * 4..(i + 1) * 4]);
+        }
+        let big = by_cluster.iter().max_by_key(|v| v.len()).unwrap();
+        let nrows = big.len() / 4;
+        assert!(nrows > 50);
+        let codec = ClusterCodeCodec::new(256, 4);
+        let enc = codec.encode(big, nrows);
+        let bpe = enc.bits as f64 / big.len() as f64;
+        assert!(bpe < 7.2, "expected conditional gain, got {bpe} bits/code");
+    }
+}

@@ -1,0 +1,86 @@
+//! Experiment drivers — one per table/figure of the paper — shared by the
+//! bench harnesses (`rust/benches/`) and smoke-tested at tiny scale here.
+//!
+//! Each driver returns structured rows; benches print them next to the
+//! paper's reference values (EXPERIMENTS.md records the comparison).
+
+pub mod experiments;
+pub mod bench_entries;
+
+/// Minimal fixed-width table printer for bench output.
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format helper: 3 significant-ish digits like the paper's tables.
+pub fn fmt3(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v >= 100.0 {
+        format!("{v:.0}")
+    } else if v >= 10.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["index", "EF", "ROC"]);
+        t.row(vec!["IVF256".into(), "9.85".into(), "9.43".into()]);
+        let s = t.render();
+        assert!(s.contains("IVF256"));
+        assert!(s.lines().count() == 3);
+    }
+
+    #[test]
+    fn fmt3_ranges() {
+        assert_eq!(fmt3(9.433), "9.43");
+        assert_eq!(fmt3(11.83), "11.8");
+        assert_eq!(fmt3(123.4), "123");
+        assert_eq!(fmt3(0.0), "0");
+    }
+}

@@ -1,0 +1,277 @@
+//! Fenwick (binary indexed) tree with order statistics.
+//!
+//! This is the data structure the paper singles out as the cost of ROC
+//! ("Most of the wall-time spent with ROC is due to the Fenwick Tree"): it
+//! maintains the multiset of not-yet-encoded elements and answers
+//! *select-kth* / *rank* in O(log n) during bits-back coding.  The `select`
+//! here uses the classic power-of-two bit-descent, so no binary search over
+//! prefix sums is needed.
+
+/// Fenwick tree over `n` slots of u64 counts.
+#[derive(Clone, Debug)]
+pub struct Fenwick {
+    tree: Vec<u64>,
+    n: usize,
+    total: u64,
+    /// Largest power of two <= n (descent start).
+    top: usize,
+}
+
+impl Fenwick {
+    pub fn new(n: usize) -> Self {
+        let top = if n == 0 { 0 } else { 1 << (usize::BITS - 1 - n.leading_zeros()) };
+        Fenwick { tree: vec![0; n + 1], n, total: 0, top }
+    }
+
+    /// Build from initial counts in O(n).
+    pub fn from_counts(counts: &[u64]) -> Self {
+        let n = counts.len();
+        let mut fw = Fenwick::new(n);
+        for (i, &c) in counts.iter().enumerate() {
+            fw.tree[i + 1] = fw.tree[i + 1].wrapping_add(c);
+            let j = i + 1 + ((i + 1) & (i + 1).wrapping_neg());
+            if j <= n {
+                let v = fw.tree[i + 1];
+                fw.tree[j] = fw.tree[j].wrapping_add(v);
+            }
+            fw.total += c;
+        }
+        fw
+    }
+
+    /// All-ones tree (each of the n slots has count 1).
+    pub fn ones(n: usize) -> Self {
+        Self::from_counts(&vec![1u64; n])
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Add `delta` to slot `i` (delta may be negative).
+    #[inline]
+    pub fn add(&mut self, i: usize, delta: i64) {
+        debug_assert!(i < self.n);
+        self.total = self.total.wrapping_add(delta as u64);
+        let mut j = i + 1;
+        while j <= self.n {
+            self.tree[j] = self.tree[j].wrapping_add(delta as u64);
+            j += j & j.wrapping_neg();
+        }
+    }
+
+    /// Sum of counts in `[0, i)`.
+    #[inline]
+    pub fn prefix_sum(&self, i: usize) -> u64 {
+        debug_assert!(i <= self.n);
+        let mut s = 0u64;
+        let mut j = i;
+        while j > 0 {
+            s = s.wrapping_add(self.tree[j]);
+            j &= j - 1;
+        }
+        s
+    }
+
+    /// Count at slot `i`.
+    pub fn get(&self, i: usize) -> u64 {
+        self.prefix_sum(i + 1) - self.prefix_sum(i)
+    }
+
+    /// Largest slot index `i` such that `prefix_sum(i) <= k`, together with
+    /// `k - prefix_sum(i)` — i.e. the slot containing mass-offset `k` and
+    /// the residual within it. Requires `k < total`.
+    ///
+    /// This is the ANS inverse-CDF lookup: `slot_of(slot_value)` maps an
+    /// ANS slot to (symbol, offset-within-symbol).
+    #[inline]
+    pub fn slot_of(&self, k: u64) -> (usize, u64) {
+        debug_assert!(k < self.total, "k={k} total={}", self.total);
+        let mut pos = 0usize;
+        let mut rem = k;
+        let mut step = self.top;
+        while step > 0 {
+            let next = pos + step;
+            if next <= self.n && self.tree[next] <= rem {
+                rem -= self.tree[next];
+                pos = next;
+            }
+            step >>= 1;
+        }
+        (pos, rem) // pos slots have cumulative <= k; slot index = pos
+    }
+
+    /// Index of the k-th *present* element when counts are 0/1 occupancy
+    /// (select-kth-remaining, used by the ROC/REC position trackers).
+    #[inline]
+    pub fn select_kth(&self, k: u64) -> usize {
+        self.slot_of(k).0
+    }
+
+    /// Like [`Fenwick::slot_of`] but every slot carries an extra additive
+    /// weight `alpha` (effective count of slot i = count_i + alpha).
+    ///
+    /// This is the inverse CDF of a Pólya urn with a uniform pseudo-count
+    /// prior — the vertex model of Random Edge Coding.  Requires
+    /// `k < total + alpha * n`.
+    #[inline]
+    pub fn slot_of_with_linear(&self, k: u64, alpha: u64) -> (usize, u64) {
+        debug_assert!(k < self.total + alpha * self.n as u64);
+        let mut pos = 0usize;
+        let mut rem = k;
+        let mut step = self.top;
+        while step > 0 {
+            let next = pos + step;
+            if next <= self.n {
+                let block = self.tree[next] + alpha * step as u64;
+                if block <= rem {
+                    rem -= block;
+                    pos = next;
+                }
+            }
+            step >>= 1;
+        }
+        (pos, rem)
+    }
+
+    /// Prefix sum with the same additive per-slot weight as
+    /// [`Fenwick::slot_of_with_linear`].
+    #[inline]
+    pub fn prefix_sum_with_linear(&self, i: usize, alpha: u64) -> u64 {
+        self.prefix_sum(i) + alpha * i as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn prefix_sums_match_naive() {
+        let mut rng = Rng::new(1);
+        for &n in &[1usize, 2, 7, 64, 100, 1000] {
+            let counts: Vec<u64> = (0..n).map(|_| rng.below(10)).collect();
+            let fw = Fenwick::from_counts(&counts);
+            let mut acc = 0;
+            for i in 0..=n {
+                assert_eq!(fw.prefix_sum(i), acc, "n={n} i={i}");
+                if i < n {
+                    assert_eq!(fw.get(i), counts[i]);
+                    acc += counts[i];
+                }
+            }
+            assert_eq!(fw.total(), acc);
+        }
+    }
+
+    #[test]
+    fn add_and_query_random() {
+        let mut rng = Rng::new(2);
+        let n = 500;
+        let mut naive = vec![0i64; n];
+        let mut fw = Fenwick::new(n);
+        for _ in 0..5000 {
+            let i = rng.below(n as u64) as usize;
+            let d = rng.below(7) as i64 - 3;
+            if naive[i] + d < 0 {
+                continue;
+            }
+            naive[i] += d;
+            fw.add(i, d);
+        }
+        let mut acc = 0u64;
+        for i in 0..n {
+            assert_eq!(fw.prefix_sum(i), acc);
+            acc += naive[i] as u64;
+        }
+    }
+
+    #[test]
+    fn slot_of_is_inverse_cdf() {
+        let counts = vec![3u64, 0, 5, 1, 0, 2];
+        let fw = Fenwick::from_counts(&counts);
+        let mut expect = Vec::new();
+        for (i, &c) in counts.iter().enumerate() {
+            for off in 0..c {
+                expect.push((i, off));
+            }
+        }
+        for (k, &(i, off)) in expect.iter().enumerate() {
+            assert_eq!(fw.slot_of(k as u64), (i, off), "k={k}");
+        }
+    }
+
+    #[test]
+    fn slot_of_random_property() {
+        let mut rng = Rng::new(3);
+        for &n in &[1usize, 3, 64, 65, 513, 1000] {
+            let counts: Vec<u64> = (0..n).map(|_| rng.below(5)).collect();
+            let fw = Fenwick::from_counts(&counts);
+            if fw.total() == 0 {
+                continue;
+            }
+            for _ in 0..200 {
+                let k = rng.below(fw.total());
+                let (i, off) = fw.slot_of(k);
+                assert!(fw.prefix_sum(i) <= k);
+                assert_eq!(fw.prefix_sum(i) + off, k);
+                assert!(k < fw.prefix_sum(i + 1));
+            }
+        }
+    }
+
+    #[test]
+    fn slot_of_with_linear_matches_naive() {
+        let mut rng = Rng::new(7);
+        for &n in &[1usize, 5, 64, 200, 1000] {
+            for &alpha in &[1u64, 3] {
+                let counts: Vec<u64> = (0..n).map(|_| rng.below(4)).collect();
+                let fw = Fenwick::from_counts(&counts);
+                let total = fw.total() + alpha * n as u64;
+                // Naive expansion of the weighted CDF.
+                let mut expect = Vec::new();
+                for (i, &c) in counts.iter().enumerate() {
+                    for off in 0..(c + alpha) {
+                        expect.push((i, off));
+                    }
+                }
+                assert_eq!(expect.len() as u64, total);
+                for _ in 0..300 {
+                    let k = rng.below(total);
+                    let (i, off) = fw.slot_of_with_linear(k, alpha);
+                    assert_eq!((i, off), expect[k as usize], "n={n} k={k}");
+                    assert_eq!(
+                        fw.prefix_sum_with_linear(i, alpha) + off,
+                        k
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn select_kth_remaining_simulation() {
+        // Occupancy use-case: remove elements one by one, as ROC does.
+        let mut rng = Rng::new(4);
+        let n = 300;
+        let mut fw = Fenwick::ones(n);
+        let mut alive: Vec<usize> = (0..n).collect();
+        while !alive.is_empty() {
+            let k = rng.below(alive.len() as u64);
+            let idx = fw.select_kth(k);
+            assert_eq!(idx, alive[k as usize]);
+            fw.add(idx, -1);
+            alive.remove(k as usize);
+        }
+        assert_eq!(fw.total(), 0);
+    }
+}

@@ -1,0 +1,248 @@
+//! HNSW (Malkov & Yashunin 2018) — used by Table 3's offline-compression
+//! comparison (base layer only: "other levels occupy negligible storage").
+
+use crate::graph::{beam_search, GraphStore, OrdF32, VisitedSet};
+use crate::quant::l2_sq;
+use crate::util::Rng;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+pub struct HnswParams {
+    /// Base-layer degree bound (the paper's HNSW16..HNSW256 sweep).
+    pub m: usize,
+    pub ef_construction: usize,
+    pub seed: u64,
+}
+
+impl Default for HnswParams {
+    fn default() -> Self {
+        HnswParams { m: 16, ef_construction: 100, seed: 7 }
+    }
+}
+
+pub struct Hnsw {
+    /// `layers[l][node]` — adjacency at level l (level 0 = base).
+    pub layers: Vec<Vec<Vec<u32>>>,
+    pub levels: Vec<u8>,
+    pub entry: u32,
+    pub dim: usize,
+    m: usize,
+}
+
+impl Hnsw {
+    pub fn build(data: &[f32], dim: usize, params: &HnswParams) -> Hnsw {
+        let n = data.len() / dim;
+        assert!(n > 0);
+        let mut rng = Rng::new(params.seed);
+        let ml = 1.0 / (params.m as f64).ln().max(0.7);
+        let levels: Vec<u8> = (0..n)
+            .map(|_| {
+                let u: f64 = rng.f64().max(1e-12);
+                ((-u.ln() * ml) as usize).min(12) as u8
+            })
+            .collect();
+        let max_level = levels.iter().copied().max().unwrap() as usize;
+        let mut layers: Vec<Vec<Vec<u32>>> =
+            (0..=max_level).map(|_| vec![Vec::new(); n]).collect();
+        let mut entry = 0u32;
+        let mut entry_level = levels[0] as usize;
+
+        let mut visited = VisitedSet::default();
+        for i in 1..n {
+            let q = &data[i * dim..(i + 1) * dim];
+            let node_level = levels[i] as usize;
+            let mut ep = entry;
+            // Greedy descent above the node's level.
+            for l in ((node_level + 1)..=entry_level).rev() {
+                ep = greedy_closest(&layers[l], data, dim, q, ep);
+            }
+            // Insert at each level from min(node_level, entry_level) down.
+            for l in (0..=node_level.min(entry_level)).rev() {
+                let found = search_layer(
+                    &layers[l],
+                    data,
+                    dim,
+                    q,
+                    ep,
+                    params.ef_construction,
+                    &mut visited,
+                );
+                let max_deg = if l == 0 { params.m } else { params.m / 2 + 1 };
+                let selected = select_neighbors(&found, data, dim, max_deg);
+                for &(_, nb) in &selected {
+                    layers[l][i].push(nb);
+                    layers[l][nb as usize].push(i as u32);
+                    // Prune over-full neighbor.
+                    if layers[l][nb as usize].len() > max_deg {
+                        let nbv = &data[nb as usize * dim..(nb as usize + 1) * dim];
+                        let cands: Vec<(f32, u32)> = layers[l][nb as usize]
+                            .iter()
+                            .map(|&x| {
+                                (l2_sq(nbv, &data[x as usize * dim..(x as usize + 1) * dim]), x)
+                            })
+                            .collect();
+                        layers[l][nb as usize] = select_neighbors(&cands, data, dim, max_deg)
+                            .into_iter()
+                            .map(|(_, x)| x)
+                            .collect();
+                    }
+                }
+                if let Some(&(_, best)) = selected.first() {
+                    ep = best;
+                }
+            }
+            if node_level > entry_level {
+                entry = i as u32;
+                entry_level = node_level;
+            }
+        }
+        Hnsw { layers, levels, entry, dim, m: params.m }
+    }
+
+    /// Base-layer adjacency (what Table 3 compresses).
+    pub fn base_adj(&self) -> &Vec<Vec<u32>> {
+        &self.layers[0]
+    }
+
+    pub fn search(&self, data: &[f32], query: &[f32], ef: usize, k: usize) -> Vec<(f32, u32)> {
+        let mut ep = self.entry;
+        for l in (1..self.layers.len()).rev() {
+            ep = greedy_closest(&self.layers[l], data, self.dim, query, ep);
+        }
+        let store = GraphStore::Raw(self.layers[0].clone());
+        let mut visited = VisitedSet::default();
+        let mut scratch = Vec::new();
+        beam_search(&store, data, self.dim, &[ep], query, ef, k, &mut visited, &mut scratch)
+    }
+
+    pub fn num_base_edges(&self) -> u64 {
+        self.layers[0].iter().map(|l| l.len() as u64).sum()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        self.m
+    }
+}
+
+fn greedy_closest(layer: &[Vec<u32>], data: &[f32], dim: usize, q: &[f32], start: u32) -> u32 {
+    let mut cur = start;
+    let mut dcur = l2_sq(q, &data[cur as usize * dim..(cur as usize + 1) * dim]);
+    loop {
+        let mut improved = false;
+        for &nb in &layer[cur as usize] {
+            let d = l2_sq(q, &data[nb as usize * dim..(nb as usize + 1) * dim]);
+            if d < dcur {
+                dcur = d;
+                cur = nb;
+                improved = true;
+            }
+        }
+        if !improved {
+            return cur;
+        }
+    }
+}
+
+fn search_layer(
+    layer: &[Vec<u32>],
+    data: &[f32],
+    dim: usize,
+    q: &[f32],
+    entry: u32,
+    ef: usize,
+    visited: &mut VisitedSet,
+) -> Vec<(f32, u32)> {
+    visited.clear(layer.len());
+    let d0 = l2_sq(q, &data[entry as usize * dim..(entry as usize + 1) * dim]);
+    let mut cand: BinaryHeap<Reverse<(OrdF32, u32)>> = BinaryHeap::new();
+    let mut results = crate::quant::TopK::new(ef);
+    cand.push(Reverse((OrdF32(d0), entry)));
+    results.push(d0, entry);
+    visited.insert(entry);
+    while let Some(Reverse((OrdF32(d), node))) = cand.pop() {
+        if d > results.threshold() {
+            break;
+        }
+        for &nb in &layer[node as usize] {
+            if visited.insert(nb) {
+                let dn = l2_sq(q, &data[nb as usize * dim..(nb as usize + 1) * dim]);
+                if dn < results.threshold() {
+                    results.push(dn, nb);
+                    cand.push(Reverse((OrdF32(dn), nb)));
+                }
+            }
+        }
+    }
+    results.into_sorted()
+}
+
+/// HNSW heuristic neighbor selection (occlusion-pruned like MRNG).
+fn select_neighbors(cands: &[(f32, u32)], data: &[f32], dim: usize, m: usize) -> Vec<(f32, u32)> {
+    let mut sorted: Vec<(f32, u32)> = cands.to_vec();
+    sorted.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    sorted.dedup_by_key(|c| c.1);
+    let mut kept: Vec<(f32, u32)> = Vec::with_capacity(m);
+    'outer: for &(dc, c) in &sorted {
+        if kept.len() >= m {
+            break;
+        }
+        let cv = &data[c as usize * dim..(c as usize + 1) * dim];
+        for &(_, s) in &kept {
+            if l2_sq(cv, &data[s as usize * dim..(s as usize + 1) * dim]) < dc {
+                continue 'outer;
+            }
+        }
+        kept.push((dc, c));
+    }
+    kept
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{generate, groundtruth, Kind};
+
+    #[test]
+    fn degree_bounds_hold() {
+        let ds = generate(Kind::DeepLike, 1000, 10, 12, 18);
+        let h = Hnsw::build(&ds.data, ds.dim, &HnswParams { m: 12, ef_construction: 60, seed: 1 });
+        for l in h.base_adj() {
+            assert!(l.len() <= 12, "base degree {}", l.len());
+        }
+        assert!(h.num_base_edges() > 0);
+    }
+
+    #[test]
+    fn search_recall_reasonable() {
+        let ds = generate(Kind::DeepLike, 3000, 50, 16, 19);
+        let h = Hnsw::build(&ds.data, ds.dim, &HnswParams { m: 16, ef_construction: 100, seed: 2 });
+        let gt = groundtruth::exact_knn(&ds.data, &ds.queries, ds.dim, 10, 2);
+        let results: Vec<Vec<u32>> = (0..ds.nq)
+            .map(|qi| h.search(&ds.data, ds.query(qi), 64, 10).into_iter().map(|(_, id)| id).collect())
+            .collect();
+        let recall = groundtruth::recall_at_k(&gt, 10, &results, 10);
+        assert!(recall > 0.8, "recall={recall}");
+    }
+
+    #[test]
+    fn base_layer_compresses_with_rec() {
+        use crate::codecs::rec::{Rec, RecModel};
+        let ds = generate(Kind::DeepLike, 800, 5, 8, 20);
+        let h = Hnsw::build(&ds.data, ds.dim, &HnswParams { m: 8, ef_construction: 40, seed: 3 });
+        let adj = h.base_adj();
+        let e: u64 = adj.iter().map(|l| l.len() as u64).sum();
+        let rec = Rec::new(RecModel::PolyaUrn);
+        let enc = rec.encode_graph(adj);
+        let got = rec.decode_graph(&enc.bytes, 800, e);
+        let sort = |a: &[Vec<u32>]| -> Vec<Vec<u32>> {
+            a.iter()
+                .map(|l| {
+                    let mut l = l.clone();
+                    l.sort_unstable();
+                    l
+                })
+                .collect()
+        };
+        assert_eq!(sort(&got), sort(adj));
+    }
+}

@@ -1,0 +1,94 @@
+//! kNN-graph construction — the substrate both NSG and HNSW quality checks
+//! build on. Exact (brute force, parallel) for small collections, IVF-
+//! assisted approximate for large ones.
+
+use crate::index::{IvfBuildParams, IvfIndex, SearchParams, SearchScratch};
+use crate::quant::top_k;
+use crate::util::pool::parallel_map;
+
+/// Exact kNN graph (excluding self), parallel brute force. O(N² d).
+pub fn exact(data: &[f32], dim: usize, k: usize, threads: usize) -> Vec<Vec<u32>> {
+    let n = data.len() / dim;
+    parallel_map(n, threads, |i| {
+        let q = &data[i * dim..(i + 1) * dim];
+        top_k(q, data, dim, k + 1)
+            .into_iter()
+            .filter(|&(_, id)| id != i as u32)
+            .take(k)
+            .map(|(_, id)| id)
+            .collect()
+    })
+}
+
+/// Approximate kNN graph via a scaffold IVF index: each point queries the
+/// index with a generous nprobe. Recall is high because points and
+/// database coincide.
+pub fn approximate(data: &[f32], dim: usize, k: usize, threads: usize, seed: u64) -> Vec<Vec<u32>> {
+    let n = data.len() / dim;
+    let kc = ((n as f64).sqrt() as usize).clamp(8, 4096);
+    let params = IvfBuildParams {
+        k: kc,
+        train_iters: 6,
+        seed,
+        threads,
+        id_codec: "unc32".into(),
+        ..Default::default()
+    };
+    let index = IvfIndex::build(data, dim, &params);
+    let sp = SearchParams { nprobe: 12.min(kc), k: k + 1 };
+    parallel_map(n, threads, |i| {
+        let mut scratch = SearchScratch::default();
+        index
+            .search(&data[i * dim..(i + 1) * dim], &sp, &mut scratch)
+            .into_iter()
+            .filter(|&(_, id)| id != i as u32)
+            .take(k)
+            .map(|(_, id)| id)
+            .collect()
+    })
+}
+
+/// Auto-select: exact below a size threshold, approximate above.
+pub fn build(data: &[f32], dim: usize, k: usize, threads: usize, seed: u64) -> Vec<Vec<u32>> {
+    let n = data.len() / dim;
+    if n <= 20_000 {
+        exact(data, dim, k, threads)
+    } else {
+        approximate(data, dim, k, threads, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{generate, Kind};
+
+    #[test]
+    fn exact_graph_is_symmetric_quality() {
+        let ds = generate(Kind::DeepLike, 600, 5, 8, 13);
+        let g = exact(&ds.data, ds.dim, 5, 2);
+        assert_eq!(g.len(), 600);
+        for (i, l) in g.iter().enumerate() {
+            assert_eq!(l.len(), 5);
+            assert!(!l.contains(&(i as u32)), "self edge at {i}");
+            let d: std::collections::HashSet<_> = l.iter().collect();
+            assert_eq!(d.len(), 5, "dup edges at {i}");
+        }
+    }
+
+    #[test]
+    fn approximate_matches_exact_mostly() {
+        let ds = generate(Kind::DeepLike, 2000, 5, 12, 14);
+        let ex = exact(&ds.data, ds.dim, 8, 2);
+        let ap = approximate(&ds.data, ds.dim, 8, 2, 1);
+        let mut inter = 0usize;
+        let mut total = 0usize;
+        for (e, a) in ex.iter().zip(&ap) {
+            let s: std::collections::HashSet<_> = e.iter().collect();
+            inter += a.iter().filter(|id| s.contains(id)).count();
+            total += e.len();
+        }
+        let recall = inter as f64 / total as f64;
+        assert!(recall > 0.8, "knn-graph recall={recall}");
+    }
+}

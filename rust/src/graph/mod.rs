@@ -1,0 +1,235 @@
+//! Graph-based ANN indexes (NSG, HNSW) with compressed adjacency storage.
+//!
+//! The friend lists `e_i` are sets of target ids (Fig. 1 bottom); at
+//! search time only *sequential* access within a visited node's list is
+//! needed, so per-node compressed streams (ROC, EF, …) apply — the NSG
+//! rows of Tables 1 and 2.  Whole-graph offline compression (REC,
+//! Zuckerli) lives in `codecs::{rec, zuckerli}` and is exercised over
+//! these graphs by Table 3.
+
+pub mod knn;
+pub mod nsg;
+pub mod hnsw;
+
+use crate::codecs::{codec_by_name, IdCodec};
+
+/// Adjacency storage: raw lists or one compressed stream per node.
+pub enum GraphStore {
+    Raw(Vec<Vec<u32>>),
+    Compressed {
+        codec: Box<dyn IdCodec>,
+        blobs: Vec<Vec<u8>>,
+        lens: Vec<u32>,
+        universe: u32,
+        bits: u64,
+    },
+}
+
+impl GraphStore {
+    /// Compress raw adjacency with a per-list codec.
+    pub fn compress(adj: &[Vec<u32>], codec_name: &str) -> GraphStore {
+        let codec = codec_by_name(codec_name)
+            .unwrap_or_else(|| panic!("unknown codec {codec_name}"));
+        let universe = adj.len() as u32;
+        let mut bits = 0u64;
+        let mut lens = Vec::with_capacity(adj.len());
+        let blobs: Vec<Vec<u8>> = adj
+            .iter()
+            .map(|l| {
+                let enc = codec.encode(l, universe);
+                bits += enc.bits;
+                lens.push(l.len() as u32);
+                enc.bytes
+            })
+            .collect();
+        GraphStore::Compressed { codec, blobs, lens, universe, bits }
+    }
+
+    /// Friend list of node `i`, decoded into `scratch` if compressed.
+    /// Returns a slice valid until the next call.
+    #[inline]
+    pub fn neighbors<'a>(&'a self, i: usize, scratch: &'a mut Vec<u32>) -> &'a [u32] {
+        match self {
+            GraphStore::Raw(adj) => &adj[i],
+            GraphStore::Compressed { codec, blobs, lens, universe, .. } => {
+                scratch.clear();
+                codec.decode(&blobs[i], *universe, lens[i] as usize, scratch);
+                scratch
+            }
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        match self {
+            GraphStore::Raw(adj) => adj.len(),
+            GraphStore::Compressed { blobs, .. } => blobs.len(),
+        }
+    }
+
+    pub fn num_edges(&self) -> u64 {
+        match self {
+            GraphStore::Raw(adj) => adj.iter().map(|l| l.len() as u64).sum(),
+            GraphStore::Compressed { lens, .. } => lens.iter().map(|&l| l as u64).sum(),
+        }
+    }
+
+    /// Exact id payload bits (Table-1 NSG numerator). Raw lists count as
+    /// 32 bits/edge, the Faiss graph default.
+    pub fn id_bits(&self) -> u64 {
+        match self {
+            GraphStore::Raw(adj) => adj.iter().map(|l| l.len() as u64 * 32).sum(),
+            GraphStore::Compressed { bits, .. } => *bits,
+        }
+    }
+
+    pub fn bits_per_edge(&self) -> f64 {
+        self.id_bits() as f64 / self.num_edges() as f64
+    }
+}
+
+/// Greedy best-first beam search over any [`GraphStore`] — the shared
+/// search routine of NSG and (base-layer) HNSW.
+///
+/// `entries` may hold several seeds (NSG uses a farthest-point-sampled
+/// entry set so island-like collections stay navigable); returns up to
+/// `k` (dist, id) pairs, ascending.
+pub fn beam_search(
+    store: &GraphStore,
+    data: &[f32],
+    dim: usize,
+    entries: &[u32],
+    query: &[f32],
+    ef: usize,
+    k: usize,
+    visited: &mut VisitedSet,
+    scratch: &mut Vec<u32>,
+) -> Vec<(f32, u32)> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    visited.clear(store.num_nodes());
+    // Candidates: min-heap by distance; results: bounded max-heap.
+    let mut cand: BinaryHeap<Reverse<(OrdF32, u32)>> = BinaryHeap::new();
+    let mut results = crate::quant::TopK::new(ef.max(k));
+    for &entry in entries {
+        if visited.insert(entry) {
+            let d0 = crate::quant::l2_sq(
+                query,
+                &data[entry as usize * dim..(entry as usize + 1) * dim],
+            );
+            cand.push(Reverse((OrdF32(d0), entry)));
+            results.push(d0, entry);
+        }
+    }
+
+    while let Some(Reverse((OrdF32(d), node))) = cand.pop() {
+        if d > results.threshold() {
+            break;
+        }
+        // Sequential access to the friend list: decode the node's stream.
+        let neigh = store.neighbors(node as usize, scratch);
+        for &nb in neigh {
+            if visited.insert(nb) {
+                let dn =
+                    crate::quant::l2_sq(query, &data[nb as usize * dim..(nb as usize + 1) * dim]);
+                if dn < results.threshold() {
+                    results.push(dn, nb);
+                    cand.push(Reverse((OrdF32(dn), nb)));
+                }
+            }
+        }
+    }
+    let mut out = results.into_sorted();
+    out.truncate(k);
+    out
+}
+
+/// Total-ordered f32 wrapper for heaps.
+#[derive(PartialEq, Clone, Copy)]
+pub struct OrdF32(pub f32);
+
+impl Eq for OrdF32 {}
+
+impl PartialOrd for OrdF32 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF32 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Epoch-based visited set: O(1) clear between queries.
+#[derive(Default)]
+pub struct VisitedSet {
+    epoch: u32,
+    marks: Vec<u32>,
+}
+
+impl VisitedSet {
+    pub fn clear(&mut self, n: usize) {
+        if self.marks.len() < n {
+            self.marks = vec![0; n];
+            self.epoch = 1;
+        } else {
+            self.epoch += 1;
+            if self.epoch == 0 {
+                self.marks.fill(0);
+                self.epoch = 1;
+            }
+        }
+    }
+
+    /// Returns true if newly inserted.
+    #[inline]
+    pub fn insert(&mut self, i: u32) -> bool {
+        let m = &mut self.marks[i as usize];
+        if *m == self.epoch {
+            false
+        } else {
+            *m = self.epoch;
+            true
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn visited_set_epochs() {
+        let mut v = VisitedSet::default();
+        v.clear(10);
+        assert!(v.insert(3));
+        assert!(!v.insert(3));
+        v.clear(10);
+        assert!(v.insert(3), "cleared by epoch bump");
+    }
+
+    #[test]
+    fn graph_store_roundtrip_and_bits() {
+        let mut rng = Rng::new(90);
+        let adj: Vec<Vec<u32>> = (0..100)
+            .map(|_| rng.sample_distinct(100, 10).into_iter().map(|v| v as u32).collect())
+            .collect();
+        let raw = GraphStore::Raw(adj.clone());
+        for codec in ["compact", "ef", "roc", "unc32"] {
+            let comp = GraphStore::compress(&adj, codec);
+            assert_eq!(comp.num_edges(), raw.num_edges());
+            let mut scratch = Vec::new();
+            for i in 0..100 {
+                let mut got: Vec<u32> = comp.neighbors(i, &mut scratch).to_vec();
+                got.sort_unstable();
+                let mut want = adj[i].clone();
+                want.sort_unstable();
+                assert_eq!(got, want, "{codec} node {i}");
+            }
+        }
+        assert_eq!(raw.bits_per_edge(), 32.0);
+    }
+}

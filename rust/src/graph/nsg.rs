@@ -1,0 +1,322 @@
+//! NSG (Navigating Spreading-out Graph, Fu et al. 2017) — the paper's main
+//! graph index (chosen there for its flat, non-hierarchical structure).
+//!
+//! Construction follows the paper's recipe at simulation scale: a kNN
+//! graph provides candidates, edges are selected with the MRNG occlusion
+//! rule (keep a candidate only if no already-kept neighbor is closer to it
+//! than the node itself), degrees are capped at `r`, and connectivity from
+//! the medoid is restored with a BFS + nearest-attachment pass.
+
+use crate::graph::{beam_search, GraphStore, VisitedSet};
+use crate::quant::l2_sq;
+use crate::util::pool::parallel_map;
+
+pub struct NsgParams {
+    /// Maximum out-degree (the paper's NSG16..NSG256 sweep).
+    pub r: usize,
+    /// kNN-graph degree used for candidate generation.
+    pub knn_k: usize,
+    /// Occlusion slack (DiskANN-style α ≥ 1): a candidate c is occluded by
+    /// a kept edge s only if `α·d(c,s) < d(i,c)`. α > 1 keeps the
+    /// long-range edges that tightly-clustered collections need for
+    /// navigability.
+    pub alpha: f32,
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for NsgParams {
+    fn default() -> Self {
+        NsgParams {
+            r: 32,
+            knn_k: 48,
+            alpha: 1.2,
+            threads: crate::util::pool::default_threads(),
+            seed: 7,
+        }
+    }
+}
+
+pub struct Nsg {
+    pub adj: Vec<Vec<u32>>,
+    pub medoid: u32,
+    /// Search entry set: medoid + farthest-point-sampled representatives.
+    /// Tiny metadata (≤64 ids) that keeps island-like collections
+    /// navigable; does not count toward the compressed id payload.
+    pub entries: Vec<u32>,
+    pub dim: usize,
+}
+
+impl Nsg {
+    pub fn build(data: &[f32], dim: usize, params: &NsgParams) -> Nsg {
+        let _n = data.len() / dim;
+        let knn = super::knn::build(data, dim, params.knn_k.max(params.r), params.threads, params.seed);
+        Self::build_from_knn(data, dim, &knn, params)
+    }
+
+    pub fn build_from_knn(data: &[f32], dim: usize, knn: &[Vec<u32>], params: &NsgParams) -> Nsg {
+        let n = data.len() / dim;
+        let medoid = find_medoid(data, dim, n);
+        let entries = entry_set(data, dim, n, medoid, 64.min(n));
+
+        // Candidate pool per node: kNN list + reverse kNN edges + the
+        // visited set of a beam search from the medoid over the kNN graph
+        // (the actual NSG candidate-acquisition step — it contributes the
+        // long-range navigation edges that pure kNN pools lack on
+        // clustered data).
+        let mut reverse: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for (i, l) in knn.iter().enumerate() {
+            for &j in l {
+                if reverse[j as usize].len() < params.knn_k {
+                    reverse[j as usize].push(i as u32);
+                }
+            }
+        }
+        let knn_store = GraphStore::Raw(knn.to_vec());
+        let searched: Vec<Vec<u32>> = parallel_map(n, params.threads, |i| {
+            let mut visited = VisitedSet::default();
+            let mut scratch = Vec::new();
+            beam_search(
+                &knn_store,
+                data,
+                dim,
+                &entries,
+                &data[i * dim..(i + 1) * dim],
+                64, // construction beam width: quality saturates ~64
+                64,
+                &mut visited,
+                &mut scratch,
+            )
+            .into_iter()
+            .map(|(_, id)| id)
+            .collect()
+        });
+
+        let adj: Vec<Vec<u32>> = parallel_map(n, params.threads, |i| {
+            let q = &data[i * dim..(i + 1) * dim];
+            let mut cands: Vec<(f32, u32)> = knn[i]
+                .iter()
+                .chain(reverse[i].iter())
+                .chain(searched[i].iter())
+                .filter(|&&c| c != i as u32)
+                .map(|&c| (l2_sq(q, &data[c as usize * dim..(c as usize + 1) * dim]), c))
+                .collect();
+            cands.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            cands.dedup_by_key(|c| c.1);
+            // MRNG occlusion rule.
+            let mut kept: Vec<(f32, u32)> = Vec::with_capacity(params.r);
+            'outer: for &(dc, c) in &cands {
+                if kept.len() >= params.r {
+                    break;
+                }
+                let cv = &data[c as usize * dim..(c as usize + 1) * dim];
+                for &(_, s) in &kept {
+                    let sv = &data[s as usize * dim..(s as usize + 1) * dim];
+                    // Squared distances: α² on the left ≙ α on metric dists.
+                    if params.alpha * params.alpha * l2_sq(cv, sv) < dc {
+                        continue 'outer; // occluded by a kept edge
+                    }
+                }
+                kept.push((dc, c));
+            }
+            kept.into_iter().map(|(_, c)| c).collect()
+        });
+
+        let mut nsg = Nsg { adj, medoid, entries, dim };
+        nsg.ensure_connectivity(data);
+        nsg
+    }
+
+    /// Make every node reachable from the medoid: one bridging edge per
+    /// unreachable *component* (NSG's spanning-tree step). The edge source
+    /// is the reached node nearest to the component head among a bounded
+    /// sample, so no single node's degree blows up.
+    fn ensure_connectivity(&mut self, data: &[f32]) {
+        let n = self.adj.len();
+        let mut seen = vec![false; n];
+        let mut queue = std::collections::VecDeque::new();
+        let mut reached_sample: Vec<u32> = Vec::new();
+        let bfs = |adj: &Vec<Vec<u32>>,
+                   seen: &mut Vec<bool>,
+                   queue: &mut std::collections::VecDeque<u32>,
+                   sample: &mut Vec<u32>| {
+            while let Some(u) = queue.pop_front() {
+                if sample.len() < 512 || u as usize % 64 == 0 {
+                    sample.push(u);
+                }
+                for &v in &adj[u as usize] {
+                    if !seen[v as usize] {
+                        seen[v as usize] = true;
+                        queue.push_back(v);
+                    }
+                }
+            }
+        };
+        seen[self.medoid as usize] = true;
+        queue.push_back(self.medoid);
+        bfs(&self.adj, &mut seen, &mut queue, &mut reached_sample);
+        for i in 0..n {
+            if seen[i] {
+                continue;
+            }
+            // Bridge from the nearest sampled reached node to this
+            // component head, then absorb the whole component via BFS.
+            let q = &data[i * self.dim..(i + 1) * self.dim];
+            let mut best = (f32::INFINITY, self.medoid);
+            for &s in &reached_sample {
+                let d = l2_sq(q, &data[s as usize * self.dim..(s as usize + 1) * self.dim]);
+                if d < best.0 {
+                    best = (d, s);
+                }
+            }
+            self.adj[best.1 as usize].push(i as u32);
+            seen[i] = true;
+            queue.push_back(i as u32);
+            bfs(&self.adj, &mut seen, &mut queue, &mut reached_sample);
+        }
+    }
+
+    /// Search through a (possibly compressed) adjacency store.
+    pub fn search_store(
+        &self,
+        store: &GraphStore,
+        data: &[f32],
+        query: &[f32],
+        ef: usize,
+        k: usize,
+        visited: &mut VisitedSet,
+        scratch: &mut Vec<u32>,
+    ) -> Vec<(f32, u32)> {
+        beam_search(store, data, self.dim, &self.entries, query, ef, k, visited, scratch)
+    }
+
+    pub fn search(&self, data: &[f32], query: &[f32], ef: usize, k: usize) -> Vec<(f32, u32)> {
+        // Convenience wrapper over a borrowed raw store.
+        let store = GraphStore::Raw(self.adj.clone());
+        let mut visited = VisitedSet::default();
+        let mut scratch = Vec::new();
+        self.search_store(&store, data, query, ef, k, &mut visited, &mut scratch)
+    }
+
+    pub fn num_edges(&self) -> u64 {
+        self.adj.iter().map(|l| l.len() as u64).sum()
+    }
+}
+
+/// Farthest-point sampling over a bounded subsample: `count` spread-out
+/// entry points, starting from the medoid.
+fn entry_set(data: &[f32], dim: usize, n: usize, medoid: u32, count: usize) -> Vec<u32> {
+    let mut rng = crate::util::Rng::new(0xe17e);
+    let sample: Vec<u32> = if n <= 4096 {
+        (0..n as u32).collect()
+    } else {
+        (0..4096).map(|_| rng.below(n as u64) as u32).collect()
+    };
+    let mut chosen = vec![medoid];
+    let mut min_d: Vec<f32> = sample
+        .iter()
+        .map(|&s| {
+            l2_sq(
+                &data[s as usize * dim..(s as usize + 1) * dim],
+                &data[medoid as usize * dim..(medoid as usize + 1) * dim],
+            )
+        })
+        .collect();
+    while chosen.len() < count {
+        let (best_i, best_d) = min_d
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, &d)| (i, d))
+            .unwrap();
+        if best_d <= 0.0 {
+            break;
+        }
+        let p = sample[best_i];
+        chosen.push(p);
+        let pv = &data[p as usize * dim..(p as usize + 1) * dim];
+        for (i, &s) in sample.iter().enumerate() {
+            let d = l2_sq(&data[s as usize * dim..(s as usize + 1) * dim], pv);
+            if d < min_d[i] {
+                min_d[i] = d;
+            }
+        }
+    }
+    chosen
+}
+
+fn find_medoid(data: &[f32], dim: usize, n: usize) -> u32 {
+    // Nearest point to the global mean.
+    let mut mean = vec![0f64; dim];
+    for row in data.chunks_exact(dim) {
+        for (m, &v) in mean.iter_mut().zip(row) {
+            *m += v as f64;
+        }
+    }
+    let meanf: Vec<f32> = mean.iter().map(|&m| (m / n as f64) as f32).collect();
+    crate::quant::nearest(&meanf, data, dim).0 as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{generate, groundtruth, Kind};
+
+    #[test]
+    fn builds_within_degree_cap_and_connected() {
+        let ds = generate(Kind::DeepLike, 1500, 20, 12, 15);
+        let nsg = Nsg::build(&ds.data, ds.dim, &NsgParams { r: 16, knn_k: 24, threads: 2, seed: 1, ..Default::default() });
+        for l in &nsg.adj {
+            // +small slack from connectivity attachment
+            assert!(l.len() <= 16 + 4, "degree {}", l.len());
+        }
+        // Connectivity: BFS reaches everything.
+        let mut seen = vec![false; 1500];
+        let mut q = std::collections::VecDeque::from([nsg.medoid]);
+        seen[nsg.medoid as usize] = true;
+        let mut count = 1;
+        while let Some(u) = q.pop_front() {
+            for &v in &nsg.adj[u as usize] {
+                if !seen[v as usize] {
+                    seen[v as usize] = true;
+                    count += 1;
+                    q.push_back(v);
+                }
+            }
+        }
+        assert_eq!(count, 1500);
+    }
+
+    #[test]
+    fn search_recall_reasonable() {
+        let ds = generate(Kind::DeepLike, 3000, 50, 16, 16);
+        let nsg = Nsg::build(&ds.data, ds.dim, &NsgParams { r: 24, knn_k: 32, threads: 2, seed: 2, ..Default::default() });
+        let gt = groundtruth::exact_knn(&ds.data, &ds.queries, ds.dim, 10, 2);
+        let results: Vec<Vec<u32>> = (0..ds.nq)
+            .map(|qi| {
+                nsg.search(&ds.data, ds.query(qi), 64, 10).into_iter().map(|(_, id)| id).collect()
+            })
+            .collect();
+        let recall = groundtruth::recall_at_k(&gt, 10, &results, 10);
+        assert!(recall > 0.75, "recall={recall}");
+    }
+
+    #[test]
+    fn compressed_stores_give_identical_results() {
+        let ds = generate(Kind::DeepLike, 1200, 15, 12, 17);
+        let nsg = Nsg::build(&ds.data, ds.dim, &NsgParams { r: 16, knn_k: 24, threads: 2, seed: 3, ..Default::default() });
+        let raw = GraphStore::Raw(nsg.adj.clone());
+        let mut visited = VisitedSet::default();
+        let mut scratch = Vec::new();
+        for codec in ["compact", "ef", "roc"] {
+            let comp = GraphStore::compress(&nsg.adj, codec);
+            for qi in 0..ds.nq {
+                let a = nsg.search_store(&raw, &ds.data, ds.query(qi), 32, 5, &mut visited, &mut scratch);
+                let b = nsg.search_store(&comp, &ds.data, ds.query(qi), 32, 5, &mut visited, &mut scratch);
+                let ai: Vec<u32> = a.iter().map(|r| r.1).collect();
+                let bi: Vec<u32> = b.iter().map(|r| r.1).collect();
+                assert_eq!(ai, bi, "codec={codec} q={qi}");
+            }
+        }
+    }
+}

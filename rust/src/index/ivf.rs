@@ -1,0 +1,566 @@
+//! IVF (inverted file) index with pluggable id compression.
+//!
+//! Layout follows Faiss: vectors are *reordered* into cluster-major order,
+//! which is exactly why each cluster's original vector ids must be stored
+//! explicitly — the green boxes of the paper's Fig. 1.  The id payload is
+//! stored through one of:
+//!
+//! * a per-list [`IdCodec`] (`unc64`, `compact`, `ef`, `roc`) — the online
+//!   setting (§4.2): one bit stream per cluster;
+//! * a [`WaveletTree`] over the assignment sequence (`wt`, `wt1`) — full
+//!   random access (§4.1): no per-cluster lists at all, ids are recovered
+//!   with `select(cluster, offset)`.
+//!
+//! Search implements the paper's deferred-id trick: the top-k structure
+//! collects packed `(cluster, offset)` pairs; only the final k winners are
+//! resolved to real ids (via `decode_nth`/`select` for random-access
+//! stores).  ROC has no random access, so each probed cluster's stream is
+//! decoded during the scan — the id-decode cost that Table 2 measures.
+
+use crate::codecs::wavelet::{WaveletTree, WtStorage};
+use crate::codecs::{codec_by_name, pcodes, IdCodec};
+use crate::quant::kmeans::{self, KmeansConfig};
+use crate::quant::pq::Pq;
+use crate::quant::{l2_sq, TopK};
+use crate::util::pool::default_threads;
+
+/// How vectors themselves are stored (orthogonal to id compression).
+#[derive(Clone, Debug, PartialEq)]
+pub enum VectorMode {
+    /// Raw f32 vectors ("Flat quantizer" rows of Table 1/2).
+    Flat,
+    /// PQ codes scanned via ADC (PQ rows of Table 2 / Fig. 2).
+    Pq { m: usize, bits: u32 },
+    /// PQ codes entropy-coded per cluster with the eq. (6-7) model
+    /// (Fig. 3); decoded per probed cluster at search time.
+    PqCompressed { m: usize, bits: u32 },
+}
+
+pub struct IvfBuildParams {
+    pub k: usize,
+    pub train_iters: usize,
+    pub seed: u64,
+    pub threads: usize,
+    /// One of: unc64 | unc32 | compact | ef | roc | wt | wt1.
+    pub id_codec: String,
+    pub vectors: VectorMode,
+}
+
+impl Default for IvfBuildParams {
+    fn default() -> Self {
+        IvfBuildParams {
+            k: 1024,
+            train_iters: 8,
+            seed: 0x1df,
+            threads: default_threads(),
+            id_codec: "roc".into(),
+            vectors: VectorMode::Flat,
+        }
+    }
+}
+
+pub struct SearchParams {
+    pub nprobe: usize,
+    pub k: usize,
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        SearchParams { nprobe: 16, k: 10 }
+    }
+}
+
+enum IdStore {
+    PerList {
+        codec: Box<dyn IdCodec>,
+        blobs: Vec<Vec<u8>>,
+        bits: u64,
+        random_access: bool,
+    },
+    Wavelet {
+        wt: WaveletTree,
+    },
+}
+
+enum CodeStore {
+    Flat(Vec<f32>),
+    Pq {
+        pq: Pq,
+        codes: Vec<u16>,
+    },
+    PqCompressed {
+        pq: Pq,
+        clusters: Vec<pcodes::EncodedCluster>,
+        bits: u64,
+    },
+}
+
+/// Reusable per-thread search scratch (no allocation on the hot path).
+#[derive(Default)]
+pub struct SearchScratch {
+    coarse: Vec<f32>,
+    probe_order: Vec<u32>,
+    lut: Vec<f32>,
+    ids: Vec<u32>,
+    codes: Vec<u16>,
+}
+
+pub struct IvfIndex {
+    pub dim: usize,
+    pub n: usize,
+    pub k: usize,
+    pub centroids: Vec<f32>,
+    /// Cluster boundaries in the reordered arrays (k+1 entries).
+    offsets: Vec<usize>,
+    ids: IdStore,
+    store: CodeStore,
+}
+
+impl IvfIndex {
+    /// Build from row-major `data` (`n × dim`).
+    pub fn build(data: &[f32], dim: usize, params: &IvfBuildParams) -> IvfIndex {
+        let _n = data.len() / dim;
+        let cfg = KmeansConfig {
+            k: params.k,
+            iters: params.train_iters,
+            seed: params.seed,
+            threads: params.threads,
+            ..Default::default()
+        };
+        let centroids = kmeans::train(data, dim, &cfg);
+        let k = centroids.len() / dim;
+        let assign = kmeans::assign(data, dim, &centroids, params.threads);
+        Self::build_preassigned(data, dim, &centroids, &assign, params, k)
+    }
+
+    /// Build with an existing coarse quantizer + assignment (used by the
+    /// large-scale Table-4 bench to share one expensive clustering).
+    pub fn build_preassigned(
+        data: &[f32],
+        dim: usize,
+        centroids: &[f32],
+        assign: &[u32],
+        params: &IvfBuildParams,
+        k: usize,
+    ) -> IvfIndex {
+        let n = data.len() / dim;
+        // Bucket ids per cluster.
+        let mut lists: Vec<Vec<u32>> = vec![Vec::new(); k];
+        for (i, &c) in assign.iter().enumerate() {
+            lists[c as usize].push(i as u32);
+        }
+        let mut offsets = Vec::with_capacity(k + 1);
+        let mut acc = 0usize;
+        for l in &lists {
+            offsets.push(acc);
+            acc += l.len();
+        }
+        offsets.push(acc);
+
+        // Id payload FIRST: the codec's decode order becomes the canonical
+        // within-cluster order (the paper's reordering invariance — ROC
+        // decodes a permutation of the set, and vectors must follow it so
+        // that scan offset o maps to the o-th decoded id).
+        let universe = n as u32;
+        let (ids, lists) = match params.id_codec.as_str() {
+            "wt" | "wt1" => {
+                let storage = if params.id_codec == "wt" { WtStorage::Flat } else { WtStorage::Rrr };
+                // select(c, o) walks occurrences in id order = `lists` order.
+                (IdStore::Wavelet { wt: WaveletTree::new(assign, k as u32, storage) }, lists)
+            }
+            name => {
+                let codec =
+                    codec_by_name(name).unwrap_or_else(|| panic!("unknown id codec {name}"));
+                let mut bits = 0u64;
+                let mut blobs = Vec::with_capacity(k);
+                let mut decoded = Vec::with_capacity(k);
+                for l in &lists {
+                    let enc = codec.encode(l, universe);
+                    bits += enc.bits;
+                    let mut order = Vec::with_capacity(l.len());
+                    codec.decode(&enc.bytes, universe, l.len(), &mut order);
+                    blobs.push(enc.bytes);
+                    decoded.push(order);
+                }
+                let random_access = codec.supports_random_access();
+                (IdStore::PerList { codec, blobs, bits, random_access }, decoded)
+            }
+        };
+
+        // Vector payload, cluster-major, in decode order.
+        let store = match params.vectors {
+            VectorMode::Flat => {
+                let mut reordered = Vec::with_capacity(n * dim);
+                for l in &lists {
+                    for &id in l {
+                        reordered.extend_from_slice(&data[id as usize * dim..(id as usize + 1) * dim]);
+                    }
+                }
+                CodeStore::Flat(reordered)
+            }
+            VectorMode::Pq { m, bits } | VectorMode::PqCompressed { m, bits } => {
+                let pq = Pq::train(data, dim, m, bits, params.seed ^ 0x99, params.threads);
+                let codes = pq.encode_batch(data, params.threads);
+                let mut reordered = Vec::with_capacity(n * m);
+                for l in &lists {
+                    for &id in l {
+                        reordered.extend_from_slice(&codes[id as usize * m..(id as usize + 1) * m]);
+                    }
+                }
+                if matches!(params.vectors, VectorMode::Pq { .. }) {
+                    CodeStore::Pq { pq, codes: reordered }
+                } else {
+                    let codec = pcodes::ClusterCodeCodec::new(1 << bits, m);
+                    let mut bits_total = 0u64;
+                    let clusters: Vec<pcodes::EncodedCluster> = (0..k)
+                        .map(|c| {
+                            let rows = offsets[c + 1] - offsets[c];
+                            let enc = codec.encode(
+                                &reordered[offsets[c] * m..offsets[c + 1] * m],
+                                rows,
+                            );
+                            bits_total += enc.bits;
+                            enc
+                        })
+                        .collect();
+                    CodeStore::PqCompressed { pq, clusters, bits: bits_total }
+                }
+            }
+        };
+
+        IvfIndex { dim, n, k, centroids: centroids.to_vec(), offsets, ids, store }
+    }
+
+    pub fn list_len(&self, c: usize) -> usize {
+        self.offsets[c + 1] - self.offsets[c]
+    }
+
+    /// Exact id payload size in bits (the Table-1 numerator).
+    pub fn id_bits(&self) -> u64 {
+        match &self.ids {
+            IdStore::PerList { bits, .. } => *bits,
+            IdStore::Wavelet { wt } => wt.size_bits() as u64,
+        }
+    }
+
+    /// Bits per id — the Table-1 metric.
+    pub fn bits_per_id(&self) -> f64 {
+        self.id_bits() as f64 / self.n as f64
+    }
+
+    /// Vector payload size in bits (Fig. 3 numerator for PqCompressed).
+    pub fn code_bits(&self) -> u64 {
+        match &self.store {
+            CodeStore::Flat(v) => v.len() as u64 * 32,
+            CodeStore::Pq { pq, codes } => {
+                (codes.len() / pq.m) as u64 * pq.code_bits() as u64
+            }
+            CodeStore::PqCompressed { bits, .. } => *bits,
+        }
+    }
+
+    /// Search with coarse distances computed internally (pure rust).
+    pub fn search(
+        &self,
+        query: &[f32],
+        p: &SearchParams,
+        scratch: &mut SearchScratch,
+    ) -> Vec<(f32, u32)> {
+        scratch.coarse.clear();
+        crate::quant::dists_to_all(query, &self.centroids, self.dim, &mut scratch.coarse);
+        self.search_with_coarse_inner(query, p, scratch)
+    }
+
+    /// Search with externally supplied coarse distances (the coordinator
+    /// feeds PJRT-computed batches through this).
+    pub fn search_with_coarse(
+        &self,
+        query: &[f32],
+        coarse: &[f32],
+        p: &SearchParams,
+        scratch: &mut SearchScratch,
+    ) -> Vec<(f32, u32)> {
+        assert_eq!(coarse.len(), self.k);
+        scratch.coarse.clear();
+        scratch.coarse.extend_from_slice(coarse);
+        self.search_with_coarse_inner(query, p, scratch)
+    }
+
+    fn search_with_coarse_inner(
+        &self,
+        query: &[f32],
+        p: &SearchParams,
+        scratch: &mut SearchScratch,
+    ) -> Vec<(f32, u32)> {
+        let nprobe = p.nprobe.min(self.k);
+        // Select the nprobe nearest centroids.
+        scratch.probe_order.clear();
+        scratch.probe_order.extend(0..self.k as u32);
+        let coarse = &scratch.coarse;
+        scratch
+            .probe_order
+            .select_nth_unstable_by(nprobe.saturating_sub(1), |&a, &b| {
+                coarse[a as usize].total_cmp(&coarse[b as usize])
+            });
+        let probes = &scratch.probe_order[..nprobe];
+
+        let mut heap = TopK::new(p.k);
+        // Prepare per-query LUT once for PQ stores.
+        if let CodeStore::Pq { pq, .. } | CodeStore::PqCompressed { pq, .. } = &self.store {
+            pq.lut(query, &mut scratch.lut);
+        }
+
+        let defer_ids = match &self.ids {
+            IdStore::PerList { random_access, .. } => *random_access,
+            IdStore::Wavelet { .. } => true,
+        };
+
+        for &c in probes {
+            let c = c as usize;
+            let (start, end) = (self.offsets[c], self.offsets[c + 1]);
+            if start == end {
+                continue;
+            }
+            // For non-random-access codecs (ROC) the whole list is decoded
+            // now — the online-setting cost the paper measures.
+            if !defer_ids {
+                if let IdStore::PerList { codec, blobs, .. } = &self.ids {
+                    scratch.ids.clear();
+                    codec.decode(&blobs[c], self.n as u32, end - start, &mut scratch.ids);
+                }
+            }
+            match &self.store {
+                CodeStore::Flat(v) => {
+                    for (o, row) in v[start * self.dim..end * self.dim]
+                        .chunks_exact(self.dim)
+                        .enumerate()
+                    {
+                        let d = l2_sq(query, row);
+                        if d < heap.threshold() {
+                            heap.push(d, self.payload(c, o, defer_ids, &scratch.ids));
+                        }
+                    }
+                }
+                CodeStore::Pq { pq, codes } => {
+                    for (o, row) in codes[start * pq.m..end * pq.m].chunks_exact(pq.m).enumerate() {
+                        let d = pq.adc(&scratch.lut, row);
+                        if d < heap.threshold() {
+                            heap.push(d, self.payload(c, o, defer_ids, &scratch.ids));
+                        }
+                    }
+                }
+                CodeStore::PqCompressed { pq, clusters, .. } => {
+                    let codec = pcodes::ClusterCodeCodec::new(pq.ksub() as u32, pq.m);
+                    let rows = end - start;
+                    scratch.codes.clear();
+                    scratch.codes.extend_from_slice(&codec.decode(&clusters[c], rows));
+                    for (o, row) in scratch.codes.chunks_exact(pq.m).enumerate() {
+                        let d = pq.adc(&scratch.lut, row);
+                        if d < heap.threshold() {
+                            heap.push(d, self.payload(c, o, defer_ids, &scratch.ids));
+                        }
+                    }
+                }
+            }
+        }
+
+        // Resolve payloads to ids.
+        let winners = heap.into_sorted_u64();
+        winners
+            .into_iter()
+            .map(|(d, payload)| {
+                if defer_ids {
+                    let c = (payload >> 32) as usize;
+                    let o = (payload & 0xffff_ffff) as usize;
+                    (d, self.resolve_id(c, o))
+                } else {
+                    (d, payload as u32)
+                }
+            })
+            .collect()
+    }
+
+    #[inline]
+    fn payload(&self, c: usize, o: usize, defer: bool, decoded: &[u32]) -> u64 {
+        if defer {
+            ((c as u64) << 32) | o as u64
+        } else {
+            decoded[o] as u64
+        }
+    }
+
+    /// Resolve (cluster, offset) → id via the random-access store.
+    fn resolve_id(&self, c: usize, o: usize) -> u32 {
+        match &self.ids {
+            IdStore::PerList { codec, blobs, .. } => codec
+                .decode_nth(&blobs[c], self.n as u32, self.list_len(c), o)
+                .expect("offset out of range"),
+            IdStore::Wavelet { wt } => wt.select(c as u32, o as u64).expect("wt select") as u32,
+        }
+    }
+
+    /// Decode the full id list of cluster `c` (tests, migration tooling).
+    pub fn decode_list(&self, c: usize) -> Vec<u32> {
+        let n = self.list_len(c);
+        match &self.ids {
+            IdStore::PerList { codec, blobs, .. } => {
+                let mut out = Vec::with_capacity(n);
+                codec.decode(&blobs[c], self.n as u32, n, &mut out);
+                out
+            }
+            IdStore::Wavelet { wt } => {
+                (0..n).map(|o| wt.select(c as u32, o as u64).unwrap() as u32).collect()
+            }
+        }
+    }
+
+    /// Name of the id store (bench labels).
+    pub fn id_codec_name(&self) -> &str {
+        match &self.ids {
+            IdStore::PerList { codec, .. } => codec.name(),
+            IdStore::Wavelet { wt: _ } => "wt",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{generate, groundtruth, Kind};
+
+    fn build_ds() -> crate::datasets::Dataset {
+        generate(Kind::DeepLike, 4000, 50, 16, 11)
+    }
+
+    fn check_search_quality(codec: &str, vectors: VectorMode, min_recall: f64) {
+        let ds = build_ds();
+        let params = IvfBuildParams {
+            k: 64,
+            id_codec: codec.into(),
+            vectors,
+            threads: 2,
+            ..Default::default()
+        };
+        let idx = IvfIndex::build(&ds.data, ds.dim, &params);
+        let gt = groundtruth::exact_knn(&ds.data, &ds.queries, ds.dim, 10, 2);
+        let sp = SearchParams { nprobe: 16, k: 10 };
+        let mut scratch = SearchScratch::default();
+        let results: Vec<Vec<u32>> = (0..ds.nq)
+            .map(|qi| idx.search(ds.query(qi), &sp, &mut scratch).into_iter().map(|(_, id)| id).collect())
+            .collect();
+        let recall = groundtruth::recall_at_k(&gt, 10, &results, 10);
+        assert!(recall >= min_recall, "{codec} {:?}: recall={recall}", idx.id_codec_name());
+    }
+
+    #[test]
+    fn all_id_codecs_same_results() {
+        // Lossless id compression ⇒ identical search results across codecs
+        // (the paper's reason for not reporting recall).
+        let ds = build_ds();
+        let sp = SearchParams { nprobe: 8, k: 10 };
+        let mut baseline: Option<Vec<Vec<(f32, u32)>>> = None;
+        for codec in ["unc64", "unc32", "compact", "ef", "roc", "wt", "wt1"] {
+            let params = IvfBuildParams {
+                k: 32,
+                id_codec: codec.into(),
+                threads: 2,
+                ..Default::default()
+            };
+            let idx = IvfIndex::build(&ds.data, ds.dim, &params);
+            let mut scratch = SearchScratch::default();
+            let res: Vec<Vec<(f32, u32)>> =
+                (0..20).map(|qi| idx.search(ds.query(qi), &sp, &mut scratch)).collect();
+            match &baseline {
+                None => baseline = Some(res),
+                Some(b) => {
+                    for (qi, (got, want)) in res.iter().zip(b).enumerate() {
+                        let gd: Vec<u32> = got.iter().map(|r| r.1).collect();
+                        let wd: Vec<u32> = want.iter().map(|r| r.1).collect();
+                        assert_eq!(gd, wd, "codec={codec} query={qi}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flat_search_recall() {
+        check_search_quality("roc", VectorMode::Flat, 0.85);
+    }
+
+    #[test]
+    fn pq_search_recall() {
+        check_search_quality("ef", VectorMode::Pq { m: 4, bits: 8 }, 0.5);
+    }
+
+    #[test]
+    fn pq_compressed_matches_pq_results() {
+        // Lossless code compression ⇒ identical distances to plain PQ.
+        let ds = build_ds();
+        let mk = |vectors| {
+            IvfIndex::build(
+                &ds.data,
+                ds.dim,
+                &IvfBuildParams {
+                    k: 32,
+                    id_codec: "compact".into(),
+                    vectors,
+                    threads: 2,
+                    ..Default::default()
+                },
+            )
+        };
+        let a = mk(VectorMode::Pq { m: 4, bits: 8 });
+        let b = mk(VectorMode::PqCompressed { m: 4, bits: 8 });
+        let sp = SearchParams { nprobe: 8, k: 5 };
+        let mut s1 = SearchScratch::default();
+        let mut s2 = SearchScratch::default();
+        for qi in 0..20 {
+            let ra = a.search(ds.query(qi), &sp, &mut s1);
+            let rb = b.search(ds.query(qi), &sp, &mut s2);
+            assert_eq!(ra, rb, "query {qi}");
+        }
+        // And the compressed codes are no larger than plain ones (+streams
+        // overhead is amortized at this size).
+        assert!(b.code_bits() <= a.code_bits() + a.k as u64 * 64 * 4);
+    }
+
+    #[test]
+    fn decoded_lists_form_partition() {
+        let ds = build_ds();
+        for codec in ["roc", "ef", "wt1"] {
+            let idx = IvfIndex::build(
+                &ds.data,
+                ds.dim,
+                &IvfBuildParams { k: 16, id_codec: codec.into(), threads: 2, ..Default::default() },
+            );
+            let mut seen = vec![false; ds.n];
+            for c in 0..idx.k {
+                for id in idx.decode_list(c) {
+                    assert!(!seen[id as usize], "id {id} duplicated ({codec})");
+                    seen[id as usize] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "missing ids ({codec})");
+        }
+    }
+
+    #[test]
+    fn bits_per_id_ordering() {
+        // roc < ef < compact < unc64 on a reasonable IVF.
+        let ds = build_ds();
+        let bpe = |codec: &str| {
+            IvfIndex::build(
+                &ds.data,
+                ds.dim,
+                &IvfBuildParams { k: 16, id_codec: codec.into(), threads: 2, ..Default::default() },
+            )
+            .bits_per_id()
+        };
+        let (roc, ef, comp, unc) = (bpe("roc"), bpe("ef"), bpe("compact"), bpe("unc64"));
+        assert!(roc < ef, "roc={roc} ef={ef}");
+        assert!(ef < comp, "ef={ef} comp={comp}");
+        assert!(comp < unc, "comp={comp} unc={unc}");
+        assert_eq!(unc, 64.0);
+    }
+}

@@ -1,0 +1,6 @@
+//! ANN indexes. [`ivf`] implements the inverted-file index whose id lists
+//! are the primary compression target of the paper (Fig. 1 top).
+
+pub mod ivf;
+
+pub use ivf::{IvfBuildParams, IvfIndex, SearchParams, SearchScratch, VectorMode};

@@ -1,0 +1,36 @@
+//! # zann — lossless ID compression for approximate nearest-neighbor search
+//!
+//! A reproduction of *"Lossless Compression of Vector IDs for Approximate
+//! Nearest Neighbor Search"* (Severo, Ottaviano, Muckley, Ullrich, Douze, 2025)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the ANN serving system: IVF and graph
+//!   (NSG/HNSW) indexes whose vector-id payloads are stored through pluggable
+//!   lossless codecs ([`codecs`]), a batching query coordinator
+//!   ([`coordinator`]) and the PJRT runtime ([`runtime`]) that executes the
+//!   AOT-compiled distance kernels.
+//! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for coarse
+//!   quantizer assignment and PQ look-up-table construction, lowered once to
+//!   HLO text in `artifacts/`.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for blocked
+//!   pairwise squared-L2 distance and PQ LUTs, validated against a pure-jnp
+//!   oracle and lowered (interpret mode) into the same HLO.
+//!
+//! The paper's contribution — entropy coding of the *sets* of vector ids that
+//! IVF inverted lists and graph adjacency lists are made of — lives in
+//! [`codecs`]: asymmetric-numeral-system bits-back coders (ROC for sets, REC
+//! for whole graphs), Elias-Fano, wavelet trees (flat and RRR-compressed) and
+//! a Zuckerli-style reference baseline.
+
+pub mod util;
+pub mod bitvec;
+pub mod ans;
+pub mod fenwick;
+pub mod codecs;
+pub mod quant;
+pub mod datasets;
+pub mod index;
+pub mod graph;
+pub mod runtime;
+pub mod coordinator;
+pub mod eval;

@@ -1,0 +1,111 @@
+//! `zann` — CLI for the compressed-id ANN system.
+//!
+//! Subcommands:
+//!   bench-table1|bench-table2|bench-table3|bench-table4|bench-fig2|bench-fig3
+//!                       — regenerate the paper's tables/figures
+//!   serve-demo          — build an index and serve a batch through the
+//!                         coordinator (PJRT coarse path if artifacts exist)
+//!   sizes               — bits/id summary for one dataset/index
+//!
+//! Common flags: --n --nq --dim --k --seed --threads --dataset
+//! (sift|deep|ssnpp) --codec --runs --full (paper-scale N=1e6)
+
+use std::sync::Arc;
+use zann::coordinator::{Coordinator, ServeConfig};
+use zann::datasets::generate;
+use zann::eval::experiments::{self, Scale};
+use zann::eval::{bench_entries, fmt3, Table};
+use zann::index::{IvfBuildParams, IvfIndex, SearchParams};
+use zann::runtime::{default_artifact_dir, EngineHandle};
+use zann::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "bench-table1" => bench_entries::table1(&args),
+        "bench-table2" => bench_entries::table2(&args),
+        "bench-table3" => bench_entries::table3(&args),
+        "bench-table4" => bench_entries::table4(&args),
+        "bench-fig2" => bench_entries::fig2(&args),
+        "bench-fig3" => bench_entries::fig3(&args),
+        "sizes" => sizes(&args),
+        "serve-demo" => serve_demo(&args),
+        _ => {
+            eprintln!(
+                "usage: zann <bench-table1|bench-table2|bench-table3|bench-table4|\n\
+                 bench-fig2|bench-fig3|sizes|serve-demo> [--n N] [--dataset sift|deep|ssnpp] ..."
+            );
+        }
+    }
+}
+
+/// Bits/id summary for one configuration.
+fn sizes(args: &Args) {
+    let scale = bench_entries::scale_from(args);
+    let kind = bench_entries::datasets_from(args)[0];
+    let k = args.usize("k", 1024);
+    let rows = experiments::table1_ivf(&scale, kind, &[k], &experiments::T1_CODECS);
+    let mut t = Table::new(&["index", "codec", "bits/id", "ratio vs unc64"]);
+    for row in rows {
+        for (codec, bpe) in &row.bpe {
+            t.row(vec![format!("IVF{}", row.k), codec.clone(), fmt3(*bpe), fmt3(64.0 / bpe)]);
+        }
+    }
+    println!("{}", t.render());
+}
+
+/// End-to-end serving demo: index + coordinator + PJRT engine.
+fn serve_demo(args: &Args) {
+    let scale = bench_entries::scale_from(args);
+    let kind = bench_entries::datasets_from(args)[0];
+    let n = args.usize("n", 100_000);
+    let nq = args.usize("nq", 1024);
+    let _ = Scale::default();
+    println!("generating {} vectors ({})...", n, kind.name());
+    let ds = generate(kind, n, nq, scale.dim, scale.seed);
+    println!("building IVF{} ({} ids)...", args.usize("k", 1024), args.get_or("codec", "roc"));
+    let idx = Arc::new(IvfIndex::build(
+        &ds.data,
+        ds.dim,
+        &IvfBuildParams {
+            k: args.usize("k", 1024),
+            id_codec: args.get_or("codec", "roc").into(),
+            threads: scale.threads,
+            seed: scale.seed,
+            ..Default::default()
+        },
+    ));
+    println!("id payload: {} bits/id", fmt3(idx.bits_per_id()));
+    let engine = match EngineHandle::spawn(&default_artifact_dir()) {
+        Ok(h) => {
+            println!("engine up: {} PJRT executables", h.num_executables);
+            Some(h)
+        }
+        Err(e) => {
+            println!("engine unavailable ({e}); pure-rust coarse path");
+            None
+        }
+    };
+    let coord = Coordinator::start(
+        idx,
+        engine,
+        ServeConfig {
+            batch_size: 64,
+            search: SearchParams { nprobe: args.usize("nprobe", 16), k: 10 },
+            ..Default::default()
+        },
+    );
+    let queries: Vec<Vec<f32>> = (0..nq).map(|qi| ds.query(qi).to_vec()).collect();
+    let t0 = std::time::Instant::now();
+    let responses = coord.client.search_many(queries).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {} queries in {:.3}s ({:.0} qps); {}",
+        responses.len(),
+        wall,
+        responses.len() as f64 / wall,
+        coord.metrics.summary()
+    );
+    coord.stop();
+}

@@ -1,0 +1,184 @@
+//! Lloyd's k-means with k-means++-style seeding and empty-cluster
+//! splitting — trains the IVF coarse quantizer and the PQ sub-codebooks.
+//!
+//! Assignment (the O(N·K·d) inner loop) is data-parallel over points; at
+//! serving time the same computation runs through the AOT-compiled Pallas
+//! kernel (see `runtime::engine`), but training happens once per index so
+//! the pure-rust path is used here to keep the build self-contained.
+
+use crate::quant::{l2_sq, nearest};
+use crate::util::pool::parallel_map;
+use crate::util::Rng;
+
+pub struct KmeansConfig {
+    pub k: usize,
+    pub iters: usize,
+    pub seed: u64,
+    pub threads: usize,
+    /// Subsample cap: train on at most this many points (Faiss-style).
+    pub max_points: usize,
+}
+
+impl Default for KmeansConfig {
+    fn default() -> Self {
+        KmeansConfig {
+            k: 16,
+            iters: 10,
+            seed: 0x5eed,
+            threads: crate::util::pool::default_threads(),
+            max_points: 256 * 256,
+        }
+    }
+}
+
+/// Train centroids on `data` (row-major, `dim` wide). Returns a
+/// `k × dim` row-major centroid matrix.
+pub fn train(data: &[f32], dim: usize, cfg: &KmeansConfig) -> Vec<f32> {
+    let n = data.len() / dim;
+    assert!(n > 0 && cfg.k > 0);
+    let mut rng = Rng::new(cfg.seed);
+
+    // Subsample training points if the dataset is large.
+    let train_idx: Vec<usize> = if n > cfg.max_points {
+        rng.sample_distinct(n as u64, cfg.max_points).into_iter().map(|v| v as usize).collect()
+    } else {
+        (0..n).collect()
+    };
+    let tn = train_idx.len();
+    let k = cfg.k.min(tn);
+
+    // Seeding: random distinct points (k-means++ D^2 weighting is overkill
+    // for the synthetic workloads; distinct-point init avoids dup centroids).
+    let mut centroids = Vec::with_capacity(k * dim);
+    for &i in rng.sample_distinct(tn as u64, k).iter() {
+        let p = train_idx[i as usize];
+        centroids.extend_from_slice(&data[p * dim..(p + 1) * dim]);
+    }
+
+    let mut assign = vec![0u32; tn];
+    for _iter in 0..cfg.iters {
+        // Assignment step (parallel).
+        let cref = &centroids;
+        let dref = data;
+        let idxref = &train_idx;
+        let new_assign = parallel_map(tn, cfg.threads, |i| {
+            let p = idxref[i];
+            nearest(&dref[p * dim..(p + 1) * dim], cref, dim).0 as u32
+        });
+        assign = new_assign;
+
+        // Update step.
+        let mut sums = vec![0f64; k * dim];
+        let mut counts = vec![0u64; k];
+        for (i, &a) in assign.iter().enumerate() {
+            let p = train_idx[i];
+            counts[a as usize] += 1;
+            let row = &data[p * dim..(p + 1) * dim];
+            let s = &mut sums[a as usize * dim..(a as usize + 1) * dim];
+            for (sv, &x) in s.iter_mut().zip(row) {
+                *sv += x as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Empty cluster: split the largest by perturbing its mean.
+                let big = (0..k).max_by_key(|&j| counts[j]).unwrap();
+                for d in 0..dim {
+                    let v = sums[big * dim + d] as f32 / counts[big].max(1) as f32;
+                    centroids[c * dim + d] = v * (1.0 + 0.01 * rng.normal());
+                }
+            } else {
+                for d in 0..dim {
+                    centroids[c * dim + d] = (sums[c * dim + d] / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+    centroids
+}
+
+/// Assign every row of `data` to its nearest centroid (parallel).
+pub fn assign(data: &[f32], dim: usize, centroids: &[f32], threads: usize) -> Vec<u32> {
+    let n = data.len() / dim;
+    parallel_map(n, threads, |i| {
+        nearest(&data[i * dim..(i + 1) * dim], centroids, dim).0 as u32
+    })
+}
+
+/// Mean squared quantization error of an assignment (for tests/monitoring).
+pub fn quantization_mse(data: &[f32], dim: usize, centroids: &[f32], assign: &[u32]) -> f64 {
+    let n = data.len() / dim;
+    let mut acc = 0f64;
+    for i in 0..n {
+        let c = assign[i] as usize;
+        acc += l2_sq(&data[i * dim..(i + 1) * dim], &centroids[c * dim..(c + 1) * dim]) as f64;
+    }
+    acc / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three well-separated blobs in 2-D.
+    fn blobs(rng: &mut Rng, per: usize) -> Vec<f32> {
+        let centers = [(0.0f32, 0.0f32), (10.0, 10.0), (-10.0, 8.0)];
+        let mut data = Vec::with_capacity(per * 3 * 2);
+        for &(cx, cy) in &centers {
+            for _ in 0..per {
+                data.push(cx + 0.3 * rng.normal());
+                data.push(cy + 0.3 * rng.normal());
+            }
+        }
+        data
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Rng::new(60);
+        let data = blobs(&mut rng, 200);
+        let cfg = KmeansConfig { k: 3, iters: 12, seed: 1, threads: 2, ..Default::default() };
+        let cents = train(&data, 2, &cfg);
+        let a = assign(&data, 2, &cents, 2);
+        // Each blob maps to a single cluster.
+        for blob in 0..3 {
+            let slice = &a[blob * 200..(blob + 1) * 200];
+            assert!(slice.iter().all(|&c| c == slice[0]), "blob {blob} split");
+        }
+        let mse = quantization_mse(&data, 2, &cents, &a);
+        assert!(mse < 0.5, "mse={mse}");
+    }
+
+    #[test]
+    fn mse_decreases_with_iterations() {
+        let mut rng = Rng::new(61);
+        let data: Vec<f32> = (0..4000).map(|_| rng.normal()).collect();
+        let mse_of = |iters| {
+            let cfg = KmeansConfig { k: 16, iters, seed: 2, threads: 2, ..Default::default() };
+            let c = train(&data, 4, &cfg);
+            let a = assign(&data, 4, &c, 2);
+            quantization_mse(&data, 4, &c, &a)
+        };
+        let early = mse_of(1);
+        let late = mse_of(10);
+        assert!(late <= early * 1.001, "early={early} late={late}");
+    }
+
+    #[test]
+    fn no_empty_clusters_on_degenerate_data() {
+        // Fewer distinct points than clusters to exercise splitting.
+        let data = vec![1.0f32; 32 * 4]; // 32 identical points
+        let cfg = KmeansConfig { k: 8, iters: 5, seed: 3, threads: 1, ..Default::default() };
+        let cents = train(&data, 4, &cfg);
+        assert_eq!(cents.len(), 8 * 4);
+        assert!(cents.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn k_larger_than_n_is_clamped() {
+        let data = vec![0.0f32, 1.0, 2.0, 3.0]; // 2 points, dim 2
+        let cfg = KmeansConfig { k: 10, iters: 2, seed: 4, threads: 1, ..Default::default() };
+        let cents = train(&data, 2, &cfg);
+        assert_eq!(cents.len() / 2, 2);
+    }
+}

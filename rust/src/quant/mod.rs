@@ -1,0 +1,196 @@
+//! Vector quantization: distance kernels, k-means and product quantization.
+//!
+//! The orange boxes of the paper's Fig. 1 — lossy vector compression — are
+//! orthogonal to id compression but required substrate: IVF needs a coarse
+//! k-means quantizer, Table 2 / Fig. 2 need PQ variants, and Fig. 3 needs
+//! the PQ codes themselves.
+
+pub mod kmeans;
+pub mod pq;
+
+/// Squared L2 distance between two f32 slices.
+///
+/// Written as a 4-lane manual unroll that LLVM reliably autovectorizes;
+/// this is the innermost loop of every Flat scan.
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        for l in 0..4 {
+            let d = a[i * 4 + l] - b[i * 4 + l];
+            acc[l] += d * d;
+        }
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// Distances from one query to each row of `base` (row-major, `dim` wide),
+/// appended to `out`.
+pub fn dists_to_all(query: &[f32], base: &[f32], dim: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(base.len() % dim, 0);
+    for row in base.chunks_exact(dim) {
+        out.push(l2_sq(query, row));
+    }
+}
+
+/// Index of the nearest row of `base` to `query`.
+pub fn nearest(query: &[f32], base: &[f32], dim: usize) -> (usize, f32) {
+    let mut best = (0usize, f32::INFINITY);
+    for (i, row) in base.chunks_exact(dim).enumerate() {
+        let d = l2_sq(query, row);
+        if d < best.1 {
+            best = (i, d);
+        }
+    }
+    best
+}
+
+/// Top-`k` smallest (dist, index) pairs from one query against `base`,
+/// ascending. A bounded max-heap over (dist, idx).
+pub fn top_k(query: &[f32], base: &[f32], dim: usize, k: usize) -> Vec<(f32, u32)> {
+    let mut heap = TopK::new(k);
+    for (i, row) in base.chunks_exact(dim).enumerate() {
+        heap.push(l2_sq(query, row), i as u32);
+    }
+    heap.into_sorted()
+}
+
+/// Bounded top-k structure (max-heap of the k best), the IVF search-time
+/// result collector of paper §4.1.
+pub struct TopK {
+    k: usize,
+    /// Max-heap by distance: worst candidate at the root.
+    heap: std::collections::BinaryHeap<HeapItem>,
+}
+
+#[derive(PartialEq)]
+struct HeapItem(f32, u64);
+
+impl Eq for HeapItem {}
+
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
+    }
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        TopK { k, heap: std::collections::BinaryHeap::with_capacity(k + 1) }
+    }
+
+    /// Current admission threshold (distance of the worst kept candidate).
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        if self.heap.len() < self.k {
+            f32::INFINITY
+        } else {
+            self.heap.peek().map(|h| h.0).unwrap_or(f32::INFINITY)
+        }
+    }
+
+    /// Offer a candidate; payload is an opaque u64 (e.g. packed
+    /// (cluster, offset) — ids are resolved after search, §4.1).
+    #[inline]
+    pub fn push(&mut self, dist: f32, payload: impl Into<u64>) {
+        let payload = payload.into();
+        if self.heap.len() < self.k {
+            self.heap.push(HeapItem(dist, payload));
+        } else if dist < self.threshold() {
+            self.heap.push(HeapItem(dist, payload));
+            self.heap.pop();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Ascending by distance.
+    pub fn into_sorted(self) -> Vec<(f32, u32)> {
+        let mut v: Vec<(f32, u64)> = self.heap.into_iter().map(|h| (h.0, h.1)).collect();
+        v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        v.into_iter().map(|(d, p)| (d, p as u32)).collect()
+    }
+
+    /// Ascending by distance, keeping the full u64 payload.
+    pub fn into_sorted_u64(self) -> Vec<(f32, u64)> {
+        let mut v: Vec<(f32, u64)> = self.heap.into_iter().map(|h| (h.0, h.1)).collect();
+        v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn l2_matches_naive() {
+        let mut rng = Rng::new(50);
+        for &d in &[1usize, 3, 4, 16, 33, 128] {
+            let a: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+            assert!((l2_sq(&a, &b) - naive).abs() < 1e-4 * naive.max(1.0));
+        }
+    }
+
+    #[test]
+    fn top_k_matches_sort() {
+        let mut rng = Rng::new(51);
+        let dim = 8;
+        let base: Vec<f32> = (0..100 * dim).map(|_| rng.normal()).collect();
+        let q: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+        let got = top_k(&q, &base, dim, 10);
+        let mut all: Vec<(f32, u32)> = base
+            .chunks_exact(dim)
+            .enumerate()
+            .map(|(i, row)| (l2_sq(&q, row), i as u32))
+            .collect();
+        all.sort_by(|a, b| a.0.total_cmp(&b.0));
+        assert_eq!(got.len(), 10);
+        for (g, w) in got.iter().zip(&all[..10]) {
+            assert_eq!(g.1, w.1);
+        }
+    }
+
+    #[test]
+    fn top_k_threshold_semantics() {
+        let mut t = TopK::new(2);
+        assert_eq!(t.threshold(), f32::INFINITY);
+        t.push(5.0, 0u32);
+        t.push(3.0, 1u32);
+        assert_eq!(t.threshold(), 5.0);
+        t.push(4.0, 2u32); // evicts 5.0
+        assert_eq!(t.threshold(), 4.0);
+        t.push(9.0, 3u32); // rejected
+        let v = t.into_sorted();
+        assert_eq!(v.iter().map(|p| p.1).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn top_k_fewer_candidates_than_k() {
+        let mut t = TopK::new(10);
+        t.push(1.0, 7u32);
+        assert_eq!(t.into_sorted(), vec![(1.0, 7)]);
+    }
+}

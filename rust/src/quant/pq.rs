@@ -1,0 +1,248 @@
+//! Product quantizer (Jégou et al. 2010) — the paper's PQ`m`x`b` variants.
+//!
+//! A `d`-dim vector is split into `m` sub-vectors of `dsub = d/m` dims;
+//! each is quantized against its own `2^b`-entry codebook.  Search uses
+//! asymmetric distance computation (ADC): a per-query look-up table of
+//! sub-distances (built by the `pqlut` Pallas kernel at serving time, or
+//! the rust fallback) turns each code scan into `m` table adds — the cost
+//! that Fig. 2 sweeps against id-decode overhead.
+
+use crate::quant::kmeans::{self, KmeansConfig};
+use crate::util::{ReadBuf, WriteBuf};
+
+#[derive(Clone)]
+pub struct Pq {
+    /// Number of sub-quantizers.
+    pub m: usize,
+    /// Bits per sub-quantizer code.
+    pub bits: u32,
+    /// Sub-vector dimensionality.
+    pub dsub: usize,
+    /// `m × ksub × dsub` codebooks, row-major.
+    pub codebooks: Vec<f32>,
+}
+
+impl Pq {
+    pub fn ksub(&self) -> usize {
+        1 << self.bits
+    }
+
+    pub fn dim(&self) -> usize {
+        self.m * self.dsub
+    }
+
+    /// Code size in bits per vector.
+    pub fn code_bits(&self) -> usize {
+        self.m * self.bits as usize
+    }
+
+    /// Train on `data` (row-major `n × dim`).
+    pub fn train(data: &[f32], dim: usize, m: usize, bits: u32, seed: u64, threads: usize) -> Pq {
+        assert_eq!(dim % m, 0, "dim {dim} not divisible by m {m}");
+        assert!(bits <= 16);
+        let dsub = dim / m;
+        let ksub = 1usize << bits;
+        let n = data.len() / dim;
+        let mut codebooks = vec![0f32; m * ksub * dsub];
+        // Train each subspace independently.
+        let mut sub = vec![0f32; n.min(1 << 16) * dsub];
+        for j in 0..m {
+            let take = n.min(1 << 16);
+            for i in 0..take {
+                let src = &data[i * dim + j * dsub..i * dim + (j + 1) * dsub];
+                sub[i * dsub..(i + 1) * dsub].copy_from_slice(src);
+            }
+            let cfg = KmeansConfig {
+                k: ksub,
+                iters: 8,
+                seed: seed.wrapping_add(j as u64),
+                threads,
+                max_points: 1 << 16,
+            };
+            let cents = kmeans::train(&sub[..take * dsub], dsub, &cfg);
+            // kmeans may clamp k when n < ksub; pad by repeating.
+            let kgot = cents.len() / dsub;
+            for c in 0..ksub {
+                let src = &cents[(c % kgot) * dsub..(c % kgot + 1) * dsub];
+                codebooks[(j * ksub + c) * dsub..(j * ksub + c + 1) * dsub].copy_from_slice(src);
+            }
+        }
+        Pq { m, bits, dsub, codebooks }
+    }
+
+    /// Codebook slice for sub-quantizer `j`.
+    #[inline]
+    fn book(&self, j: usize) -> &[f32] {
+        let ksub = self.ksub();
+        &self.codebooks[j * ksub * self.dsub..(j + 1) * ksub * self.dsub]
+    }
+
+    /// Encode one vector to `m` codes.
+    pub fn encode(&self, v: &[f32], out: &mut Vec<u16>) {
+        debug_assert_eq!(v.len(), self.dim());
+        for j in 0..self.m {
+            let sub = &v[j * self.dsub..(j + 1) * self.dsub];
+            let (idx, _) = crate::quant::nearest(sub, self.book(j), self.dsub);
+            out.push(idx as u16);
+        }
+    }
+
+    /// Encode a batch (row-major) in parallel.
+    pub fn encode_batch(&self, data: &[f32], threads: usize) -> Vec<u16> {
+        let dim = self.dim();
+        let n = data.len() / dim;
+        let rows = crate::util::pool::parallel_map(n, threads, |i| {
+            let mut out = Vec::with_capacity(self.m);
+            self.encode(&data[i * dim..(i + 1) * dim], &mut out);
+            out
+        });
+        rows.into_iter().flatten().collect()
+    }
+
+    /// Reconstruct a vector from its codes.
+    pub fn decode(&self, codes: &[u16], out: &mut Vec<f32>) {
+        debug_assert_eq!(codes.len(), self.m);
+        for (j, &c) in codes.iter().enumerate() {
+            let book = self.book(j);
+            out.extend_from_slice(&book[c as usize * self.dsub..(c as usize + 1) * self.dsub]);
+        }
+    }
+
+    /// ADC look-up table for `query`: `m × ksub` squared sub-distances.
+    pub fn lut(&self, query: &[f32], out: &mut Vec<f32>) {
+        debug_assert_eq!(query.len(), self.dim());
+        let ksub = self.ksub();
+        out.clear();
+        out.reserve(self.m * ksub);
+        for j in 0..self.m {
+            let sub = &query[j * self.dsub..(j + 1) * self.dsub];
+            let book = self.book(j);
+            for c in 0..ksub {
+                out.push(crate::quant::l2_sq(sub, &book[c * self.dsub..(c + 1) * self.dsub]));
+            }
+        }
+    }
+
+    /// ADC distance of one code row against a prebuilt LUT.
+    #[inline]
+    pub fn adc(&self, lut: &[f32], codes: &[u16]) -> f32 {
+        let ksub = self.ksub();
+        let mut s = 0f32;
+        for (j, &c) in codes.iter().enumerate() {
+            s += lut[j * ksub + c as usize];
+        }
+        s
+    }
+
+    pub fn serialize(&self, w: &mut WriteBuf) {
+        w.put_u64(self.m as u64);
+        w.put_u32(self.bits);
+        w.put_u64(self.dsub as u64);
+        w.put_f32s(&self.codebooks);
+    }
+
+    pub fn deserialize(r: &mut ReadBuf) -> anyhow::Result<Pq> {
+        let m = r.get_u64()? as usize;
+        let bits = r.get_u32()?;
+        let dsub = r.get_u64()? as usize;
+        let codebooks = r.get_f32s()?;
+        anyhow::ensure!(codebooks.len() == m * (1 << bits) * dsub, "codebook size mismatch");
+        Ok(Pq { m, bits, dsub, codebooks })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::l2_sq;
+    use crate::util::Rng;
+
+    fn gaussian(rng: &mut Rng, n: usize, dim: usize) -> Vec<f32> {
+        (0..n * dim).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn encode_decode_reduces_error_vs_random_codes() {
+        let mut rng = Rng::new(70);
+        let dim = 16;
+        let data = gaussian(&mut rng, 2000, dim);
+        let pq = Pq::train(&data, dim, 4, 8, 1, 2);
+        let mut codes = Vec::new();
+        let mut recon = Vec::new();
+        let mut err = 0f64;
+        let mut base = 0f64;
+        for i in 0..200 {
+            let v = &data[i * dim..(i + 1) * dim];
+            codes.clear();
+            recon.clear();
+            pq.encode(v, &mut codes);
+            pq.decode(&codes, &mut recon);
+            err += l2_sq(v, &recon) as f64;
+            base += v.iter().map(|x| (x * x) as f64).sum::<f64>();
+        }
+        // PQ4x8 on 16-dim gaussians: strong reduction vs ||v||^2.
+        assert!(err < 0.25 * base, "err={err} base={base}");
+    }
+
+    #[test]
+    fn adc_matches_explicit_distance_to_reconstruction() {
+        let mut rng = Rng::new(71);
+        let dim = 32;
+        let data = gaussian(&mut rng, 1000, dim);
+        let pq = Pq::train(&data, dim, 8, 8, 2, 2);
+        let q: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+        let mut lut = Vec::new();
+        pq.lut(&q, &mut lut);
+        for i in 0..50 {
+            let v = &data[i * dim..(i + 1) * dim];
+            let mut codes = Vec::new();
+            pq.encode(v, &mut codes);
+            let mut recon = Vec::new();
+            pq.decode(&codes, &mut recon);
+            let want = l2_sq(&q, &recon);
+            let got = pq.adc(&lut, &codes);
+            assert!((got - want).abs() < 1e-3 * want.max(1.0), "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn batch_encode_matches_single() {
+        let mut rng = Rng::new(72);
+        let dim = 8;
+        let data = gaussian(&mut rng, 100, dim);
+        let pq = Pq::train(&data, dim, 4, 4, 3, 2);
+        let batch = pq.encode_batch(&data, 4);
+        for i in 0..100 {
+            let mut single = Vec::new();
+            pq.encode(&data[i * dim..(i + 1) * dim], &mut single);
+            assert_eq!(&batch[i * 4..(i + 1) * 4], &single[..]);
+        }
+    }
+
+    #[test]
+    fn ten_bit_codes() {
+        // PQ8x10 (Table 2's large-LUT variant).
+        let mut rng = Rng::new(73);
+        let dim = 32;
+        let data = gaussian(&mut rng, 3000, dim);
+        let pq = Pq::train(&data, dim, 8, 10, 4, 2);
+        assert_eq!(pq.ksub(), 1024);
+        assert_eq!(pq.code_bits(), 80);
+        let mut codes = Vec::new();
+        pq.encode(&data[..dim], &mut codes);
+        assert!(codes.iter().all(|&c| (c as usize) < 1024));
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let mut rng = Rng::new(74);
+        let data = gaussian(&mut rng, 500, 8);
+        let pq = Pq::train(&data, 8, 2, 6, 5, 1);
+        let mut w = WriteBuf::new();
+        pq.serialize(&mut w);
+        let mut r = ReadBuf::new(&w.bytes);
+        let back = Pq::deserialize(&mut r).unwrap();
+        assert_eq!(back.m, pq.m);
+        assert_eq!(back.codebooks, pq.codebooks);
+    }
+}

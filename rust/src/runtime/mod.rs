@@ -1,0 +1,233 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and executes them from the serving path.
+//!
+//! Python runs only at build time (`make artifacts`); at request time the
+//! rust binary compiles the HLO *text* once per (entry, shape) via the
+//! PJRT CPU client and executes batches through [`Engine`].  Executables
+//! are not `Send`, so [`EngineHandle`] pins the engine to one device
+//! thread and exposes a channel interface — the same topology a TPU-backed
+//! deployment would use (one host thread owning the device queue).
+//!
+//! Every entry has a pure-rust fallback so the whole system functions (and
+//! is testable) for shapes with no artifact; the coordinator reports which
+//! path served each batch.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+/// Shape key for a coarse-assignment executable: (batch, k, dim).
+pub type CoarseKey = (usize, usize, usize);
+
+/// Engine statistics (how many batches each path served).
+#[derive(Default, Debug)]
+pub struct EngineStats {
+    pub pjrt_batches: AtomicU64,
+    pub fallback_batches: AtomicU64,
+}
+
+/// The PJRT-owning engine. Construct on the thread that will use it.
+pub struct Engine {
+    #[allow(dead_code)] // keeps the PJRT client alive for the executables
+    client: xla::PjRtClient,
+    coarse: HashMap<CoarseKey, xla::PjRtLoadedExecutable>,
+    pub stats: Arc<EngineStats>,
+}
+
+impl Engine {
+    /// Load every `coarse__b*_k*_d*.hlo.txt` in `dir` and compile it.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let mut coarse = HashMap::new();
+        if dir.is_dir() {
+            for entry in std::fs::read_dir(dir)? {
+                let path = entry?.path();
+                let name = match path.file_name().and_then(|n| n.to_str()) {
+                    Some(n) => n,
+                    None => continue,
+                };
+                if let Some(key) = parse_coarse_name(name) {
+                    let proto = xla::HloModuleProto::from_text_file(
+                        path.to_str().context("non-utf8 path")?,
+                    )
+                    .with_context(|| format!("parse {name}"))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = client.compile(&comp).with_context(|| format!("compile {name}"))?;
+                    coarse.insert(key, exe);
+                }
+            }
+        }
+        Ok(Engine { client, coarse, stats: Arc::new(EngineStats::default()) })
+    }
+
+    pub fn num_executables(&self) -> usize {
+        self.coarse.len()
+    }
+
+    pub fn has_coarse(&self, key: CoarseKey) -> bool {
+        self.coarse.contains_key(&key)
+    }
+
+    /// Batched query→centroid squared-L2 distances.
+    ///
+    /// `queries` is `b × d` row-major (b must match an artifact batch for
+    /// the PJRT path), `centroids` is `k × d`. Returns `b × k` distances
+    /// and whether the PJRT path was used.
+    pub fn coarse(
+        &self,
+        queries: &[f32],
+        b: usize,
+        d: usize,
+        centroids: &[f32],
+        k: usize,
+    ) -> Result<(Vec<f32>, bool)> {
+        debug_assert_eq!(queries.len(), b * d);
+        debug_assert_eq!(centroids.len(), k * d);
+        if let Some(exe) = self.coarse.get(&(b, k, d)) {
+            let q = xla::Literal::vec1(queries).reshape(&[b as i64, d as i64])?;
+            let c = xla::Literal::vec1(centroids).reshape(&[k as i64, d as i64])?;
+            let result = exe.execute::<xla::Literal>(&[q, c])?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?; // lowered with return_tuple=True
+            let v = out.to_vec::<f32>()?;
+            anyhow::ensure!(v.len() == b * k, "bad output size {}", v.len());
+            self.stats.pjrt_batches.fetch_add(1, Ordering::Relaxed);
+            Ok((v, true))
+        } else {
+            self.stats.fallback_batches.fetch_add(1, Ordering::Relaxed);
+            Ok((coarse_fallback(queries, b, d, centroids, k), false))
+        }
+    }
+}
+
+/// Pure-rust coarse distances (fallback path; also the test oracle).
+pub fn coarse_fallback(queries: &[f32], b: usize, d: usize, centroids: &[f32], k: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(b * k);
+    for qi in 0..b {
+        crate::quant::dists_to_all(&queries[qi * d..(qi + 1) * d], centroids, d, &mut out);
+    }
+    debug_assert_eq!(out.len(), b * k);
+    out
+}
+
+fn parse_coarse_name(name: &str) -> Option<CoarseKey> {
+    // coarse__b{b}_k{k}_d{d}.hlo.txt
+    let stem = name.strip_suffix(".hlo.txt")?;
+    let rest = stem.strip_prefix("coarse__b")?;
+    let (b, rest) = rest.split_once("_k")?;
+    let (k, d) = rest.split_once("_d")?;
+    Some((b.parse().ok()?, k.parse().ok()?, d.parse().ok()?))
+}
+
+/// Request message for the engine thread.
+pub enum EngineMsg {
+    Coarse {
+        queries: Vec<f32>,
+        b: usize,
+        d: usize,
+        centroids: Arc<Vec<f32>>,
+        k: usize,
+        reply: mpsc::SyncSender<Result<(Vec<f32>, bool)>>,
+    },
+    Shutdown,
+}
+
+/// Channel-based handle to an engine pinned on its own thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<EngineMsg>,
+    pub stats: Arc<EngineStats>,
+    pub num_executables: usize,
+}
+
+impl EngineHandle {
+    /// Spawn the engine thread; blocks until artifacts are compiled.
+    pub fn spawn(artifact_dir: &Path) -> Result<EngineHandle> {
+        let (tx, rx) = mpsc::channel::<EngineMsg>();
+        let (ready_tx, ready_rx) = mpsc::sync_channel(1);
+        let dir = artifact_dir.to_path_buf();
+        std::thread::Builder::new()
+            .name("zann-engine".into())
+            .spawn(move || {
+                let engine = match Engine::load(&dir) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok((e.stats.clone(), e.num_executables())));
+                        e
+                    }
+                    Err(err) => {
+                        let _ = ready_tx.send(Err(err));
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        EngineMsg::Coarse { queries, b, d, centroids, k, reply } => {
+                            let res = engine.coarse(&queries, b, d, &centroids, k);
+                            let _ = reply.send(res);
+                        }
+                        EngineMsg::Shutdown => break,
+                    }
+                }
+            })
+            .context("spawn engine thread")?;
+        let (stats, num_executables) = ready_rx.recv().context("engine thread died")??;
+        Ok(EngineHandle { tx, stats, num_executables })
+    }
+
+    /// Synchronous batched coarse scoring through the engine thread.
+    pub fn coarse(
+        &self,
+        queries: Vec<f32>,
+        b: usize,
+        d: usize,
+        centroids: Arc<Vec<f32>>,
+        k: usize,
+    ) -> Result<(Vec<f32>, bool)> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(EngineMsg::Coarse { queries, b, d, centroids, k, reply })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv().context("engine reply dropped")?
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(EngineMsg::Shutdown);
+    }
+}
+
+/// Default artifact directory: `$ZANN_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var("ZANN_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_artifact_names() {
+        assert_eq!(parse_coarse_name("coarse__b64_k1024_d32.hlo.txt"), Some((64, 1024, 32)));
+        assert_eq!(parse_coarse_name("coarse__b1_k256_d8.hlo.txt"), Some((1, 256, 8)));
+        assert_eq!(parse_coarse_name("pqlut__b64_m8_ks256_ds4.hlo.txt"), None);
+        assert_eq!(parse_coarse_name("manifest.json"), None);
+    }
+
+    #[test]
+    fn fallback_matches_quant() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(100);
+        let (b, d, k) = (3usize, 8usize, 5usize);
+        let q: Vec<f32> = (0..b * d).map(|_| rng.normal()).collect();
+        let c: Vec<f32> = (0..k * d).map(|_| rng.normal()).collect();
+        let out = coarse_fallback(&q, b, d, &c, k);
+        for qi in 0..b {
+            for ci in 0..k {
+                let want = crate::quant::l2_sq(&q[qi * d..(qi + 1) * d], &c[ci * d..(ci + 1) * d]);
+                assert!((out[qi * k + ci] - want).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! LSB-first bit reader/writer over a `Vec<u64>` backing store.
+//!
+//! Used by the fixed-width id packer, Elias-Fano lower bits and the wavelet
+//! tree's per-level bitmaps.
+
+/// Append-only bit writer (LSB-first within each u64 word).
+#[derive(Default, Clone, Debug)]
+pub struct BitWriter {
+    words: Vec<u64>,
+    /// Total number of bits written.
+    len: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bits: usize) -> Self {
+        BitWriter { words: Vec::with_capacity(bits.div_ceil(64)), len: 0 }
+    }
+
+    /// Write the low `n` bits of `v` (n <= 64).
+    #[inline]
+    pub fn write(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return;
+        }
+        let v = if n == 64 { v } else { v & ((1u64 << n) - 1) };
+        let bit = self.len & 63;
+        if bit == 0 {
+            self.words.push(v);
+        } else {
+            *self.words.last_mut().unwrap() |= v << bit;
+            if bit + n as usize > 64 {
+                self.words.push(v >> (64 - bit));
+            }
+        }
+        self.len += n as usize;
+    }
+
+    /// Write a single bit.
+    #[inline]
+    pub fn push_bit(&mut self, b: bool) {
+        self.write(b as u64, 1);
+    }
+
+    /// Unary code: `v` zeros followed by a one (as used by Elias-Fano
+    /// upper bits).
+    pub fn write_unary(&mut self, v: u64) {
+        let mut rem = v;
+        while rem >= 64 {
+            self.write(0, 64);
+            rem -= 64;
+        }
+        self.write(1u64 << rem, rem as u32 + 1);
+    }
+
+    pub fn len_bits(&self) -> usize {
+        self.len
+    }
+
+    pub fn finish(self) -> BitBuf {
+        BitBuf { words: self.words, len: self.len }
+    }
+}
+
+/// Immutable bit buffer with random-access reads.
+#[derive(Clone, Debug, Default)]
+pub struct BitBuf {
+    pub words: Vec<u64>,
+    pub len: usize,
+}
+
+impl BitBuf {
+    /// Read `n` bits starting at bit offset `pos` (LSB-first).
+    #[inline]
+    pub fn read(&self, pos: usize, n: u32) -> u64 {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return 0;
+        }
+        debug_assert!(pos + n as usize <= self.len);
+        let word = pos >> 6;
+        let bit = pos & 63;
+        let lo = self.words[word] >> bit;
+        let v = if bit + n as usize <= 64 {
+            lo
+        } else {
+            lo | (self.words[word + 1] << (64 - bit))
+        };
+        if n == 64 {
+            v
+        } else {
+            v & ((1u64 << n) - 1)
+        }
+    }
+
+    #[inline]
+    pub fn get_bit(&self, pos: usize) -> bool {
+        (self.words[pos >> 6] >> (pos & 63)) & 1 == 1
+    }
+
+    pub fn size_bits(&self) -> usize {
+        self.len
+    }
+
+    /// Heap bytes occupied by the raw words.
+    pub fn heap_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+/// Sequential reader over a [`BitBuf`].
+pub struct BitReader<'a> {
+    buf: &'a BitBuf,
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a BitBuf) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    pub fn at(buf: &'a BitBuf, pos: usize) -> Self {
+        BitReader { buf, pos }
+    }
+
+    #[inline]
+    pub fn read(&mut self, n: u32) -> u64 {
+        let v = self.buf.read(self.pos, n);
+        self.pos += n as usize;
+        v
+    }
+
+    /// Read a unary code (count zeros up to the terminating one).
+    pub fn read_unary(&mut self) -> u64 {
+        let mut count = 0u64;
+        loop {
+            let word = self.pos >> 6;
+            let bit = self.pos & 63;
+            let w = self.buf.words[word] >> bit;
+            if w == 0 {
+                count += 64 - bit as u64;
+                self.pos += 64 - bit;
+            } else {
+                let tz = w.trailing_zeros() as u64;
+                count += tz;
+                self.pos += tz as usize + 1;
+                return count;
+            }
+        }
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_fixed_width() {
+        let mut w = BitWriter::new();
+        let vals: Vec<(u64, u32)> = vec![
+            (0, 1),
+            (1, 1),
+            (5, 3),
+            (0xdeadbeef, 32),
+            (u64::MAX, 64),
+            (0, 0),
+            (1234567, 21),
+        ];
+        for &(v, n) in &vals {
+            w.write(v, n);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for &(v, n) in &vals {
+            let masked = if n == 0 {
+                0
+            } else if n == 64 {
+                v
+            } else {
+                v & ((1 << n) - 1)
+            };
+            assert_eq!(r.read(n), masked, "width {n}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_property() {
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let mut w = BitWriter::new();
+            let mut expect = Vec::new();
+            for _ in 0..rng.below(500) {
+                let n = rng.below(65) as u32;
+                let v = rng.next_u64();
+                let masked = if n == 0 {
+                    0
+                } else if n == 64 {
+                    v
+                } else {
+                    v & ((1 << n) - 1)
+                };
+                w.write(v, n);
+                expect.push((masked, n));
+            }
+            let total: usize = expect.iter().map(|&(_, n)| n as usize).sum();
+            let buf = w.finish();
+            assert_eq!(buf.size_bits(), total);
+            let mut r = BitReader::new(&buf);
+            for (v, n) in expect {
+                assert_eq!(r.read(n), v);
+            }
+        }
+    }
+
+    #[test]
+    fn unary_roundtrip() {
+        let mut w = BitWriter::new();
+        let vals = [0u64, 1, 5, 63, 64, 65, 130, 1000, 2];
+        for &v in &vals {
+            w.write_unary(v);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for &v in &vals {
+            assert_eq!(r.read_unary(), v);
+        }
+    }
+
+    #[test]
+    fn random_access_read() {
+        let mut w = BitWriter::new();
+        for i in 0..100u64 {
+            w.write(i, 7);
+        }
+        let buf = w.finish();
+        for i in (0..100usize).rev() {
+            assert_eq!(buf.read(i * 7, 7), i as u64);
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! Tiny CLI argument parser (`--flag`, `--key value`, positionals).
+//!
+//! `clap` is not in the offline vendor set; this covers what the `zann`
+//! binary, the examples and the bench harnesses need.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let raw: Vec<String> = iter.into_iter().collect();
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(name.to_string(), String::from("true"));
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, name: &str) -> bool {
+        match self.get(name) {
+            Some("false") | Some("0") => false,
+            Some(_) => true,
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_flags_values_positionals() {
+        let a = parse(&["build", "--n", "1000", "--full", "--k=17", "path"]);
+        assert_eq!(a.positional, vec!["build", "path"]);
+        assert_eq!(a.usize("n", 0), 1000);
+        assert!(a.bool("full"));
+        assert_eq!(a.usize("k", 0), 17);
+        assert!(!a.bool("absent"));
+        assert_eq!(a.get_or("missing", "x"), "x");
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse(&["--verbose"]);
+        assert!(a.bool("verbose"));
+    }
+}

@@ -1,0 +1,94 @@
+//! Zero-dependency utilities: PRNG, bit I/O, binary serialization, a tiny
+//! CLI argument parser, a scoped thread pool and timing helpers.
+//!
+//! The build environment is fully offline (only the crates vendored next to
+//! the `xla` crate are available), so the usual suspects (`rand`,
+//! `clap`, `rayon`, `criterion`) are re-implemented here at the scale this
+//! project needs.
+
+pub mod prng;
+pub mod bits;
+pub mod serialize;
+pub mod cli;
+pub mod pool;
+pub mod timer;
+
+pub use bits::{BitReader, BitWriter};
+pub use prng::Rng;
+pub use serialize::{ReadBuf, WriteBuf};
+
+/// `ceil(log2(n))` for n >= 1; number of bits needed to address `[0, n)`.
+/// By convention `bits_for(1) == 0` (a single value needs no bits).
+pub fn bits_for(n: u64) -> u32 {
+    if n <= 1 {
+        0
+    } else {
+        64 - (n - 1).leading_zeros()
+    }
+}
+
+/// `log2(n!)` in bits, via the log-gamma function (Stirling series).
+/// This is the information-theoretic value of the ordering of an n-set.
+pub fn log2_factorial(n: u64) -> f64 {
+    if n < 2 {
+        return 0.0;
+    }
+    // Exact summation below a threshold, Stirling above (abs err < 1e-10).
+    if n < 256 {
+        (2..=n).map(|i| (i as f64).log2()).sum()
+    } else {
+        let x = n as f64;
+        let ln = x * x.ln() - x + 0.5 * (2.0 * std::f64::consts::PI * x).ln()
+            + 1.0 / (12.0 * x)
+            - 1.0 / (360.0 * x * x * x);
+        ln / std::f64::consts::LN_2
+    }
+}
+
+/// `log2(binomial(n, k))` — information content of a k-subset of [n).
+pub fn log2_binomial(n: u64, k: u64) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    log2_factorial(n) - log2_factorial(k) - log2_factorial(n - k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_for_edges() {
+        assert_eq!(bits_for(0), 0);
+        assert_eq!(bits_for(1), 0);
+        assert_eq!(bits_for(2), 1);
+        assert_eq!(bits_for(3), 2);
+        assert_eq!(bits_for(4), 2);
+        assert_eq!(bits_for(5), 3);
+        assert_eq!(bits_for(1 << 20), 20);
+        assert_eq!(bits_for((1 << 20) + 1), 21);
+    }
+
+    #[test]
+    fn log2_factorial_small_exact() {
+        assert_eq!(log2_factorial(0), 0.0);
+        assert_eq!(log2_factorial(1), 0.0);
+        assert!((log2_factorial(4) - (24f64).log2()).abs() < 1e-12);
+        assert!((log2_factorial(10) - (3628800f64).log2()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log2_factorial_stirling_continuous() {
+        // Stirling and exact summation must agree at the crossover point.
+        let exact: f64 = (2..=300u64).map(|i| (i as f64).log2()).sum();
+        assert!((log2_factorial(300) - exact).abs() < 1e-6);
+    }
+
+    #[test]
+    fn binomial_sanity() {
+        assert!((log2_binomial(5, 2) - (10f64).log2()).abs() < 1e-9);
+        // log2 C(1e6, 1000): n log2(N/n) + n log2(e) - O(log n) ballpark.
+        let v = log2_binomial(1_000_000, 1000);
+        assert!(v > 11_000.0 && v < 12_000.0, "{v}");
+    }
+}

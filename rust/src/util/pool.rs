@@ -1,0 +1,86 @@
+//! Scoped data-parallel helpers over std threads (no rayon offline).
+
+/// Run `f(chunk_index, item_range)` over `n` items split across up to
+/// `threads` OS threads, via `std::thread::scope`. `f` must be `Sync`.
+pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n == 0 {
+        f(0, 0..n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(t, lo..hi));
+        }
+    });
+}
+
+/// Map each index in `[0, n)` to a value, in parallel, preserving order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    if n == 0 {
+        return out;
+    }
+    let threads = threads.max(1).min(n);
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, slice) in out.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (off, v) in slice.iter_mut().enumerate() {
+                    *v = f(t * chunk + off);
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Default worker count: physical parallelism reported by the OS.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_matches_serial() {
+        let got = parallel_map(1000, 8, |i| i * i);
+        let want: Vec<usize> = (0..1000).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallel_map_single_thread_and_empty() {
+        assert_eq!(parallel_map(5, 1, |i| i), vec![0, 1, 2, 3, 4]);
+        assert_eq!(parallel_map(0, 8, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn chunks_cover_exactly_once() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let hits: Vec<AtomicU32> = (0..777).map(|_| AtomicU32::new(0)).collect();
+        parallel_chunks(777, 7, |_, range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+}

@@ -1,0 +1,161 @@
+//! Minimal binary (de)serialization: length-prefixed little-endian fields.
+//!
+//! Index files and codec blobs are written through [`WriteBuf`] and read
+//! back with [`ReadBuf`]; no serde in the offline vendor set.
+
+use anyhow::{bail, Result};
+
+#[derive(Default)]
+pub struct WriteBuf {
+    pub bytes: Vec<u8>,
+}
+
+impl WriteBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.bytes.push(v);
+    }
+    pub fn put_u32(&mut self, v: u32) {
+        self.bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn put_u64(&mut self, v: u64) {
+        self.bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn put_f32(&mut self, v: f32) {
+        self.bytes.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32s(&mut self, vs: &[u32]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.put_u32(v);
+        }
+    }
+    pub fn put_u64s(&mut self, vs: &[u64]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.put_u64(v);
+        }
+    }
+    pub fn put_f32s(&mut self, vs: &[f32]) {
+        self.put_u64(vs.len() as u64);
+        for &v in vs {
+            self.put_f32(v);
+        }
+    }
+    pub fn put_bytes(&mut self, vs: &[u8]) {
+        self.put_u64(vs.len() as u64);
+        self.bytes.extend_from_slice(vs);
+    }
+    pub fn put_str(&mut self, s: &str) {
+        self.put_bytes(s.as_bytes());
+    }
+}
+
+pub struct ReadBuf<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ReadBuf<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        ReadBuf { bytes, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!("buffer underrun at {} (+{n} of {})", self.pos, self.bytes.len());
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.get_u64()? as usize;
+        let mut v = Vec::with_capacity(n.min(1 << 24));
+        for _ in 0..n {
+            v.push(self.get_u32()?);
+        }
+        Ok(v)
+    }
+    pub fn get_u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.get_u64()? as usize;
+        let mut v = Vec::with_capacity(n.min(1 << 23));
+        for _ in 0..n {
+            v.push(self.get_u64()?);
+        }
+        Ok(v)
+    }
+    pub fn get_f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.get_u64()? as usize;
+        let mut v = Vec::with_capacity(n.min(1 << 24));
+        for _ in 0..n {
+            v.push(self.get_f32()?);
+        }
+        Ok(v)
+    }
+    pub fn get_bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.get_u64()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+    pub fn get_str(&mut self) -> Result<String> {
+        Ok(String::from_utf8(self.get_bytes()?)?)
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_field_types() {
+        let mut w = WriteBuf::new();
+        w.put_u8(7);
+        w.put_u32(0xdead_beef);
+        w.put_u64(u64::MAX - 3);
+        w.put_f32(3.5);
+        w.put_u32s(&[1, 2, 3]);
+        w.put_u64s(&[]);
+        w.put_f32s(&[-1.0, 2.25]);
+        w.put_bytes(b"blob");
+        w.put_str("zann");
+        let mut r = ReadBuf::new(&w.bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.get_f32().unwrap(), 3.5);
+        assert_eq!(r.get_u32s().unwrap(), vec![1, 2, 3]);
+        assert!(r.get_u64s().unwrap().is_empty());
+        assert_eq!(r.get_f32s().unwrap(), vec![-1.0, 2.25]);
+        assert_eq!(r.get_bytes().unwrap(), b"blob");
+        assert_eq!(r.get_str().unwrap(), "zann");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn underrun_is_error() {
+        let mut r = ReadBuf::new(&[1, 2]);
+        assert!(r.get_u32().is_err());
+    }
+}

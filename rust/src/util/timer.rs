@@ -1,0 +1,66 @@
+//! Timing helpers for the bench harnesses (criterion is not vendored).
+
+use std::time::Instant;
+
+/// Run `f` once and return seconds elapsed.
+pub fn time_once<F: FnOnce()>(f: F) -> f64 {
+    let t0 = Instant::now();
+    f();
+    t0.elapsed().as_secs_f64()
+}
+
+/// Median wall-time over `runs` invocations (the paper reports medians
+/// over 100 runs; benches here default lower and say so).
+pub fn median_time<F: FnMut()>(runs: usize, mut f: F) -> f64 {
+    assert!(runs > 0);
+    let mut ts: Vec<f64> = (0..runs)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    ts.sort_by(|a, b| a.total_cmp(b));
+    ts[ts.len() / 2]
+}
+
+/// Simple statistics over repeated timed runs.
+pub struct Stats {
+    pub median: f64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn run_stats<F: FnMut()>(runs: usize, mut f: F) -> Stats {
+    let mut ts: Vec<f64> = (0..runs)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    ts.sort_by(|a, b| a.total_cmp(b));
+    Stats {
+        median: ts[ts.len() / 2],
+        mean: ts.iter().sum::<f64>() / ts.len() as f64,
+        min: ts[0],
+        max: *ts.last().unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timers_are_positive_and_ordered() {
+        let s = run_stats(5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.mean > 0.0);
+        assert!(time_once(|| ()) >= 0.0);
+        assert!(median_time(3, || ()) >= 0.0);
+    }
+}

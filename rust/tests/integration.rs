@@ -1,0 +1,171 @@
+//! Integration tests across modules: the PJRT AOT round-trip (python HLO →
+//! rust execute), the full serving stack, and cross-codec index identity.
+//!
+//! PJRT tests require `make artifacts` to have run (the Makefile `test`
+//! target guarantees it); they skip gracefully if artifacts are missing so
+//! `cargo test` works in a fresh checkout too.
+
+use std::sync::Arc;
+use zann::coordinator::{Coordinator, ServeConfig};
+use zann::datasets::{generate, Kind};
+use zann::index::{IvfBuildParams, IvfIndex, SearchParams, SearchScratch};
+use zann::runtime::{coarse_fallback, Engine, EngineHandle};
+use zann::util::Rng;
+
+fn artifact_dir() -> std::path::PathBuf {
+    let mut p = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    p.push("artifacts");
+    p
+}
+
+fn have_artifacts() -> bool {
+    artifact_dir().join("coarse__b64_k1024_d32.hlo.txt").exists()
+}
+
+#[test]
+fn pjrt_coarse_matches_rust_fallback() {
+    if !have_artifacts() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::load(&artifact_dir()).expect("engine load");
+    assert!(engine.num_executables() >= 5, "expected the full artifact grid");
+    let mut rng = Rng::new(1);
+    for &(b, k, d) in &[(64usize, 1024usize, 32usize), (64, 256, 32), (64, 2048, 32), (1, 1024, 32)]
+    {
+        assert!(engine.has_coarse((b, k, d)), "missing artifact b{b}_k{k}_d{d}");
+        let q: Vec<f32> = (0..b * d).map(|_| rng.normal()).collect();
+        let c: Vec<f32> = (0..k * d).map(|_| rng.normal()).collect();
+        let (got, via_pjrt) = engine.coarse(&q, b, d, &c, k).unwrap();
+        assert!(via_pjrt);
+        let want = coarse_fallback(&q, b, d, &c, k);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 1e-2 * w.abs().max(1.0),
+                "b{b}k{k}d{d} elem {i}: pjrt={g} rust={w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_unknown_shape_falls_back() {
+    if !have_artifacts() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::load(&artifact_dir()).expect("engine load");
+    let (out, via_pjrt) = engine.coarse(&[0.0; 3 * 7], 3, 7, &[0.0; 5 * 7], 5).unwrap();
+    assert!(!via_pjrt);
+    assert_eq!(out.len(), 15);
+}
+
+#[test]
+fn serving_through_pjrt_engine_end_to_end() {
+    if !have_artifacts() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    // dim/k match the shipped artifact grid: (b=64, k=1024, d=32).
+    let ds = generate(Kind::DeepLike, 30_000, 256, 32, 23);
+    let idx = Arc::new(IvfIndex::build(
+        &ds.data,
+        32,
+        &IvfBuildParams { k: 1024, id_codec: "roc".into(), ..Default::default() },
+    ));
+    let engine = EngineHandle::spawn(&artifact_dir()).expect("engine spawn");
+    let coord = Coordinator::start(
+        idx.clone(),
+        Some(engine),
+        ServeConfig {
+            batch_size: 64,
+            search: SearchParams { nprobe: 16, k: 10 },
+            ..Default::default()
+        },
+    );
+    let queries: Vec<Vec<f32>> = (0..256).map(|qi| ds.query(qi).to_vec()).collect();
+    let responses = coord.client.search_many(queries).unwrap();
+    // At least some batches were full (64) and went through PJRT.
+    assert!(responses.iter().any(|r| r.via_pjrt), "no batch hit the PJRT path");
+    // Results identical to the pure-rust direct search.
+    let sp = SearchParams { nprobe: 16, k: 10 };
+    let mut scratch = SearchScratch::default();
+    for (qi, resp) in responses.iter().enumerate() {
+        let want = idx.search(ds.query(qi), &sp, &mut scratch);
+        let got_ids: Vec<u32> = resp.results.iter().map(|r| r.1).collect();
+        let want_ids: Vec<u32> = want.iter().map(|r| r.1).collect();
+        assert_eq!(got_ids, want_ids, "query {qi} differs between PJRT and rust coarse");
+    }
+    coord.stop();
+}
+
+#[test]
+fn ivf_and_nsg_agree_on_easy_queries() {
+    // Cross-index sanity: both index families find a *planted* neighbor
+    // (query = database point + tiny noise).
+    let ds = generate(Kind::DeepLike, 5_000, 1, 16, 24);
+    let mut rng = Rng::new(99);
+    let mut queries = Vec::new();
+    let mut planted = Vec::new();
+    for q in 0..30usize {
+        let target = (q * 131) % ds.n;
+        planted.push(target as u32);
+        for d in 0..16 {
+            queries.push(ds.data[target * 16 + d] + 1e-4 * rng.normal());
+        }
+    }
+    let ivf = IvfIndex::build(
+        &ds.data,
+        16,
+        &IvfBuildParams { k: 64, id_codec: "ef".into(), ..Default::default() },
+    );
+    let nsg = zann::graph::nsg::Nsg::build(
+        &ds.data,
+        16,
+        &zann::graph::nsg::NsgParams { r: 24, knn_k: 32, ..Default::default() },
+    );
+    let sp = SearchParams { nprobe: 16, k: 1 };
+    let mut scratch = SearchScratch::default();
+    let (mut ivf_hits, mut nsg_hits) = (0, 0);
+    for (q, &target) in planted.iter().enumerate() {
+        let query = &queries[q * 16..(q + 1) * 16];
+        if ivf.search(query, &sp, &mut scratch).first().map(|r| r.1) == Some(target) {
+            ivf_hits += 1;
+        }
+        if nsg.search(&ds.data, query, 128, 1).first().map(|r| r.1) == Some(target) {
+            nsg_hits += 1;
+        }
+    }
+    assert!(ivf_hits >= 27, "ivf found {ivf_hits}/30 planted neighbors");
+    assert!(nsg_hits >= 24, "nsg found {nsg_hits}/30 planted neighbors");
+}
+
+#[test]
+fn offline_blob_roundtrip_via_all_graph_coders() {
+    use zann::codecs::rec::{Rec, RecModel};
+    use zann::codecs::zuckerli::Zuckerli;
+    let ds = generate(Kind::DeepLike, 2_000, 1, 12, 25);
+    let h = zann::graph::hnsw::Hnsw::build(
+        &ds.data,
+        12,
+        &zann::graph::hnsw::HnswParams { m: 12, ef_construction: 60, seed: 1 },
+    );
+    let adj = h.base_adj();
+    let e: u64 = adj.iter().map(|l| l.len() as u64).sum();
+    let norm = |a: &[Vec<u32>]| -> Vec<Vec<u32>> {
+        a.iter()
+            .map(|l| {
+                let mut l = l.clone();
+                l.sort_unstable();
+                l
+            })
+            .collect()
+    };
+    for model in [RecModel::Uniform, RecModel::PolyaUrn] {
+        let rec = Rec::new(model);
+        let enc = rec.encode_graph(adj);
+        assert_eq!(norm(&rec.decode_graph(&enc.bytes, 2_000, e)), norm(adj));
+    }
+    let z = Zuckerli::default();
+    assert_eq!(z.decode_graph(&z.encode_graph(adj).bytes, 2_000), norm(adj));
+}
