@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Local CI gate for the zann workspace. Tier-1 (what the roadmap verifies)
+# comes first; style/lint/doc gates follow so a tier-1 regression is
+# reported before a formatting nit.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== tier-1: build =="
+cargo build --release
+
+echo "== tier-1: tests =="
+cargo test -q
+
+echo "== compile bench harnesses and examples =="
+cargo build --release --benches --examples
+
+echo "== rustfmt =="
+cargo fmt --all -- --check
+
+echo "== clippy =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== rustdoc =="
+cargo doc --no-deps --quiet
+
+echo "ci.sh: all gates green"

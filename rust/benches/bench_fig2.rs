@@ -1,5 +1,13 @@
 //! Regenerates the paper's Figure 2 (slowdown vs PQ dimensionality).
+//! `cargo bench --bench bench_fig2 -- [--full] [--dataset sift] [--runs R]`
+//!
+//! Bare invocations run at a tiny smoke scale (see `smoke.rs`); pass
+//! `--n`/`--full` for figure-comparable runs (docs/REPRODUCING.md).
+
+#[path = "smoke.rs"]
+mod smoke;
+
 fn main() {
-    let args = zann::util::cli::Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let args = zann::util::cli::Args::parse(smoke::common_args());
     zann::eval::bench_entries::fig2(&args);
 }

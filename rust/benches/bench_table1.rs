@@ -1,6 +1,13 @@
 //! Regenerates the paper's Table 1 (bits/id for IVF and NSG indices).
 //! `cargo bench --bench bench_table1 -- [--full] [--dataset sift] [--n N]`
+//!
+//! Bare invocations run at a tiny smoke scale (see `smoke.rs`); pass
+//! `--n`/`--full` for table-comparable runs (docs/REPRODUCING.md).
+
+#[path = "smoke.rs"]
+mod smoke;
+
 fn main() {
-    let args = zann::util::cli::Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let args = zann::util::cli::Args::parse(smoke::common_args());
     zann::eval::bench_entries::table1(&args);
 }

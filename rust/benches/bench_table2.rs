@@ -1,5 +1,13 @@
 //! Regenerates the paper's Table 2 (search wall-time per codec).
+//! `cargo bench --bench bench_table2 -- [--full] [--dataset sift] [--runs R]`
+//!
+//! Bare invocations run at a tiny smoke scale (see `smoke.rs`); pass
+//! `--n`/`--full` for table-comparable runs (docs/REPRODUCING.md).
+
+#[path = "smoke.rs"]
+mod smoke;
+
 fn main() {
-    let args = zann::util::cli::Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let args = zann::util::cli::Args::parse(smoke::common_args());
     zann::eval::bench_entries::table2(&args);
 }

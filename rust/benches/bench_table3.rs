@@ -1,5 +1,13 @@
 //! Regenerates the paper's Table 3 (offline graph compression: REC vs Zuckerli).
+//! `cargo bench --bench bench_table3 -- [--full] [--dataset sift] [--r R]`
+//!
+//! Bare invocations run at a tiny smoke scale (see `smoke.rs`); pass
+//! `--n`/`--full` for table-comparable runs (docs/REPRODUCING.md).
+
+#[path = "smoke.rs"]
+mod smoke;
+
 fn main() {
-    let args = zann::util::cli::Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let args = zann::util::cli::Args::parse(smoke::common_args());
     zann::eval::bench_entries::table3(&args);
 }

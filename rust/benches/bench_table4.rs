@@ -1,5 +1,17 @@
 //! Regenerates the paper's Table 4 (scaled large-N IVF-PQ: bits/id + search time).
+//! `cargo bench --bench bench_table4 -- [--n4 N] [--nq4 NQ] [--k4 K]`
+//!
+//! Bare invocations run at a tiny smoke scale (see `smoke.rs`); pass
+//! `--n4`/`--nq4`/`--k4` for the scaled large-N run (docs/REPRODUCING.md).
+
+#[path = "smoke.rs"]
+mod smoke;
+
 fn main() {
-    let args = zann::util::cli::Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let raw = smoke::args_with_tiny_default(
+        &["--n4", "--nq4", "--k4"],
+        &["--n4", "30000", "--nq4", "100", "--k4", "256"],
+    );
+    let args = zann::util::cli::Args::parse(raw);
     zann::eval::bench_entries::table4(&args);
 }

@@ -1,0 +1,39 @@
+//! Shared helper for the bench harnesses: collect CLI args (dropping the
+//! `--bench` flag cargo appends) and, when the caller did not pick a scale
+//! (none of `scale_flags` present), prepend a tiny smoke scale so a bare
+//! `cargo bench` exercises every entry point end-to-end in seconds instead
+//! of silently running the multi-minute default experiment scale.
+//!
+//! Defaults are *prepended*: `Args::parse` is last-wins, so any flag the
+//! user did pass stays authoritative even when the smoke scale kicks in.
+
+/// Raw args with `defaults` prepended unless one of `scale_flags` was
+/// given (either as `--flag value` or `--flag=value`).
+pub fn args_with_tiny_default(scale_flags: &[&str], defaults: &[&str]) -> Vec<String> {
+    let user: Vec<String> =
+        std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let scaled = user.iter().any(|a| {
+        scale_flags
+            .iter()
+            .any(|f| a.as_str() == *f || a.starts_with(&format!("{f}=")))
+    });
+    let mut raw = Vec::new();
+    if !scaled {
+        eprintln!("(smoke scale: pass {} for paper-scale runs)", scale_flags.join("/"));
+        raw.extend(defaults.iter().map(|s| s.to_string()));
+    }
+    raw.extend(user);
+    raw
+}
+
+/// The smoke configuration shared by the table/figure harnesses that use
+/// the common `--n/--nq/--full` scale flags.
+// Each harness compiles this file as its own module; bench_table4 uses
+// only `args_with_tiny_default`, so this helper is dead code there.
+#[allow(dead_code)]
+pub fn common_args() -> Vec<String> {
+    args_with_tiny_default(
+        &["--full", "--n", "--nq"],
+        &["--n", "4000", "--nq", "100", "--runs", "1"],
+    )
+}

@@ -71,6 +71,47 @@ pub fn codec_by_name(name: &str) -> Option<Box<dyn IdCodec>> {
 pub const PER_LIST_CODECS: [&str; 5] = ["unc64", "compact", "ef", "unc32", "roc"];
 
 #[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_names_are_rejected() {
+        for name in ["", "nope", "ROC", "roc ", "unc6", "elias", "wt", "wt1", "rec", "zuckerli"] {
+            assert!(codec_by_name(name).is_none(), "{name:?} should not resolve");
+        }
+    }
+
+    #[test]
+    fn aliases_resolve_to_canonical_codecs() {
+        assert_eq!(codec_by_name("unc").unwrap().name(), "unc64");
+        assert_eq!(codec_by_name("comp").unwrap().name(), "compact");
+    }
+
+    #[test]
+    fn per_list_codecs_all_resolve_and_roundtrip() {
+        for (i, name) in PER_LIST_CODECS.iter().enumerate() {
+            let codec = codec_by_name(name)
+                .unwrap_or_else(|| panic!("registry missing {name}"));
+            assert_eq!(codec.name(), *name, "canonical name must match registry key");
+            testutil::check_roundtrip(codec.as_ref(), 0xc0dec + i as u64);
+        }
+    }
+
+    #[test]
+    fn registry_covers_exactly_the_table1_per_list_columns() {
+        // Every registered name resolves; the decode of an empty list is a
+        // no-op for each of them.
+        for name in PER_LIST_CODECS {
+            let codec = codec_by_name(name).unwrap();
+            let enc = codec.encode(&[], 1000);
+            let mut out = Vec::new();
+            codec.decode(&enc.bytes, 1000, 0, &mut out);
+            assert!(out.is_empty(), "{name}: empty list must decode to nothing");
+        }
+    }
+}
+
+#[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
     use crate::util::Rng;

@@ -1,5 +1,30 @@
-//! ANN indexes. [`ivf`] implements the inverted-file index whose id lists
-//! are the primary compression target of the paper (Fig. 1 top).
+//! ANN indexes whose auxiliary id payloads are the paper's compression
+//! target (Fig. 1 top).
+//!
+//! [`ivf`] implements the inverted-file index: vectors are reordered into
+//! cluster-major order (Faiss layout), so each cluster must store the
+//! original vector ids explicitly — that per-cluster id list is what the
+//! per-list codecs (`unc64`/`compact`/`ef`/`roc`) compress, and what the
+//! wavelet-tree store (`wt`/`wt1`) replaces entirely with one
+//! random-access structure over the assignment sequence.
+//!
+//! Two orthogonal build axes, both chosen in [`ivf::IvfBuildParams`]:
+//!
+//! * **id storage** (`id_codec`) — how `[cluster → ids]` is represented;
+//!   lossless, so search results are identical across codecs (the reason
+//!   the paper does not report recall per codec);
+//! * **vector storage** ([`ivf::VectorMode`]) — raw f32 rows, PQ codes
+//!   scanned via ADC, or per-cluster entropy-coded PQ codes (Fig. 3).
+//!
+//! Search follows the paper's deferred-id trick (§4.1): the top-k heap
+//! collects packed `(cluster, offset)` payloads and only the final k
+//! winners are resolved to real ids through `decode_nth`/`select`; codecs
+//! without random access (ROC) instead decode each probed list during the
+//! scan — the online-setting cost Table 2 measures.
+//!
+//! Graph-based indexes (NSG, HNSW) live in [`crate::graph`]; the serving
+//! wrapper that batches queries over an [`ivf::IvfIndex`] lives in
+//! [`crate::coordinator`].
 
 pub mod ivf;
 

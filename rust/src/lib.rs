@@ -21,6 +21,48 @@
 //! [`codecs`]: asymmetric-numeral-system bits-back coders (ROC for sets, REC
 //! for whole graphs), Elias-Fano, wavelet trees (flat and RRR-compressed) and
 //! a Zuckerli-style reference baseline.
+//!
+//! # Example: compress one inverted list losslessly
+//!
+//! Per-list codecs are looked up by name ([`codecs::codec_by_name`]) and
+//! treat the list as a *set* — decode may return the ids in a different
+//! (deterministic) order, which is exactly the invariance ROC monetizes:
+//!
+//! ```
+//! use zann::codecs::codec_by_name;
+//!
+//! let codec = codec_by_name("roc").unwrap();
+//! let ids: Vec<u32> = vec![3, 14, 15, 92, 65];
+//! let enc = codec.encode(&ids, 100); // ids drawn from [0, 100)
+//!
+//! let mut out = Vec::new();
+//! codec.decode(&enc.bytes, 100, ids.len(), &mut out);
+//! out.sort_unstable();
+//! assert_eq!(out, vec![3, 14, 15, 65, 92]);
+//! assert!(enc.bits as usize <= enc.bytes.len() * 8);
+//! ```
+//!
+//! # Example: an IVF index with compressed ids
+//!
+//! Lossless id compression leaves search results untouched; only
+//! [`index::IvfIndex::bits_per_id`] changes across codecs:
+//!
+//! ```
+//! use zann::datasets::{generate, Kind};
+//! use zann::index::{IvfBuildParams, IvfIndex, SearchParams, SearchScratch};
+//!
+//! let ds = generate(Kind::DeepLike, 2000, 4, 8, 7);
+//! let idx = IvfIndex::build(
+//!     &ds.data,
+//!     ds.dim,
+//!     &IvfBuildParams { k: 16, id_codec: "roc".into(), threads: 2, ..Default::default() },
+//! );
+//! assert!(idx.bits_per_id() < 64.0);
+//!
+//! let mut scratch = SearchScratch::default();
+//! let hits = idx.search(ds.query(0), &SearchParams { nprobe: 4, k: 5 }, &mut scratch);
+//! assert_eq!(hits.len(), 5);
+//! ```
 
 pub mod util;
 pub mod bitvec;

@@ -11,8 +11,15 @@
 //! Every entry has a pure-rust fallback so the whole system functions (and
 //! is testable) for shapes with no artifact; the coordinator reports which
 //! path served each batch.
+//!
+//! The PJRT path itself is compiled only with the **`pjrt`** cargo feature
+//! (it needs the offline-vendored `xla` crate). Without the feature —
+//! the default, and what CI builds — [`Engine`] is a stub that reports
+//! zero executables and always answers through [`coarse_fallback`], so
+//! every caller (coordinator, CLI, examples, tests) works unchanged.
 
 use anyhow::{Context, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -29,6 +36,7 @@ pub struct EngineStats {
 }
 
 /// The PJRT-owning engine. Construct on the thread that will use it.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     #[allow(dead_code)] // keeps the PJRT client alive for the executables
     client: xla::PjRtClient,
@@ -36,6 +44,7 @@ pub struct Engine {
     pub stats: Arc<EngineStats>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Load every `coarse__b*_k*_d*.hlo.txt` in `dir` and compile it.
     pub fn load(dir: &Path) -> Result<Engine> {
@@ -101,6 +110,47 @@ impl Engine {
     }
 }
 
+/// Stub engine compiled when the `pjrt` feature is off: no XLA client, no
+/// executables, every batch is served by [`coarse_fallback`]. Keeps the
+/// exact API of the PJRT engine so the coordinator and tests are
+/// feature-agnostic.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    pub stats: Arc<EngineStats>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Stub load: succeeds with zero executables regardless of `dir`
+    /// (artifacts cannot be executed without the `pjrt` feature).
+    pub fn load(_dir: &Path) -> Result<Engine> {
+        Ok(Engine { stats: Arc::new(EngineStats::default()) })
+    }
+
+    pub fn num_executables(&self) -> usize {
+        0
+    }
+
+    pub fn has_coarse(&self, _key: CoarseKey) -> bool {
+        false
+    }
+
+    /// Batched query→centroid squared-L2 distances (always the rust path).
+    pub fn coarse(
+        &self,
+        queries: &[f32],
+        b: usize,
+        d: usize,
+        centroids: &[f32],
+        k: usize,
+    ) -> Result<(Vec<f32>, bool)> {
+        debug_assert_eq!(queries.len(), b * d);
+        debug_assert_eq!(centroids.len(), k * d);
+        self.stats.fallback_batches.fetch_add(1, Ordering::Relaxed);
+        Ok((coarse_fallback(queries, b, d, centroids, k), false))
+    }
+}
+
 /// Pure-rust coarse distances (fallback path; also the test oracle).
 pub fn coarse_fallback(queries: &[f32], b: usize, d: usize, centroids: &[f32], k: usize) -> Vec<f32> {
     let mut out = Vec::with_capacity(b * k);
@@ -111,6 +161,8 @@ pub fn coarse_fallback(queries: &[f32], b: usize, d: usize, centroids: &[f32], k
     out
 }
 
+// Without `pjrt` this is exercised only by the unit tests below.
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 fn parse_coarse_name(name: &str) -> Option<CoarseKey> {
     // coarse__b{b}_k{k}_d{d}.hlo.txt
     let stem = name.strip_suffix(".hlo.txt")?;

@@ -1,0 +1,280 @@
+//! Minimal, dependency-free stand-in for the [`anyhow`] error crate.
+//!
+//! The build environment is fully offline, so the real crates.io `anyhow`
+//! cannot be fetched; this shim vendors the subset of its API that the
+//! `zann` crate uses:
+//!
+//! * [`Error`] — an opaque error value carrying a human-readable cause
+//!   chain (stored as strings; no downcasting support),
+//! * [`Result`] — `Result<T, Error>` with a defaulted error type,
+//! * the [`Context`] extension trait for `Result` and `Option`,
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros.
+//!
+//! Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`; that is what allows the blanket
+//! `impl<E: std::error::Error> From<E> for Error` to coexist with the
+//! standard reflexive `From<Error> for Error`, so `?` works on both
+//! concrete errors and `Error` itself.
+//!
+//! [`anyhow`]: https://docs.rs/anyhow
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with a defaulted error type, like the real
+/// crate's alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Opaque error type: an outermost message plus a chain of causes.
+///
+/// The chain is stored as rendered strings (the shim does not keep the
+/// source error values, so there is no `downcast`); `Display` prints the
+/// outermost message and `Debug` prints the whole chain, mirroring the
+/// real crate's formatting closely enough for logs and `expect` output.
+pub struct Error {
+    /// Outermost message first, root cause last. Never empty.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an additional layer of context.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The root (innermost) cause.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Conversion into [`Error`] used by the [`Context`] impls. Implemented
+/// for both std errors and `Error` itself (which `From` cannot cover
+/// without overlapping the reflexive impl).
+#[doc(hidden)]
+pub trait ToError {
+    fn to_error(self) -> Error;
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> ToError for E {
+    fn to_error(self) -> Error {
+        Error::from(self)
+    }
+}
+
+impl ToError for Error {
+    fn to_error(self) -> Error {
+        self
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`, like the real crate.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ToError> Context<T, E> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.to_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.to_error().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(::std::concat!("condition failed: ", ::std::stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        fn parse() -> Result<u32> {
+            let v: u32 = "12".parse()?;
+            Ok(v)
+        }
+        assert_eq!(parse().unwrap(), 12);
+
+        fn fails() -> Result<u32> {
+            let v: u32 = "nope".parse()?;
+            Ok(v)
+        }
+        assert!(fails().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let err = r.context("loading index").unwrap_err();
+        assert_eq!(err.to_string(), "loading index");
+        assert_eq!(err.root_cause(), "disk on fire");
+
+        let none: Option<u32> = None;
+        let err = none.with_context(|| format!("missing field {}", "k")).unwrap_err();
+        assert_eq!(err.to_string(), "missing field k");
+
+        assert_eq!(Some(5u32).context("present").unwrap(), 5);
+    }
+
+    #[test]
+    fn context_on_anyhow_result_chains() {
+        let r: Result<()> = Err(anyhow!("inner {}", 7));
+        let err = r.context("outer").unwrap_err();
+        let chain: Vec<&str> = err.chain().collect();
+        assert_eq!(chain, vec!["outer", "inner 7"]);
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("outer") && dbg.contains("inner 7"), "{dbg}");
+    }
+
+    #[test]
+    fn macros() {
+        fn check(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {}", flag);
+            Ok(1)
+        }
+        assert_eq!(check(true).unwrap(), 1);
+        assert_eq!(check(false).unwrap_err().to_string(), "flag was false");
+
+        fn early() -> Result<u32> {
+            bail!("stop");
+        }
+        assert_eq!(early().unwrap_err().to_string(), "stop");
+
+        fn bare(v: u32) -> Result<u32> {
+            ensure!(v > 2);
+            Ok(v)
+        }
+        assert!(bare(1).unwrap_err().to_string().contains("v > 2"));
+        assert_eq!(bare(3).unwrap(), 3);
+    }
+
+    #[test]
+    fn double_question_mark_pattern() {
+        // The nested-result shape used by EngineHandle::spawn.
+        fn inner() -> Result<u32> {
+            Ok(9)
+        }
+        fn outer() -> Result<u32> {
+            let nested: std::result::Result<Result<u32>, std::io::Error> = Ok(inner());
+            let v = nested.context("thread died")??;
+            Ok(v)
+        }
+        assert_eq!(outer().unwrap(), 9);
+    }
+}
