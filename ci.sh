@@ -14,6 +14,31 @@ cargo test -q
 echo "== compile bench harnesses and examples =="
 cargo build --release --benches --examples
 
+echo "== bench_search_qps smoke (JSON contract) =="
+# Tiny-N end-to-end run; validate that the emitted BENCH_search.json
+# parses and carries the documented keys, so the bench wiring cannot rot
+# silently. Writes to a scratch path to keep the checkout clean in CI.
+QPS_JSON="$(mktemp /tmp/zann_bench_search.XXXXXX.json)"
+cargo bench --bench bench_search_qps -- \
+  --n 2000 --nq 40 --k 16 --runs 1 --nprobe 4 --sweep-threads 2 \
+  --codecs unc64,roc,pq-compressed --out "$QPS_JSON"
+python3 - "$QPS_JSON" <<'EOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    d = json.load(f)
+assert d["bench"] == "search_qps", d.get("bench")
+for key in ("dataset", "n", "nq", "dim", "k", "seed", "results"):
+    assert key in d, f"missing top-level key {key}"
+assert d["results"], "no result rows"
+for row in d["results"]:
+    for key in ("codec", "nprobe", "threads", "qps", "mean_ms", "p50_ms", "p95_ms"):
+        assert key in row, f"missing row key {key}"
+    assert row["qps"] > 0, row
+    assert row["p95_ms"] >= row["p50_ms"], row
+print(f"bench JSON ok: {len(d['results'])} rows")
+EOF
+rm -f "$QPS_JSON"
+
 echo "== rustfmt =="
 cargo fmt --all -- --check
 

@@ -1,0 +1,18 @@
+//! Search-throughput bench: QPS and p50/p95 latency per codec, swept over
+//! codec × nprobe × threads, with a machine-readable `BENCH_search.json`
+//! written at the repo root.
+//!
+//! `cargo bench --bench bench_search_qps -- [--full] [--n N] [--nq Q]
+//!  [--k K] [--dataset sift|deep|ssnpp] [--codecs unc64,roc,pq-compressed]
+//!  [--nprobe 8,16] [--sweep-threads 1,8] [--runs R] [--out PATH]`
+//!
+//! Bare invocations run at a tiny smoke scale (see `smoke.rs`); pass
+//! `--n`/`--full` for comparable runs (docs/REPRODUCING.md).
+
+#[path = "smoke.rs"]
+mod smoke;
+
+fn main() {
+    let args = zann::util::cli::Args::parse(smoke::common_args());
+    zann::eval::bench_entries::search_qps(&args);
+}

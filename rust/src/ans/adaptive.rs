@@ -47,9 +47,26 @@ impl ReverseAdaptiveCoder {
 
     /// Decode `n` symbols (forward order).
     pub fn decode(&self, ans: &mut Ans, n: usize) -> Vec<u32> {
-        let a = self.alphabet as usize;
-        let mut weights = Fenwick::ones(a);
         let mut out = Vec::with_capacity(n);
+        let mut weights = Fenwick::new(self.alphabet as usize);
+        self.decode_with(ans, n, &mut weights, |_, x| out.push(x));
+        out
+    }
+
+    /// Decode `n` symbols through a caller-provided urn (reset to the
+    /// all-ones prior here) and an `emit(index, symbol)` sink — the
+    /// allocation-free path used by the per-cluster PQ-code decoder, which
+    /// writes symbols straight into a strided row-major buffer.
+    pub fn decode_with(
+        &self,
+        ans: &mut Ans,
+        n: usize,
+        weights: &mut Fenwick,
+        mut emit: impl FnMut(usize, u32),
+    ) {
+        let a = self.alphabet as usize;
+        assert_eq!(weights.len(), a, "urn size must match the alphabet");
+        weights.reset_ones();
         for i in 0..n {
             let m = self.alphabet + i as u32;
             let slot = ans.peek(m);
@@ -58,9 +75,8 @@ impl ReverseAdaptiveCoder {
             let c = weights.prefix_sum(x) as u32;
             ans.pop(f, c, m);
             weights.add(x, 1);
-            out.push(x as u32);
+            emit(i, x as u32);
         }
-        out
     }
 
     /// Ideal code length of `seq` under the model, in bits (for tests and

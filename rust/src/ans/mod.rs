@@ -184,16 +184,27 @@ impl Ans {
     }
 
     pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
+        let mut ans = Ans::new();
+        ans.read_from(bytes)?;
+        Ok(ans)
+    }
+
+    /// Deserialize into an existing state, reusing the stream allocation —
+    /// the per-cluster hot path decodes many blobs through one `Ans`
+    /// without touching the heap once the stream capacity has grown.
+    pub fn read_from(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
         use anyhow::Context;
         let n = u32::from_le_bytes(bytes.get(0..4).context("len")?.try_into()?) as usize;
-        let mut stream = Vec::with_capacity(n);
+        self.stream.clear();
+        self.stream.reserve(n);
         for i in 0..n {
             let off = 4 + i * 4;
-            stream.push(u32::from_le_bytes(bytes.get(off..off + 4).context("word")?.try_into()?));
+            self.stream
+                .push(u32::from_le_bytes(bytes.get(off..off + 4).context("word")?.try_into()?));
         }
         let off = 4 + n * 4;
-        let head = u64::from_le_bytes(bytes.get(off..off + 8).context("head")?.try_into()?);
-        Ok(Ans { head, stream })
+        self.head = u64::from_le_bytes(bytes.get(off..off + 8).context("head")?.try_into()?);
+        Ok(())
     }
 }
 

@@ -12,7 +12,7 @@
 
 use super::{Encoded, IdCodec};
 use crate::bitvec::RsBitVec;
-use crate::util::bits::{BitBuf, BitWriter};
+use crate::util::bits::{read_bits_at, BitBuf, BitWriter};
 use crate::util::{ReadBuf, WriteBuf};
 
 pub struct EliasFano;
@@ -79,17 +79,59 @@ impl IdCodec for EliasFano {
         true
     }
 
+    // Allocation-free: runs once per search winner on the id-resolve hot
+    // path, so no BitBuf/RsBitVec is materialized — the k-th high value is
+    // found by a popcount scan over the serialized upper words (≈ n/32
+    // words for EF's ~2-bit unary stream) and the low bits are read
+    // straight from the blob.
     fn decode_nth(&self, bytes: &[u8], _universe: u32, n: usize, k: usize) -> Option<u32> {
         if k >= n {
             return None;
         }
-        let (l, lower, upper) = parse(bytes).ok()?;
+        let v = EfRawView::new(bytes)?;
         // k-th high value = select1(k) - k on the unary stream.
-        let rs = RsBitVec::new(upper);
-        let pos = rs.select1(k as u64)? as u64;
+        let pos = v.select1_upper(k)?;
         let hi = pos - k as u64;
-        let lo = lower.read(k * l as usize, l);
-        Some(((hi << l) | lo) as u32)
+        let lo = read_bits_at(v.lower, k * v.l as usize, v.l);
+        Some(((hi << v.l) | lo) as u32)
+    }
+}
+
+/// Zero-copy view over a serialized Elias-Fano blob: byte slices of the
+/// lower/upper word regions, no parsing into owned buffers.
+struct EfRawView<'a> {
+    l: u32,
+    lower: &'a [u8],
+    upper: &'a [u8],
+}
+
+impl<'a> EfRawView<'a> {
+    fn new(bytes: &'a [u8]) -> Option<Self> {
+        // Layout written by `encode`: u32 l | u64 lower_len_bits |
+        // u64 n_lower_words | words | u64 upper_len_bits |
+        // u64 n_upper_words | words (all little-endian).
+        let l = u32::from_le_bytes(bytes.get(0..4)?.try_into().ok()?);
+        let nl = u64::from_le_bytes(bytes.get(12..20)?.try_into().ok()?) as usize;
+        let lower = bytes.get(20..20 + nl.checked_mul(8)?)?;
+        let off = 20 + nl * 8;
+        let nu = u64::from_le_bytes(bytes.get(off + 8..off + 16)?.try_into().ok()?) as usize;
+        let upper = bytes.get(off + 16..off + 16 + nu.checked_mul(8)?)?;
+        Some(EfRawView { l, lower, upper })
+    }
+
+    /// Position of the k-th set bit in the upper stream.
+    fn select1_upper(&self, k: usize) -> Option<u64> {
+        let mut remaining = k as u64;
+        for (wi, chunk) in self.upper.chunks_exact(8).enumerate() {
+            let word = u64::from_le_bytes(chunk.try_into().unwrap());
+            let ones = word.count_ones() as u64;
+            if remaining < ones {
+                let bit = crate::bitvec::select_in_word(word, remaining as u32);
+                return Some(wi as u64 * 64 + bit as u64);
+            }
+            remaining -= ones;
+        }
+        None
     }
 }
 

@@ -2,7 +2,7 @@
 //! and **Comp.** (⌈log₂N⌉-bit packed) baselines.
 
 use super::{Encoded, IdCodec};
-use crate::util::bits::{BitBuf, BitWriter};
+use crate::util::bits::{read_bits_at, BitWriter};
 use crate::util::bits_for;
 
 /// 64-bit words per id — Faiss's default representation.
@@ -106,11 +106,9 @@ impl IdCodec for Compact {
     }
 
     fn decode(&self, bytes: &[u8], universe: u32, n: usize, out: &mut Vec<u32>) {
-        let buf = buf_from_bytes(bytes, n * Self::width(universe) as usize);
         let w = Self::width(universe);
-        let mut r = crate::util::BitReader::new(&buf);
-        for _ in 0..n {
-            out.push(r.read(w) as u32);
+        for i in 0..n {
+            out.push(read_bits_at(bytes, i * w as usize, w) as u32);
         }
     }
 
@@ -118,25 +116,16 @@ impl IdCodec for Compact {
         true
     }
 
+    // Reads straight from the serialized blob — no BitBuf rebuild, no
+    // allocation — since this runs once per search winner (§4.1's deferred
+    // id resolution).
     fn decode_nth(&self, bytes: &[u8], universe: u32, n: usize, k: usize) -> Option<u32> {
         if k >= n {
             return None;
         }
-        let w = Self::width(universe) as usize;
-        let buf = buf_from_bytes(bytes, n * w);
-        Some(buf.read(k * w, w as u32) as u32)
+        let w = Self::width(universe);
+        Some(read_bits_at(bytes, k * w as usize, w) as u32)
     }
-}
-
-/// Reinterpret a byte blob as a BitBuf of `len` bits.
-pub(crate) fn buf_from_bytes(bytes: &[u8], len: usize) -> BitBuf {
-    let mut words = Vec::with_capacity(bytes.len().div_ceil(8));
-    for chunk in bytes.chunks(8) {
-        let mut w = [0u8; 8];
-        w[..chunk.len()].copy_from_slice(chunk);
-        words.push(u64::from_le_bytes(w));
-    }
-    BitBuf { words, len }
 }
 
 #[cfg(test)]

@@ -25,11 +25,33 @@ pub mod rec;
 pub mod zuckerli;
 pub mod pcodes;
 
+use crate::ans::Ans;
+use crate::fenwick::Fenwick;
+
 /// A compressed list plus its exact size in bits.
 #[derive(Clone, Debug)]
 pub struct Encoded {
     pub bytes: Vec<u8>,
     pub bits: u64,
+}
+
+/// Reusable decoder state for the search hot path.
+///
+/// Lives inside `index::SearchScratch`, so the per-probed-cluster decoders
+/// (ROC id lists via [`IdCodec::decode_into`], PQ codes via
+/// [`pcodes::ClusterCodeCodec::decode_into`]) stop allocating at steady
+/// state: buffers are *reset* between clusters and queries, not rebuilt.
+/// Growth is first-touch only — a structure is reallocated solely when a
+/// request needs a larger shape than anything seen before.
+#[derive(Default)]
+pub struct DecodeScratch {
+    /// Deserialized ANS state; the stream buffer is reused across blobs.
+    pub ans: Ans,
+    /// ROC's rank-and-insert structure (see [`roc::RankSet::covers`] for
+    /// the reuse-vs-rebuild policy).
+    pub ranks: Option<roc::RankSet>,
+    /// Pólya-urn weights for the adaptive PQ-code coder.
+    pub urn: Option<Fenwick>,
 }
 
 /// Codec for one list of distinct ids drawn from `[0, universe)`.
@@ -43,6 +65,22 @@ pub trait IdCodec: Send + Sync {
     fn encode(&self, ids: &[u32], universe: u32) -> Encoded;
 
     fn decode(&self, bytes: &[u8], universe: u32, n: usize, out: &mut Vec<u32>);
+
+    /// Like [`IdCodec::decode`] (appends exactly `n` ids in the same
+    /// deterministic order) but through a reusable [`DecodeScratch`], so
+    /// steady-state decoding performs no heap allocation beyond
+    /// first-touch scratch growth. The default implementation ignores the
+    /// scratch; codecs with per-decode state (ROC) override it.
+    fn decode_into(
+        &self,
+        bytes: &[u8],
+        universe: u32,
+        n: usize,
+        out: &mut Vec<u32>,
+        _scratch: &mut DecodeScratch,
+    ) {
+        self.decode(bytes, universe, n, out);
+    }
 
     /// Whether `decode_nth` is supported (random access within a list).
     fn supports_random_access(&self) -> bool {
@@ -130,6 +168,9 @@ pub(crate) mod testutil {
             (1_000_000, 4096),
             (u32::MAX, 64),
         ];
+        // One scratch across every (universe, n) case: decode_into must
+        // survive shape changes and match the scratch-free decode exactly.
+        let mut scratch = DecodeScratch::default();
         for (universe, n) in cases {
             let ids: Vec<u32> = rng
                 .sample_distinct(universe as u64, n)
@@ -139,6 +180,14 @@ pub(crate) mod testutil {
             let enc = codec.encode(&ids, universe);
             let mut out = Vec::new();
             codec.decode(&enc.bytes, universe, n, &mut out);
+            let mut out_scratch = Vec::new();
+            codec.decode_into(&enc.bytes, universe, n, &mut out_scratch, &mut scratch);
+            assert_eq!(
+                out_scratch,
+                out,
+                "{}: decode_into disagrees with decode (universe={universe} n={n})",
+                codec.name()
+            );
             let mut got = out.clone();
             got.sort_unstable();
             let mut want = ids.clone();

@@ -9,6 +9,8 @@
 //! the online setting's per-cluster random access is preserved.
 
 use crate::ans::{Ans, ReverseAdaptiveCoder};
+use crate::codecs::DecodeScratch;
+use crate::fenwick::Fenwick;
 
 /// Coder for one cluster's `n × m` code matrix (row-major), alphabet
 /// `ksub` (256 for 8-bit PQ, 1024 for 10-bit).
@@ -48,16 +50,38 @@ impl ClusterCodeCodec {
 
     /// Decode a cluster of `n` rows back to row-major codes.
     pub fn decode(&self, enc: &EncodedCluster, n: usize) -> Vec<u16> {
-        let coder = ReverseAdaptiveCoder::new(self.ksub);
-        let mut out = vec![0u16; n * self.m];
-        for (j, blob) in enc.columns.iter().enumerate() {
-            let mut ans = Ans::from_bytes(blob).expect("corrupt pcodes blob");
-            let col = coder.decode(&mut ans, n);
-            for (i, &v) in col.iter().enumerate() {
-                out[i * self.m + j] = v as u16;
-            }
-        }
+        let mut out = Vec::new();
+        let mut scratch = DecodeScratch::default();
+        self.decode_into(enc, n, &mut out, &mut scratch);
         out
+    }
+
+    /// Decode a cluster into a reusable row-major buffer through a
+    /// [`DecodeScratch`] — the allocation-free per-probe path of the
+    /// PqCompressed scan: the ANS stream buffer and the Pólya urn are
+    /// reset between clusters, and symbols are written straight into
+    /// `out` at their strided position (no per-column intermediate).
+    pub fn decode_into(
+        &self,
+        enc: &EncodedCluster,
+        n: usize,
+        out: &mut Vec<u16>,
+        scratch: &mut DecodeScratch,
+    ) {
+        out.clear();
+        out.resize(n * self.m, 0);
+        let coder = ReverseAdaptiveCoder::new(self.ksub);
+        let DecodeScratch { ans, urn, .. } = scratch;
+        let a = self.ksub as usize;
+        if !matches!(urn, Some(w) if w.len() == a) {
+            *urn = Some(Fenwick::new(a));
+        }
+        let weights = urn.as_mut().expect("urn installed above");
+        let m = self.m;
+        for (j, blob) in enc.columns.iter().enumerate() {
+            ans.read_from(blob).expect("corrupt pcodes blob");
+            coder.decode_with(ans, n, weights, |i, v| out[i * m + j] = v as u16);
+        }
     }
 
     /// Ideal (model) bits for the cluster — used for rate accounting.
@@ -87,6 +111,24 @@ mod tests {
             let codes: Vec<u16> = (0..n * m).map(|_| rng.below(ksub as u64) as u16).collect();
             let enc = codec.encode(&codes, n);
             assert_eq!(codec.decode(&enc, n), codes);
+        }
+    }
+
+    #[test]
+    fn decode_into_scratch_reuse_matches_fresh() {
+        // One scratch across clusters of different shapes — including an
+        // alphabet switch that forces the urn to be rebuilt — must agree
+        // with fresh decodes.
+        let mut rng = Rng::new(44);
+        let mut scratch = DecodeScratch::default();
+        let mut reused = Vec::new();
+        for &(ksub, m, n) in &[(256u32, 8usize, 120usize), (256, 8, 7), (1024, 4, 300), (256, 8, 0), (16, 2, 50)]
+        {
+            let codec = ClusterCodeCodec::new(ksub, m);
+            let codes: Vec<u16> = (0..n * m).map(|_| rng.below(ksub as u64) as u16).collect();
+            let enc = codec.encode(&codes, n);
+            codec.decode_into(&enc, n, &mut reused, &mut scratch);
+            assert_eq!(reused, codes, "ksub={ksub} m={m} n={n}");
         }
     }
 

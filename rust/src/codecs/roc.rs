@@ -25,7 +25,7 @@
 //! (`RankSet`), which profiles faster than a universe-sized Fenwick for
 //! cluster-sized lists.
 
-use super::{Encoded, IdCodec};
+use super::{DecodeScratch, Encoded, IdCodec};
 use crate::ans::Ans;
 use crate::fenwick::Fenwick;
 
@@ -55,9 +55,30 @@ impl IdCodec for Roc {
     }
 
     fn decode(&self, bytes: &[u8], universe: u32, n: usize, out: &mut Vec<u32>) {
-        let mut ans = Ans::from_bytes(bytes).expect("corrupt ROC blob");
+        let mut scratch = DecodeScratch::default();
+        self.decode_into(bytes, universe, n, out, &mut scratch);
+    }
+
+    /// The hot-path decode: per-cluster state (ANS stream, `RankSet`)
+    /// comes from — and returns to — the scratch, so scanning many probed
+    /// clusters allocates only on first-touch growth.
+    fn decode_into(
+        &self,
+        bytes: &[u8],
+        universe: u32,
+        n: usize,
+        out: &mut Vec<u32>,
+        scratch: &mut DecodeScratch,
+    ) {
+        let DecodeScratch { ans, ranks, .. } = scratch;
+        ans.read_from(bytes).expect("corrupt ROC blob");
+        if matches!(ranks, Some(r) if r.covers(universe, n)) {
+            ranks.as_mut().expect("checked above").clear();
+        } else {
+            *ranks = Some(RankSet::new(universe, n));
+        }
+        let ranks = ranks.as_mut().expect("rank set installed above");
         let start = out.len();
-        let mut ranks = RankSet::new(universe, n);
         for i in 1..=n as u32 {
             let x = ans.decode_uniform(universe);
             out.push(x);
@@ -92,25 +113,50 @@ pub fn decode_with_state(bytes: &[u8], universe: u32, n: usize) -> (Vec<u32>, An
 /// O(log B + bucket_len) with tiny constants; bucket_len stays small for
 /// cluster-sized lists.
 pub struct RankSet {
+    universe: u32,
     bucket_shift: u32,
     bucket_counts: Fenwick,
     buckets: Vec<Vec<u32>>,
 }
 
 impl RankSet {
-    pub fn new(universe: u32, expected_n: usize) -> Self {
-        // Aim for ~4 expected elements per bucket.
+    /// Bucket layout for a `(universe, expected_n)` request:
+    /// `(shift, n_buckets)`, aiming for ~4 expected elements per bucket.
+    fn layout(universe: u32, expected_n: usize) -> (u32, usize) {
         let target_buckets = (expected_n / 4).clamp(1, 1 << 16) as u32;
         let mut shift = 32u32;
         while shift > 0 && (universe as u64 >> (shift - 1)) < target_buckets as u64 {
             shift -= 1;
         }
-        let n_buckets = ((universe as u64 >> shift) + 1) as usize;
+        (shift, ((universe as u64 >> shift) + 1) as usize)
+    }
+
+    pub fn new(universe: u32, expected_n: usize) -> Self {
+        let (shift, n_buckets) = Self::layout(universe, expected_n);
         RankSet {
+            universe,
             bucket_shift: shift,
             bucket_counts: Fenwick::new(n_buckets),
             buckets: vec![Vec::new(); n_buckets],
         }
+    }
+
+    /// Empty the structure in place, keeping every bucket allocation.
+    pub fn clear(&mut self) {
+        self.bucket_counts.clear();
+        for b in &mut self.buckets {
+            b.clear();
+        }
+    }
+
+    /// Whether this instance can serve a `(universe, expected_n)` decode
+    /// without rebuilding. Correctness only needs the same universe (any
+    /// bucket granularity ranks correctly); a rebuild is worth it solely
+    /// when the request wants *more* buckets than we have, so reuse under
+    /// this policy makes scratch growth monotone — after one pass over
+    /// the clusters the layout is settled and decoding stops allocating.
+    pub fn covers(&self, universe: u32, expected_n: usize) -> bool {
+        self.universe == universe && Self::layout(universe, expected_n).1 <= self.buckets.len()
     }
 
     /// Insert `x` (must not be present) and return its 0-based rank.
@@ -209,6 +255,26 @@ mod tests {
                 sorted.insert(want as usize, x);
                 assert_eq!(rs.insert_and_rank(x), want, "u={u}");
             }
+        }
+    }
+
+    #[test]
+    fn rank_set_reuse_across_shapes_matches_fresh() {
+        // One scratch across clusters of varying size and a universe
+        // switch: decode_into must agree with the scratch-free decode.
+        let mut rng = Rng::new(14);
+        let mut scratch = DecodeScratch::default();
+        let cases: [(u32, usize); 6] =
+            [(1 << 16, 800), (1 << 16, 13), (1 << 16, 2000), (500, 400), (1 << 16, 50), (1 << 20, 1)];
+        for &(u, n) in &cases {
+            let ids: Vec<u32> =
+                rng.sample_distinct(u as u64, n).iter().map(|&v| v as u32).collect();
+            let enc = Roc.encode(&ids, u);
+            let mut fresh = Vec::new();
+            Roc.decode(&enc.bytes, u, n, &mut fresh);
+            let mut reused = Vec::new();
+            Roc.decode_into(&enc.bytes, u, n, &mut reused, &mut scratch);
+            assert_eq!(reused, fresh, "u={u} n={n}");
         }
     }
 

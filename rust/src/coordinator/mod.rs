@@ -145,9 +145,13 @@ fn batcher_loop(
 ) {
     let dim = index.dim;
     let k = index.k;
+    let b = cfg.batch_size;
     let scratches: Vec<Mutex<SearchScratch>> =
         (0..cfg.scan_threads.max(1)).map(|_| Mutex::new(SearchScratch::default())).collect();
-    let mut batch: Vec<Request> = Vec::with_capacity(cfg.batch_size);
+    let mut batch: Vec<Request> = Vec::with_capacity(b);
+    // One padded query matrix and one fallback output, reused every batch.
+    let mut flat = vec![0f32; b * dim];
+    let mut coarse_buf: Vec<f32> = Vec::new();
     loop {
         if stop.load(Ordering::SeqCst) {
             return;
@@ -173,36 +177,40 @@ fn batcher_loop(
         metrics.record_batch(batch.len());
 
         // Coarse scoring for the whole batch, padded to batch_size so the
-        // fixed-shape PJRT executable applies.
-        let b = cfg.batch_size;
-        let mut flat = vec![0f32; b * dim];
+        // fixed-shape PJRT executable applies. `flat` is filled in place
+        // and passed by reference everywhere — the engine-error path
+        // reuses the same buffer instead of rebuilding the matrix.
         for (i, r) in batch.iter().enumerate() {
             flat[i * dim..(i + 1) * dim].copy_from_slice(&r.query);
         }
-        let (coarse, via_pjrt) = match &engine {
-            Some(h) => match h.coarse(flat, b, dim, centroids.clone(), k) {
-                Ok(v) => v,
-                Err(_) => (crate::runtime::coarse_fallback(
-                    &{
-                        let mut f = vec![0f32; b * dim];
-                        for (i, r) in batch.iter().enumerate() {
-                            f[i * dim..(i + 1) * dim].copy_from_slice(&r.query);
-                        }
-                        f
-                    },
+        flat[batch.len() * dim..].fill(0.0); // clear stale padding rows
+        let engine_out = match &engine {
+            Some(h) => h.coarse(&flat, b, dim, centroids.clone(), k).ok(),
+            None => None,
+        };
+        let (coarse, via_pjrt): (&[f32], bool) = match &engine_out {
+            Some((v, via)) => (v.as_slice(), *via),
+            None => {
+                // Engine absent or errored: fused fallback, parallel over
+                // the batch, into the reusable output buffer. Centroids
+                // and norms come straight from the index — one source of
+                // truth, and bit-identical to `IvfIndex::search`.
+                crate::runtime::coarse_fallback_into(
+                    &flat,
                     b,
                     dim,
-                    &centroids,
-                    k,
-                ), false),
-            },
-            None => (crate::runtime::coarse_fallback(&flat, b, dim, &centroids, k), false),
+                    &index.centroids,
+                    &index.centroid_norms,
+                    cfg.scan_threads,
+                    &mut coarse_buf,
+                );
+                (coarse_buf.as_slice(), false)
+            }
         };
 
         // Fan out scans to the worker pool.
         let nb = batch.len();
         let reqs: Vec<Request> = batch.drain(..).collect();
-        let coarse_ref = &coarse;
         let index_ref = &index;
         let sp = &cfg.search;
         let scratches_ref = &scratches;
@@ -213,7 +221,7 @@ fn batcher_loop(
                 let r = &reqs[i];
                 let results = index_ref.search_with_coarse(
                     &r.query,
-                    &coarse_ref[i * k..(i + 1) * k],
+                    &coarse[i * k..(i + 1) * k],
                     sp,
                     &mut scratch,
                 );

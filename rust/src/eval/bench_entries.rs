@@ -266,6 +266,110 @@ pub fn fig2(args: &Args) {
     }
 }
 
+/// Default location of the machine-readable QPS report: the repo root
+/// (`CARGO_MANIFEST_DIR` is `<repo>/rust` at compile time).
+fn default_bench_json_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_search.json")
+}
+
+/// Serialize QPS rows to the `BENCH_search.json` schema (see
+/// docs/REPRODUCING.md): top-level run parameters plus one object per
+/// (codec, nprobe, threads) cell.
+fn qps_json(
+    scale: &experiments::Scale,
+    dataset: &str,
+    k: usize,
+    rows: &[experiments::QpsRow],
+) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!(
+        "  \"bench\": \"search_qps\",\n  \"dataset\": \"{dataset}\",\n  \"n\": {},\n  \
+         \"nq\": {},\n  \"dim\": {},\n  \"k\": {},\n  \"seed\": {},\n",
+        scale.n, scale.nq, scale.dim, k, scale.seed
+    ));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"codec\": \"{}\", \"nprobe\": {}, \"threads\": {}, \"qps\": {:.3}, \
+             \"mean_ms\": {:.6}, \"p50_ms\": {:.6}, \"p95_ms\": {:.6}}}{}\n",
+            r.codec,
+            r.nprobe,
+            r.threads,
+            r.qps,
+            r.mean_ms,
+            r.p50_ms,
+            r.p95_ms,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+fn parse_usize_list(args: &Args, name: &str, default: &[usize]) -> Vec<usize> {
+    match args.get(name) {
+        Some(s) => s
+            .split(',')
+            .map(|v| v.trim().parse().unwrap_or_else(|_| panic!("bad --{name} entry {v:?}")))
+            .collect(),
+        None => default.to_vec(),
+    }
+}
+
+/// Search-throughput bench: QPS + p50/p95 latency, swept over
+/// codec × nprobe × threads, with a machine-readable `BENCH_search.json`
+/// written at the repo root (override with `--out`).
+pub fn search_qps(args: &Args) {
+    let scale = scale_from(args);
+    let runs = args.usize("runs", 3);
+    let k = args.usize("k", 1024.min((scale.n / 16).max(4)));
+    let kind = datasets_from(args)[0];
+    let codecs: Vec<String> = match args.get("codecs") {
+        Some(s) => s.split(',').map(|v| v.trim().to_string()).collect(),
+        None => ["unc64", "compact", "ef", "roc", "pq-compressed"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    };
+    let nprobes = parse_usize_list(args, "nprobe", &[16]);
+    let mut threads_list =
+        parse_usize_list(args, "sweep-threads", &[1, crate::util::pool::default_threads()]);
+    threads_list.dedup();
+    println!(
+        "== search QPS: N={}, {} queries, K={k}, {} (runs={runs}; Table-2 runtime \
+         columns as throughput) ==",
+        scale.n,
+        scale.nq,
+        kind.name()
+    );
+    let spec_refs: Vec<&str> = codecs.iter().map(|s| s.as_str()).collect();
+    let rows =
+        experiments::search_qps(&scale, kind, &spec_refs, k, &nprobes, &threads_list, runs);
+    let mut t = Table::new(&["codec", "nprobe", "threads", "QPS", "mean ms", "p50 ms", "p95 ms"]);
+    for r in &rows {
+        t.row(vec![
+            r.codec.clone(),
+            r.nprobe.to_string(),
+            r.threads.to_string(),
+            fmt3(r.qps),
+            fmt3(r.mean_ms),
+            fmt3(r.p50_ms),
+            fmt3(r.p95_ms),
+        ]);
+    }
+    println!("{}", t.render());
+    let out_path = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => default_bench_json_path(),
+    };
+    let json = qps_json(&scale, kind.name(), k, &rows);
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {}", out_path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", out_path.display()),
+    }
+}
+
 pub fn fig3(args: &Args) {
     let scale = scale_from(args);
     println!("== Figure 3: cluster-conditioned PQ code compression (8 bits uncompressed) ==");
@@ -282,4 +386,47 @@ pub fn fig3(args: &Args) {
         }
     }
     println!("{}", t.render());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qps_json_contract() {
+        let scale = experiments::Scale { n: 100, nq: 10, dim: 4, seed: 1, threads: 2 };
+        let rows = vec![
+            experiments::QpsRow {
+                codec: "roc".into(),
+                nprobe: 4,
+                threads: 2,
+                qps: 123.0,
+                mean_ms: 0.5,
+                p50_ms: 0.4,
+                p95_ms: 0.9,
+            },
+            experiments::QpsRow {
+                codec: "pq-compressed".into(),
+                nprobe: 8,
+                threads: 1,
+                qps: 50.5,
+                mean_ms: 1.5,
+                p50_ms: 1.4,
+                p95_ms: 2.9,
+            },
+        ];
+        let s = qps_json(&scale, "deep-like", 16, &rows);
+        for key in [
+            "\"bench\"", "\"search_qps\"", "\"dataset\"", "\"n\"", "\"nq\"", "\"dim\"",
+            "\"k\"", "\"results\"", "\"codec\"", "\"nprobe\"", "\"threads\"", "\"qps\"",
+            "\"mean_ms\"", "\"p50_ms\"", "\"p95_ms\"",
+        ] {
+            assert!(s.contains(key), "missing {key} in\n{s}");
+        }
+        // Structurally valid enough for json.load: balanced braces, no
+        // trailing comma before the array close.
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+        assert!(!s.contains(",\n  ]"), "trailing comma:\n{s}");
+    }
 }

@@ -379,6 +379,143 @@ pub fn fig3(scale: &Scale, kind: Kind, ms: &[usize]) -> Vec<Fig3Point> {
     out
 }
 
+/// One row of the search-throughput bench: a (codec, nprobe, threads)
+/// cell with QPS and per-query latency percentiles.
+pub struct QpsRow {
+    pub codec: String,
+    pub nprobe: usize,
+    pub threads: usize,
+    pub qps: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+/// Resolve a QPS-bench codec spec: plain per-list/wavelet names select
+/// Flat vector storage under that id codec; `pq` / `pq-compressed` select
+/// the PQ stores (over compact ids) so the bench covers every scan kind.
+pub fn qps_variant(spec: &str) -> (String, VectorMode) {
+    match spec {
+        "pq" => ("compact".into(), VectorMode::Pq { m: 8, bits: 8 }),
+        "pq-compressed" | "pqc" => ("compact".into(), VectorMode::PqCompressed { m: 8, bits: 8 }),
+        name => (name.into(), VectorMode::Flat),
+    }
+}
+
+/// Search-throughput sweep: codec × nprobe × threads over one dataset,
+/// one shared coarse clustering. Per-query latencies are measured inside
+/// the workers (reusable scratch + result buffer, i.e. the allocation-free
+/// `search_into` path); QPS is the whole-batch wall rate, best of `runs`.
+pub fn search_qps(
+    scale: &Scale,
+    kind: Kind,
+    specs: &[&str],
+    k: usize,
+    nprobes: &[usize],
+    thread_counts: &[usize],
+    runs: usize,
+) -> Vec<QpsRow> {
+    let ds = generate(kind, scale.n, scale.nq, scale.dim, scale.seed);
+    let cents = crate::quant::kmeans::train(
+        &ds.data,
+        ds.dim,
+        &crate::quant::kmeans::KmeansConfig {
+            k,
+            iters: 8,
+            seed: scale.seed,
+            threads: scale.threads,
+            ..Default::default()
+        },
+    );
+    let kk = cents.len() / ds.dim;
+    let assign = crate::quant::kmeans::assign(&ds.data, ds.dim, &cents, scale.threads);
+    let mut out = Vec::new();
+    for &spec in specs {
+        let (id_codec, vectors) = qps_variant(spec);
+        let idx = IvfIndex::build_preassigned(
+            &ds.data,
+            ds.dim,
+            &cents,
+            &assign,
+            &IvfBuildParams {
+                k: kk,
+                id_codec,
+                vectors,
+                threads: scale.threads,
+                seed: scale.seed,
+                ..Default::default()
+            },
+            kk,
+        );
+        for &nprobe in nprobes {
+            for &threads in thread_counts {
+                let sp = SearchParams { nprobe: nprobe.min(kk), k: 10 };
+                // One scratch (+ result buffer) per worker, shared across
+                // the warm pass and every timed run, so the timed passes
+                // measure the steady-state allocation-free path rather
+                // than first-touch scratch growth.
+                let threads_eff = threads.max(1);
+                let scratches: Vec<std::sync::Mutex<(SearchScratch, Vec<(f32, u32)>)>> = (0
+                    ..threads_eff)
+                    .map(|_| std::sync::Mutex::new((SearchScratch::default(), Vec::new())))
+                    .collect();
+                let lat_cells: Vec<std::sync::atomic::AtomicU64> =
+                    (0..ds.nq).map(|_| std::sync::atomic::AtomicU64::new(0)).collect();
+                let run_pass = |record: bool| {
+                    crate::util::pool::parallel_chunks(ds.nq, threads_eff, |w, range| {
+                        let mut guard = scratches[w % scratches.len()].lock().unwrap();
+                        let (scratch, results) = &mut *guard;
+                        for qi in range {
+                            let q0 = Instant::now();
+                            idx.search_into(ds.query(qi), &sp, scratch, results);
+                            if record {
+                                lat_cells[qi].store(
+                                    q0.elapsed().as_secs_f64().to_bits(),
+                                    std::sync::atomic::Ordering::Relaxed,
+                                );
+                            }
+                        }
+                    });
+                };
+                run_pass(false); // warm every worker's scratch
+                let mut best_wall = f64::INFINITY;
+                let mut lat: Vec<f64> = Vec::new();
+                for _ in 0..runs.max(1) {
+                    let t0 = Instant::now();
+                    run_pass(true);
+                    let wall = t0.elapsed().as_secs_f64();
+                    if wall < best_wall {
+                        best_wall = wall;
+                        lat = lat_cells
+                            .iter()
+                            .map(|c| f64::from_bits(c.load(std::sync::atomic::Ordering::Relaxed)))
+                            .collect();
+                    }
+                }
+                lat.sort_by(|a, b| a.total_cmp(b));
+                let pct = |p: f64| -> f64 {
+                    if lat.is_empty() {
+                        0.0
+                    } else {
+                        lat[((lat.len() - 1) as f64 * p).round() as usize]
+                    }
+                };
+                let mean = lat.iter().sum::<f64>() / (lat.len().max(1) as f64);
+                out.push(QpsRow {
+                    codec: spec.to_string(),
+                    nprobe: sp.nprobe,
+                    threads,
+                    qps: ds.nq as f64 / best_wall.max(1e-12),
+                    mean_ms: mean * 1e3,
+                    p50_ms: pct(0.5) * 1e3,
+                    p95_ms: pct(0.95) * 1e3,
+                });
+            }
+        }
+    }
+    out
+}
+
 /// Table 4 (scaled): large-N IVF-PQ with K=2^14 clusters standing in for
 /// the paper's 1B / 2^20 setup. Reports bits/id + batch search seconds.
 pub struct T4Row {
@@ -499,6 +636,27 @@ mod tests {
             ssnpp[0].bits_per_element
         );
         assert!(ssnpp[0].bits_per_element > 7.5, "ssnpp should be ~incompressible");
+    }
+
+    #[test]
+    fn search_qps_smoke() {
+        let rows = search_qps(
+            &tiny(),
+            Kind::DeepLike,
+            &["unc64", "roc", "pq-compressed"],
+            16,
+            &[4, 8],
+            &[2],
+            1,
+        );
+        assert_eq!(rows.len(), 6);
+        for r in &rows {
+            assert!(r.qps > 0.0, "{}: qps={}", r.codec, r.qps);
+            assert!(r.p95_ms >= r.p50_ms, "{}: p95 < p50", r.codec);
+            assert!(r.mean_ms >= 0.0 && r.p50_ms >= 0.0);
+        }
+        // The sweep axes are all present.
+        assert!(rows.iter().any(|r| r.codec == "pq-compressed" && r.nprobe == 8));
     }
 
     #[test]

@@ -56,6 +56,23 @@ impl Fenwick {
         self.total
     }
 
+    /// Zero every slot in place, keeping the allocation (scratch reuse).
+    pub fn clear(&mut self) {
+        self.tree.fill(0);
+        self.total = 0;
+    }
+
+    /// Reset to the all-ones configuration in place (the state
+    /// [`Fenwick::ones`] builds), keeping the allocation. For unit counts
+    /// the internal node `j` covers exactly `lowbit(j)` slots.
+    pub fn reset_ones(&mut self) {
+        self.tree[0] = 0;
+        for j in 1..=self.n {
+            self.tree[j] = (j & j.wrapping_neg()) as u64;
+        }
+        self.total = self.n as u64;
+    }
+
     /// Add `delta` to slot `i` (delta may be negative).
     #[inline]
     pub fn add(&mut self, i: usize, delta: i64) {
@@ -255,6 +272,30 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn clear_and_reset_ones_match_fresh() {
+        let mut rng = Rng::new(8);
+        for &n in &[1usize, 2, 7, 64, 100, 513] {
+            let mut fw = Fenwick::ones(n);
+            // Mutate arbitrarily.
+            for _ in 0..50 {
+                let i = rng.below(n as u64) as usize;
+                fw.add(i, rng.below(5) as i64);
+            }
+            fw.reset_ones();
+            let fresh = Fenwick::ones(n);
+            for i in 0..=n {
+                assert_eq!(fw.prefix_sum(i), fresh.prefix_sum(i), "n={n} i={i}");
+            }
+            assert_eq!(fw.total(), n as u64);
+            fw.clear();
+            for i in 0..=n {
+                assert_eq!(fw.prefix_sum(i), 0);
+            }
+            assert_eq!(fw.total(), 0);
         }
     }
 

@@ -18,7 +18,8 @@
 //! decoded during the scan — the id-decode cost that Table 2 measures.
 
 use crate::codecs::wavelet::{WaveletTree, WtStorage};
-use crate::codecs::{codec_by_name, pcodes, IdCodec};
+use crate::codecs::{codec_by_name, pcodes, DecodeScratch, IdCodec};
+use crate::quant::coarse;
 use crate::quant::kmeans::{self, KmeansConfig};
 use crate::quant::pq::Pq;
 use crate::quant::{l2_sq, TopK};
@@ -90,12 +91,22 @@ enum CodeStore {
     },
     PqCompressed {
         pq: Pq,
+        /// Built once at index construction, shared by every probe (the
+        /// decoder is stateless; per-decode state lives in the scratch).
+        codec: pcodes::ClusterCodeCodec,
         clusters: Vec<pcodes::EncodedCluster>,
         bits: u64,
     },
 }
 
-/// Reusable per-thread search scratch (no allocation on the hot path).
+/// Reusable per-thread search scratch.
+///
+/// Everything a query needs beyond the index itself lives here — coarse
+/// distances, probe ordering, the PQ LUT, decoded ids/codes, the top-k
+/// heap and the per-cluster decoder state — so a warmed scratch makes
+/// steady-state `IvfIndex::search_into` calls allocation-free for
+/// random-access id stores, and allocation-free beyond first-touch
+/// scratch growth for the per-cluster decoders (ROC, PqCompressed).
 #[derive(Default)]
 pub struct SearchScratch {
     coarse: Vec<f32>,
@@ -103,6 +114,9 @@ pub struct SearchScratch {
     lut: Vec<f32>,
     ids: Vec<u32>,
     codes: Vec<u16>,
+    topk: TopK,
+    winners: Vec<(f32, u64)>,
+    decode: DecodeScratch,
 }
 
 pub struct IvfIndex {
@@ -110,6 +124,8 @@ pub struct IvfIndex {
     pub n: usize,
     pub k: usize,
     pub centroids: Vec<f32>,
+    /// `‖c‖²` per centroid, precomputed for the fused coarse kernel.
+    pub centroid_norms: Vec<f32>,
     /// Cluster boundaries in the reordered arrays (k+1 entries).
     offsets: Vec<usize>,
     ids: IdStore,
@@ -223,12 +239,13 @@ impl IvfIndex {
                             enc
                         })
                         .collect();
-                    CodeStore::PqCompressed { pq, clusters, bits: bits_total }
+                    CodeStore::PqCompressed { pq, codec, clusters, bits: bits_total }
                 }
             }
         };
 
-        IvfIndex { dim, n, k, centroids: centroids.to_vec(), offsets, ids, store }
+        let centroid_norms = coarse::centroid_norms(centroids, dim);
+        IvfIndex { dim, n, k, centroids: centroids.to_vec(), centroid_norms, offsets, ids, store }
     }
 
     pub fn list_len(&self, c: usize) -> usize {
@@ -266,9 +283,31 @@ impl IvfIndex {
         p: &SearchParams,
         scratch: &mut SearchScratch,
     ) -> Vec<(f32, u32)> {
+        let mut out = Vec::with_capacity(p.k);
+        self.search_into(query, p, scratch, &mut out);
+        out
+    }
+
+    /// Like [`IvfIndex::search`], writing the results into a caller-owned
+    /// buffer (replacing its contents). With a warmed `scratch` and a
+    /// reused `out`, steady-state calls are the allocation-free hot path.
+    pub fn search_into(
+        &self,
+        query: &[f32],
+        p: &SearchParams,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
         scratch.coarse.clear();
-        crate::quant::dists_to_all(query, &self.centroids, self.dim, &mut scratch.coarse);
-        self.search_with_coarse_inner(query, p, scratch)
+        scratch.coarse.resize(self.k, 0.0);
+        coarse::dists_into(
+            query,
+            &self.centroids,
+            self.dim,
+            &self.centroid_norms,
+            &mut scratch.coarse,
+        );
+        self.search_with_coarse_inner(query, p, scratch, out);
     }
 
     /// Search with externally supplied coarse distances (the coordinator
@@ -280,10 +319,24 @@ impl IvfIndex {
         p: &SearchParams,
         scratch: &mut SearchScratch,
     ) -> Vec<(f32, u32)> {
+        let mut out = Vec::with_capacity(p.k);
+        self.search_with_coarse_into(query, coarse, p, scratch, &mut out);
+        out
+    }
+
+    /// Buffer-reusing variant of [`IvfIndex::search_with_coarse`].
+    pub fn search_with_coarse_into(
+        &self,
+        query: &[f32],
+        coarse: &[f32],
+        p: &SearchParams,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
         assert_eq!(coarse.len(), self.k);
         scratch.coarse.clear();
         scratch.coarse.extend_from_slice(coarse);
-        self.search_with_coarse_inner(query, p, scratch)
+        self.search_with_coarse_inner(query, p, scratch, out);
     }
 
     fn search_with_coarse_inner(
@@ -291,23 +344,28 @@ impl IvfIndex {
         query: &[f32],
         p: &SearchParams,
         scratch: &mut SearchScratch,
-    ) -> Vec<(f32, u32)> {
+        out: &mut Vec<(f32, u32)>,
+    ) {
         let nprobe = p.nprobe.min(self.k);
-        // Select the nprobe nearest centroids.
-        scratch.probe_order.clear();
-        scratch.probe_order.extend(0..self.k as u32);
-        let coarse = &scratch.coarse;
-        scratch
-            .probe_order
-            .select_nth_unstable_by(nprobe.saturating_sub(1), |&a, &b| {
+        let SearchScratch { coarse, probe_order, lut, ids, codes, topk, winners, decode } =
+            scratch;
+        // Select the nprobe nearest centroids, then order that prefix
+        // best-first: visiting the closest cluster first tightens the
+        // top-k threshold early, so later clusters prune more rows.
+        probe_order.clear();
+        probe_order.extend(0..self.k as u32);
+        if nprobe > 0 && nprobe < self.k {
+            probe_order.select_nth_unstable_by(nprobe - 1, |&a, &b| {
                 coarse[a as usize].total_cmp(&coarse[b as usize])
             });
-        let probes = &scratch.probe_order[..nprobe];
+        }
+        let probes = &mut probe_order[..nprobe];
+        probes.sort_unstable_by(|&a, &b| coarse[a as usize].total_cmp(&coarse[b as usize]));
 
-        let mut heap = TopK::new(p.k);
+        topk.reset(p.k);
         // Prepare per-query LUT once for PQ stores.
         if let CodeStore::Pq { pq, .. } | CodeStore::PqCompressed { pq, .. } = &self.store {
-            pq.lut(query, &mut scratch.lut);
+            pq.lut(query, lut);
         }
 
         let defer_ids = match &self.ids {
@@ -315,18 +373,19 @@ impl IvfIndex {
             IdStore::Wavelet { .. } => true,
         };
 
-        for &c in probes {
+        for &c in probes.iter() {
             let c = c as usize;
             let (start, end) = (self.offsets[c], self.offsets[c + 1]);
             if start == end {
                 continue;
             }
             // For non-random-access codecs (ROC) the whole list is decoded
-            // now — the online-setting cost the paper measures.
+            // now — the online-setting cost the paper measures — through
+            // the reusable decode scratch.
             if !defer_ids {
                 if let IdStore::PerList { codec, blobs, .. } = &self.ids {
-                    scratch.ids.clear();
-                    codec.decode(&blobs[c], self.n as u32, end - start, &mut scratch.ids);
+                    ids.clear();
+                    codec.decode_into(&blobs[c], self.n as u32, end - start, ids, decode);
                 }
             }
             match &self.store {
@@ -336,28 +395,26 @@ impl IvfIndex {
                         .enumerate()
                     {
                         let d = l2_sq(query, row);
-                        if d < heap.threshold() {
-                            heap.push(d, self.payload(c, o, defer_ids, &scratch.ids));
+                        if d < topk.threshold() {
+                            topk.push(d, payload(c, o, defer_ids, ids));
                         }
                     }
                 }
-                CodeStore::Pq { pq, codes } => {
-                    for (o, row) in codes[start * pq.m..end * pq.m].chunks_exact(pq.m).enumerate() {
-                        let d = pq.adc(&scratch.lut, row);
-                        if d < heap.threshold() {
-                            heap.push(d, self.payload(c, o, defer_ids, &scratch.ids));
+                CodeStore::Pq { pq, codes: stored } => {
+                    for (o, row) in stored[start * pq.m..end * pq.m].chunks_exact(pq.m).enumerate()
+                    {
+                        let d = pq.adc(lut, row);
+                        if d < topk.threshold() {
+                            topk.push(d, payload(c, o, defer_ids, ids));
                         }
                     }
                 }
-                CodeStore::PqCompressed { pq, clusters, .. } => {
-                    let codec = pcodes::ClusterCodeCodec::new(pq.ksub() as u32, pq.m);
-                    let rows = end - start;
-                    scratch.codes.clear();
-                    scratch.codes.extend_from_slice(&codec.decode(&clusters[c], rows));
-                    for (o, row) in scratch.codes.chunks_exact(pq.m).enumerate() {
-                        let d = pq.adc(&scratch.lut, row);
-                        if d < heap.threshold() {
-                            heap.push(d, self.payload(c, o, defer_ids, &scratch.ids));
+                CodeStore::PqCompressed { pq, codec, clusters, .. } => {
+                    codec.decode_into(&clusters[c], end - start, codes, decode);
+                    for (o, row) in codes.chunks_exact(pq.m).enumerate() {
+                        let d = pq.adc(lut, row);
+                        if d < topk.threshold() {
+                            topk.push(d, payload(c, o, defer_ids, ids));
                         }
                     }
                 }
@@ -365,31 +422,22 @@ impl IvfIndex {
         }
 
         // Resolve payloads to ids.
-        let winners = heap.into_sorted_u64();
-        winners
-            .into_iter()
-            .map(|(d, payload)| {
-                if defer_ids {
-                    let c = (payload >> 32) as usize;
-                    let o = (payload & 0xffff_ffff) as usize;
-                    (d, self.resolve_id(c, o))
-                } else {
-                    (d, payload as u32)
-                }
-            })
-            .collect()
-    }
-
-    #[inline]
-    fn payload(&self, c: usize, o: usize, defer: bool, decoded: &[u32]) -> u64 {
-        if defer {
-            ((c as u64) << 32) | o as u64
-        } else {
-            decoded[o] as u64
+        topk.drain_sorted_into(winners);
+        out.clear();
+        out.reserve(winners.len());
+        for &(d, pl) in winners.iter() {
+            if defer_ids {
+                let c = (pl >> 32) as usize;
+                let o = (pl & 0xffff_ffff) as usize;
+                out.push((d, self.resolve_id(c, o)));
+            } else {
+                out.push((d, pl as u32));
+            }
         }
     }
 
-    /// Resolve (cluster, offset) → id via the random-access store.
+    /// Resolve (cluster, offset) → id via the random-access store
+    /// (allocation-free for unc64/unc32/compact/ef).
     fn resolve_id(&self, c: usize, o: usize) -> u32 {
         match &self.ids {
             IdStore::PerList { codec, blobs, .. } => codec
@@ -420,6 +468,17 @@ impl IvfIndex {
             IdStore::PerList { codec, .. } => codec.name(),
             IdStore::Wavelet { wt: _ } => "wt",
         }
+    }
+}
+
+/// Heap payload: packed (cluster, offset) when ids resolve after search
+/// (§4.1's deferred resolution), or the already-decoded id otherwise.
+#[inline]
+fn payload(c: usize, o: usize, defer: bool, decoded: &[u32]) -> u64 {
+    if defer {
+        ((c as u64) << 32) | o as u64
+    } else {
+        decoded[o] as u64
     }
 }
 
@@ -523,6 +582,46 @@ mod tests {
         // And the compressed codes are no larger than plain ones (+streams
         // overhead is amortized at this size).
         assert!(b.code_bits() <= a.code_bits() + a.k as u64 * 64 * 4);
+    }
+
+    #[test]
+    fn shared_scratch_across_queries_and_indexes_matches_fresh() {
+        // One SearchScratch (and the DecodeScratch inside it) reused
+        // across many queries and three indexes — different universes
+        // (full vs half dataset) and different stores (flat ROC, flat EF,
+        // compressed PQ codes) — must return exactly what a fresh scratch
+        // returns for every query.
+        let ds = build_ds();
+        let sp = SearchParams { nprobe: 8, k: 10 };
+        let mk = |data: &[f32], codec: &str, vectors: VectorMode| {
+            IvfIndex::build(
+                data,
+                ds.dim,
+                &IvfBuildParams {
+                    k: 32,
+                    id_codec: codec.into(),
+                    vectors,
+                    threads: 2,
+                    ..Default::default()
+                },
+            )
+        };
+        let half = &ds.data[..2000 * ds.dim];
+        let indexes = [
+            mk(&ds.data, "roc", VectorMode::Flat),
+            mk(half, "roc", VectorMode::Flat),
+            mk(&ds.data, "ef", VectorMode::PqCompressed { m: 4, bits: 8 }),
+        ];
+        let mut shared = SearchScratch::default();
+        let mut out = Vec::new();
+        for qi in 0..30 {
+            for (ii, idx) in indexes.iter().enumerate() {
+                let mut fresh = SearchScratch::default();
+                let want = idx.search(ds.query(qi), &sp, &mut fresh);
+                idx.search_into(ds.query(qi), &sp, &mut shared, &mut out);
+                assert_eq!(out, want, "query {qi} index {ii}");
+            }
+        }
     }
 
     #[test]

@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   bench-table1|bench-table2|bench-table3|bench-table4|bench-fig2|bench-fig3
 //!                       — regenerate the paper's tables/figures
+//!   bench-search-qps    — search throughput sweep (QPS + latency
+//!                         percentiles, writes BENCH_search.json)
 //!   serve-demo          — build an index and serve a batch through the
 //!                         coordinator (PJRT coarse path if artifacts exist)
 //!   sizes               — bits/id summary for one dataset/index
@@ -29,12 +31,14 @@ fn main() {
         "bench-table4" => bench_entries::table4(&args),
         "bench-fig2" => bench_entries::fig2(&args),
         "bench-fig3" => bench_entries::fig3(&args),
+        "bench-search-qps" => bench_entries::search_qps(&args),
         "sizes" => sizes(&args),
         "serve-demo" => serve_demo(&args),
         _ => {
             eprintln!(
                 "usage: zann <bench-table1|bench-table2|bench-table3|bench-table4|\n\
-                 bench-fig2|bench-fig3|sizes|serve-demo> [--n N] [--dataset sift|deep|ssnpp] ..."
+                 bench-fig2|bench-fig3|bench-search-qps|sizes|serve-demo> [--n N] \
+                 [--dataset sift|deep|ssnpp] ..."
             );
         }
     }

@@ -1,0 +1,249 @@
+//! Fused coarse-scoring kernel: `d(q, c) = ‖q‖² − 2·q·c + ‖c‖²`.
+//!
+//! The naive coarse stage (`l2_sq` per centroid row) redoes the `‖c‖²`
+//! work for every query and exposes no instruction-level parallelism
+//! beyond one row. At serving rates the coarse stage is a dense
+//! `(batch × K)` distance matrix, so this module precomputes `‖c‖²` once
+//! per centroid table and turns the per-query inner loop into pure dot
+//! products, register-blocked over a 4-centroid block (16 scalar
+//! accumulators that LLVM keeps in vector registers) — the blocked-GEMM
+//! shape Faiss uses for its coarse scan.
+//!
+//! Determinism contract: the value computed for one `(query, centroid)`
+//! pair is identical no matter which entry point produced it — the
+//! 4-wide block kernel, the remainder path, [`nearest_fused`] and the
+//! batched/threaded [`batch_dists_into`] all accumulate that pair's lanes
+//! in exactly the order of [`dot`]. The coordinator's batched fallback,
+//! the runtime stub and `IvfIndex::search` therefore agree bit-for-bit,
+//! which the serving tests assert with `assert_eq!` on full result lists.
+
+/// Lane-unrolled dot product — the accumulation-order reference for every
+/// path in this module (same 4-lane shape as [`crate::quant::l2_sq`]).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        for l in 0..4 {
+            acc[l] += a[i * 4 + l] * b[i * 4 + l];
+        }
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `‖c‖²` for each row of `centroids` — computed once per table (index
+/// build, coordinator start, k-means iteration) and reused by every query.
+pub fn centroid_norms(centroids: &[f32], dim: usize) -> Vec<f32> {
+    debug_assert!(dim > 0 && centroids.len() % dim == 0);
+    centroids.chunks_exact(dim).map(|c| dot(c, c)).collect()
+}
+
+/// Fused distances from one query to every centroid row, written into
+/// `out` (`out.len()` must equal `norms.len()`).
+pub fn dists_into(query: &[f32], centroids: &[f32], dim: usize, norms: &[f32], out: &mut [f32]) {
+    let k = norms.len();
+    debug_assert_eq!(centroids.len(), k * dim);
+    debug_assert_eq!(out.len(), k);
+    debug_assert_eq!(query.len(), dim);
+    let q_norm = dot(query, query);
+    let blocks = k / 4;
+    for b in 0..blocks {
+        let base = b * 4 * dim;
+        let c0 = &centroids[base..base + dim];
+        let c1 = &centroids[base + dim..base + 2 * dim];
+        let c2 = &centroids[base + 2 * dim..base + 3 * dim];
+        let c3 = &centroids[base + 3 * dim..base + 4 * dim];
+        // 4 centroids in flight × 4 lanes each = 16 accumulators.
+        let mut acc = [[0f32; 4]; 4];
+        let chunks = dim / 4;
+        for i in 0..chunks {
+            for l in 0..4 {
+                let q = query[i * 4 + l];
+                acc[0][l] += q * c0[i * 4 + l];
+                acc[1][l] += q * c1[i * 4 + l];
+                acc[2][l] += q * c2[i * 4 + l];
+                acc[3][l] += q * c3[i * 4 + l];
+            }
+        }
+        let mut d = [
+            acc[0][0] + acc[0][1] + acc[0][2] + acc[0][3],
+            acc[1][0] + acc[1][1] + acc[1][2] + acc[1][3],
+            acc[2][0] + acc[2][1] + acc[2][2] + acc[2][3],
+            acc[3][0] + acc[3][1] + acc[3][2] + acc[3][3],
+        ];
+        for i in chunks * 4..dim {
+            let q = query[i];
+            d[0] += q * c0[i];
+            d[1] += q * c1[i];
+            d[2] += q * c2[i];
+            d[3] += q * c3[i];
+        }
+        for j in 0..4 {
+            out[b * 4 + j] = (q_norm - 2.0 * d[j] + norms[b * 4 + j]).max(0.0);
+        }
+    }
+    for c in blocks * 4..k {
+        let d = dot(query, &centroids[c * dim..(c + 1) * dim]);
+        out[c] = (q_norm - 2.0 * d + norms[c]).max(0.0);
+    }
+}
+
+/// Append-variant of [`dists_into`] for `Vec`-building callers.
+pub fn dists_append(
+    query: &[f32],
+    centroids: &[f32],
+    dim: usize,
+    norms: &[f32],
+    out: &mut Vec<f32>,
+) {
+    let start = out.len();
+    out.resize(start + norms.len(), 0.0);
+    dists_into(query, centroids, dim, norms, &mut out[start..]);
+}
+
+/// Batched fused distances (`b × k`, row-major) into a reusable output
+/// buffer, data-parallel over queries — the coordinator's coarse fallback.
+pub fn batch_dists_into(
+    queries: &[f32],
+    b: usize,
+    centroids: &[f32],
+    dim: usize,
+    norms: &[f32],
+    threads: usize,
+    out: &mut Vec<f32>,
+) {
+    let k = norms.len();
+    debug_assert_eq!(queries.len(), b * dim);
+    out.clear();
+    out.resize(b * k, 0.0);
+    if b == 0 || k == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(b);
+    if threads <= 1 {
+        for (qi, row) in out.chunks_exact_mut(k).enumerate() {
+            dists_into(&queries[qi * dim..(qi + 1) * dim], centroids, dim, norms, row);
+        }
+        return;
+    }
+    let rows_per = b.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, chunk) in out.chunks_mut(rows_per * k).enumerate() {
+            s.spawn(move || {
+                for (off, row) in chunk.chunks_exact_mut(k).enumerate() {
+                    let qi = t * rows_per + off;
+                    dists_into(&queries[qi * dim..(qi + 1) * dim], centroids, dim, norms, row);
+                }
+            });
+        }
+    });
+}
+
+/// Index and fused distance of the nearest centroid (ties keep the first
+/// index, like [`crate::quant::nearest`]). The k-means assignment loop.
+pub fn nearest_fused(query: &[f32], centroids: &[f32], dim: usize, norms: &[f32]) -> (usize, f32) {
+    let q_norm = dot(query, query);
+    let mut best = (0usize, f32::INFINITY);
+    for (c, row) in centroids.chunks_exact(dim).enumerate() {
+        let d = (q_norm - 2.0 * dot(query, row) + norms[c]).max(0.0);
+        if d < best.1 {
+            best = (c, d);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::l2_sq;
+    use crate::util::Rng;
+
+    fn gaussian(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn fused_matches_naive_within_1e4_relative() {
+        // Acceptance check: the fused expansion agrees with the row-wise
+        // l2_sq loop to 1e-4 relative tolerance across dims incl. odd ones.
+        let mut rng = Rng::new(0xc0a);
+        for &dim in &[1usize, 3, 4, 7, 16, 32, 33, 96] {
+            for &k in &[1usize, 2, 4, 5, 63, 128] {
+                let q = gaussian(&mut rng, dim);
+                let cents = gaussian(&mut rng, k * dim);
+                let norms = centroid_norms(&cents, dim);
+                let mut got = vec![0f32; k];
+                dists_into(&q, &cents, dim, &norms, &mut got);
+                for (c, row) in cents.chunks_exact(dim).enumerate() {
+                    let want = l2_sq(&q, row);
+                    assert!(
+                        (got[c] - want).abs() <= 1e-4 * want.max(1.0),
+                        "dim={dim} k={k} c={c}: fused={} naive={want}",
+                        got[c]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_single_query_bitwise() {
+        // The determinism contract: batched (and threaded) evaluation must
+        // reproduce the single-query kernel exactly.
+        let mut rng = Rng::new(0xc0b);
+        let (b, k, dim) = (9usize, 37usize, 19usize);
+        let queries = gaussian(&mut rng, b * dim);
+        let cents = gaussian(&mut rng, k * dim);
+        let norms = centroid_norms(&cents, dim);
+        let mut single = vec![0f32; k];
+        for threads in [1usize, 4] {
+            let mut out = Vec::new();
+            batch_dists_into(&queries, b, &cents, dim, &norms, threads, &mut out);
+            assert_eq!(out.len(), b * k);
+            for qi in 0..b {
+                dists_into(&queries[qi * dim..(qi + 1) * dim], &cents, dim, &norms, &mut single);
+                assert_eq!(&out[qi * k..(qi + 1) * k], &single[..], "threads={threads} qi={qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_reuses_buffer_and_handles_empty() {
+        let mut out = vec![1.0f32; 8];
+        batch_dists_into(&[], 0, &[], 3, &[], 4, &mut out);
+        assert!(out.is_empty());
+        let mut rng = Rng::new(0xc0c);
+        let q = gaussian(&mut rng, 2 * 5);
+        let c = gaussian(&mut rng, 3 * 5);
+        let norms = centroid_norms(&c, 5);
+        batch_dists_into(&q, 2, &c, 5, &norms, 8, &mut out);
+        assert_eq!(out.len(), 6);
+    }
+
+    #[test]
+    fn nearest_fused_matches_naive_nearest() {
+        let mut rng = Rng::new(0xc0d);
+        for _ in 0..20 {
+            let dim = 1 + rng.below(24) as usize;
+            let k = 1 + rng.below(50) as usize;
+            let q = gaussian(&mut rng, dim);
+            let cents = gaussian(&mut rng, k * dim);
+            let norms = centroid_norms(&cents, dim);
+            let (ci, di) = nearest_fused(&q, &cents, dim, &norms);
+            let (cw, dw) = crate::quant::nearest(&q, &cents, dim);
+            // Distances agree within tolerance; the argmin may only differ
+            // on a numerical near-tie.
+            assert!((di - dw).abs() <= 1e-4 * dw.max(1.0), "{di} vs {dw}");
+            if ci != cw {
+                let naive_at_fused = l2_sq(&q, &cents[ci * dim..(ci + 1) * dim]);
+                assert!((naive_at_fused - dw).abs() <= 1e-4 * dw.max(1.0));
+            }
+        }
+    }
+}

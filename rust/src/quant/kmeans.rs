@@ -6,7 +6,8 @@
 //! kernel (see `runtime::engine`), but training happens once per index so
 //! the pure-rust path is used here to keep the build self-contained.
 
-use crate::quant::{l2_sq, nearest};
+use crate::quant::coarse;
+use crate::quant::l2_sq;
 use crate::util::pool::parallel_map;
 use crate::util::Rng;
 
@@ -57,13 +58,16 @@ pub fn train(data: &[f32], dim: usize, cfg: &KmeansConfig) -> Vec<f32> {
 
     let mut assign = vec![0u32; tn];
     for _iter in 0..cfg.iters {
-        // Assignment step (parallel).
+        // Assignment step (parallel, fused kernel with per-iteration
+        // centroid norms — the O(N·K·d) inner loop).
+        let norms = coarse::centroid_norms(&centroids, dim);
         let cref = &centroids;
+        let nref = &norms;
         let dref = data;
         let idxref = &train_idx;
         let new_assign = parallel_map(tn, cfg.threads, |i| {
             let p = idxref[i];
-            nearest(&dref[p * dim..(p + 1) * dim], cref, dim).0 as u32
+            coarse::nearest_fused(&dref[p * dim..(p + 1) * dim], cref, dim, nref).0 as u32
         });
         assign = new_assign;
 
@@ -97,11 +101,13 @@ pub fn train(data: &[f32], dim: usize, cfg: &KmeansConfig) -> Vec<f32> {
     centroids
 }
 
-/// Assign every row of `data` to its nearest centroid (parallel).
+/// Assign every row of `data` to its nearest centroid (parallel, fused
+/// kernel with centroid norms computed once).
 pub fn assign(data: &[f32], dim: usize, centroids: &[f32], threads: usize) -> Vec<u32> {
     let n = data.len() / dim;
+    let norms = coarse::centroid_norms(centroids, dim);
     parallel_map(n, threads, |i| {
-        nearest(&data[i * dim..(i + 1) * dim], centroids, dim).0 as u32
+        coarse::nearest_fused(&data[i * dim..(i + 1) * dim], centroids, dim, &norms).0 as u32
     })
 }
 

@@ -5,6 +5,7 @@
 //! k-means quantizer, Table 2 / Fig. 2 need PQ variants, and Fig. 3 needs
 //! the PQ codes themselves.
 
+pub mod coarse;
 pub mod kmeans;
 pub mod pq;
 
@@ -29,15 +30,6 @@ pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
         s += d * d;
     }
     s
-}
-
-/// Distances from one query to each row of `base` (row-major, `dim` wide),
-/// appended to `out`.
-pub fn dists_to_all(query: &[f32], base: &[f32], dim: usize, out: &mut Vec<f32>) {
-    debug_assert_eq!(base.len() % dim, 0);
-    for row in base.chunks_exact(dim) {
-        out.push(l2_sq(query, row));
-    }
 }
 
 /// Index of the nearest row of `base` to `query`.
@@ -87,9 +79,23 @@ impl Ord for HeapItem {
     }
 }
 
+impl Default for TopK {
+    fn default() -> Self {
+        TopK::new(0)
+    }
+}
+
 impl TopK {
     pub fn new(k: usize) -> Self {
         TopK { k, heap: std::collections::BinaryHeap::with_capacity(k + 1) }
+    }
+
+    /// Reset for reuse with a (possibly different) `k`, keeping the heap
+    /// allocation — the per-query path of `SearchScratch`.
+    pub fn reset(&mut self, k: usize) {
+        self.k = k;
+        self.heap.clear();
+        self.heap.reserve(k + 1);
     }
 
     /// Current admission threshold (distance of the worst kept candidate).
@@ -104,14 +110,24 @@ impl TopK {
 
     /// Offer a candidate; payload is an opaque u64 (e.g. packed
     /// (cluster, offset) — ids are resolved after search, §4.1).
+    ///
+    /// When full, the worst kept candidate is replaced in place through
+    /// `peek_mut` (one sift-down) instead of push-then-pop (two heap
+    /// operations). Replacement compares the full `(dist, payload)` order,
+    /// so for candidates that reach `push` the kept set is the k
+    /// lexicographically smallest regardless of insertion order. (Callers
+    /// that pre-filter with a strict `dist < threshold()` guard — the IVF
+    /// scan — drop threshold-equal candidates before they get here, so
+    /// end-to-end tie-breaking still follows visit order.)
     #[inline]
     pub fn push(&mut self, dist: f32, payload: impl Into<u64>) {
-        let payload = payload.into();
+        let item = HeapItem(dist, payload.into());
         if self.heap.len() < self.k {
-            self.heap.push(HeapItem(dist, payload));
-        } else if dist < self.threshold() {
-            self.heap.push(HeapItem(dist, payload));
-            self.heap.pop();
+            self.heap.push(item);
+        } else if let Some(mut worst) = self.heap.peek_mut() {
+            if item < *worst {
+                *worst = item;
+            }
         }
     }
 
@@ -135,6 +151,18 @@ impl TopK {
         let mut v: Vec<(f32, u64)> = self.heap.into_iter().map(|h| (h.0, h.1)).collect();
         v.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         v
+    }
+
+    /// Drain ascending by `(distance, payload)` into `out` (which is
+    /// cleared first), leaving the heap empty but its allocation intact —
+    /// the reusable-scratch equivalent of [`TopK::into_sorted_u64`].
+    pub fn drain_sorted_into(&mut self, out: &mut Vec<(f32, u64)>) {
+        out.clear();
+        out.reserve(self.heap.len());
+        while let Some(HeapItem(d, p)) = self.heap.pop() {
+            out.push((d, p));
+        }
+        out.reverse();
     }
 }
 
@@ -192,5 +220,59 @@ mod tests {
         let mut t = TopK::new(10);
         t.push(1.0, 7u32);
         assert_eq!(t.into_sorted(), vec![(1.0, 7)]);
+    }
+
+    #[test]
+    fn top_k_peek_mut_property_matches_naive_sort() {
+        // Property test for the peek_mut replacement path: many ties,
+        // k = 1, and fewer-candidates-than-k, against a naive oracle that
+        // sorts all candidates by (dist, payload) and truncates. One TopK
+        // is reused across trials to also exercise `reset`.
+        let mut rng = Rng::new(0x70b);
+        let mut t = TopK::default();
+        let mut got = Vec::new();
+        for trial in 0..200 {
+            let k = match trial % 4 {
+                0 => 1,
+                1 => 3,
+                2 => 10,
+                _ => 1 + rng.below(20) as usize,
+            };
+            // Few distinct distances -> heavy ties at the threshold.
+            let n = rng.below(40) as usize; // sometimes fewer than k
+            let cands: Vec<(f32, u64)> = (0..n)
+                .map(|i| ((rng.below(6) as f32) * 0.25, i as u64))
+                .collect();
+            t.reset(k);
+            for &(d, p) in &cands {
+                t.push(d, p);
+            }
+            t.drain_sorted_into(&mut got);
+            let mut want = cands.clone();
+            want.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            want.truncate(k);
+            assert_eq!(got, want, "trial={trial} k={k} n={n}");
+            assert!(t.is_empty(), "drain must leave the heap empty");
+        }
+    }
+
+    #[test]
+    fn top_k_insertion_order_invariant_under_ties() {
+        // The peek_mut path keeps the k smallest by (dist, payload), so
+        // permuting insertion order cannot change the kept set.
+        let cands = [(1.0f32, 5u64), (1.0, 2), (1.0, 9), (0.5, 7), (1.0, 1)];
+        let mut fwd = TopK::new(2);
+        let mut rev = TopK::new(2);
+        for &(d, p) in cands.iter() {
+            fwd.push(d, p);
+        }
+        for &(d, p) in cands.iter().rev() {
+            rev.push(d, p);
+        }
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        fwd.drain_sorted_into(&mut a);
+        rev.drain_sorted_into(&mut b);
+        assert_eq!(a, b);
+        assert_eq!(a, vec![(0.5, 7), (1.0, 1)]);
     }
 }

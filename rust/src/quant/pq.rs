@@ -7,6 +7,7 @@
 //! the rust fallback) turns each code scan into `m` table adds — the cost
 //! that Fig. 2 sweeps against id-decode overhead.
 
+use crate::quant::coarse;
 use crate::quant::kmeans::{self, KmeansConfig};
 use crate::util::{ReadBuf, WriteBuf};
 
@@ -20,6 +21,9 @@ pub struct Pq {
     pub dsub: usize,
     /// `m × ksub × dsub` codebooks, row-major.
     pub codebooks: Vec<f32>,
+    /// `‖codeword‖²` per codebook row (`m × ksub`), derived from
+    /// `codebooks` at train/deserialize time for the fused encode kernel.
+    book_norms: Vec<f32>,
 }
 
 impl Pq {
@@ -67,7 +71,8 @@ impl Pq {
                 codebooks[(j * ksub + c) * dsub..(j * ksub + c + 1) * dsub].copy_from_slice(src);
             }
         }
-        Pq { m, bits, dsub, codebooks }
+        let book_norms = coarse::centroid_norms(&codebooks, dsub);
+        Pq { m, bits, dsub, codebooks, book_norms }
     }
 
     /// Codebook slice for sub-quantizer `j`.
@@ -77,26 +82,60 @@ impl Pq {
         &self.codebooks[j * ksub * self.dsub..(j + 1) * ksub * self.dsub]
     }
 
-    /// Encode one vector to `m` codes.
-    pub fn encode(&self, v: &[f32], out: &mut Vec<u16>) {
+    /// Codeword-norm slice for sub-quantizer `j` (fused encode kernel).
+    #[inline]
+    fn book_norms(&self, j: usize) -> &[f32] {
+        let ksub = self.ksub();
+        &self.book_norms[j * ksub..(j + 1) * ksub]
+    }
+
+    /// Encode one vector into an `m`-code slice (no allocation).
+    pub fn encode_into(&self, v: &[f32], out: &mut [u16]) {
         debug_assert_eq!(v.len(), self.dim());
+        debug_assert_eq!(out.len(), self.m);
         for j in 0..self.m {
             let sub = &v[j * self.dsub..(j + 1) * self.dsub];
-            let (idx, _) = crate::quant::nearest(sub, self.book(j), self.dsub);
-            out.push(idx as u16);
+            let (idx, _) = coarse::nearest_fused(sub, self.book(j), self.dsub, self.book_norms(j));
+            out[j] = idx as u16;
         }
     }
 
-    /// Encode a batch (row-major) in parallel.
+    /// Encode one vector to `m` codes, appended to `out`.
+    pub fn encode(&self, v: &[f32], out: &mut Vec<u16>) {
+        let start = out.len();
+        out.resize(start + self.m, 0);
+        self.encode_into(v, &mut out[start..]);
+    }
+
+    /// Encode a batch (row-major) in parallel, writing codes straight into
+    /// one flat `n × m` buffer (no per-row allocations).
     pub fn encode_batch(&self, data: &[f32], threads: usize) -> Vec<u16> {
         let dim = self.dim();
         let n = data.len() / dim;
-        let rows = crate::util::pool::parallel_map(n, threads, |i| {
-            let mut out = Vec::with_capacity(self.m);
-            self.encode(&data[i * dim..(i + 1) * dim], &mut out);
-            out
+        let m = self.m;
+        let mut codes = vec![0u16; n * m];
+        if n == 0 {
+            return codes;
+        }
+        let threads = threads.max(1).min(n);
+        if threads <= 1 {
+            for (i, row) in codes.chunks_exact_mut(m).enumerate() {
+                self.encode_into(&data[i * dim..(i + 1) * dim], row);
+            }
+            return codes;
+        }
+        let rows_per = n.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (t, chunk) in codes.chunks_mut(rows_per * m).enumerate() {
+                s.spawn(move || {
+                    for (off, row) in chunk.chunks_exact_mut(m).enumerate() {
+                        let i = t * rows_per + off;
+                        self.encode_into(&data[i * dim..(i + 1) * dim], row);
+                    }
+                });
+            }
         });
-        rows.into_iter().flatten().collect()
+        codes
     }
 
     /// Reconstruct a vector from its codes.
@@ -147,7 +186,9 @@ impl Pq {
         let dsub = r.get_u64()? as usize;
         let codebooks = r.get_f32s()?;
         anyhow::ensure!(codebooks.len() == m * (1 << bits) * dsub, "codebook size mismatch");
-        Ok(Pq { m, bits, dsub, codebooks })
+        anyhow::ensure!(dsub > 0, "zero dsub");
+        let book_norms = coarse::centroid_norms(&codebooks, dsub);
+        Ok(Pq { m, bits, dsub, codebooks, book_norms })
     }
 }
 

@@ -152,13 +152,32 @@ impl Engine {
 }
 
 /// Pure-rust coarse distances (fallback path; also the test oracle).
+///
+/// Computed through the fused kernel of [`crate::quant::coarse`] —
+/// identical arithmetic to `IvfIndex::search`'s internal coarse stage, so
+/// results via either path are bit-identical (the serving tests compare
+/// full result lists with `assert_eq!`).
 pub fn coarse_fallback(queries: &[f32], b: usize, d: usize, centroids: &[f32], k: usize) -> Vec<f32> {
-    let mut out = Vec::with_capacity(b * k);
-    for qi in 0..b {
-        crate::quant::dists_to_all(&queries[qi * d..(qi + 1) * d], centroids, d, &mut out);
-    }
+    debug_assert_eq!(centroids.len(), k * d);
+    let norms = crate::quant::coarse::centroid_norms(centroids, d);
+    let mut out = Vec::new();
+    crate::quant::coarse::batch_dists_into(queries, b, centroids, d, &norms, 1, &mut out);
     debug_assert_eq!(out.len(), b * k);
     out
+}
+
+/// Steady-state fallback for the coordinator: precomputed centroid norms,
+/// a reusable output buffer, and data-parallel queries across `threads`.
+pub fn coarse_fallback_into(
+    queries: &[f32],
+    b: usize,
+    d: usize,
+    centroids: &[f32],
+    norms: &[f32],
+    threads: usize,
+    out: &mut Vec<f32>,
+) {
+    crate::quant::coarse::batch_dists_into(queries, b, centroids, d, norms, threads, out);
 }
 
 // Without `pjrt` this is exercised only by the unit tests below.
@@ -227,10 +246,13 @@ impl EngineHandle {
         Ok(EngineHandle { tx, stats, num_executables })
     }
 
-    /// Synchronous batched coarse scoring through the engine thread.
+    /// Synchronous batched coarse scoring through the engine thread. Takes
+    /// the query matrix by reference so callers can keep one reusable
+    /// batch buffer; the owned copy the channel needs is made here (and
+    /// only on the engine path).
     pub fn coarse(
         &self,
-        queries: Vec<f32>,
+        queries: &[f32],
         b: usize,
         d: usize,
         centroids: Arc<Vec<f32>>,
@@ -238,7 +260,7 @@ impl EngineHandle {
     ) -> Result<(Vec<f32>, bool)> {
         let (reply, rx) = mpsc::sync_channel(1);
         self.tx
-            .send(EngineMsg::Coarse { queries, b, d, centroids, k, reply })
+            .send(EngineMsg::Coarse { queries: queries.to_vec(), b, d, centroids, k, reply })
             .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
         rx.recv().context("engine reply dropped")?
     }
@@ -269,6 +291,8 @@ mod tests {
 
     #[test]
     fn fallback_matches_quant() {
+        // The fused fallback agrees with the naive per-row loop to the
+        // acceptance tolerance (1e-4 relative).
         use crate::util::Rng;
         let mut rng = Rng::new(100);
         let (b, d, k) = (3usize, 8usize, 5usize);
@@ -278,8 +302,24 @@ mod tests {
         for qi in 0..b {
             for ci in 0..k {
                 let want = crate::quant::l2_sq(&q[qi * d..(qi + 1) * d], &c[ci * d..(ci + 1) * d]);
-                assert!((out[qi * k + ci] - want).abs() < 1e-5);
+                assert!((out[qi * k + ci] - want).abs() <= 1e-4 * want.max(1.0));
             }
+        }
+    }
+
+    #[test]
+    fn fallback_into_matches_fallback() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(101);
+        let (b, d, k) = (7usize, 12usize, 33usize);
+        let q: Vec<f32> = (0..b * d).map(|_| rng.normal()).collect();
+        let c: Vec<f32> = (0..k * d).map(|_| rng.normal()).collect();
+        let want = coarse_fallback(&q, b, d, &c, k);
+        let norms = crate::quant::coarse::centroid_norms(&c, d);
+        let mut out = Vec::new();
+        for threads in [1usize, 3] {
+            coarse_fallback_into(&q, b, d, &c, &norms, threads, &mut out);
+            assert_eq!(out, want, "threads={threads}");
         }
     }
 }

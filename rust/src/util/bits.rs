@@ -112,6 +112,33 @@ impl BitBuf {
     }
 }
 
+/// Read `n <= 64` bits (LSB-first) starting at bit `pos` directly from a
+/// serialized byte blob — no intermediate [`BitBuf`] is built, which makes
+/// this the allocation-free random-access primitive of the id-resolve hot
+/// path. The blob must be the little-endian serialization of an LSB-first
+/// word stream (what the codecs store), so byte order matches [`BitBuf`].
+#[inline]
+pub fn read_bits_at(bytes: &[u8], pos: usize, n: u32) -> u64 {
+    debug_assert!(n <= 64);
+    if n == 0 {
+        return 0;
+    }
+    debug_assert!(pos + n as usize <= bytes.len() * 8, "read past blob end");
+    let byte = pos >> 3;
+    let shift = (pos & 7) as u32;
+    let mut window = [0u8; 16];
+    let take = bytes.len().saturating_sub(byte).min(16);
+    window[..take].copy_from_slice(&bytes[byte..byte + take]);
+    let lo = u64::from_le_bytes(window[0..8].try_into().unwrap());
+    let hi = u64::from_le_bytes(window[8..16].try_into().unwrap());
+    let v = if shift == 0 { lo } else { (lo >> shift) | (hi << (64 - shift)) };
+    if n == 64 {
+        v
+    } else {
+        v & ((1u64 << n) - 1)
+    }
+}
+
 /// Sequential reader over a [`BitBuf`].
 pub struct BitReader<'a> {
     buf: &'a BitBuf,
@@ -244,6 +271,35 @@ mod tests {
         let buf = w.finish();
         for i in (0..100usize).rev() {
             assert_eq!(buf.read(i * 7, 7), i as u64);
+        }
+    }
+
+    #[test]
+    fn read_bits_at_matches_bitbuf_read() {
+        let mut rng = Rng::new(12);
+        let mut w = BitWriter::new();
+        let mut widths = Vec::new();
+        for _ in 0..300 {
+            let n = 1 + rng.below(64) as u32;
+            w.write(rng.next_u64(), n);
+            widths.push(n);
+        }
+        let buf = w.finish();
+        // Serialize the words the way the codecs do (LE bytes).
+        let mut bytes = Vec::with_capacity(buf.words.len() * 8);
+        for word in &buf.words {
+            bytes.extend_from_slice(&word.to_le_bytes());
+        }
+        let mut pos = 0usize;
+        for &n in &widths {
+            assert_eq!(read_bits_at(&bytes, pos, n), buf.read(pos, n), "pos={pos} n={n}");
+            pos += n as usize;
+        }
+        // Reads near the very end of the blob (partial 16-byte window).
+        let total = buf.size_bits();
+        for back in 1..=total.min(64) {
+            let n = back as u32;
+            assert_eq!(read_bits_at(&bytes, total - back, n), buf.read(total - back, n));
         }
     }
 }

@@ -1,7 +1,17 @@
 //! Scoped data-parallel helpers over std threads (no rayon offline).
 
-/// Run `f(chunk_index, item_range)` over `n` items split across up to
-/// `threads` OS threads, via `std::thread::scope`. `f` must be `Sync`.
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Run `f(worker, item_range)` over `n` items split across up to
+/// `threads` OS threads via `std::thread::scope`.
+///
+/// Work is split into more chunks than workers (4× oversplit) and pulled
+/// from a shared counter, so skewed per-item costs (e.g. uneven IVF
+/// cluster sizes) rebalance instead of serializing on the slowest static
+/// chunk. The first argument passed to `f` is the *worker* index in
+/// `[0, threads)` — stable across every chunk that worker pulls, so
+/// callers may key per-thread scratch off it (`f` may be invoked several
+/// times per worker, with disjoint ranges). `f` must be `Sync`.
 pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
 where
     F: Fn(usize, std::ops::Range<usize>) + Sync,
@@ -11,42 +21,67 @@ where
         f(0, 0..n);
         return;
     }
-    let chunk = n.div_ceil(threads);
+    let chunks = (threads * 4).min(n);
+    let chunk = n.div_ceil(chunks);
+    let next = AtomicUsize::new(0);
     std::thread::scope(|s| {
-        for t in 0..threads {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
+        for w in 0..threads {
             let f = &f;
-            s.spawn(move || f(t, lo..hi));
+            let next = &next;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                let lo = i * chunk;
+                if lo >= n {
+                    break;
+                }
+                f(w, lo..((i + 1) * chunk).min(n));
+            });
         }
     });
 }
 
 /// Map each index in `[0, n)` to a value, in parallel, preserving order.
+///
+/// Results are written straight into the output vector's spare capacity
+/// (`MaybeUninit` slots), so `T` needs neither `Default` nor `Clone` and
+/// no placeholder pass runs over the buffer. If `f` panics, the panic
+/// propagates out of the thread scope; already-written elements are
+/// leaked (the length is only set after every slot is initialized), never
+/// dropped twice.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
-    T: Send + Default + Clone,
+    T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let mut out = vec![T::default(); n];
+    let mut out: Vec<T> = Vec::with_capacity(n);
     if n == 0 {
         return out;
     }
     let threads = threads.max(1).min(n);
     let chunk = n.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (t, slice) in out.chunks_mut(chunk).enumerate() {
-            let f = &f;
-            s.spawn(move || {
-                for (off, v) in slice.iter_mut().enumerate() {
-                    *v = f(t * chunk + off);
+    {
+        let slots = &mut out.spare_capacity_mut()[..n];
+        if threads <= 1 {
+            for (i, slot) in slots.iter_mut().enumerate() {
+                slot.write(f(i));
+            }
+        } else {
+            std::thread::scope(|s| {
+                for (t, slice) in slots.chunks_mut(chunk).enumerate() {
+                    let f = &f;
+                    s.spawn(move || {
+                        for (off, slot) in slice.iter_mut().enumerate() {
+                            slot.write(f(t * chunk + off));
+                        }
+                    });
                 }
             });
         }
-    });
+    }
+    // SAFETY: all `n` slots were initialized above — the serial loop runs
+    // to completion, and the thread scope joins every worker (a worker
+    // panic propagates before this point is reached).
+    unsafe { out.set_len(n) };
     out
 }
 
@@ -58,6 +93,7 @@ pub fn default_threads() -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicU32;
 
     #[test]
     fn parallel_map_matches_serial() {
@@ -73,8 +109,19 @@ mod tests {
     }
 
     #[test]
+    fn parallel_map_without_default_or_clone() {
+        // The relaxed bound: a type with neither Default nor Clone, with a
+        // Drop impl to catch any double-drop of the MaybeUninit slots.
+        struct Opaque(Box<usize>);
+        let got = parallel_map(257, 4, |i| Opaque(Box::new(i * 3)));
+        assert_eq!(got.len(), 257);
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(*v.0, i * 3);
+        }
+    }
+
+    #[test]
     fn chunks_cover_exactly_once() {
-        use std::sync::atomic::{AtomicU32, Ordering};
         let hits: Vec<AtomicU32> = (0..777).map(|_| AtomicU32::new(0)).collect();
         parallel_chunks(777, 7, |_, range| {
             for i in range {
@@ -82,5 +129,20 @@ mod tests {
             }
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn chunks_oversplit_but_worker_ids_bounded() {
+        // More chunks than workers (load balancing), yet the worker index
+        // stays within [0, threads) so scratch arrays can be keyed by it.
+        let max_worker = AtomicUsize::new(0);
+        let calls = AtomicUsize::new(0);
+        parallel_chunks(1000, 4, |w, range| {
+            assert!(!range.is_empty());
+            max_worker.fetch_max(w, Ordering::Relaxed);
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(max_worker.load(Ordering::Relaxed) < 4);
+        assert!(calls.load(Ordering::Relaxed) > 4, "expected oversplit chunks");
     }
 }

@@ -1,0 +1,139 @@
+//! Steady-state allocation accounting for the search hot path.
+//!
+//! The acceptance contract of the allocation-free refactor: with a warmed
+//! `SearchScratch` and a reused result buffer, `IvfIndex::search_into`
+//! performs **zero** heap allocations per query for the random-access id
+//! stores (`unc64`, `compact`, `ef`) and zero per probed cluster beyond
+//! first-touch scratch growth for the per-cluster decoders (`roc`,
+//! PQ-compressed codes). Asserted with a counting global allocator: run
+//! the full query set twice to settle every scratch buffer at its
+//! steady-state size, then require the third pass to allocate nothing.
+//!
+//! (Integration test on purpose: each integration test binary may install
+//! its own `#[global_allocator]` without affecting the rest of the suite.)
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use zann::datasets::{generate, Dataset, Kind};
+use zann::index::{IvfBuildParams, IvfIndex, SearchParams, SearchScratch, VectorMode};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocation_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+fn run_all_queries(
+    idx: &IvfIndex,
+    ds: &Dataset,
+    sp: &SearchParams,
+    scratch: &mut SearchScratch,
+    out: &mut Vec<(f32, u32)>,
+) -> usize {
+    let mut total = 0usize;
+    for qi in 0..ds.nq {
+        idx.search_into(ds.query(qi), sp, scratch, out);
+        total += out.len();
+    }
+    total
+}
+
+#[test]
+fn steady_state_search_is_allocation_free() {
+    let ds = generate(Kind::DeepLike, 4000, 64, 16, 31);
+    let sp = SearchParams { nprobe: 8, k: 10 };
+    let cases: [(&str, VectorMode); 5] = [
+        ("unc64", VectorMode::Flat),
+        ("compact", VectorMode::Flat),
+        ("ef", VectorMode::Flat),
+        ("roc", VectorMode::Flat),
+        ("compact", VectorMode::PqCompressed { m: 4, bits: 8 }),
+    ];
+    for (codec, vectors) in cases {
+        let label = match &vectors {
+            VectorMode::PqCompressed { .. } => "pq-compressed",
+            _ => codec,
+        };
+        let idx = IvfIndex::build(
+            &ds.data,
+            ds.dim,
+            &IvfBuildParams {
+                k: 32,
+                id_codec: codec.into(),
+                vectors: vectors.clone(),
+                threads: 2,
+                ..Default::default()
+            },
+        );
+        let mut scratch = SearchScratch::default();
+        let mut out = Vec::new();
+        // Two warm passes: the first grows every buffer, the second lets
+        // monotone structures (e.g. the ROC RankSet bucket layout, which
+        // only rebuilds toward more buckets) settle completely.
+        let warm_a = run_all_queries(&idx, &ds, &sp, &mut scratch, &mut out);
+        let warm_b = run_all_queries(&idx, &ds, &sp, &mut scratch, &mut out);
+        assert_eq!(warm_a, warm_b, "{label}: warm passes disagree");
+        let before = allocation_count();
+        let measured = run_all_queries(&idx, &ds, &sp, &mut scratch, &mut out);
+        let after = allocation_count();
+        assert_eq!(measured, warm_a, "{label}: measured pass disagrees");
+        assert_eq!(
+            after - before,
+            0,
+            "{label}: steady-state pass performed {} heap allocations over {} queries",
+            after - before,
+            ds.nq
+        );
+    }
+}
+
+#[test]
+fn warm_passes_return_identical_results() {
+    // Companion sanity: the reused-scratch results on the measured pass
+    // match a fresh-scratch search (reuse must never change results).
+    let ds = generate(Kind::SiftLike, 3000, 32, 16, 32);
+    let sp = SearchParams { nprobe: 8, k: 10 };
+    for codec in ["roc", "ef"] {
+        let idx = IvfIndex::build(
+            &ds.data,
+            ds.dim,
+            &IvfBuildParams { k: 32, id_codec: codec.into(), threads: 2, ..Default::default() },
+        );
+        let mut scratch = SearchScratch::default();
+        let mut out = Vec::new();
+        run_all_queries(&idx, &ds, &sp, &mut scratch, &mut out);
+        for qi in 0..ds.nq {
+            idx.search_into(ds.query(qi), &sp, &mut scratch, &mut out);
+            let mut fresh = SearchScratch::default();
+            let want = idx.search(ds.query(qi), &sp, &mut fresh);
+            assert_eq!(out, want, "{codec} query {qi}");
+        }
+    }
+}
