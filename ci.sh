@@ -14,14 +14,16 @@ cargo test -q
 echo "== compile bench harnesses and examples =="
 cargo build --release --benches --examples
 
-echo "== bench_search_qps smoke (JSON contract) =="
+echo "== bench_search_qps smoke (JSON contract, IVF + graph backends) =="
 # Tiny-N end-to-end run; validate that the emitted BENCH_search.json
-# parses and carries the documented keys, so the bench wiring cannot rot
-# silently. Writes to a scratch path to keep the checkout clean in CI.
+# parses and carries the documented keys — including at least one
+# graph-backend row served through the same AnnIndex path — so the bench
+# wiring cannot rot silently. Writes to a scratch path to keep the
+# checkout clean in CI.
 QPS_JSON="$(mktemp /tmp/zann_bench_search.XXXXXX.json)"
 cargo bench --bench bench_search_qps -- \
   --n 2000 --nq 40 --k 16 --runs 1 --nprobe 4 --sweep-threads 2 \
-  --codecs unc64,roc,pq-compressed --out "$QPS_JSON"
+  --codecs unc64,roc,pq-compressed,nsg:roc --out "$QPS_JSON"
 python3 - "$QPS_JSON" <<'EOF'
 import json, sys
 with open(sys.argv[1]) as f:
@@ -31,18 +33,53 @@ for key in ("dataset", "n", "nq", "dim", "k", "seed", "results"):
     assert key in d, f"missing top-level key {key}"
 assert d["results"], "no result rows"
 for row in d["results"]:
-    for key in ("codec", "nprobe", "threads", "qps", "mean_ms", "p50_ms", "p95_ms"):
+    for key in ("backend", "codec", "nprobe", "threads", "qps", "mean_ms", "p50_ms", "p95_ms"):
         assert key in row, f"missing row key {key}"
     assert row["qps"] > 0, row
     assert row["p95_ms"] >= row["p50_ms"], row
-print(f"bench JSON ok: {len(d['results'])} rows")
+backends = {row["backend"] for row in d["results"]}
+assert "ivf" in backends, backends
+assert backends & {"nsg", "hnsw"}, f"no graph-backend row: {backends}"
+print(f"bench JSON ok: {len(d['results'])} rows, backends {sorted(backends)}")
 EOF
 rm -f "$QPS_JSON"
+
+echo "== persistence smoke: build -> save -> info -> serve =="
+# Round-trip both index families through the container format and assert
+# (a) the reopened file weighs ~ the compressed payload (header/codebook
+# overhead only) and (b) every served response is bit-identical to a
+# direct search on the reopened index.
+IDX_DIR="$(mktemp -d /tmp/zann_idx.XXXXXX)"
+cargo run --release --bin zann -- build --out "$IDX_DIR/ivf.zann" \
+  --backend ivf --codec roc --n 2000 --dim 16 --k 32
+cargo run --release --bin zann -- info "$IDX_DIR/ivf.zann" > "$IDX_DIR/info_ivf.txt"
+cat "$IDX_DIR/info_ivf.txt"
+python3 - "$IDX_DIR/info_ivf.txt" <<'EOF'
+import sys
+line = next(l for l in open(sys.argv[1]) if l.startswith("zann-index"))
+kv = dict(tok.split("=", 1) for tok in line.split()[1:])
+id_bits, code_bits, link_bits = (int(kv[k]) for k in ("id_bits", "code_bits", "link_bits"))
+file_bytes = int(kv["file_bytes"])
+payload = (id_bits + code_bits + link_bits + 7) // 8
+k, dim = 32, 16  # must match the build flags above
+overhead = k * dim * 4 + 3 * (k + 1) * 8 + 4096  # centroids + offset tables + framing
+assert payload <= file_bytes <= payload + overhead, (payload, file_bytes, overhead)
+print(f"ivf container ok: {file_bytes} bytes for a {payload}-byte payload")
+EOF
+cargo run --release --bin zann -- serve "$IDX_DIR/ivf.zann" --nq 64 --nprobe 8 \
+  | tee "$IDX_DIR/serve_ivf.txt"
+grep -q "verified 64/64" "$IDX_DIR/serve_ivf.txt"
+cargo run --release --bin zann -- build --out "$IDX_DIR/nsg.zann" \
+  --backend nsg --codec roc --n 1500 --dim 16
+cargo run --release --bin zann -- serve "$IDX_DIR/nsg.zann" --nq 32 --ef 32 \
+  | tee "$IDX_DIR/serve_nsg.txt"
+grep -q "verified 32/32" "$IDX_DIR/serve_nsg.txt"
+rm -rf "$IDX_DIR"
 
 echo "== rustfmt =="
 cargo fmt --all -- --check
 
-echo "== clippy =="
+echo "== clippy (all targets, including the api module) =="
 cargo clippy --all-targets -- -D warnings
 
 echo "== rustdoc =="

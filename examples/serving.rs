@@ -9,9 +9,10 @@
 //! Flags: --n --nq --k --nprobe --codec --no-engine
 
 use std::sync::Arc;
+use zann::api::QueryParams;
 use zann::coordinator::{Coordinator, ServeConfig};
 use zann::datasets::{generate, groundtruth, Kind};
-use zann::index::{IvfBuildParams, IvfIndex, SearchParams, VectorMode};
+use zann::index::{IvfBuildParams, IvfIndex, VectorMode};
 use zann::runtime::{default_artifact_dir, EngineHandle};
 use zann::util::cli::Args;
 
@@ -64,7 +65,7 @@ fn main() {
         engine,
         ServeConfig {
             batch_size: 64,
-            search: SearchParams { nprobe: args.usize("nprobe", 32), k: 10 },
+            search: QueryParams { nprobe: args.usize("nprobe", 32), k: 10, ..Default::default() },
             ..Default::default()
         },
     );

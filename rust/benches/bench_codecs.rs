@@ -5,7 +5,7 @@
 //! `cargo bench --bench bench_codecs -- [--n 4096] [--universe 1000000]`
 
 use std::time::Instant;
-use zann::codecs::codec_by_name;
+use zann::codecs::{CodecSpec, DecodeScratch};
 use zann::eval::{fmt3, Table};
 use zann::util::cli::Args;
 use zann::util::Rng;
@@ -26,7 +26,7 @@ fn main() {
     println!("== codec microbench: {lists} lists x {n} ids from [0, {universe}) ==");
     let mut t = Table::new(&["codec", "bits/id", "enc Mids/s", "dec Mids/s"]);
     for name in ["unc64", "unc32", "compact", "ef", "roc"] {
-        let codec = codec_by_name(name).unwrap();
+        let codec = CodecSpec::parse(name).unwrap().id_codec().unwrap();
         let mut enc_best = f64::INFINITY;
         let mut blobs = Vec::new();
         let mut bits = 0u64;
@@ -59,6 +59,45 @@ fn main() {
         ]);
     }
     println!("{}", t.render());
+
+    // Bulk id-store decode through a built IVF index: every cluster list
+    // via `decode_list_into` with one reused buffer + DecodeScratch (the
+    // allocation-free bulk path audits and migrations take).
+    {
+        use zann::datasets::{generate, Kind};
+        use zann::index::{IvfBuildParams, IvfIndex};
+        let bn = args.usize("index-n", 20_000);
+        let ds = generate(Kind::DeepLike, bn, 1, 16, args.u64("seed", 42));
+        println!("\n== IVF id-store bulk decode (N={bn}, K=64) ==");
+        let mut t = Table::new(&["codec", "bits/id", "decode Mids/s"]);
+        for name in ["compact", "ef", "roc"] {
+            let idx = IvfIndex::build(
+                &ds.data,
+                ds.dim,
+                &IvfBuildParams { k: 64, id_codec: name.into(), ..Default::default() },
+            );
+            let mut out = Vec::new();
+            let mut scratch = DecodeScratch::default();
+            let mut best = f64::INFINITY;
+            let mut decoded = 0usize;
+            for _ in 0..reps {
+                decoded = 0;
+                let t0 = Instant::now();
+                for c in 0..idx.k {
+                    idx.decode_list_into(c, &mut out, &mut scratch);
+                    decoded += out.len();
+                }
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            assert_eq!(decoded, bn, "{name}: decoded lists must cover the dataset");
+            t.row(vec![
+                name.into(),
+                fmt3(idx.bits_per_id()),
+                fmt3(decoded as f64 / best / 1e6),
+            ]);
+        }
+        println!("{}", t.render());
+    }
 
     // Wavelet tree select throughput (the full-random-access path).
     let seq: Vec<u32> = (0..(lists * n)).map(|_| rng.below(1024) as u32).collect();

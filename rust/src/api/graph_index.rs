@@ -1,0 +1,302 @@
+//! [`GraphIndex`] — the serving wrapper that turns a built NSG or HNSW
+//! graph into an [`AnnIndex`] backend: compressed adjacency
+//! ([`GraphStore`]) + owned vectors + entry points + the shared
+//! best-first [`beam_search`], with container persistence.
+//!
+//! The raw builders ([`Nsg`], [`Hnsw`]) stay construction-only types;
+//! everything the serving path and the persistence layer need is fused
+//! here, which is what lets the coordinator and the QPS bench treat graph
+//! backends exactly like IVF ones.
+
+use crate::api::{persist, AnnIndex, AnnScratch, IndexKind, IndexStats, QueryParams};
+use crate::codecs::CodecSpec;
+use crate::graph::hnsw::Hnsw;
+use crate::graph::nsg::Nsg;
+use crate::graph::{beam_search, GraphStore};
+use crate::util::bytes::Blobs;
+use crate::util::{ReadBuf, WriteBuf};
+use anyhow::{bail, ensure, Context as _, Result};
+
+/// Which graph construction produced the adjacency.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraphFamily {
+    Nsg,
+    Hnsw,
+}
+
+impl GraphFamily {
+    fn tag(self) -> u8 {
+        match self {
+            GraphFamily::Nsg => 0,
+            GraphFamily::Hnsw => 1,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<GraphFamily> {
+        match t {
+            0 => Ok(GraphFamily::Nsg),
+            1 => Ok(GraphFamily::Hnsw),
+            other => bail!("unknown graph family tag {other}"),
+        }
+    }
+}
+
+/// A self-contained, servable graph index: compressed friend lists,
+/// vectors, and the entry set the beam search starts from.
+pub struct GraphIndex {
+    family: GraphFamily,
+    store: GraphStore,
+    data: Vec<f32>,
+    dim: usize,
+    entries: Vec<u32>,
+    codec: CodecSpec,
+}
+
+impl GraphIndex {
+    /// Wrap a built NSG: friend lists are re-encoded once with `codec`
+    /// (any per-list name: unc64|unc32|compact|ef|roc), vectors copied in.
+    pub fn from_nsg(nsg: &Nsg, data: &[f32], codec: &str) -> Result<GraphIndex> {
+        let spec = CodecSpec::parse(codec)?;
+        let n = nsg.adj.len();
+        ensure!(
+            data.len() == n * nsg.dim,
+            "data holds {} floats for {n} vectors of dim {}",
+            data.len(),
+            nsg.dim
+        );
+        let store = GraphStore::try_compress(&nsg.adj, &spec)?;
+        Ok(GraphIndex {
+            family: GraphFamily::Nsg,
+            store,
+            data: data.to_vec(),
+            dim: nsg.dim,
+            entries: nsg.entries.clone(),
+            codec: spec,
+        })
+    }
+
+    /// Wrap a built HNSW base layer (the upper layers only steer toward
+    /// an entry point, which is captured in `entries`; Table 3: "other
+    /// levels occupy negligible storage").
+    pub fn from_hnsw(h: &Hnsw, data: &[f32], codec: &str) -> Result<GraphIndex> {
+        let spec = CodecSpec::parse(codec)?;
+        let n = h.base_adj().len();
+        ensure!(
+            data.len() == n * h.dim,
+            "data holds {} floats for {n} vectors of dim {}",
+            data.len(),
+            h.dim
+        );
+        let store = GraphStore::try_compress(h.base_adj(), &spec)?;
+        Ok(GraphIndex {
+            family: GraphFamily::Hnsw,
+            store,
+            data: data.to_vec(),
+            dim: h.dim,
+            entries: vec![h.entry],
+            codec: spec,
+        })
+    }
+
+    pub fn family(&self) -> GraphFamily {
+        self.family
+    }
+
+    /// The adjacency store (for direct [`beam_search`] comparisons).
+    pub fn store(&self) -> &GraphStore {
+        &self.store
+    }
+
+    /// The beam-search entry set.
+    pub fn entries(&self) -> &[u32] {
+        &self.entries
+    }
+
+    /// The owned vector data (row-major `n × dim`).
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub(crate) fn to_container_bytes(&self) -> Result<Vec<u8>> {
+        let (blobs, lens, bits) = match &self.store {
+            GraphStore::Compressed { blobs, lens, bits, .. } => (blobs, lens, *bits),
+            GraphStore::Raw(_) => bail!(
+                "raw adjacency is not persisted; construct the GraphIndex with a per-list codec"
+            ),
+        };
+        let mut head = WriteBuf::new();
+        head.put_u8(self.family.tag());
+        head.put_u64(self.dim as u64);
+        head.put_u64((self.data.len() / self.dim) as u64);
+        head.put_str(self.codec.name());
+        head.put_u32s(&self.entries);
+        head.put_u64(bits);
+
+        let mut file = persist::file_header(persist::KIND_GRAPH);
+        persist::push_section(&mut file, b"HEAD", &head.bytes);
+        let mut vecs = WriteBuf::new();
+        vecs.put_f32s(&self.data);
+        persist::push_section(&mut file, b"VECS", &vecs.bytes);
+        let mut glen = WriteBuf::new();
+        glen.put_u32s(lens);
+        persist::push_section(&mut file, b"GLEN", &glen.bytes);
+        let mut goff = WriteBuf::new();
+        goff.put_u64s(blobs.offsets());
+        persist::push_section(&mut file, b"GOFF", &goff.bytes);
+        persist::push_section(&mut file, b"GBLB", blobs.payload());
+        Ok(file)
+    }
+
+    pub(crate) fn from_container(c: &persist::Container) -> Result<GraphIndex> {
+        let head = c.section(b"HEAD")?;
+        let mut r = ReadBuf::new(head.as_slice());
+        let family = GraphFamily::from_tag(r.get_u8()?)?;
+        let dim = r.get_u64()? as usize;
+        let n = r.get_u64()? as usize;
+        let codec_name = r.get_str()?;
+        let entries = r.get_u32s()?;
+        let bits = r.get_u64()?;
+        ensure!(dim >= 1, "degenerate header (dim=0)");
+        ensure!(!entries.is_empty(), "graph index has no entry points");
+        ensure!(
+            entries.iter().all(|&e| (e as usize) < n),
+            "entry point out of range (n={n})"
+        );
+        let spec = CodecSpec::parse(&codec_name).context("graph header names its codec")?;
+
+        let sec = c.section(b"VECS")?;
+        let data = ReadBuf::new(sec.as_slice()).get_f32s()?;
+        ensure!(data.len() == n * dim, "vector section holds {} floats", data.len());
+        let sec = c.section(b"GLEN")?;
+        let lens = ReadBuf::new(sec.as_slice()).get_u32s()?;
+        ensure!(lens.len() == n, "length table holds {} entries for n={n}", lens.len());
+        // A friend list can reference at most every other node; a larger
+        // length is structural corruption and would otherwise surface as
+        // a decode panic mid-query instead of an open-time error.
+        ensure!(
+            lens.iter().all(|&l| (l as usize) < n.max(1)),
+            "length table contains a degree >= n={n}"
+        );
+        let sec = c.section(b"GOFF")?;
+        let goff = ReadBuf::new(sec.as_slice()).get_u64s()?;
+        let blobs = Blobs::from_parts(c.section(b"GBLB")?, goff)?;
+        let store = GraphStore::from_compressed_parts(&spec, blobs, lens, n as u32, bits)?;
+        Ok(GraphIndex { family, store, data, dim, entries, codec: spec })
+    }
+}
+
+impl AnnIndex for GraphIndex {
+    fn kind(&self) -> IndexKind {
+        match self.family {
+            GraphFamily::Nsg => IndexKind::Nsg,
+            GraphFamily::Hnsw => IndexKind::Hnsw,
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    fn stats(&self) -> IndexStats {
+        IndexStats {
+            kind: self.kind(),
+            n: self.len(),
+            dim: self.dim,
+            edges: self.store.num_edges(),
+            codec: self.codec.name().to_string(),
+            id_bits: 0,
+            code_bits: self.data.len() as u64 * 32,
+            link_bits: self.store.id_bits(),
+        }
+    }
+
+    fn search_into(
+        &self,
+        query: &[f32],
+        params: &QueryParams,
+        scratch: &mut AnnScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        let res = beam_search(
+            &self.store,
+            &self.data,
+            self.dim,
+            &self.entries,
+            query,
+            params.ef.max(params.k),
+            params.k,
+            &mut scratch.visited,
+            &mut scratch.neighbors,
+        );
+        out.clear();
+        out.extend(res);
+    }
+
+    fn to_bytes(&self) -> Result<Vec<u8>> {
+        self.to_container_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{generate, Kind};
+    use crate::graph::nsg::NsgParams;
+    use crate::graph::VisitedSet;
+
+    #[test]
+    fn graph_index_search_is_exactly_beam_search() {
+        let ds = generate(Kind::DeepLike, 1200, 10, 8, 61);
+        let nsg = Nsg::build(
+            &ds.data,
+            ds.dim,
+            &NsgParams { r: 16, knn_k: 24, threads: 2, seed: 5, ..Default::default() },
+        );
+        let gi = GraphIndex::from_nsg(&nsg, &ds.data, "roc").unwrap();
+        let p = QueryParams { k: 5, nprobe: 0, ef: 32 };
+        let mut scratch = AnnScratch::default();
+        let mut out = Vec::new();
+        let mut visited = VisitedSet::default();
+        let mut neigh = Vec::new();
+        for qi in 0..ds.nq {
+            gi.search_into(ds.query(qi), &p, &mut scratch, &mut out);
+            let want = beam_search(
+                gi.store(),
+                &ds.data,
+                ds.dim,
+                gi.entries(),
+                ds.query(qi),
+                32,
+                5,
+                &mut visited,
+                &mut neigh,
+            );
+            assert_eq!(out, want, "query {qi}");
+        }
+        let s = gi.stats();
+        assert_eq!(s.kind, IndexKind::Nsg);
+        assert_eq!(s.link_bits, gi.store().id_bits());
+        assert!(s.link_bits > 0);
+        assert_eq!(s.edges, gi.store().num_edges());
+        // bits_per_id for a graph is the paper's bits-per-edge-id.
+        assert!((s.bits_per_id() - gi.store().bits_per_edge()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn whole_structure_codec_is_rejected_for_adjacency() {
+        let ds = generate(Kind::DeepLike, 300, 1, 8, 62);
+        let nsg = Nsg::build(
+            &ds.data,
+            ds.dim,
+            &NsgParams { r: 8, knn_k: 16, threads: 2, seed: 5, ..Default::default() },
+        );
+        let err = GraphIndex::from_nsg(&nsg, &ds.data, "zuckerli").expect_err("not per-list");
+        assert!(format!("{err}").contains("per-list"), "{err}");
+        let err = GraphIndex::from_nsg(&nsg, &ds.data, "rocc").expect_err("typo");
+        assert!(format!("{err}").contains("valid names"), "{err}");
+    }
+}

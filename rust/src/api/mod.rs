@@ -1,0 +1,296 @@
+//! The unified public API of the ANN system: one trait ([`AnnIndex`]),
+//! one on-disk container format ([`persist`]), one serving path.
+//!
+//! Every backend — the IVF index with any id codec, and the graph indexes
+//! wrapped by [`GraphIndex`] — implements [`AnnIndex`], so the batching
+//! coordinator, the QPS bench and the CLI `build`/`serve` subcommands are
+//! written once against `dyn AnnIndex` instead of one ad-hoc API per
+//! index family. The paper's storage claim (compressed ids cut index
+//! size, §4) only pays off if an index can be saved, reopened and served
+//! without re-building or re-expanding its compressed payloads; that is
+//! what [`AnnIndex::save`]/[`persist::open`] provide: the already-encoded
+//! streams are written verbatim and reopened as slices into the file
+//! buffer.
+
+pub mod graph_index;
+pub mod persist;
+
+pub use graph_index::{GraphFamily, GraphIndex};
+
+use crate::graph::VisitedSet;
+use crate::index::{IvfIndex, SearchParams, SearchScratch};
+use anyhow::Result;
+use std::path::Path;
+
+/// Which index family a backend belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IndexKind {
+    Ivf,
+    Nsg,
+    Hnsw,
+}
+
+impl IndexKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            IndexKind::Ivf => "ivf",
+            IndexKind::Nsg => "nsg",
+            IndexKind::Hnsw => "hnsw",
+        }
+    }
+}
+
+/// Storage accounting for one index, split the way the paper reports it:
+/// vector-id payload (`id_bits`, the Table-1 numerator), vector payload
+/// (`code_bits`: raw floats or PQ codes, possibly entropy-coded) and
+/// graph adjacency payload (`link_bits`, the NSG/HNSW rows).
+#[derive(Clone, Debug)]
+pub struct IndexStats {
+    pub kind: IndexKind,
+    pub n: usize,
+    pub dim: usize,
+    /// Graph edge count (0 for IVF) — the denominator of the paper's
+    /// NSG bits/id rows.
+    pub edges: u64,
+    /// Canonical codec spec of the compressed payload (id store for IVF,
+    /// adjacency store for graphs).
+    pub codec: String,
+    pub id_bits: u64,
+    pub code_bits: u64,
+    pub link_bits: u64,
+}
+
+impl IndexStats {
+    pub fn total_bits(&self) -> u64 {
+        self.id_bits + self.code_bits + self.link_bits
+    }
+
+    /// Total payload size in bytes (what the container file should weigh,
+    /// within header overhead).
+    pub fn payload_bytes(&self) -> u64 {
+        self.total_bits().div_ceil(8)
+    }
+
+    /// Bits per vector id (Table-1 metric): `id_bits / n` for IVF; for
+    /// graphs, bits per *edge* id (`link_bits / edges`), following the
+    /// paper's NSG rows.
+    pub fn bits_per_id(&self) -> f64 {
+        if self.kind == IndexKind::Ivf {
+            self.id_bits as f64 / (self.n.max(1)) as f64
+        } else {
+            self.link_bits as f64 / (self.edges.max(1)) as f64
+        }
+    }
+}
+
+/// Backend-generic query parameters. IVF backends read `nprobe`, graph
+/// backends read `ef`; both honor `k`. Carrying the union keeps the
+/// serving config one struct for every backend behind `dyn AnnIndex`.
+#[derive(Clone, Debug)]
+pub struct QueryParams {
+    /// Number of results to return.
+    pub k: usize,
+    /// IVF: how many inverted lists to probe.
+    pub nprobe: usize,
+    /// Graphs: beam width of the best-first search.
+    pub ef: usize,
+}
+
+impl Default for QueryParams {
+    fn default() -> Self {
+        QueryParams { k: 10, nprobe: 16, ef: 64 }
+    }
+}
+
+impl QueryParams {
+    /// The IVF view of these parameters.
+    pub fn ivf(&self) -> SearchParams {
+        SearchParams { nprobe: self.nprobe, k: self.k }
+    }
+}
+
+/// Reusable per-worker scratch covering every backend: the IVF search
+/// scratch (coarse buffer, LUT, top-k, decode state) and the graph-search
+/// state (epoch visited-set + neighbor decode buffer). Both halves are
+/// cheap when unused, so one `AnnScratch` per serving worker handles any
+/// `dyn AnnIndex` without downcasting.
+#[derive(Default)]
+pub struct AnnScratch {
+    pub ivf: SearchScratch,
+    pub visited: VisitedSet,
+    pub neighbors: Vec<u32>,
+}
+
+/// Coarse-stage description a backend exposes to batched engines: the
+/// coordinator ships `‖q − c‖²` for a whole batch through PJRT (or the
+/// fused rust fallback) and hands each query its row. Backends without a
+/// coarse stage (graphs) return `None` and are served query-at-a-time.
+pub struct CoarseInfo<'a> {
+    pub centroids: &'a [f32],
+    pub norms: &'a [f32],
+    pub k: usize,
+}
+
+/// The one index trait every backend implements and every serving path
+/// consumes.
+///
+/// Contract: `search_into` replaces `out` with up to `params.k`
+/// `(distance, id)` pairs in ascending distance order, and with a warmed
+/// `scratch` performs no allocation beyond first-touch scratch growth
+/// (IVF backends; graph backends currently allocate inside beam search).
+pub trait AnnIndex: Send + Sync {
+    fn kind(&self) -> IndexKind;
+
+    /// Vector dimensionality.
+    fn dim(&self) -> usize;
+
+    /// Number of indexed vectors.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Storage accounting (id/code/link bits).
+    fn stats(&self) -> IndexStats;
+
+    /// Search `query`, replacing `out` with the results.
+    fn search_into(
+        &self,
+        query: &[f32],
+        params: &QueryParams,
+        scratch: &mut AnnScratch,
+        out: &mut Vec<(f32, u32)>,
+    );
+
+    /// Batched-coarse hook; `None` for backends without a coarse stage.
+    fn coarse_info(&self) -> Option<CoarseInfo<'_>> {
+        None
+    }
+
+    /// Search with externally computed coarse distances (the batched
+    /// serving path). Backends without a coarse stage ignore `coarse`.
+    fn search_with_coarse_into(
+        &self,
+        query: &[f32],
+        _coarse: &[f32],
+        params: &QueryParams,
+        scratch: &mut AnnScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        self.search_into(query, params, scratch, out);
+    }
+
+    /// Serialize to the zann container format ([`persist`]): compressed
+    /// payloads verbatim, reopenable zero-copy.
+    fn to_bytes(&self) -> Result<Vec<u8>>;
+
+    /// Save to `path`; returns the number of bytes written.
+    fn save(&self, path: &Path) -> Result<u64> {
+        persist::save(self, path)
+    }
+}
+
+impl AnnIndex for IvfIndex {
+    fn kind(&self) -> IndexKind {
+        IndexKind::Ivf
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn stats(&self) -> IndexStats {
+        IndexStats {
+            kind: IndexKind::Ivf,
+            n: self.n,
+            dim: self.dim,
+            edges: 0,
+            codec: self.id_codec_name().to_string(),
+            id_bits: self.id_bits(),
+            code_bits: self.code_bits(),
+            link_bits: 0,
+        }
+    }
+
+    fn search_into(
+        &self,
+        query: &[f32],
+        params: &QueryParams,
+        scratch: &mut AnnScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        IvfIndex::search_into(self, query, &params.ivf(), &mut scratch.ivf, out);
+    }
+
+    fn coarse_info(&self) -> Option<CoarseInfo<'_>> {
+        Some(CoarseInfo { centroids: &self.centroids, norms: &self.centroid_norms, k: self.k })
+    }
+
+    fn search_with_coarse_into(
+        &self,
+        query: &[f32],
+        coarse: &[f32],
+        params: &QueryParams,
+        scratch: &mut AnnScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        IvfIndex::search_with_coarse_into(self, query, coarse, &params.ivf(), &mut scratch.ivf, out);
+    }
+
+    fn to_bytes(&self) -> Result<Vec<u8>> {
+        self.to_container_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{generate, Kind};
+    use crate::index::IvfBuildParams;
+
+    #[test]
+    fn ivf_trait_search_matches_inherent() {
+        let ds = generate(Kind::DeepLike, 2000, 20, 8, 51);
+        let idx = IvfIndex::build(
+            &ds.data,
+            ds.dim,
+            &IvfBuildParams { k: 16, id_codec: "roc".into(), threads: 2, ..Default::default() },
+        );
+        let p = QueryParams { k: 5, nprobe: 4, ef: 0 };
+        let dyn_idx: &dyn AnnIndex = &idx;
+        let mut scratch = AnnScratch::default();
+        let mut got = Vec::new();
+        let mut inherent_scratch = SearchScratch::default();
+        for qi in 0..ds.nq {
+            dyn_idx.search_into(ds.query(qi), &p, &mut scratch, &mut got);
+            let want = idx.search(ds.query(qi), &p.ivf(), &mut inherent_scratch);
+            assert_eq!(got, want, "query {qi}");
+        }
+        assert_eq!(dyn_idx.kind(), IndexKind::Ivf);
+        assert_eq!(dyn_idx.len(), 2000);
+        assert_eq!(dyn_idx.dim(), 8);
+        assert!(dyn_idx.coarse_info().is_some());
+    }
+
+    #[test]
+    fn stats_accounting_is_consistent() {
+        let ds = generate(Kind::DeepLike, 1500, 1, 8, 52);
+        let idx = IvfIndex::build(
+            &ds.data,
+            ds.dim,
+            &IvfBuildParams { k: 8, id_codec: "ef".into(), threads: 2, ..Default::default() },
+        );
+        let s = AnnIndex::stats(&idx);
+        assert_eq!(s.codec, "ef");
+        assert_eq!(s.id_bits, idx.id_bits());
+        assert_eq!(s.code_bits, idx.code_bits());
+        assert_eq!(s.link_bits, 0);
+        assert_eq!(s.total_bits(), s.id_bits + s.code_bits);
+        assert!((s.bits_per_id() - idx.bits_per_id()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,261 @@
+//! The zann on-disk container: a versioned, section-tagged binary format
+//! shared by every [`AnnIndex`] backend.
+//!
+//! ```text
+//! byte 0..4   magic  b"ZANN"
+//! byte 4..6   format version (u16 LE, currently 1)
+//! byte 6      index kind (1 = IVF, 2 = graph)
+//! byte 7      reserved (0)
+//! then until EOF, sections:
+//!   [tag: 4 ascii bytes] [payload length: u64 LE] [payload]
+//! ```
+//!
+//! Design rule: **compressed payloads are stored verbatim**. The id
+//! streams (and entropy-coded PQ columns / adjacency streams) produced at
+//! build time are written byte-for-byte, and `open` turns the sections
+//! back into [`crate::util::Blobs`] over the borrowed file buffer — no
+//! stream is decoded, re-encoded or even copied blob-by-blob. Only
+//! derived acceleration data (centroid norms) is recomputed, so file size
+//! ≈ `id_bits/8 + code_bits/8 + link_bits/8` plus header/offset-table
+//! overhead, and reopening is O(file read), not O(re-encode).
+//!
+//! Unknown sections are skipped on read (forward-compatible additions);
+//! unknown versions and kinds are hard errors.
+
+use crate::api::{AnnIndex, GraphIndex};
+use crate::index::IvfIndex;
+use crate::util::bits::read_bits_at;
+use crate::util::bytes::Bytes;
+use anyhow::{bail, ensure, Context as _, Result};
+use std::path::Path;
+
+/// File magic.
+pub const MAGIC: [u8; 4] = *b"ZANN";
+/// Container format version this build reads and writes.
+pub const VERSION: u16 = 1;
+/// Kind tag: IVF index.
+pub const KIND_IVF: u8 = 1;
+/// Kind tag: graph index (NSG/HNSW; family is in the HEAD section).
+pub const KIND_GRAPH: u8 = 2;
+
+/// Start a container file: magic + version + kind + reserved byte.
+pub fn file_header(kind: u8) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(kind);
+    out.push(0);
+    out
+}
+
+/// Append one tagged section.
+pub fn push_section(out: &mut Vec<u8>, tag: &[u8; 4], payload: &[u8]) {
+    out.extend_from_slice(tag);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+fn tag_str(tag: &[u8; 4]) -> String {
+    String::from_utf8_lossy(tag).into_owned()
+}
+
+/// A parsed container: kind byte + tagged sections, each a [`Bytes`]
+/// sub-region of the one file buffer.
+pub struct Container {
+    pub kind: u8,
+    sections: Vec<([u8; 4], Bytes)>,
+}
+
+impl Container {
+    /// Parse the header and section table. Every framing problem — short
+    /// file, bad magic, unsupported version, truncated section — is a
+    /// structured error, never a panic.
+    pub fn parse(region: &Bytes) -> Result<Container> {
+        let s = region.as_slice();
+        ensure!(s.len() >= 8, "file too short ({} bytes) for the zann header", s.len());
+        ensure!(
+            s[0..4] == MAGIC,
+            "bad magic {:02x?} (not a zann index file)",
+            &s[0..4]
+        );
+        let version = u16::from_le_bytes([s[4], s[5]]);
+        ensure!(
+            version == VERSION,
+            "unsupported container version {version} (this build reads version {VERSION})"
+        );
+        let kind = s[6];
+        let mut sections = Vec::new();
+        let mut pos = 8usize;
+        while pos < s.len() {
+            ensure!(
+                s.len() - pos >= 12,
+                "truncated section header at byte {pos} of {}",
+                s.len()
+            );
+            let tag: [u8; 4] = s[pos..pos + 4].try_into().unwrap();
+            let len = u64::from_le_bytes(s[pos + 4..pos + 12].try_into().unwrap());
+            ensure!(
+                len <= (s.len() - pos - 12) as u64,
+                "section {} claims {len} bytes but only {} remain",
+                tag_str(&tag),
+                s.len() - pos - 12
+            );
+            pos += 12;
+            let body = region.slice(pos, len as usize)?;
+            sections.push((tag, body));
+            pos += len as usize;
+        }
+        Ok(Container { kind, sections })
+    }
+
+    /// Look up a section by tag (first match; later duplicates are
+    /// ignored, like unknown tags).
+    pub fn section(&self, tag: &[u8; 4]) -> Result<Bytes> {
+        self.sections
+            .iter()
+            .find(|(t, _)| t == tag)
+            .map(|(_, b)| b.clone())
+            .with_context(|| format!("missing section {:?}", tag_str(tag)))
+    }
+}
+
+/// Pack PQ codes at exactly `width` bits each (LSB-first, matching
+/// [`read_bits_at`]) — the file stores `code_bits/8` bytes, not padded
+/// u16 words.
+pub fn pack_codes(codes: &[u16], width: u32) -> Vec<u8> {
+    debug_assert!((1..=16).contains(&width));
+    let mut out = Vec::with_capacity((codes.len() * width as usize).div_ceil(8));
+    let mut acc: u64 = 0;
+    let mut nb: u32 = 0;
+    for &c in codes {
+        acc |= (c as u64) << nb;
+        nb += width;
+        while nb >= 8 {
+            out.push((acc & 0xff) as u8);
+            acc >>= 8;
+            nb -= 8;
+        }
+    }
+    if nb > 0 {
+        out.push((acc & 0xff) as u8);
+    }
+    out
+}
+
+/// Inverse of [`pack_codes`]. Validates the buffer length up front so a
+/// truncated section is an error, not an out-of-bounds read.
+pub fn unpack_codes(bytes: &[u8], width: u32, count: usize) -> Result<Vec<u16>> {
+    ensure!((1..=16).contains(&width), "bad packed-code width {width}");
+    let need = (count * width as usize).div_ceil(8);
+    ensure!(
+        bytes.len() >= need,
+        "packed code section holds {} bytes, need {need} for {count} codes",
+        bytes.len()
+    );
+    Ok((0..count).map(|i| read_bits_at(bytes, i * width as usize, width) as u16).collect())
+}
+
+/// Serialize `index` and write it to `path`; returns bytes written.
+/// Generic over `?Sized` so the [`AnnIndex::save`] default method works
+/// for concrete backends and `dyn AnnIndex` alike.
+pub fn save<T: AnnIndex + ?Sized>(index: &T, path: &Path) -> Result<u64> {
+    let bytes = index.to_bytes()?;
+    std::fs::write(path, &bytes).with_context(|| format!("writing {}", path.display()))?;
+    Ok(bytes.len() as u64)
+}
+
+/// Open a saved index of any kind from `path`.
+pub fn open(path: &Path) -> Result<Box<dyn AnnIndex>> {
+    let buf = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    open_bytes(buf).with_context(|| format!("opening {}", path.display()))
+}
+
+/// Open a saved index of any kind from an in-memory buffer. The buffer
+/// becomes the backing store of every compressed section (zero-copy).
+pub fn open_bytes(buf: Vec<u8>) -> Result<Box<dyn AnnIndex>> {
+    let region = Bytes::from_vec(buf);
+    let c = Container::parse(&region)?;
+    match c.kind {
+        KIND_IVF => Ok(Box::new(IvfIndex::from_container(&c)?)),
+        KIND_GRAPH => Ok(Box::new(GraphIndex::from_container(&c)?)),
+        other => bail!("unknown index kind tag {other}"),
+    }
+}
+
+/// Typed open for IVF containers (tests, tooling that needs the concrete
+/// index API).
+pub fn open_ivf_bytes(buf: Vec<u8>) -> Result<IvfIndex> {
+    let region = Bytes::from_vec(buf);
+    let c = Container::parse(&region)?;
+    ensure!(c.kind == KIND_IVF, "container holds kind {} (expected an IVF index)", c.kind);
+    IvfIndex::from_container(&c)
+}
+
+/// Typed open for graph containers.
+pub fn open_graph_bytes(buf: Vec<u8>) -> Result<GraphIndex> {
+    let region = Bytes::from_vec(buf);
+    let c = Container::parse(&region)?;
+    ensure!(c.kind == KIND_GRAPH, "container holds kind {} (expected a graph index)", c.kind);
+    GraphIndex::from_container(&c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_and_sections_roundtrip() {
+        let mut f = file_header(KIND_IVF);
+        push_section(&mut f, b"AAAA", b"hello");
+        push_section(&mut f, b"BBBB", b"");
+        push_section(&mut f, b"CCCC", &[1, 2, 3]);
+        let c = Container::parse(&Bytes::from_vec(f)).unwrap();
+        assert_eq!(c.kind, KIND_IVF);
+        assert_eq!(c.section(b"AAAA").unwrap().as_slice(), b"hello");
+        assert_eq!(c.section(b"BBBB").unwrap().len(), 0);
+        assert_eq!(c.section(b"CCCC").unwrap().as_slice(), &[1, 2, 3]);
+        let err = c.section(b"DDDD").expect_err("missing tag");
+        assert!(format!("{err:?}").contains("missing section"), "{err:?}");
+    }
+
+    #[test]
+    fn framing_corruption_is_an_error_not_a_panic() {
+        let mut good = file_header(KIND_GRAPH);
+        push_section(&mut good, b"HEAD", &[7; 40]);
+
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        assert!(Container::parse(&Bytes::from_vec(bad)).is_err());
+        // Future version.
+        let mut bad = good.clone();
+        bad[4] = 99;
+        let err = Container::parse(&Bytes::from_vec(bad)).unwrap_err();
+        assert!(format!("{err}").contains("version"), "{err}");
+        // Truncations at every prefix length must error (or parse to a
+        // container whose sections are intact prefixes — never panic).
+        for cut in 0..good.len() {
+            let _ = Container::parse(&Bytes::from_vec(good[..cut].to_vec()));
+        }
+        assert!(Container::parse(&Bytes::from_vec(good[..good.len() - 1].to_vec())).is_err());
+        // Section length pointing past EOF.
+        let mut bad = good.clone();
+        let len_at = 8 + 4;
+        bad[len_at] = 0xff;
+        assert!(Container::parse(&Bytes::from_vec(bad)).is_err());
+    }
+
+    #[test]
+    fn packed_codes_roundtrip_at_every_width() {
+        for width in 1..=16u32 {
+            let mask = if width == 16 { u16::MAX } else { (1u16 << width) - 1 };
+            let codes: Vec<u16> =
+                (0..257u32).map(|i| (i.wrapping_mul(2654435761) as u16) & mask).collect();
+            let packed = pack_codes(&codes, width);
+            assert_eq!(packed.len(), (codes.len() * width as usize).div_ceil(8));
+            let back = unpack_codes(&packed, width, codes.len()).unwrap();
+            assert_eq!(back, codes, "width {width}");
+            assert!(unpack_codes(&packed[..packed.len() - 1], width, codes.len()).is_err());
+        }
+    }
+}

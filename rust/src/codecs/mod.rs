@@ -26,7 +26,10 @@ pub mod zuckerli;
 pub mod pcodes;
 
 use crate::ans::Ans;
+use crate::codecs::rec::RecModel;
+use crate::codecs::wavelet::WtStorage;
 use crate::fenwick::Fenwick;
+use anyhow::{bail, Result};
 
 /// A compressed list plus its exact size in bits.
 #[derive(Clone, Debug)]
@@ -93,15 +96,88 @@ pub trait IdCodec: Send + Sync {
     }
 }
 
-/// Look up a per-list codec by the names used in benches/CLI.
-pub fn codec_by_name(name: &str) -> Option<Box<dyn IdCodec>> {
-    match name {
-        "unc64" | "unc" => Some(Box::new(fixed::Unc64)),
-        "unc32" => Some(Box::new(fixed::Unc32)),
-        "compact" | "comp" => Some(Box::new(fixed::Compact)),
-        "ef" => Some(Box::new(elias_fano::EliasFano)),
-        "roc" => Some(Box::new(roc::Roc)),
-        _ => None,
+/// A parsed codec specification — the single registry covering both
+/// per-list codecs (one stream per inverted/friend list) and
+/// whole-structure codecs (wavelet trees over the assignment sequence,
+/// whole-graph REC/Zuckerli blobs).
+///
+/// Parsing is fallible with an actionable error (the valid-name list), so
+/// CLI/bench boundaries can report typos instead of panicking; the
+/// canonical [`CodecSpec::name`] is what gets persisted in index headers
+/// and printed in bench labels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecSpec {
+    /// One stream per list (`unc64`, `unc32`, `compact`, `ef`, `roc`).
+    PerList(&'static str),
+    /// Wavelet tree over the whole IVF assignment sequence (`wt`, `wt1`).
+    Wavelet(WtStorage),
+    /// Whole-graph Random Edge Coding (`rec`, `rec-uniform`).
+    Rec(RecModel),
+    /// Whole-graph Zuckerli-style baseline (`zuckerli`).
+    Zuckerli,
+}
+
+impl CodecSpec {
+    /// Every canonical codec name, for error messages and docs.
+    pub const VALID: &'static [&'static str] = &[
+        "unc64", "unc32", "compact", "ef", "roc", "wt", "wt1", "rec", "rec-uniform", "zuckerli",
+    ];
+
+    /// Parse a codec name (canonical or alias) into a spec.
+    pub fn parse(name: &str) -> Result<CodecSpec> {
+        Ok(match name {
+            "unc64" | "unc" => CodecSpec::PerList("unc64"),
+            "unc32" => CodecSpec::PerList("unc32"),
+            "compact" | "comp" => CodecSpec::PerList("compact"),
+            "ef" => CodecSpec::PerList("ef"),
+            "roc" => CodecSpec::PerList("roc"),
+            "wt" => CodecSpec::Wavelet(WtStorage::Flat),
+            "wt1" => CodecSpec::Wavelet(WtStorage::Rrr),
+            "rec" => CodecSpec::Rec(RecModel::PolyaUrn),
+            "rec-uniform" => CodecSpec::Rec(RecModel::Uniform),
+            "zuckerli" | "zuck" => CodecSpec::Zuckerli,
+            other => bail!(
+                "unknown codec {other:?}; valid names: {}",
+                CodecSpec::VALID.join(", ")
+            ),
+        })
+    }
+
+    /// Canonical name (what headers store and tables print).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodecSpec::PerList(n) => n,
+            CodecSpec::Wavelet(WtStorage::Flat) => "wt",
+            CodecSpec::Wavelet(WtStorage::Rrr) => "wt1",
+            CodecSpec::Rec(RecModel::PolyaUrn) => "rec",
+            CodecSpec::Rec(RecModel::Uniform) => "rec-uniform",
+            CodecSpec::Zuckerli => "zuckerli",
+        }
+    }
+
+    /// Whether this spec names a per-list codec (usable for one inverted
+    /// list or friend list at a time — the online setting).
+    pub fn is_per_list(&self) -> bool {
+        matches!(self, CodecSpec::PerList(_))
+    }
+
+    /// Instantiate the per-list codec, or explain why this spec cannot be
+    /// used where one is required.
+    pub fn id_codec(&self) -> Result<Box<dyn IdCodec>> {
+        match self {
+            CodecSpec::PerList("unc64") => Ok(Box::new(fixed::Unc64)),
+            CodecSpec::PerList("unc32") => Ok(Box::new(fixed::Unc32)),
+            CodecSpec::PerList("compact") => Ok(Box::new(fixed::Compact)),
+            CodecSpec::PerList("ef") => Ok(Box::new(elias_fano::EliasFano)),
+            CodecSpec::PerList("roc") => Ok(Box::new(roc::Roc)),
+            CodecSpec::PerList(other) => bail!("unregistered per-list codec {other:?}"),
+            other => bail!(
+                "codec {:?} is a whole-structure codec, not a per-list codec \
+                 (per-list names: {})",
+                other.name(),
+                PER_LIST_CODECS.join(", ")
+            ),
+        }
     }
 }
 
@@ -113,23 +189,46 @@ mod tests {
     use super::*;
 
     #[test]
-    fn unknown_names_are_rejected() {
-        for name in ["", "nope", "ROC", "roc ", "unc6", "elias", "wt", "wt1", "rec", "zuckerli"] {
-            assert!(codec_by_name(name).is_none(), "{name:?} should not resolve");
+    fn unknown_names_are_rejected_with_the_valid_list() {
+        for name in ["", "nope", "ROC", "roc ", "unc6", "elias", "wavelet"] {
+            let err = CodecSpec::parse(name).expect_err("should not resolve");
+            let msg = format!("{err}");
+            assert!(msg.contains("unknown codec"), "{name:?}: {msg}");
+            assert!(msg.contains("roc") && msg.contains("zuckerli"), "{name:?}: {msg}");
         }
     }
 
     #[test]
     fn aliases_resolve_to_canonical_codecs() {
-        assert_eq!(codec_by_name("unc").unwrap().name(), "unc64");
-        assert_eq!(codec_by_name("comp").unwrap().name(), "compact");
+        assert_eq!(CodecSpec::parse("unc").unwrap().name(), "unc64");
+        assert_eq!(CodecSpec::parse("comp").unwrap().name(), "compact");
+        assert_eq!(CodecSpec::parse("zuck").unwrap().name(), "zuckerli");
+    }
+
+    #[test]
+    fn every_valid_name_parses_to_itself() {
+        for name in CodecSpec::VALID {
+            let spec = CodecSpec::parse(name).unwrap_or_else(|e| panic!("{e}"));
+            assert_eq!(spec.name(), *name, "canonical name must round-trip");
+        }
+    }
+
+    #[test]
+    fn whole_structure_specs_refuse_per_list_use() {
+        for name in ["wt", "wt1", "rec", "rec-uniform", "zuckerli"] {
+            let spec = CodecSpec::parse(name).unwrap();
+            assert!(!spec.is_per_list());
+            let err = spec.id_codec().expect_err("must not build an IdCodec");
+            assert!(format!("{err}").contains("per-list"), "{name}: {err}");
+        }
     }
 
     #[test]
     fn per_list_codecs_all_resolve_and_roundtrip() {
         for (i, name) in PER_LIST_CODECS.iter().enumerate() {
-            let codec = codec_by_name(name)
-                .unwrap_or_else(|| panic!("registry missing {name}"));
+            let spec = CodecSpec::parse(name).unwrap_or_else(|e| panic!("{e}"));
+            assert!(spec.is_per_list());
+            let codec = spec.id_codec().unwrap();
             assert_eq!(codec.name(), *name, "canonical name must match registry key");
             testutil::check_roundtrip(codec.as_ref(), 0xc0dec + i as u64);
         }
@@ -140,7 +239,7 @@ mod tests {
         // Every registered name resolves; the decode of an empty list is a
         // no-op for each of them.
         for name in PER_LIST_CODECS {
-            let codec = codec_by_name(name).unwrap();
+            let codec = CodecSpec::parse(name).unwrap().id_codec().unwrap();
             let enc = codec.encode(&[], 1000);
             let mut out = Vec::new();
             codec.decode(&enc.bytes, 1000, 0, &mut out);

@@ -68,6 +68,22 @@ impl ClusterCodeCodec {
         out: &mut Vec<u16>,
         scratch: &mut DecodeScratch,
     ) {
+        self.decode_columns_into(enc.columns.iter().map(|c| c.as_slice()), n, out, scratch);
+    }
+
+    /// Like [`ClusterCodeCodec::decode_into`] but over any source of the
+    /// `m` column blobs — the persisted index stores all clusters'
+    /// columns end-to-end in one shared buffer ([`crate::util::Blobs`])
+    /// and feeds the slices straight from the mapped file region.
+    pub fn decode_columns_into<'a, I>(
+        &self,
+        columns: I,
+        n: usize,
+        out: &mut Vec<u16>,
+        scratch: &mut DecodeScratch,
+    ) where
+        I: IntoIterator<Item = &'a [u8]>,
+    {
         out.clear();
         out.resize(n * self.m, 0);
         let coder = ReverseAdaptiveCoder::new(self.ksub);
@@ -78,10 +94,13 @@ impl ClusterCodeCodec {
         }
         let weights = urn.as_mut().expect("urn installed above");
         let m = self.m;
-        for (j, blob) in enc.columns.iter().enumerate() {
+        let mut cols = 0usize;
+        for (j, blob) in columns.into_iter().enumerate() {
             ans.read_from(blob).expect("corrupt pcodes blob");
             coder.decode_with(ans, n, weights, |i, v| out[i * m + j] = v as u16);
+            cols += 1;
         }
+        debug_assert_eq!(cols, m, "expected one blob per sub-quantizer");
     }
 
     /// Ideal (model) bits for the cluster — used for rate accounting.

@@ -1,4 +1,5 @@
-//! L3 serving coordinator: request router, dynamic batcher, worker pool.
+//! L3 serving coordinator: request router, dynamic batcher, worker pool —
+//! generic over any [`AnnIndex`] backend.
 //!
 //! Topology (std threads + channels; the offline vendor set has no tokio):
 //!
@@ -11,13 +12,17 @@
 //! ```
 //!
 //! The batcher accumulates queries up to the artifact batch size (or a
-//! wait deadline), ships one PJRT call for the whole batch — the L2/L1
-//! compute — and fans the per-query coarse rows out to scan workers that
-//! walk the compressed inverted lists (the paper's id-decode path).
+//! wait deadline). Backends that expose a coarse stage
+//! ([`AnnIndex::coarse_info`] — IVF) get one PJRT call for the whole
+//! batch — the L2/L1 compute — and the per-query coarse rows fan out to
+//! scan workers through [`AnnIndex::search_with_coarse_into`]. Backends
+//! without one (graphs) skip the coarse hop and are served query-at-a-time
+//! by the same worker pool, so batching, metrics and reply plumbing are
+//! one code path for every index family.
 
 pub mod metrics;
 
-use crate::index::{IvfIndex, SearchParams, SearchScratch};
+use crate::api::{AnnIndex, AnnScratch, QueryParams};
 use crate::runtime::EngineHandle;
 use crate::util::pool::default_threads;
 use anyhow::Result;
@@ -46,7 +51,9 @@ pub struct ServeConfig {
     pub batch_size: usize,
     /// Max time the batcher waits to fill a batch.
     pub max_wait: Duration,
-    pub search: SearchParams,
+    /// Backend-generic search parameters (IVF reads `nprobe`, graphs
+    /// read `ef`).
+    pub search: QueryParams,
     pub scan_threads: usize,
 }
 
@@ -55,7 +62,7 @@ impl Default for ServeConfig {
         ServeConfig {
             batch_size: 64,
             max_wait: Duration::from_millis(2),
-            search: SearchParams::default(),
+            search: QueryParams::default(),
             scan_threads: default_threads(),
         }
     }
@@ -101,17 +108,23 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start serving `index`. `engine` may be `None` (pure-rust coarse).
-    pub fn start(index: Arc<IvfIndex>, engine: Option<EngineHandle>, cfg: ServeConfig) -> Coordinator {
+    /// Start serving `index` — any backend behind the [`AnnIndex`] trait
+    /// (a concrete `Arc<IvfIndex>` / `Arc<GraphIndex>` coerces at the
+    /// call site). `engine` may be `None` (pure-rust coarse); it is only
+    /// consulted for backends that expose a coarse stage.
+    pub fn start(
+        index: Arc<dyn AnnIndex>,
+        engine: Option<EngineHandle>,
+        cfg: ServeConfig,
+    ) -> Coordinator {
         let (tx, rx) = mpsc::channel::<Request>();
         let metrics = Arc::new(Metrics::default());
         let stop = Arc::new(AtomicBool::new(false));
         let m = metrics.clone();
         let s = stop.clone();
-        let centroids = Arc::new(index.centroids.clone());
         let batcher = std::thread::Builder::new()
             .name("zann-batcher".into())
-            .spawn(move || batcher_loop(rx, index, engine, centroids, cfg, m, s))
+            .spawn(move || batcher_loop(rx, index, engine, cfg, m, s))
             .expect("spawn batcher");
         Coordinator { client: CoordinatorClient { tx }, metrics, stop, batcher: Some(batcher) }
     }
@@ -136,18 +149,22 @@ impl Drop for Coordinator {
 
 fn batcher_loop(
     rx: mpsc::Receiver<Request>,
-    index: Arc<IvfIndex>,
+    index: Arc<dyn AnnIndex>,
     engine: Option<EngineHandle>,
-    centroids: Arc<Vec<f32>>,
     cfg: ServeConfig,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
 ) {
-    let dim = index.dim;
-    let k = index.k;
+    let dim = index.dim();
     let b = cfg.batch_size;
-    let scratches: Vec<Mutex<SearchScratch>> =
-        (0..cfg.scan_threads.max(1)).map(|_| Mutex::new(SearchScratch::default())).collect();
+    // Coarse-stage description, copied out once: backends without one
+    // (graphs) run the direct per-query path below.
+    let coarse_stage: Option<(Arc<Vec<f32>>, Vec<f32>, usize)> = index
+        .coarse_info()
+        .map(|ci| (Arc::new(ci.centroids.to_vec()), ci.norms.to_vec(), ci.k));
+    let k = coarse_stage.as_ref().map(|(_, _, k)| *k).unwrap_or(0);
+    let scratches: Vec<Mutex<AnnScratch>> =
+        (0..cfg.scan_threads.max(1)).map(|_| Mutex::new(AnnScratch::default())).collect();
     let mut batch: Vec<Request> = Vec::with_capacity(b);
     // One padded query matrix and one fallback output, reused every batch.
     let mut flat = vec![0f32; b * dim];
@@ -180,38 +197,44 @@ fn batcher_loop(
         // fixed-shape PJRT executable applies. `flat` is filled in place
         // and passed by reference everywhere — the engine-error path
         // reuses the same buffer instead of rebuilding the matrix.
-        for (i, r) in batch.iter().enumerate() {
-            flat[i * dim..(i + 1) * dim].copy_from_slice(&r.query);
+        if coarse_stage.is_some() {
+            for (i, r) in batch.iter().enumerate() {
+                flat[i * dim..(i + 1) * dim].copy_from_slice(&r.query);
+            }
+            flat[batch.len() * dim..].fill(0.0); // clear stale padding rows
         }
-        flat[batch.len() * dim..].fill(0.0); // clear stale padding rows
-        let engine_out = match &engine {
-            Some(h) => h.coarse(&flat, b, dim, centroids.clone(), k).ok(),
-            None => None,
+        let engine_out = match (&engine, &coarse_stage) {
+            (Some(h), Some((centroids, _, k))) => {
+                h.coarse(&flat, b, dim, centroids.clone(), *k).ok()
+            }
+            _ => None,
         };
-        let (coarse, via_pjrt): (&[f32], bool) = match &engine_out {
-            Some((v, via)) => (v.as_slice(), *via),
-            None => {
+        let (coarse, via_pjrt): (Option<&[f32]>, bool) = match (&coarse_stage, &engine_out) {
+            (None, _) => (None, false),
+            (Some(_), Some((v, via))) => (Some(v.as_slice()), *via),
+            (Some((centroids, norms, _)), None) => {
                 // Engine absent or errored: fused fallback, parallel over
                 // the batch, into the reusable output buffer. Centroids
                 // and norms come straight from the index — one source of
-                // truth, and bit-identical to `IvfIndex::search`.
+                // truth, and bit-identical to the backend's own coarse
+                // stage.
                 crate::runtime::coarse_fallback_into(
                     &flat,
                     b,
                     dim,
-                    &index.centroids,
-                    &index.centroid_norms,
+                    centroids,
+                    norms,
                     cfg.scan_threads,
                     &mut coarse_buf,
                 );
-                (coarse_buf.as_slice(), false)
+                (Some(coarse_buf.as_slice()), false)
             }
         };
 
         // Fan out scans to the worker pool.
         let nb = batch.len();
         let reqs: Vec<Request> = batch.drain(..).collect();
-        let index_ref = &index;
+        let index_ref = &*index;
         let sp = &cfg.search;
         let scratches_ref = &scratches;
         let metrics_ref = &metrics;
@@ -219,12 +242,17 @@ fn batcher_loop(
             let mut scratch = scratches_ref[t % scratches_ref.len()].lock().unwrap();
             for i in range {
                 let r = &reqs[i];
-                let results = index_ref.search_with_coarse(
-                    &r.query,
-                    &coarse[i * k..(i + 1) * k],
-                    sp,
-                    &mut scratch,
-                );
+                let mut results = Vec::with_capacity(sp.k);
+                match coarse {
+                    Some(c) => index_ref.search_with_coarse_into(
+                        &r.query,
+                        &c[i * k..(i + 1) * k],
+                        sp,
+                        &mut scratch,
+                        &mut results,
+                    ),
+                    None => index_ref.search_into(&r.query, sp, &mut scratch, &mut results),
+                }
                 let latency = r.submitted.elapsed();
                 metrics_ref.record_query(latency, via_pjrt);
                 let _ = r.reply.send(Response { results, latency, via_pjrt });
@@ -237,7 +265,7 @@ fn batcher_loop(
 mod tests {
     use super::*;
     use crate::datasets::{generate, groundtruth, Kind};
-    use crate::index::IvfBuildParams;
+    use crate::index::{IvfBuildParams, IvfIndex, SearchParams, SearchScratch};
 
     #[test]
     fn serves_correct_results_without_engine() {
@@ -250,7 +278,7 @@ mod tests {
         let cfg = ServeConfig {
             batch_size: 8,
             max_wait: Duration::from_millis(1),
-            search: SearchParams { nprobe: 8, k: 10 },
+            search: QueryParams { nprobe: 8, k: 10, ..Default::default() },
             scan_threads: 2,
         };
         let coord = Coordinator::start(idx.clone(), None, cfg);
@@ -286,7 +314,7 @@ mod tests {
         let cfg = ServeConfig {
             batch_size: 16,
             max_wait: Duration::from_millis(20),
-            search: SearchParams { nprobe: 4, k: 5 },
+            search: QueryParams { nprobe: 4, k: 5, ..Default::default() },
             scan_threads: 2,
         };
         let coord = Coordinator::start(idx, None, cfg);
@@ -294,6 +322,37 @@ mod tests {
         let _ = coord.client.search_many(queries).unwrap();
         // 30 requests in ≤ a handful of batches (not 30 singletons).
         assert!(coord.metrics.batches() <= 6, "batches={}", coord.metrics.batches());
+        coord.stop();
+    }
+
+    #[test]
+    fn serves_graph_backend_through_the_same_path() {
+        use crate::api::GraphIndex;
+        use crate::graph::nsg::{Nsg, NsgParams};
+        let ds = generate(Kind::DeepLike, 1000, 20, 8, 23);
+        let nsg = Nsg::build(
+            &ds.data,
+            ds.dim,
+            &NsgParams { r: 16, knn_k: 24, threads: 2, seed: 3, ..Default::default() },
+        );
+        let gi = Arc::new(GraphIndex::from_nsg(&nsg, &ds.data, "ef").unwrap());
+        let cfg = ServeConfig {
+            batch_size: 8,
+            max_wait: Duration::from_millis(1),
+            search: QueryParams { k: 5, ef: 32, nprobe: 0 },
+            scan_threads: 2,
+        };
+        let coord = Coordinator::start(gi.clone(), None, cfg);
+        let queries: Vec<Vec<f32>> = (0..ds.nq).map(|qi| ds.query(qi).to_vec()).collect();
+        let responses = coord.client.search_many(queries).unwrap();
+        let p = QueryParams { k: 5, ef: 32, nprobe: 0 };
+        let mut scratch = AnnScratch::default();
+        let mut want = Vec::new();
+        for (qi, resp) in responses.iter().enumerate() {
+            gi.search_into(ds.query(qi), &p, &mut scratch, &mut want);
+            assert_eq!(resp.results, want, "query {qi}");
+            assert!(!resp.via_pjrt, "graphs have no PJRT coarse stage");
+        }
         coord.stop();
     }
 }

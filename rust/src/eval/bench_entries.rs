@@ -274,7 +274,7 @@ fn default_bench_json_path() -> std::path::PathBuf {
 
 /// Serialize QPS rows to the `BENCH_search.json` schema (see
 /// docs/REPRODUCING.md): top-level run parameters plus one object per
-/// (codec, nprobe, threads) cell.
+/// (backend, codec, nprobe, threads) cell.
 fn qps_json(
     scale: &experiments::Scale,
     dataset: &str,
@@ -291,8 +291,9 @@ fn qps_json(
     s.push_str("  \"results\": [\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
-            "    {{\"codec\": \"{}\", \"nprobe\": {}, \"threads\": {}, \"qps\": {:.3}, \
-             \"mean_ms\": {:.6}, \"p50_ms\": {:.6}, \"p95_ms\": {:.6}}}{}\n",
+            "    {{\"backend\": \"{}\", \"codec\": \"{}\", \"nprobe\": {}, \"threads\": {}, \
+             \"qps\": {:.3}, \"mean_ms\": {:.6}, \"p50_ms\": {:.6}, \"p95_ms\": {:.6}}}{}\n",
+            r.backend,
             r.codec,
             r.nprobe,
             r.threads,
@@ -318,8 +319,14 @@ fn parse_usize_list(args: &Args, name: &str, default: &[usize]) -> Vec<usize> {
 }
 
 /// Search-throughput bench: QPS + p50/p95 latency, swept over
-/// codec × nprobe × threads, with a machine-readable `BENCH_search.json`
-/// written at the repo root (override with `--out`).
+/// backend/codec × nprobe × threads, with a machine-readable
+/// `BENCH_search.json` written at the repo root (override with `--out`).
+///
+/// `--codecs` accepts IVF store selectors (codec names, `pq`,
+/// `pq-compressed`) and graph backends (`nsg[:codec]`, `hnsw[:codec]`);
+/// the default sweep includes one graph row so the JSON always covers
+/// both families. Invalid specs are reported with the valid-name list
+/// up front — nothing runs, nothing panics.
 pub fn search_qps(args: &Args) {
     let scale = scale_from(args);
     let runs = args.usize("runs", 3);
@@ -327,28 +334,47 @@ pub fn search_qps(args: &Args) {
     let kind = datasets_from(args)[0];
     let codecs: Vec<String> = match args.get("codecs") {
         Some(s) => s.split(',').map(|v| v.trim().to_string()).collect(),
-        None => ["unc64", "compact", "ef", "roc", "pq-compressed"]
+        None => ["unc64", "compact", "ef", "roc", "pq-compressed", "nsg:roc"]
             .iter()
             .map(|s| s.to_string())
             .collect(),
     };
+    // Reject typos before any clustering/building happens. Exit
+    // non-zero so scripts keying on the bench's status see the failure.
+    for spec in &codecs {
+        if let Err(e) = experiments::validate_qps_spec(spec) {
+            eprintln!("bench-search-qps: bad --codecs entry {spec:?}: {e}");
+            std::process::exit(2);
+        }
+    }
     let nprobes = parse_usize_list(args, "nprobe", &[16]);
     let mut threads_list =
         parse_usize_list(args, "sweep-threads", &[1, crate::util::pool::default_threads()]);
     threads_list.dedup();
     println!(
         "== search QPS: N={}, {} queries, K={k}, {} (runs={runs}; Table-2 runtime \
-         columns as throughput) ==",
+         columns as throughput; graph backends capped at N={}) ==",
         scale.n,
         scale.nq,
-        kind.name()
+        kind.name(),
+        scale.n.min(experiments::QPS_GRAPH_N_CAP)
     );
     let spec_refs: Vec<&str> = codecs.iter().map(|s| s.as_str()).collect();
     let rows =
-        experiments::search_qps(&scale, kind, &spec_refs, k, &nprobes, &threads_list, runs);
-    let mut t = Table::new(&["codec", "nprobe", "threads", "QPS", "mean ms", "p50 ms", "p95 ms"]);
+        match experiments::search_qps(&scale, kind, &spec_refs, k, &nprobes, &threads_list, runs)
+        {
+            Ok(rows) => rows,
+            Err(e) => {
+                eprintln!("bench-search-qps: {e}");
+                std::process::exit(1);
+            }
+        };
+    let mut t = Table::new(&[
+        "backend", "codec", "nprobe/ef", "threads", "QPS", "mean ms", "p50 ms", "p95 ms",
+    ]);
     for r in &rows {
         t.row(vec![
+            r.backend.clone(),
             r.codec.clone(),
             r.nprobe.to_string(),
             r.threads.to_string(),
@@ -397,6 +423,7 @@ mod tests {
         let scale = experiments::Scale { n: 100, nq: 10, dim: 4, seed: 1, threads: 2 };
         let rows = vec![
             experiments::QpsRow {
+                backend: "ivf".into(),
                 codec: "roc".into(),
                 nprobe: 4,
                 threads: 2,
@@ -406,7 +433,8 @@ mod tests {
                 p95_ms: 0.9,
             },
             experiments::QpsRow {
-                codec: "pq-compressed".into(),
+                backend: "nsg".into(),
+                codec: "nsg:roc".into(),
                 nprobe: 8,
                 threads: 1,
                 qps: 50.5,
@@ -418,11 +446,12 @@ mod tests {
         let s = qps_json(&scale, "deep-like", 16, &rows);
         for key in [
             "\"bench\"", "\"search_qps\"", "\"dataset\"", "\"n\"", "\"nq\"", "\"dim\"",
-            "\"k\"", "\"results\"", "\"codec\"", "\"nprobe\"", "\"threads\"", "\"qps\"",
-            "\"mean_ms\"", "\"p50_ms\"", "\"p95_ms\"",
+            "\"k\"", "\"results\"", "\"backend\"", "\"codec\"", "\"nprobe\"", "\"threads\"",
+            "\"qps\"", "\"mean_ms\"", "\"p50_ms\"", "\"p95_ms\"",
         ] {
             assert!(s.contains(key), "missing {key} in\n{s}");
         }
+        assert!(s.contains("\"nsg\""), "graph backend row must carry its family:\n{s}");
         // Structurally valid enough for json.load: balanced braces, no
         // trailing comma before the array close.
         assert_eq!(s.matches('{').count(), s.matches('}').count());

@@ -379,10 +379,13 @@ pub fn fig3(scale: &Scale, kind: Kind, ms: &[usize]) -> Vec<Fig3Point> {
     out
 }
 
-/// One row of the search-throughput bench: a (codec, nprobe, threads)
-/// cell with QPS and per-query latency percentiles.
+/// One row of the search-throughput bench: a (backend, spec, nprobe,
+/// threads) cell with QPS and per-query latency percentiles.
 pub struct QpsRow {
+    /// Index family serving the row: `ivf`, `nsg` or `hnsw`.
+    pub backend: String,
     pub codec: String,
+    /// The swept breadth knob: IVF probes, or the graph beam width `ef`.
     pub nprobe: usize,
     pub threads: usize,
     pub qps: f64,
@@ -402,10 +405,74 @@ pub fn qps_variant(spec: &str) -> (String, VectorMode) {
     }
 }
 
-/// Search-throughput sweep: codec × nprobe × threads over one dataset,
-/// one shared coarse clustering. Per-query latencies are measured inside
-/// the workers (reusable scratch + result buffer, i.e. the allocation-free
-/// `search_into` path); QPS is the whole-batch wall rate, best of `runs`.
+/// A parsed `--codecs` entry: either an IVF store selector or a graph
+/// backend (`nsg[:codec]` / `hnsw[:codec]`, defaulting to ROC links).
+enum QpsBackend {
+    Ivf { id_codec: String, vectors: VectorMode },
+    Graph { family: &'static str, codec: String },
+}
+
+fn parse_qps_spec(spec: &str) -> anyhow::Result<QpsBackend> {
+    use crate::codecs::CodecSpec;
+    let graph = |family: &'static str, codec: &str| -> anyhow::Result<QpsBackend> {
+        let parsed = CodecSpec::parse(codec)?;
+        anyhow::ensure!(
+            parsed.is_per_list(),
+            "graph backends store per-node streams; {:?} is not a per-list codec",
+            parsed.name()
+        );
+        Ok(QpsBackend::Graph { family, codec: parsed.name().to_string() })
+    };
+    match spec.split_once(':') {
+        Some(("nsg", codec)) => graph("nsg", codec),
+        Some(("hnsw", codec)) => graph("hnsw", codec),
+        Some((family, _)) => anyhow::bail!(
+            "unknown backend {family:?}; valid specs: a codec name \
+             ({}), pq, pq-compressed, nsg[:codec], hnsw[:codec]",
+            CodecSpec::VALID.join(", ")
+        ),
+        None => match spec {
+            "nsg" => graph("nsg", "roc"),
+            "hnsw" => graph("hnsw", "roc"),
+            "pq" | "pq-compressed" | "pqc" => {
+                let (id_codec, vectors) = qps_variant(spec);
+                Ok(QpsBackend::Ivf { id_codec, vectors })
+            }
+            name => {
+                let parsed = CodecSpec::parse(name)?;
+                anyhow::ensure!(
+                    parsed.is_per_list() || matches!(parsed, CodecSpec::Wavelet(_)),
+                    "codec {:?} is a whole-graph codec and has no IVF id store; \
+                     use it through bench-table3",
+                    parsed.name()
+                );
+                Ok(QpsBackend::Ivf {
+                    id_codec: parsed.name().to_string(),
+                    vectors: VectorMode::Flat,
+                })
+            }
+        },
+    }
+}
+
+/// Validate a QPS spec without building anything — CLI/bench boundaries
+/// call this first so a typo prints the valid-name list instead of
+/// panicking mid-sweep.
+pub fn validate_qps_spec(spec: &str) -> anyhow::Result<()> {
+    parse_qps_spec(spec).map(|_| ())
+}
+
+/// Graph construction cost is superlinear, so graph-backend QPS rows are
+/// built over at most this many vectors (logged by the bench driver).
+pub const QPS_GRAPH_N_CAP: usize = 20_000;
+
+/// Search-throughput sweep: spec × nprobe/ef × threads over one dataset.
+/// IVF specs share one coarse clustering; graph specs build over a capped
+/// prefix of the same data. Every backend is driven through the
+/// [`AnnIndex`] trait — the same generic path the coordinator serves —
+/// with per-query latencies measured inside the workers (reusable
+/// scratch + result buffer); QPS is the whole-batch wall rate, best of
+/// `runs`.
 pub fn search_qps(
     scale: &Scale,
     kind: Kind,
@@ -414,60 +481,103 @@ pub fn search_qps(
     nprobes: &[usize],
     thread_counts: &[usize],
     runs: usize,
-) -> Vec<QpsRow> {
+) -> anyhow::Result<Vec<QpsRow>> {
+    use crate::api::{AnnIndex, AnnScratch, GraphIndex, QueryParams};
     let ds = generate(kind, scale.n, scale.nq, scale.dim, scale.seed);
-    let cents = crate::quant::kmeans::train(
-        &ds.data,
-        ds.dim,
-        &crate::quant::kmeans::KmeansConfig {
-            k,
-            iters: 8,
-            seed: scale.seed,
-            threads: scale.threads,
-            ..Default::default()
-        },
-    );
-    let kk = cents.len() / ds.dim;
-    let assign = crate::quant::kmeans::assign(&ds.data, ds.dim, &cents, scale.threads);
+    // Shared coarse clustering, trained on first IVF spec.
+    let mut shared: Option<(Vec<f32>, usize, Vec<u32>)> = None;
+    let graph_n = scale.n.min(QPS_GRAPH_N_CAP);
     let mut out = Vec::new();
     for &spec in specs {
-        let (id_codec, vectors) = qps_variant(spec);
-        let idx = IvfIndex::build_preassigned(
-            &ds.data,
-            ds.dim,
-            &cents,
-            &assign,
-            &IvfBuildParams {
-                k: kk,
-                id_codec,
-                vectors,
-                threads: scale.threads,
-                seed: scale.seed,
-                ..Default::default()
-            },
-            kk,
-        );
+        let (backend, index): (&'static str, Box<dyn AnnIndex>) = match parse_qps_spec(spec)? {
+            QpsBackend::Ivf { id_codec, vectors } => {
+                let (cents, kk, assign) = shared.get_or_insert_with(|| {
+                    let cents = crate::quant::kmeans::train(
+                        &ds.data,
+                        ds.dim,
+                        &crate::quant::kmeans::KmeansConfig {
+                            k,
+                            iters: 8,
+                            seed: scale.seed,
+                            threads: scale.threads,
+                            ..Default::default()
+                        },
+                    );
+                    let kk = cents.len() / ds.dim;
+                    let assign =
+                        crate::quant::kmeans::assign(&ds.data, ds.dim, &cents, scale.threads);
+                    (cents, kk, assign)
+                });
+                let idx = IvfIndex::build_preassigned(
+                    &ds.data,
+                    ds.dim,
+                    cents,
+                    assign,
+                    &IvfBuildParams {
+                        k: *kk,
+                        id_codec,
+                        vectors,
+                        threads: scale.threads,
+                        seed: scale.seed,
+                        ..Default::default()
+                    },
+                    *kk,
+                );
+                ("ivf", Box::new(idx) as Box<dyn AnnIndex>)
+            }
+            QpsBackend::Graph { family, codec } => {
+                let data = &ds.data[..graph_n * ds.dim];
+                if family == "nsg" {
+                    let nsg = Nsg::build(
+                        data,
+                        ds.dim,
+                        &NsgParams {
+                            r: 32,
+                            knn_k: 48,
+                            threads: scale.threads,
+                            seed: scale.seed,
+                            ..Default::default()
+                        },
+                    );
+                    ("nsg", Box::new(GraphIndex::from_nsg(&nsg, data, &codec)?))
+                } else {
+                    use crate::graph::hnsw::{Hnsw, HnswParams};
+                    let h = Hnsw::build(
+                        data,
+                        ds.dim,
+                        &HnswParams { m: 16, ef_construction: 100, seed: scale.seed },
+                    );
+                    ("hnsw", Box::new(GraphIndex::from_hnsw(&h, data, &codec)?))
+                }
+            }
+        };
         for &nprobe in nprobes {
             for &threads in thread_counts {
-                let sp = SearchParams { nprobe: nprobe.min(kk), k: 10 };
+                // The swept value drives IVF probes and the graph beam
+                // width alike; each backend reads its own knob. Graph
+                // backends clamp ef to at least k internally (a beam
+                // must hold k results), so rows below ef=k coincide —
+                // the standard ef ≥ k rule, documented in REPRODUCING.
+                let sp = QueryParams { k: 10, nprobe, ef: nprobe };
                 // One scratch (+ result buffer) per worker, shared across
                 // the warm pass and every timed run, so the timed passes
                 // measure the steady-state allocation-free path rather
                 // than first-touch scratch growth.
                 let threads_eff = threads.max(1);
-                let scratches: Vec<std::sync::Mutex<(SearchScratch, Vec<(f32, u32)>)>> = (0
+                let scratches: Vec<std::sync::Mutex<(AnnScratch, Vec<(f32, u32)>)>> = (0
                     ..threads_eff)
-                    .map(|_| std::sync::Mutex::new((SearchScratch::default(), Vec::new())))
+                    .map(|_| std::sync::Mutex::new((AnnScratch::default(), Vec::new())))
                     .collect();
                 let lat_cells: Vec<std::sync::atomic::AtomicU64> =
                     (0..ds.nq).map(|_| std::sync::atomic::AtomicU64::new(0)).collect();
+                let index_ref = &*index;
                 let run_pass = |record: bool| {
                     crate::util::pool::parallel_chunks(ds.nq, threads_eff, |w, range| {
                         let mut guard = scratches[w % scratches.len()].lock().unwrap();
                         let (scratch, results) = &mut *guard;
                         for qi in range {
                             let q0 = Instant::now();
-                            idx.search_into(ds.query(qi), &sp, scratch, results);
+                            index_ref.search_into(ds.query(qi), &sp, scratch, results);
                             if record {
                                 lat_cells[qi].store(
                                     q0.elapsed().as_secs_f64().to_bits(),
@@ -502,8 +612,9 @@ pub fn search_qps(
                 };
                 let mean = lat.iter().sum::<f64>() / (lat.len().max(1) as f64);
                 out.push(QpsRow {
+                    backend: backend.to_string(),
                     codec: spec.to_string(),
-                    nprobe: sp.nprobe,
+                    nprobe,
                     threads,
                     qps: ds.nq as f64 / best_wall.max(1e-12),
                     mean_ms: mean * 1e3,
@@ -513,7 +624,7 @@ pub fn search_qps(
             }
         }
     }
-    out
+    Ok(out)
 }
 
 /// Table 4 (scaled): large-N IVF-PQ with K=2^14 clusters standing in for
@@ -648,15 +759,35 @@ mod tests {
             &[4, 8],
             &[2],
             1,
-        );
+        )
+        .unwrap();
         assert_eq!(rows.len(), 6);
         for r in &rows {
+            assert_eq!(r.backend, "ivf");
             assert!(r.qps > 0.0, "{}: qps={}", r.codec, r.qps);
             assert!(r.p95_ms >= r.p50_ms, "{}: p95 < p50", r.codec);
             assert!(r.mean_ms >= 0.0 && r.p50_ms >= 0.0);
         }
         // The sweep axes are all present.
         assert!(rows.iter().any(|r| r.codec == "pq-compressed" && r.nprobe == 8));
+    }
+
+    #[test]
+    fn search_qps_serves_graph_backends_and_rejects_typos() {
+        let scale = Scale { n: 1200, nq: 30, dim: 8, seed: 9, threads: 2 };
+        let rows = search_qps(&scale, Kind::DeepLike, &["nsg:roc"], 16, &[16], &[2], 1).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].backend, "nsg");
+        assert_eq!(rows[0].codec, "nsg:roc");
+        assert!(rows[0].qps > 0.0);
+
+        let err = search_qps(&scale, Kind::DeepLike, &["rocc"], 16, &[4], &[1], 1)
+            .expect_err("typo must not run");
+        assert!(format!("{err}").contains("valid names"), "{err}");
+        assert!(validate_qps_spec("hnsw:ef").is_ok());
+        assert!(validate_qps_spec("nsg:zuckerli").is_err(), "whole-graph codec per node");
+        assert!(validate_qps_spec("turbo:roc").is_err());
+        assert!(validate_qps_spec("rec").is_err(), "no IVF id store for rec");
     }
 
     #[test]

@@ -11,14 +11,17 @@ pub mod knn;
 pub mod nsg;
 pub mod hnsw;
 
-use crate::codecs::{codec_by_name, IdCodec};
+use crate::codecs::{CodecSpec, IdCodec};
+use crate::util::bytes::{Blobs, BlobsBuilder};
 
-/// Adjacency storage: raw lists or one compressed stream per node.
+/// Adjacency storage: raw lists or one compressed stream per node (all
+/// streams laid end-to-end in one shared [`Blobs`] buffer, so a persisted
+/// graph index reopens them zero-copy).
 pub enum GraphStore {
     Raw(Vec<Vec<u32>>),
     Compressed {
         codec: Box<dyn IdCodec>,
-        blobs: Vec<Vec<u8>>,
+        blobs: Blobs,
         lens: Vec<u32>,
         universe: u32,
         bits: u64,
@@ -26,23 +29,48 @@ pub enum GraphStore {
 }
 
 impl GraphStore {
-    /// Compress raw adjacency with a per-list codec.
+    /// Compress raw adjacency with a per-list codec (panics on an invalid
+    /// name — library-internal callers pass registry constants; fallible
+    /// boundaries go through [`GraphStore::try_compress`]).
     pub fn compress(adj: &[Vec<u32>], codec_name: &str) -> GraphStore {
-        let codec = codec_by_name(codec_name)
-            .unwrap_or_else(|| panic!("unknown codec {codec_name}"));
+        let spec = CodecSpec::parse(codec_name).unwrap_or_else(|e| panic!("{e}"));
+        Self::try_compress(adj, &spec).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Compress raw adjacency with a parsed per-list codec spec.
+    pub fn try_compress(adj: &[Vec<u32>], spec: &CodecSpec) -> anyhow::Result<GraphStore> {
+        let codec = spec.id_codec()?;
         let universe = adj.len() as u32;
         let mut bits = 0u64;
         let mut lens = Vec::with_capacity(adj.len());
-        let blobs: Vec<Vec<u8>> = adj
-            .iter()
-            .map(|l| {
-                let enc = codec.encode(l, universe);
-                bits += enc.bits;
-                lens.push(l.len() as u32);
-                enc.bytes
-            })
-            .collect();
-        GraphStore::Compressed { codec, blobs, lens, universe, bits }
+        let mut blobs = BlobsBuilder::new();
+        for l in adj {
+            let enc = codec.encode(l, universe);
+            bits += enc.bits;
+            lens.push(l.len() as u32);
+            blobs.push(&enc.bytes);
+        }
+        Ok(GraphStore::Compressed { codec, blobs: blobs.finish(), lens, universe, bits })
+    }
+
+    /// Reassemble a compressed store from persisted parts (the open path:
+    /// `blobs` borrows the file buffer, so no stream is copied or
+    /// re-coded).
+    pub fn from_compressed_parts(
+        spec: &CodecSpec,
+        blobs: Blobs,
+        lens: Vec<u32>,
+        universe: u32,
+        bits: u64,
+    ) -> anyhow::Result<GraphStore> {
+        let codec = spec.id_codec()?;
+        anyhow::ensure!(
+            blobs.count() == lens.len(),
+            "adjacency store holds {} blobs for {} nodes",
+            blobs.count(),
+            lens.len()
+        );
+        Ok(GraphStore::Compressed { codec, blobs, lens, universe, bits })
     }
 
     /// Friend list of node `i`, decoded into `scratch` if compressed.
@@ -53,7 +81,7 @@ impl GraphStore {
             GraphStore::Raw(adj) => &adj[i],
             GraphStore::Compressed { codec, blobs, lens, universe, .. } => {
                 scratch.clear();
-                codec.decode(&blobs[i], *universe, lens[i] as usize, scratch);
+                codec.decode(blobs.get(i), *universe, lens[i] as usize, scratch);
                 scratch
             }
         }
@@ -62,7 +90,7 @@ impl GraphStore {
     pub fn num_nodes(&self) -> usize {
         match self {
             GraphStore::Raw(adj) => adj.len(),
-            GraphStore::Compressed { blobs, .. } => blobs.len(),
+            GraphStore::Compressed { lens, .. } => lens.len(),
         }
     }
 

@@ -17,13 +17,16 @@
 //! stores).  ROC has no random access, so each probed cluster's stream is
 //! decoded during the scan — the id-decode cost that Table 2 measures.
 
-use crate::codecs::wavelet::{WaveletTree, WtStorage};
-use crate::codecs::{codec_by_name, pcodes, DecodeScratch, IdCodec};
+use crate::codecs::wavelet::WaveletTree;
+use crate::codecs::{pcodes, CodecSpec, DecodeScratch, IdCodec};
 use crate::quant::coarse;
 use crate::quant::kmeans::{self, KmeansConfig};
 use crate::quant::pq::Pq;
 use crate::quant::{l2_sq, TopK};
+use crate::util::bytes::{Blobs, BlobsBuilder};
 use crate::util::pool::default_threads;
+use crate::util::{ReadBuf, WriteBuf};
+use anyhow::{bail, ensure, Context, Result};
 
 /// How vectors themselves are stored (orthogonal to id compression).
 #[derive(Clone, Debug, PartialEq)]
@@ -74,7 +77,9 @@ impl Default for SearchParams {
 enum IdStore {
     PerList {
         codec: Box<dyn IdCodec>,
-        blobs: Vec<Vec<u8>>,
+        /// One compressed stream per cluster, end-to-end in one shared
+        /// buffer — written verbatim by `save` and reopened zero-copy.
+        blobs: Blobs,
         bits: u64,
         random_access: bool,
     },
@@ -94,7 +99,9 @@ enum CodeStore {
         /// Built once at index construction, shared by every probe (the
         /// decoder is stateless; per-decode state lives in the scratch).
         codec: pcodes::ClusterCodeCodec,
-        clusters: Vec<pcodes::EncodedCluster>,
+        /// `k × m` column streams, cluster-major (`c * m + j`), in one
+        /// shared buffer — persisted verbatim like the id blobs.
+        columns: Blobs,
         bits: u64,
     },
 }
@@ -130,6 +137,9 @@ pub struct IvfIndex {
     offsets: Vec<usize>,
     ids: IdStore,
     store: CodeStore,
+    /// Canonical id-codec spec (distinguishes wt from wt1; persisted in
+    /// the container header so `open` reconstructs the exact codec).
+    spec: CodecSpec,
 }
 
 impl IvfIndex {
@@ -178,28 +188,30 @@ impl IvfIndex {
         // decodes a permutation of the set, and vectors must follow it so
         // that scan offset o maps to the o-th decoded id).
         let universe = n as u32;
-        let (ids, lists) = match params.id_codec.as_str() {
-            "wt" | "wt1" => {
-                let storage = if params.id_codec == "wt" { WtStorage::Flat } else { WtStorage::Rrr };
+        let spec = CodecSpec::parse(&params.id_codec).unwrap_or_else(|e| panic!("{e}"));
+        let (ids, lists) = match spec {
+            CodecSpec::Wavelet(storage) => {
                 // select(c, o) walks occurrences in id order = `lists` order.
                 (IdStore::Wavelet { wt: WaveletTree::new(assign, k as u32, storage) }, lists)
             }
-            name => {
-                let codec =
-                    codec_by_name(name).unwrap_or_else(|| panic!("unknown id codec {name}"));
+            _ => {
+                let codec = spec.id_codec().unwrap_or_else(|e| panic!("{e}"));
                 let mut bits = 0u64;
-                let mut blobs = Vec::with_capacity(k);
+                let mut blobs = BlobsBuilder::new();
                 let mut decoded = Vec::with_capacity(k);
                 for l in &lists {
                     let enc = codec.encode(l, universe);
                     bits += enc.bits;
                     let mut order = Vec::with_capacity(l.len());
                     codec.decode(&enc.bytes, universe, l.len(), &mut order);
-                    blobs.push(enc.bytes);
+                    blobs.push(&enc.bytes);
                     decoded.push(order);
                 }
                 let random_access = codec.supports_random_access();
-                (IdStore::PerList { codec, blobs, bits, random_access }, decoded)
+                (
+                    IdStore::PerList { codec, blobs: blobs.finish(), bits, random_access },
+                    decoded,
+                )
             }
         };
 
@@ -228,24 +240,33 @@ impl IvfIndex {
                 } else {
                     let codec = pcodes::ClusterCodeCodec::new(1 << bits, m);
                     let mut bits_total = 0u64;
-                    let clusters: Vec<pcodes::EncodedCluster> = (0..k)
-                        .map(|c| {
-                            let rows = offsets[c + 1] - offsets[c];
-                            let enc = codec.encode(
-                                &reordered[offsets[c] * m..offsets[c + 1] * m],
-                                rows,
-                            );
-                            bits_total += enc.bits;
-                            enc
-                        })
-                        .collect();
-                    CodeStore::PqCompressed { pq, codec, clusters, bits: bits_total }
+                    let mut columns = BlobsBuilder::new();
+                    for c in 0..k {
+                        let rows = offsets[c + 1] - offsets[c];
+                        let enc =
+                            codec.encode(&reordered[offsets[c] * m..offsets[c + 1] * m], rows);
+                        bits_total += enc.bits;
+                        for col in &enc.columns {
+                            columns.push(col);
+                        }
+                    }
+                    CodeStore::PqCompressed { pq, codec, columns: columns.finish(), bits: bits_total }
                 }
             }
         };
 
         let centroid_norms = coarse::centroid_norms(centroids, dim);
-        IvfIndex { dim, n, k, centroids: centroids.to_vec(), centroid_norms, offsets, ids, store }
+        IvfIndex {
+            dim,
+            n,
+            k,
+            centroids: centroids.to_vec(),
+            centroid_norms,
+            offsets,
+            ids,
+            store,
+            spec,
+        }
     }
 
     pub fn list_len(&self, c: usize) -> usize {
@@ -385,7 +406,7 @@ impl IvfIndex {
             if !defer_ids {
                 if let IdStore::PerList { codec, blobs, .. } = &self.ids {
                     ids.clear();
-                    codec.decode_into(&blobs[c], self.n as u32, end - start, ids, decode);
+                    codec.decode_into(blobs.get(c), self.n as u32, end - start, ids, decode);
                 }
             }
             match &self.store {
@@ -409,8 +430,14 @@ impl IvfIndex {
                         }
                     }
                 }
-                CodeStore::PqCompressed { pq, codec, clusters, .. } => {
-                    codec.decode_into(&clusters[c], end - start, codes, decode);
+                CodeStore::PqCompressed { pq, codec, columns, .. } => {
+                    let m = pq.m;
+                    codec.decode_columns_into(
+                        (0..m).map(|j| columns.get(c * m + j)),
+                        end - start,
+                        codes,
+                        decode,
+                    );
                     for (o, row) in codes.chunks_exact(pq.m).enumerate() {
                         let d = pq.adc(lut, row);
                         if d < topk.threshold() {
@@ -441,33 +468,198 @@ impl IvfIndex {
     fn resolve_id(&self, c: usize, o: usize) -> u32 {
         match &self.ids {
             IdStore::PerList { codec, blobs, .. } => codec
-                .decode_nth(&blobs[c], self.n as u32, self.list_len(c), o)
+                .decode_nth(blobs.get(c), self.n as u32, self.list_len(c), o)
                 .expect("offset out of range"),
             IdStore::Wavelet { wt } => wt.select(c as u32, o as u64).expect("wt select") as u32,
         }
     }
 
-    /// Decode the full id list of cluster `c` (tests, migration tooling).
-    pub fn decode_list(&self, c: usize) -> Vec<u32> {
+    /// Decode the full id list of cluster `c` into a reused buffer
+    /// through a reusable [`DecodeScratch`] — the allocation-free bulk
+    /// path for audits, migrations and the codec table benches.
+    pub fn decode_list_into(&self, c: usize, out: &mut Vec<u32>, scratch: &mut DecodeScratch) {
         let n = self.list_len(c);
+        out.clear();
         match &self.ids {
             IdStore::PerList { codec, blobs, .. } => {
-                let mut out = Vec::with_capacity(n);
-                codec.decode(&blobs[c], self.n as u32, n, &mut out);
-                out
+                codec.decode_into(blobs.get(c), self.n as u32, n, out, scratch);
             }
             IdStore::Wavelet { wt } => {
-                (0..n).map(|o| wt.select(c as u32, o as u64).unwrap() as u32).collect()
+                out.extend((0..n).map(|o| wt.select(c as u32, o as u64).unwrap() as u32));
             }
         }
     }
 
-    /// Name of the id store (bench labels).
+    /// Decode the full id list of cluster `c` (allocating convenience
+    /// wrapper over [`IvfIndex::decode_list_into`]).
+    pub fn decode_list(&self, c: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.list_len(c));
+        self.decode_list_into(c, &mut out, &mut DecodeScratch::default());
+        out
+    }
+
+    /// Canonical id-store spec name (bench labels, persisted header).
     pub fn id_codec_name(&self) -> &str {
-        match &self.ids {
-            IdStore::PerList { codec, .. } => codec.name(),
-            IdStore::Wavelet { wt: _ } => "wt",
+        self.spec.name()
+    }
+}
+
+/// Container persistence: the compressed id/code streams are written
+/// verbatim (no re-encode) and reopened as slices into the file buffer
+/// (no transcode). See `api::persist` for the framing.
+impl IvfIndex {
+    /// Serialize to the zann container format (`api::persist`).
+    ///
+    /// Only per-list id stores persist; the wavelet variants would need
+    /// bitmap serialization and are rejected with an actionable error.
+    pub(crate) fn to_container_bytes(&self) -> Result<Vec<u8>> {
+        use crate::api::persist;
+        let (blobs, id_bits) = match &self.ids {
+            IdStore::PerList { blobs, bits, .. } => (blobs, *bits),
+            IdStore::Wavelet { .. } => bail!(
+                "persistence for wavelet id stores (wt/wt1) is not implemented; \
+                 build with a per-list codec ({})",
+                crate::codecs::PER_LIST_CODECS.join("|")
+            ),
+        };
+
+        let mut head = WriteBuf::new();
+        head.put_u64(self.dim as u64);
+        head.put_u64(self.n as u64);
+        head.put_u64(self.k as u64);
+        head.put_str(self.spec.name());
+        let (mode, m, pq_bits) = match &self.store {
+            CodeStore::Flat(_) => (0u8, 0u64, 0u32),
+            CodeStore::Pq { pq, .. } => (1, pq.m as u64, pq.bits),
+            CodeStore::PqCompressed { pq, .. } => (2, pq.m as u64, pq.bits),
+        };
+        head.put_u8(mode);
+        head.put_u64(m);
+        head.put_u32(pq_bits);
+        head.put_u64(id_bits);
+        head.put_u64(self.code_bits());
+
+        let mut file = persist::file_header(persist::KIND_IVF);
+        persist::push_section(&mut file, b"HEAD", &head.bytes);
+        let mut cent = WriteBuf::new();
+        cent.put_f32s(&self.centroids);
+        persist::push_section(&mut file, b"CENT", &cent.bytes);
+        let mut offs = WriteBuf::new();
+        offs.put_u64s(&self.offsets.iter().map(|&o| o as u64).collect::<Vec<u64>>());
+        persist::push_section(&mut file, b"OFFS", &offs.bytes);
+        let mut idof = WriteBuf::new();
+        idof.put_u64s(blobs.offsets());
+        persist::push_section(&mut file, b"IDOF", &idof.bytes);
+        persist::push_section(&mut file, b"IDBL", blobs.payload());
+
+        match &self.store {
+            CodeStore::Flat(v) => {
+                let mut w = WriteBuf::new();
+                w.put_f32s(v);
+                persist::push_section(&mut file, b"VECS", &w.bytes);
+            }
+            CodeStore::Pq { pq, codes } => {
+                let mut w = WriteBuf::new();
+                pq.serialize(&mut w);
+                persist::push_section(&mut file, b"PQBK", &w.bytes);
+                persist::push_section(&mut file, b"PQCD", &persist::pack_codes(codes, pq.bits));
+            }
+            CodeStore::PqCompressed { pq, columns, .. } => {
+                let mut w = WriteBuf::new();
+                pq.serialize(&mut w);
+                persist::push_section(&mut file, b"PQBK", &w.bytes);
+                let mut pcof = WriteBuf::new();
+                pcof.put_u64s(columns.offsets());
+                persist::push_section(&mut file, b"PCOF", &pcof.bytes);
+                persist::push_section(&mut file, b"PCBL", columns.payload());
+            }
         }
+        Ok(file)
+    }
+
+    /// Rebuild from a parsed container. Id (and compressed-code) sections
+    /// become [`Blobs`] over the borrowed file buffer — no payload is
+    /// copied or re-coded; only derived structures (centroid norms) are
+    /// recomputed.
+    pub(crate) fn from_container(c: &crate::api::persist::Container) -> Result<IvfIndex> {
+        let head = c.section(b"HEAD")?;
+        let mut r = ReadBuf::new(head.as_slice());
+        let dim = r.get_u64()? as usize;
+        let n = r.get_u64()? as usize;
+        let k = r.get_u64()? as usize;
+        let codec_name = r.get_str()?;
+        let mode = r.get_u8()?;
+        let m = r.get_u64()? as usize;
+        let pq_bits = r.get_u32()?;
+        let id_bits = r.get_u64()?;
+        let code_bits = r.get_u64()?;
+        ensure!(dim >= 1 && k >= 1, "degenerate header (dim={dim}, k={k})");
+        let spec = CodecSpec::parse(&codec_name).context("index header names its id codec")?;
+
+        let sec = c.section(b"CENT")?;
+        let centroids = ReadBuf::new(sec.as_slice()).get_f32s()?;
+        ensure!(
+            centroids.len() == k * dim,
+            "centroid section holds {} floats for k={k}, dim={dim}",
+            centroids.len()
+        );
+        let sec = c.section(b"OFFS")?;
+        let offsets_u64 = ReadBuf::new(sec.as_slice()).get_u64s()?;
+        ensure!(offsets_u64.len() == k + 1, "expected {} cluster offsets", k + 1);
+        ensure!(
+            offsets_u64[0] == 0
+                && offsets_u64.windows(2).all(|w| w[0] <= w[1])
+                && *offsets_u64.last().unwrap() as usize == n,
+            "cluster offsets are not a monotone partition of [0, {n})"
+        );
+        let offsets: Vec<usize> = offsets_u64.iter().map(|&o| o as usize).collect();
+
+        let sec = c.section(b"IDOF")?;
+        let idof = ReadBuf::new(sec.as_slice()).get_u64s()?;
+        let blobs = Blobs::from_parts(c.section(b"IDBL")?, idof)?;
+        ensure!(blobs.count() == k, "id store holds {} blobs for k={k}", blobs.count());
+        let codec = spec.id_codec().context("reopening the per-list id store")?;
+        let random_access = codec.supports_random_access();
+        let ids = IdStore::PerList { codec, blobs, bits: id_bits, random_access };
+
+        let store = match mode {
+            0 => {
+                let sec = c.section(b"VECS")?;
+                let v = ReadBuf::new(sec.as_slice()).get_f32s()?;
+                ensure!(v.len() == n * dim, "vector section holds {} floats", v.len());
+                CodeStore::Flat(v)
+            }
+            1 | 2 => {
+                ensure!((1..=16).contains(&pq_bits), "bad PQ bit width {pq_bits}");
+                let sec = c.section(b"PQBK")?;
+                let pq = Pq::deserialize(&mut ReadBuf::new(sec.as_slice()))?;
+                ensure!(
+                    pq.m == m && pq.bits == pq_bits && pq.dim() == dim,
+                    "PQ codebook shape disagrees with the header"
+                );
+                if mode == 1 {
+                    let sec = c.section(b"PQCD")?;
+                    let codes =
+                        crate::api::persist::unpack_codes(sec.as_slice(), pq_bits, n * m)?;
+                    CodeStore::Pq { pq, codes }
+                } else {
+                    let sec = c.section(b"PCOF")?;
+                    let pcof = ReadBuf::new(sec.as_slice()).get_u64s()?;
+                    let columns = Blobs::from_parts(c.section(b"PCBL")?, pcof)?;
+                    ensure!(
+                        columns.count() == k * m,
+                        "code store holds {} column blobs for k={k}, m={m}",
+                        columns.count()
+                    );
+                    let codec = pcodes::ClusterCodeCodec::new(1 << pq_bits, m);
+                    CodeStore::PqCompressed { pq, codec, columns, bits: code_bits }
+                }
+            }
+            other => bail!("unknown vector-mode tag {other}"),
+        };
+
+        let centroid_norms = coarse::centroid_norms(&centroids, dim);
+        Ok(IvfIndex { dim, n, k, centroids, centroid_norms, offsets, ids, store, spec })
     }
 }
 
@@ -627,6 +819,10 @@ mod tests {
     #[test]
     fn decoded_lists_form_partition() {
         let ds = build_ds();
+        // One reused buffer + decode scratch across every cluster and
+        // codec: decode_list_into must agree with the allocating wrapper.
+        let mut out = Vec::new();
+        let mut scratch = DecodeScratch::default();
         for codec in ["roc", "ef", "wt1"] {
             let idx = IvfIndex::build(
                 &ds.data,
@@ -635,7 +831,9 @@ mod tests {
             );
             let mut seen = vec![false; ds.n];
             for c in 0..idx.k {
-                for id in idx.decode_list(c) {
+                idx.decode_list_into(c, &mut out, &mut scratch);
+                assert_eq!(out, idx.decode_list(c), "cluster {c} ({codec})");
+                for &id in &out {
                     assert!(!seen[id as usize], "id {id} duplicated ({codec})");
                     seen[id as usize] = true;
                 }

@@ -24,14 +24,15 @@
 //!
 //! # Example: compress one inverted list losslessly
 //!
-//! Per-list codecs are looked up by name ([`codecs::codec_by_name`]) and
-//! treat the list as a *set* — decode may return the ids in a different
-//! (deterministic) order, which is exactly the invariance ROC monetizes:
+//! Codecs are looked up through the [`codecs::CodecSpec`] registry
+//! (fallible, with the valid-name list in the error) and treat the list
+//! as a *set* — decode may return the ids in a different (deterministic)
+//! order, which is exactly the invariance ROC monetizes:
 //!
 //! ```
-//! use zann::codecs::codec_by_name;
+//! use zann::codecs::CodecSpec;
 //!
-//! let codec = codec_by_name("roc").unwrap();
+//! let codec = CodecSpec::parse("roc").unwrap().id_codec().unwrap();
 //! let ids: Vec<u32> = vec![3, 14, 15, 92, 65];
 //! let enc = codec.encode(&ids, 100); // ids drawn from [0, 100)
 //!
@@ -40,6 +41,7 @@
 //! out.sort_unstable();
 //! assert_eq!(out, vec![3, 14, 15, 65, 92]);
 //! assert!(enc.bits as usize <= enc.bytes.len() * 8);
+//! assert!(CodecSpec::parse("rocc").is_err(), "typos are reported, not ignored");
 //! ```
 //!
 //! # Example: an IVF index with compressed ids
@@ -63,6 +65,35 @@
 //! let hits = idx.search(ds.query(0), &SearchParams { nprobe: 4, k: 5 }, &mut scratch);
 //! assert_eq!(hits.len(), 5);
 //! ```
+//!
+//! # Example: save, reopen and serve through the unified API
+//!
+//! Every backend implements [`api::AnnIndex`]; the container format
+//! ([`api::persist`]) stores the compressed streams verbatim, so a
+//! reopened index returns bit-identical results without re-encoding
+//! anything:
+//!
+//! ```
+//! use zann::api::{persist, AnnIndex, AnnScratch, QueryParams};
+//! use zann::datasets::{generate, Kind};
+//! use zann::index::{IvfBuildParams, IvfIndex};
+//!
+//! let ds = generate(Kind::DeepLike, 2000, 4, 8, 7);
+//! let idx = IvfIndex::build(
+//!     &ds.data,
+//!     ds.dim,
+//!     &IvfBuildParams { k: 16, id_codec: "roc".into(), threads: 2, ..Default::default() },
+//! );
+//! let bytes = idx.to_bytes().unwrap();          // compressed blobs, verbatim
+//! let back = persist::open_bytes(bytes).unwrap(); // Box<dyn AnnIndex>, zero transcode
+//!
+//! let p = QueryParams { k: 5, nprobe: 4, ..Default::default() };
+//! let (mut s1, mut s2) = (AnnScratch::default(), AnnScratch::default());
+//! let (mut a, mut b) = (Vec::new(), Vec::new());
+//! AnnIndex::search_into(&idx, ds.query(0), &p, &mut s1, &mut a);
+//! back.search_into(ds.query(0), &p, &mut s2, &mut b);
+//! assert_eq!(a, b, "reopened index is bit-identical");
+//! ```
 
 pub mod util;
 pub mod bitvec;
@@ -74,5 +105,6 @@ pub mod datasets;
 pub mod index;
 pub mod graph;
 pub mod runtime;
+pub mod api;
 pub mod coordinator;
 pub mod eval;

@@ -3,21 +3,33 @@
 //! Subcommands:
 //!   bench-table1|bench-table2|bench-table3|bench-table4|bench-fig2|bench-fig3
 //!                       — regenerate the paper's tables/figures
-//!   bench-search-qps    — search throughput sweep (QPS + latency
-//!                         percentiles, writes BENCH_search.json)
-//!   serve-demo          — build an index and serve a batch through the
-//!                         coordinator (PJRT coarse path if artifacts exist)
+//!   bench-search-qps    — search throughput sweep over IVF *and* graph
+//!                         backends (QPS + latency percentiles, writes
+//!                         BENCH_search.json)
+//!   build               — build an index (--backend ivf|nsg|hnsw) and
+//!                         save it to the zann container (--out PATH)
+//!   info                — print the stats header of a saved index
+//!   serve               — reopen a saved index (zero transcode) and
+//!                         serve a query batch through the coordinator,
+//!                         verifying responses against direct search
+//!   serve-demo          — build an index in memory and serve a batch
+//!                         (PJRT coarse path if artifacts exist)
 //!   sizes               — bits/id summary for one dataset/index
 //!
 //! Common flags: --n --nq --dim --k --seed --threads --dataset
 //! (sift|deep|ssnpp) --codec --runs --full (paper-scale N=1e6)
 
+use std::path::Path;
 use std::sync::Arc;
+use zann::api::{persist, AnnIndex, AnnScratch, GraphIndex, IndexStats, QueryParams};
+use zann::codecs::CodecSpec;
 use zann::coordinator::{Coordinator, ServeConfig};
 use zann::datasets::generate;
 use zann::eval::experiments::{self, Scale};
 use zann::eval::{bench_entries, fmt3, Table};
-use zann::index::{IvfBuildParams, IvfIndex, SearchParams};
+use zann::graph::hnsw::{Hnsw, HnswParams};
+use zann::graph::nsg::{Nsg, NsgParams};
+use zann::index::{IvfBuildParams, IvfIndex, VectorMode};
 use zann::runtime::{default_artifact_dir, EngineHandle};
 use zann::util::cli::Args;
 
@@ -33,15 +45,54 @@ fn main() {
         "bench-fig3" => bench_entries::fig3(&args),
         "bench-search-qps" => bench_entries::search_qps(&args),
         "sizes" => sizes(&args),
+        "build" => build_cmd(&args),
+        "info" => info_cmd(&args),
+        "serve" => serve_cmd(&args),
         "serve-demo" => serve_demo(&args),
         _ => {
             eprintln!(
                 "usage: zann <bench-table1|bench-table2|bench-table3|bench-table4|\n\
-                 bench-fig2|bench-fig3|bench-search-qps|sizes|serve-demo> [--n N] \
-                 [--dataset sift|deep|ssnpp] ..."
+                 bench-fig2|bench-fig3|bench-search-qps|sizes|\n\
+                 build --out PATH [--backend ivf|nsg|hnsw]|info PATH|serve PATH|\n\
+                 serve-demo> [--n N] [--dataset sift|deep|ssnpp] [--codec NAME] ..."
             );
         }
     }
+}
+
+/// Parse `--codec` through the registry; on a typo, print the valid-name
+/// list and exit instead of panicking deep inside an index build.
+fn codec_or_exit(args: &Args, default: &str) -> String {
+    let name = args.get_or("codec", default);
+    match CodecSpec::parse(name) {
+        Ok(spec) => spec.name().to_string(),
+        Err(e) => {
+            eprintln!("--codec: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// One parseable stats line shared by build/info/serve (ci.sh greps it).
+fn print_stats(s: &IndexStats, file_bytes: Option<u64>) {
+    let mut line = format!(
+        "zann-index kind={} codec={} n={} dim={} edges={} id_bits={} code_bits={} link_bits={} \
+         bits_per_id={:.3} payload_bytes={}",
+        s.kind.name(),
+        s.codec,
+        s.n,
+        s.dim,
+        s.edges,
+        s.id_bits,
+        s.code_bits,
+        s.link_bits,
+        s.bits_per_id(),
+        s.payload_bytes(),
+    );
+    if let Some(b) = file_bytes {
+        line.push_str(&format!(" file_bytes={b}"));
+    }
+    println!("{line}");
 }
 
 /// Bits/id summary for one configuration.
@@ -59,6 +110,223 @@ fn sizes(args: &Args) {
     println!("{}", t.render());
 }
 
+/// Build an index of any backend and persist it to the container format.
+fn build_cmd(args: &Args) {
+    let out = match args.get("out") {
+        Some(p) => p.to_string(),
+        None => {
+            eprintln!("build: --out PATH is required");
+            std::process::exit(2);
+        }
+    };
+    let backend = args.get_or("backend", "ivf").to_string();
+    let codec = codec_or_exit(args, "roc");
+    let scale = bench_entries::scale_from(args);
+    let kind = bench_entries::datasets_from(args)[0];
+    println!("generating {} vectors ({}, dim {})...", scale.n, kind.name(), scale.dim);
+    let ds = generate(kind, scale.n, 1, scale.dim, scale.seed);
+    println!("building {backend} index ({codec} streams)...");
+    let index: Box<dyn AnnIndex> = match backend.as_str() {
+        "ivf" => {
+            let m = args.usize("m", 8);
+            let bits = args.usize("bits", 8) as u32;
+            let vectors = match args.get_or("vectors", "flat") {
+                "flat" => VectorMode::Flat,
+                "pq" => VectorMode::Pq { m, bits },
+                "pq-compressed" | "pqc" => VectorMode::PqCompressed { m, bits },
+                other => {
+                    eprintln!("build: unknown --vectors {other:?} (flat|pq|pq-compressed)");
+                    std::process::exit(2);
+                }
+            };
+            Box::new(IvfIndex::build(
+                &ds.data,
+                ds.dim,
+                &IvfBuildParams {
+                    k: args.usize("k", 1024.min((scale.n / 16).max(4))),
+                    id_codec: codec.clone(),
+                    vectors,
+                    threads: scale.threads,
+                    seed: scale.seed,
+                    ..Default::default()
+                },
+            ))
+        }
+        "nsg" => {
+            let r = args.usize("r", 32);
+            let nsg = Nsg::build(
+                &ds.data,
+                ds.dim,
+                &NsgParams {
+                    r,
+                    knn_k: r.max(48),
+                    threads: scale.threads,
+                    seed: scale.seed,
+                    ..Default::default()
+                },
+            );
+            match GraphIndex::from_nsg(&nsg, &ds.data, &codec) {
+                Ok(g) => Box::new(g),
+                Err(e) => {
+                    eprintln!("build: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        "hnsw" => {
+            let h = Hnsw::build(
+                &ds.data,
+                ds.dim,
+                &HnswParams { m: args.usize("m", 16), ef_construction: 100, seed: scale.seed },
+            );
+            match GraphIndex::from_hnsw(&h, &ds.data, &codec) {
+                Ok(g) => Box::new(g),
+                Err(e) => {
+                    eprintln!("build: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        other => {
+            eprintln!("build: unknown --backend {other:?} (ivf|nsg|hnsw)");
+            std::process::exit(2);
+        }
+    };
+    let stats = index.stats();
+    match index.save(Path::new(&out)) {
+        Ok(bytes) => {
+            print_stats(&stats, Some(bytes));
+            println!(
+                "saved {out}: {bytes} bytes for a {} byte payload ({} overhead)",
+                stats.payload_bytes(),
+                bytes.saturating_sub(stats.payload_bytes()),
+            );
+        }
+        Err(e) => {
+            eprintln!("build: save failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Print the stats of a saved index (reopens it, so the line reflects
+/// what a server would actually load).
+fn info_cmd(args: &Args) {
+    let path = match args.positional.get(1) {
+        Some(p) => p.clone(),
+        None => {
+            eprintln!("usage: zann info PATH");
+            std::process::exit(2);
+        }
+    };
+    let index = match persist::open(Path::new(&path)) {
+        Ok(i) => i,
+        Err(e) => {
+            eprintln!("info: {e:?}");
+            std::process::exit(1);
+        }
+    };
+    let file_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    print_stats(&index.stats(), Some(file_bytes));
+}
+
+/// Reopen a saved index and serve a seeded random query batch through
+/// the coordinator, verifying every response against direct search.
+fn serve_cmd(args: &Args) {
+    let path = match args.positional.get(1) {
+        Some(p) => p.clone(),
+        None => {
+            eprintln!("usage: zann serve PATH [--nq N] [--nprobe P] [--ef E] [--topk K]");
+            std::process::exit(2);
+        }
+    };
+    let index: Arc<dyn AnnIndex> = match persist::open(Path::new(&path)) {
+        Ok(i) => Arc::from(i),
+        Err(e) => {
+            eprintln!("serve: {e:?}");
+            std::process::exit(1);
+        }
+    };
+    let file_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    print_stats(&index.stats(), Some(file_bytes));
+    let engine = if index.coarse_info().is_some() {
+        match EngineHandle::spawn(&default_artifact_dir()) {
+            Ok(h) => {
+                println!("engine up: {} PJRT executables", h.num_executables);
+                Some(h)
+            }
+            Err(e) => {
+                println!("engine unavailable ({e}); pure-rust coarse path");
+                None
+            }
+        }
+    } else {
+        println!("graph backend: no coarse stage, direct scan path");
+        None
+    };
+    let sp = QueryParams {
+        k: args.usize("topk", 10),
+        nprobe: args.usize("nprobe", 16),
+        ef: args.usize("ef", 64),
+    };
+    let nq = args.usize("nq", 256);
+    let dim = index.dim();
+    let mut rng = zann::util::Rng::new(args.u64("seed", 42));
+    let queries: Vec<Vec<f32>> =
+        (0..nq).map(|_| (0..dim).map(|_| rng.normal()).collect()).collect();
+    let coord = Coordinator::start(
+        index.clone(),
+        engine,
+        ServeConfig {
+            batch_size: args.usize("batch", 64),
+            search: sp.clone(),
+            ..Default::default()
+        },
+    );
+    let t0 = std::time::Instant::now();
+    let responses = coord.client.search_many(queries.clone()).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    // Every rust-path response must match a direct search on the
+    // reopened index — the end-to-end proof that open did not disturb
+    // the stores. Batches scored by a PJRT executable are excluded from
+    // the bit-exact check: only the pure-rust coarse kernel is
+    // documented bit-identical to the direct path (XLA may differ in
+    // the last ulp, legitimately reordering exact ties).
+    let mut scratch = AnnScratch::default();
+    let mut want = Vec::new();
+    let mut ok = 0usize;
+    let mut via_pjrt = 0usize;
+    for (qi, resp) in responses.iter().enumerate() {
+        if resp.via_pjrt {
+            via_pjrt += 1;
+            continue;
+        }
+        index.search_into(&queries[qi], &sp, &mut scratch, &mut want);
+        if resp.results == want {
+            ok += 1;
+        }
+    }
+    let checked = responses.len() - via_pjrt;
+    let note = if via_pjrt > 0 {
+        format!(" ({via_pjrt} PJRT-scored responses skipped: not bit-comparable)")
+    } else {
+        String::new()
+    };
+    println!("serve: verified {ok}/{checked} responses identical to direct search{note}");
+    println!(
+        "served {} queries in {:.3}s ({:.0} qps); {}",
+        responses.len(),
+        wall,
+        responses.len() as f64 / wall,
+        coord.metrics.summary()
+    );
+    coord.stop();
+    if ok != checked {
+        eprintln!("serve: {} responses diverged from direct search", checked - ok);
+        std::process::exit(1);
+    }
+}
+
 /// End-to-end serving demo: index + coordinator + PJRT engine.
 fn serve_demo(args: &Args) {
     let scale = bench_entries::scale_from(args);
@@ -66,15 +334,16 @@ fn serve_demo(args: &Args) {
     let n = args.usize("n", 100_000);
     let nq = args.usize("nq", 1024);
     let _ = Scale::default();
+    let codec = codec_or_exit(args, "roc");
     println!("generating {} vectors ({})...", n, kind.name());
     let ds = generate(kind, n, nq, scale.dim, scale.seed);
-    println!("building IVF{} ({} ids)...", args.usize("k", 1024), args.get_or("codec", "roc"));
+    println!("building IVF{} ({} ids)...", args.usize("k", 1024), codec);
     let idx = Arc::new(IvfIndex::build(
         &ds.data,
         ds.dim,
         &IvfBuildParams {
             k: args.usize("k", 1024),
-            id_codec: args.get_or("codec", "roc").into(),
+            id_codec: codec,
             threads: scale.threads,
             seed: scale.seed,
             ..Default::default()
@@ -96,7 +365,7 @@ fn serve_demo(args: &Args) {
         engine,
         ServeConfig {
             batch_size: 64,
-            search: SearchParams { nprobe: args.usize("nprobe", 16), k: 10 },
+            search: QueryParams { nprobe: args.usize("nprobe", 16), k: 10, ..Default::default() },
             ..Default::default()
         },
     );

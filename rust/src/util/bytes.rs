@@ -1,0 +1,180 @@
+//! Shared immutable byte regions and blob tables — the storage primitive
+//! behind zero-copy index persistence.
+//!
+//! [`Bytes`] is a cheaply-clonable view into an `Arc<Vec<u8>>`: the whole
+//! index file is read into memory once, and every section (in particular
+//! the already-compressed id/code streams) is a sub-range of that one
+//! buffer.  [`Blobs`] lays many variable-length blobs end-to-end inside a
+//! single region with an offset table, so a per-cluster compressed stream
+//! is `blobs.get(c)` — a bounds-checked slice, never a copy.  At build
+//! time the same types are produced by [`BlobsBuilder`]; at open time
+//! they are reconstructed over the borrowed file buffer, which is what
+//! makes `open` transcode-free.
+
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// An immutable, reference-counted byte region (`Arc<Vec<u8>>` + range).
+#[derive(Clone)]
+pub struct Bytes {
+    data: Arc<Vec<u8>>,
+    start: usize,
+    len: usize,
+}
+
+impl Bytes {
+    /// Wrap an owned buffer (no copy).
+    pub fn from_vec(v: Vec<u8>) -> Bytes {
+        let len = v.len();
+        Bytes { data: Arc::new(v), start: 0, len }
+    }
+
+    /// A bounds-checked sub-region sharing the same backing allocation.
+    pub fn slice(&self, start: usize, len: usize) -> Result<Bytes> {
+        ensure!(
+            start <= self.len && len <= self.len - start,
+            "byte region [{start}, +{len}) out of bounds (region is {} bytes)",
+            self.len
+        );
+        Ok(Bytes { data: self.data.clone(), start: self.start + start, len })
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data[self.start..self.start + self.len]
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl std::fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Bytes({} bytes at +{})", self.len, self.start)
+    }
+}
+
+/// A table of variable-length blobs stored end-to-end in one [`Bytes`]
+/// region, addressed through a monotone offset table (`count + 1`
+/// entries, first 0, last = region length).
+pub struct Blobs {
+    region: Bytes,
+    offsets: Vec<u64>,
+}
+
+impl Blobs {
+    /// Reassemble from a borrowed region + offset table (the open path).
+    /// Validates the table so later `get` calls cannot go out of bounds.
+    pub fn from_parts(region: Bytes, offsets: Vec<u64>) -> Result<Blobs> {
+        ensure!(!offsets.is_empty(), "blob offset table is empty");
+        ensure!(offsets[0] == 0, "blob offsets must start at 0");
+        ensure!(
+            offsets.windows(2).all(|w| w[0] <= w[1]),
+            "blob offsets must be non-decreasing"
+        );
+        ensure!(
+            *offsets.last().unwrap() as usize == region.len(),
+            "blob offsets end at {} but the region holds {} bytes",
+            offsets.last().unwrap(),
+            region.len()
+        );
+        Ok(Blobs { region, offsets })
+    }
+
+    /// Number of blobs.
+    pub fn count(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// The `i`-th blob as a slice into the shared region.
+    #[inline]
+    pub fn get(&self, i: usize) -> &[u8] {
+        let (a, b) = (self.offsets[i] as usize, self.offsets[i + 1] as usize);
+        &self.region.as_slice()[a..b]
+    }
+
+    /// Total payload bytes across all blobs.
+    pub fn total_bytes(&self) -> usize {
+        self.region.len()
+    }
+
+    /// The offset table (for serialization).
+    pub fn offsets(&self) -> &[u64] {
+        &self.offsets
+    }
+
+    /// The contiguous payload (for serialization — written verbatim).
+    pub fn payload(&self) -> &[u8] {
+        self.region.as_slice()
+    }
+}
+
+/// Accumulates blobs into a contiguous buffer at build time.
+#[derive(Default)]
+pub struct BlobsBuilder {
+    buf: Vec<u8>,
+    offsets: Vec<u64>,
+}
+
+impl BlobsBuilder {
+    pub fn new() -> Self {
+        BlobsBuilder { buf: Vec::new(), offsets: vec![0] }
+    }
+
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+        self.offsets.push(self.buf.len() as u64);
+    }
+
+    pub fn finish(self) -> Blobs {
+        Blobs { region: Bytes::from_vec(self.buf), offsets: self.offsets }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_roundtrip_and_bounds() {
+        let mut b = BlobsBuilder::new();
+        b.push(b"abc");
+        b.push(b"");
+        b.push(b"defg");
+        let blobs = b.finish();
+        assert_eq!(blobs.count(), 3);
+        assert_eq!(blobs.get(0), b"abc");
+        assert_eq!(blobs.get(1), b"");
+        assert_eq!(blobs.get(2), b"defg");
+        assert_eq!(blobs.total_bytes(), 7);
+        assert_eq!(blobs.offsets(), &[0, 3, 3, 7]);
+    }
+
+    #[test]
+    fn from_parts_validates_table() {
+        let region = Bytes::from_vec(vec![1, 2, 3, 4]);
+        assert!(Blobs::from_parts(region.clone(), vec![0, 2, 4]).is_ok());
+        assert!(Blobs::from_parts(region.clone(), vec![]).is_err(), "empty table");
+        assert!(Blobs::from_parts(region.clone(), vec![1, 4]).is_err(), "must start at 0");
+        assert!(Blobs::from_parts(region.clone(), vec![0, 3, 2, 4]).is_err(), "non-monotone");
+        assert!(Blobs::from_parts(region, vec![0, 2, 5]).is_err(), "past the end");
+    }
+
+    #[test]
+    fn slices_share_one_allocation() {
+        let base = Bytes::from_vec((0u8..32).collect());
+        let a = base.slice(4, 8).unwrap();
+        let b = a.slice(2, 3).unwrap();
+        assert_eq!(a.as_slice(), &(4u8..12).collect::<Vec<_>>()[..]);
+        assert_eq!(b.as_slice(), &[6, 7, 8]);
+        assert!(base.slice(30, 4).is_err());
+        assert!(base.slice(33, 0).is_err());
+    }
+}

@@ -8,12 +8,14 @@
 
 pub mod prng;
 pub mod bits;
+pub mod bytes;
 pub mod serialize;
 pub mod cli;
 pub mod pool;
 pub mod timer;
 
 pub use bits::{BitReader, BitWriter};
+pub use bytes::{Blobs, BlobsBuilder, Bytes};
 pub use prng::Rng;
 pub use serialize::{ReadBuf, WriteBuf};
 

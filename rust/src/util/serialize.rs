@@ -66,7 +66,9 @@ impl<'a> ReadBuf<'a> {
     }
 
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.bytes.len() {
+        // Overflow-safe form: `pos + n` can wrap when a corrupt length
+        // field claims a near-usize::MAX payload.
+        if n > self.bytes.len() - self.pos {
             bail!("buffer underrun at {} (+{n} of {})", self.pos, self.bytes.len());
         }
         let s = &self.bytes[self.pos..self.pos + n];
@@ -157,5 +159,18 @@ mod tests {
     fn underrun_is_error() {
         let mut r = ReadBuf::new(&[1, 2]);
         assert!(r.get_u32().is_err());
+    }
+
+    #[test]
+    fn huge_corrupt_length_is_an_error_not_a_panic() {
+        // A length prefix of u64::MAX must not overflow the bounds check
+        // (debug) or slice with an inverted range (release).
+        let mut w = WriteBuf::new();
+        w.put_u64(u64::MAX);
+        w.put_u8(7);
+        let mut r = ReadBuf::new(&w.bytes);
+        assert!(r.get_bytes().is_err());
+        let mut r = ReadBuf::new(&w.bytes);
+        assert!(r.get_str().is_err());
     }
 }

@@ -1,0 +1,90 @@
+//! Backend-generic serving acceptance: the coordinator serving a
+//! [`GraphIndex`] must return exactly what a direct [`beam_search`] over
+//! the same store and entry set returns — for HNSW and NSG, at several
+//! beam widths — proving graph backends ride the same batched path as
+//! IVF without result drift.
+
+use std::sync::Arc;
+use std::time::Duration;
+use zann::api::{AnnIndex, GraphIndex, QueryParams};
+use zann::coordinator::{Coordinator, ServeConfig};
+use zann::datasets::{generate, Dataset, Kind};
+use zann::graph::hnsw::{Hnsw, HnswParams};
+use zann::graph::nsg::{Nsg, NsgParams};
+use zann::graph::{beam_search, VisitedSet};
+
+fn serve_matches_direct_beam_search(gi: Arc<GraphIndex>, ds: &Dataset, k: usize, efs: &[usize]) {
+    let queries: Vec<Vec<f32>> = (0..ds.nq).map(|qi| ds.query(qi).to_vec()).collect();
+    let mut visited = VisitedSet::default();
+    let mut neigh = Vec::new();
+    for &ef in efs {
+        let coord = Coordinator::start(
+            gi.clone(),
+            None,
+            ServeConfig {
+                batch_size: 8,
+                max_wait: Duration::from_millis(1),
+                search: QueryParams { k, ef, nprobe: 0 },
+                scan_threads: 2,
+            },
+        );
+        let responses = coord.client.search_many(queries.clone()).unwrap();
+        for (qi, resp) in responses.iter().enumerate() {
+            let want = beam_search(
+                gi.store(),
+                gi.data(),
+                gi.dim(),
+                gi.entries(),
+                ds.query(qi),
+                ef.max(k),
+                k,
+                &mut visited,
+                &mut neigh,
+            );
+            assert_eq!(
+                resp.results, want,
+                "{:?} ef={ef} query {qi}: served != direct beam search",
+                gi.family()
+            );
+            assert!(!resp.via_pjrt, "graph backends have no PJRT coarse stage");
+            assert!(resp.results.len() <= k);
+        }
+        coord.stop();
+    }
+}
+
+#[test]
+fn coordinator_over_nsg_matches_beam_search_at_every_ef() {
+    let ds = generate(Kind::DeepLike, 1500, 25, 8, 81);
+    let nsg = Nsg::build(
+        &ds.data,
+        ds.dim,
+        &NsgParams { r: 16, knn_k: 24, threads: 2, seed: 6, ..Default::default() },
+    );
+    let gi = Arc::new(GraphIndex::from_nsg(&nsg, &ds.data, "roc").unwrap());
+    serve_matches_direct_beam_search(gi, &ds, 5, &[8, 32, 64]);
+}
+
+#[test]
+fn coordinator_over_hnsw_matches_beam_search_at_every_ef() {
+    let ds = generate(Kind::DeepLike, 1500, 25, 8, 82);
+    let h = Hnsw::build(&ds.data, ds.dim, &HnswParams { m: 12, ef_construction: 60, seed: 6 });
+    let gi = Arc::new(GraphIndex::from_hnsw(&h, &ds.data, "ef").unwrap());
+    serve_matches_direct_beam_search(gi, &ds, 5, &[8, 32, 64]);
+}
+
+#[test]
+fn saved_graph_serves_identically_after_reopen() {
+    use zann::api::persist;
+    let ds = generate(Kind::DeepLike, 1000, 15, 8, 83);
+    let nsg = Nsg::build(
+        &ds.data,
+        ds.dim,
+        &NsgParams { r: 16, knn_k: 24, threads: 2, seed: 7, ..Default::default() },
+    );
+    let gi = GraphIndex::from_nsg(&nsg, &ds.data, "roc").unwrap();
+    let reopened = Arc::new(persist::open_graph_bytes(gi.to_bytes().unwrap()).unwrap());
+    // The reopened index's store decodes the verbatim blobs, so serving
+    // it must still equal a beam search over its own (borrowed) store.
+    serve_matches_direct_beam_search(reopened, &ds, 5, &[16, 48]);
+}

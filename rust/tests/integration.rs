@@ -6,6 +6,7 @@
 //! `cargo test` works in a fresh checkout too.
 
 use std::sync::Arc;
+use zann::api::QueryParams;
 use zann::coordinator::{Coordinator, ServeConfig};
 use zann::datasets::{generate, Kind};
 use zann::index::{IvfBuildParams, IvfIndex, SearchParams, SearchScratch};
@@ -79,7 +80,7 @@ fn serving_through_pjrt_engine_end_to_end() {
         Some(engine),
         ServeConfig {
             batch_size: 64,
-            search: SearchParams { nprobe: 16, k: 10 },
+            search: QueryParams { nprobe: 16, k: 10, ..Default::default() },
             ..Default::default()
         },
     );

@@ -1,0 +1,184 @@
+//! Persistence acceptance tests: `save` → `open` → `search` must be
+//! **bit-identical** to the in-memory index for every per-list codec ×
+//! `VectorMode`, the file must weigh ≈ the compressed payload (the
+//! paper's storage claim survives the disk round-trip), and corrupt or
+//! truncated files must fail with errors, never panics.
+
+use zann::api::{persist, AnnIndex, AnnScratch, GraphFamily, GraphIndex, QueryParams};
+use zann::codecs::PER_LIST_CODECS;
+use zann::datasets::{generate, Dataset, Kind};
+use zann::graph::hnsw::{Hnsw, HnswParams};
+use zann::graph::nsg::{Nsg, NsgParams};
+use zann::index::{IvfBuildParams, IvfIndex, SearchParams, SearchScratch, VectorMode};
+
+fn build_ivf(ds: &Dataset, codec: &str, vectors: VectorMode) -> IvfIndex {
+    IvfIndex::build(
+        &ds.data,
+        ds.dim,
+        &IvfBuildParams {
+            k: 32,
+            id_codec: codec.into(),
+            vectors,
+            threads: 2,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn ivf_roundtrip_bit_identical_for_every_codec_and_vector_mode() {
+    let ds = generate(Kind::DeepLike, 3000, 25, 16, 71);
+    let modes = [
+        VectorMode::Flat,
+        VectorMode::Pq { m: 4, bits: 8 },
+        VectorMode::PqCompressed { m: 4, bits: 8 },
+    ];
+    let sp = SearchParams { nprobe: 8, k: 10 };
+    let p = QueryParams { nprobe: 8, k: 10, ..Default::default() };
+    for codec in PER_LIST_CODECS {
+        for mode in &modes {
+            let label = format!("{codec}/{mode:?}");
+            let idx = build_ivf(&ds, codec, mode.clone());
+            let bytes = idx.to_bytes().unwrap_or_else(|e| panic!("{label}: {e}"));
+
+            // File size ≈ payload + bounded metadata: centroids
+            // (k·dim·4), offset tables, and for PQ modes the codebook
+            // (m·2^bits·dsub·4) — none of which count as compressed
+            // payload in the paper's accounting.
+            let payload = (idx.id_bits() + idx.code_bits()).div_ceil(8);
+            let codebook = match mode {
+                VectorMode::Flat => 0u64,
+                VectorMode::Pq { m, bits } | VectorMode::PqCompressed { m, bits } => {
+                    (*m as u64) * (1u64 << bits) * (ds.dim / m) as u64 * 4
+                }
+            };
+            let overhead = (idx.k * ds.dim * 4) as u64          // centroids
+                + codebook
+                + (3 * (idx.k + 1) * 8 + idx.k * 4 * 8) as u64  // offset tables
+                + 4096;                                          // header + framing
+            assert!(
+                (bytes.len() as u64) >= payload,
+                "{label}: file {} smaller than payload {payload}",
+                bytes.len()
+            );
+            assert!(
+                (bytes.len() as u64) <= payload + overhead,
+                "{label}: file {} exceeds payload {payload} + overhead {overhead}",
+                bytes.len()
+            );
+
+            let back = persist::open_ivf_bytes(bytes.clone())
+                .unwrap_or_else(|e| panic!("{label}: reopen: {e:?}"));
+            assert_eq!(back.id_bits(), idx.id_bits(), "{label}: id bits");
+            assert_eq!(back.code_bits(), idx.code_bits(), "{label}: code bits");
+            assert_eq!(back.id_codec_name(), idx.id_codec_name(), "{label}");
+            assert_eq!(back.k, idx.k, "{label}");
+
+            // Every cluster's decoded list is byte-for-byte the same
+            // order (the blobs were written verbatim).
+            for c in 0..idx.k {
+                assert_eq!(back.decode_list(c), idx.decode_list(c), "{label}: cluster {c}");
+            }
+
+            // Search results — distances and ids — are bit-identical,
+            // through the inherent API and the trait object alike.
+            let dyn_back = persist::open_bytes(bytes).unwrap();
+            let mut s1 = SearchScratch::default();
+            let mut s2 = SearchScratch::default();
+            let mut s3 = AnnScratch::default();
+            let mut via_dyn = Vec::new();
+            for qi in 0..ds.nq {
+                let want = idx.search(ds.query(qi), &sp, &mut s1);
+                let got = back.search(ds.query(qi), &sp, &mut s2);
+                assert_eq!(got, want, "{label}: query {qi}");
+                dyn_back.search_into(ds.query(qi), &p, &mut s3, &mut via_dyn);
+                assert_eq!(via_dyn, want, "{label}: query {qi} via dyn AnnIndex");
+            }
+        }
+    }
+}
+
+#[test]
+fn wavelet_id_stores_refuse_to_persist_with_an_actionable_error() {
+    let ds = generate(Kind::DeepLike, 1500, 1, 8, 72);
+    for codec in ["wt", "wt1"] {
+        let idx = build_ivf(&ds, codec, VectorMode::Flat);
+        let err = idx.to_bytes().expect_err("wavelet stores are not persistable yet");
+        let msg = format!("{err}");
+        assert!(msg.contains("wavelet") && msg.contains("roc"), "{codec}: {msg}");
+    }
+}
+
+#[test]
+fn graph_roundtrip_bit_identical_for_nsg_and_hnsw() {
+    let ds = generate(Kind::DeepLike, 1200, 20, 8, 73);
+    let nsg = Nsg::build(
+        &ds.data,
+        ds.dim,
+        &NsgParams { r: 16, knn_k: 24, threads: 2, seed: 4, ..Default::default() },
+    );
+    let hnsw = Hnsw::build(&ds.data, ds.dim, &HnswParams { m: 12, ef_construction: 60, seed: 4 });
+    let indexes = [
+        GraphIndex::from_nsg(&nsg, &ds.data, "roc").unwrap(),
+        GraphIndex::from_nsg(&nsg, &ds.data, "compact").unwrap(),
+        GraphIndex::from_hnsw(&hnsw, &ds.data, "ef").unwrap(),
+    ];
+    for gi in &indexes {
+        let label = format!("{:?}/{}", gi.family(), gi.stats().codec);
+        let bytes = gi.to_bytes().unwrap_or_else(|e| panic!("{label}: {e}"));
+        let back = persist::open_graph_bytes(bytes).unwrap_or_else(|e| panic!("{label}: {e:?}"));
+        assert_eq!(back.family(), gi.family(), "{label}");
+        assert_eq!(back.entries(), gi.entries(), "{label}");
+        assert_eq!(back.stats().link_bits, gi.stats().link_bits, "{label}");
+        assert_eq!(back.stats().codec, gi.stats().codec, "{label}");
+        let mut s1 = AnnScratch::default();
+        let mut s2 = AnnScratch::default();
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for &ef in &[8usize, 32, 64] {
+            let p = QueryParams { k: 5, ef, nprobe: 0 };
+            for qi in 0..ds.nq {
+                gi.search_into(ds.query(qi), &p, &mut s1, &mut a);
+                back.search_into(ds.query(qi), &p, &mut s2, &mut b);
+                assert_eq!(a, b, "{label}: ef={ef} query {qi}");
+            }
+        }
+    }
+    assert_eq!(indexes[0].family(), GraphFamily::Nsg);
+}
+
+#[test]
+fn corrupt_and_truncated_files_error_cleanly() {
+    let ds = generate(Kind::DeepLike, 1200, 1, 8, 74);
+    let idx = build_ivf(&ds, "roc", VectorMode::Flat);
+    let good = idx.to_bytes().unwrap();
+    assert!(persist::open_bytes(good.clone()).is_ok(), "baseline must open");
+
+    // Bad magic.
+    let mut bad = good.clone();
+    bad[0] ^= 0xff;
+    let err = persist::open_bytes(bad).expect_err("bad magic");
+    assert!(format!("{err}").contains("magic"), "{err}");
+    // Unsupported version.
+    let mut bad = good.clone();
+    bad[4] = 0x2a;
+    let err = persist::open_bytes(bad).expect_err("future version");
+    assert!(format!("{err}").contains("version"), "{err}");
+    // Unknown kind byte.
+    let mut bad = good.clone();
+    bad[6] = 77;
+    let err = persist::open_bytes(bad).expect_err("unknown kind");
+    assert!(format!("{err}").contains("kind"), "{err}");
+    // Truncations: every strict prefix must be an error (a cut either
+    // breaks the framing or drops a required section), never a panic.
+    for cut in [0, 4, 7, 8, good.len() / 3, good.len() / 2, good.len() - 1] {
+        assert!(
+            persist::open_bytes(good[..cut].to_vec()).is_err(),
+            "truncation at {cut}/{} must fail",
+            good.len()
+        );
+    }
+    // Kind-checked typed opens.
+    assert!(persist::open_ivf_bytes(good.clone()).is_ok());
+    let err = persist::open_graph_bytes(good).expect_err("ivf file is not a graph");
+    assert!(format!("{err}").contains("kind"), "{err}");
+}
