@@ -76,6 +76,65 @@ cargo run --release --bin zann -- serve "$IDX_DIR/nsg.zann" --nq 32 --ef 32 \
 grep -q "verified 32/32" "$IDX_DIR/serve_nsg.txt"
 rm -rf "$IDX_DIR"
 
+echo "== dynamic IVF smoke: build -> add -> delete -> compact -> parity =="
+# Drive the mutable index through the CLI and assert (a) search recall
+# parity: after churn + compaction, results are identical to a
+# from-scratch static build over the same live set (check-parity exits
+# non-zero on any divergence), and (b) the stats line reports the
+# live/deleted/segment accounting.
+DYN_DIR="$(mktemp -d /tmp/zann_dyn.XXXXXX)"
+cargo run --release --bin zann -- build --out "$DYN_DIR/dyn.zann" \
+  --backend dynamic --codec roc --n 3000 --dim 16 --k 32
+cargo run --release --bin zann -- add "$DYN_DIR/dyn.zann" --add-n 600 --seed 7
+cargo run --release --bin zann -- delete "$DYN_DIR/dyn.zann" --frac 0.2 --seed 8
+cargo run --release --bin zann -- compact "$DYN_DIR/dyn.zann"
+cargo run --release --bin zann -- info "$DYN_DIR/dyn.zann" | tee "$DYN_DIR/info_dyn.txt"
+python3 - "$DYN_DIR/info_dyn.txt" <<'EOF'
+import sys
+line = next(l for l in open(sys.argv[1]) if l.startswith("zann-index"))
+kv = dict(tok.split("=", 1) for tok in line.split()[1:])
+assert kv["kind"] == "dynamic-ivf", kv["kind"]
+# build 3000 + add 600, delete 20% of the 3600 live -> 2880 live.
+assert int(kv["live"]) == 2880, kv["live"]
+assert int(kv["deleted"]) == 0, f"post-compaction deleted={kv['deleted']}"
+assert int(kv["buffer_rows"]) == 0, kv["buffer_rows"]
+assert int(kv["segments"]) == 1, kv["segments"]
+seg_bpi = [float(v) for v in kv["seg_bpi"].split(",")]
+assert len(seg_bpi) == 1 and 0 < seg_bpi[0] < 64, seg_bpi
+print(f"dynamic stats ok: live={kv['live']} seg_bpi={seg_bpi[0]:.3f}")
+EOF
+cargo run --release --bin zann -- check-parity "$DYN_DIR/dyn.zann" --nq 64 --nprobe 8 \
+  | tee "$DYN_DIR/parity.txt"
+grep -q "parity: 64/64" "$DYN_DIR/parity.txt"
+# A compacted dynamic container serves through the same coordinator path.
+cargo run --release --bin zann -- serve "$DYN_DIR/dyn.zann" --nq 32 --nprobe 8 \
+  | tee "$DYN_DIR/serve_dyn.txt"
+grep -q "verified 32/32" "$DYN_DIR/serve_dyn.txt"
+rm -rf "$DYN_DIR"
+
+echo "== bench_churn smoke (JSON contract + parity + compression gate) =="
+CHURN_JSON="$(mktemp /tmp/zann_bench_churn.XXXXXX.json)"
+cargo bench --bench bench_churn -- \
+  --n 2500 --nq 40 --k 32 --churn 0.2 --nprobe 8 --out "$CHURN_JSON"
+python3 - "$CHURN_JSON" <<'EOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    d = json.load(f)
+assert d["bench"] == "churn", d.get("bench")
+for key in ("dataset", "n", "inserts", "deletes", "dim", "k", "codec", "seed", "nq",
+            "insert_per_s", "delete_per_s", "compact_s", "segments_before_compact",
+            "pre_compact_bits_per_id", "bits_per_id_dynamic", "bits_per_id_static",
+            "bpi_ratio", "queries_identical", "results_identical"):
+    assert key in d, f"missing key {key}"
+assert d["results_identical"] is True, d
+assert d["queries_identical"] == d["nq"] == 40, d
+assert d["bpi_ratio"] <= 1.02, f"compression decayed under churn: {d['bpi_ratio']}"
+assert d["insert_per_s"] > 0 and d["delete_per_s"] > 0, d
+print(f"churn JSON ok: ratio={d['bpi_ratio']:.4f}, "
+      f"{d['queries_identical']}/{d['nq']} queries identical")
+EOF
+rm -f "$CHURN_JSON"
+
 echo "== rustfmt =="
 cargo fmt --all -- --check
 

@@ -1,0 +1,21 @@
+//! Mutable-IVF churn bench: delete/insert a fraction of the index
+//! through the LSM write path, compact, and audit throughput +
+//! post-compaction compression + search parity against a from-scratch
+//! static build. Writes a machine-readable `BENCH_churn.json` at the
+//! repo root.
+//!
+//! `cargo bench --bench bench_churn -- [--full] [--n N] [--nq Q]
+//!  [--k K] [--dataset sift|deep|ssnpp] [--codec roc] [--churn 0.2]
+//!  [--nprobe 16] [--out PATH]`
+//!
+//! Bare invocations run at a tiny smoke scale (see `smoke.rs`); the
+//! bench exits non-zero if any query diverges from the static rebuild,
+//! so it doubles as the churn-correctness gate (docs/REPRODUCING.md).
+
+#[path = "smoke.rs"]
+mod smoke;
+
+fn main() {
+    let args = zann::util::cli::Args::parse(smoke::common_args());
+    zann::eval::bench_entries::churn(&args);
+}

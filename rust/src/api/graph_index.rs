@@ -211,6 +211,11 @@ impl AnnIndex for GraphIndex {
             id_bits: 0,
             code_bits: self.data.len() as u64 * 32,
             link_bits: self.store.id_bits(),
+            live: self.len(),
+            deleted: 0,
+            buffer_rows: 0,
+            aux_bits: 0,
+            segments: Vec::new(),
         }
     }
 

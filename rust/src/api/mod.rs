@@ -28,6 +28,8 @@ pub enum IndexKind {
     Ivf,
     Nsg,
     Hnsw,
+    /// Mutable multi-segment IVF ([`crate::dynamic::DynamicIvf`]).
+    DynamicIvf,
 }
 
 impl IndexKind {
@@ -36,7 +38,31 @@ impl IndexKind {
             IndexKind::Ivf => "ivf",
             IndexKind::Nsg => "nsg",
             IndexKind::Hnsw => "hnsw",
+            IndexKind::DynamicIvf => "dynamic-ivf",
         }
+    }
+}
+
+/// Storage accounting of one immutable segment of a (dynamic) index —
+/// the per-segment view that makes compression under churn observable:
+/// a segment sealed from the write buffer reports its own bits/id, and
+/// compaction visibly collapses the list back to one entry at the
+/// static build's rate.
+#[derive(Clone, Debug)]
+pub struct SegmentStats {
+    /// Rows physically stored (including not-yet-compacted tombstoned
+    /// ones).
+    pub rows: usize,
+    /// Exact compressed id-stream payload in bits.
+    pub id_bits: u64,
+    /// Rank→external-id map bits (0 for identity-mapped and static
+    /// segments).
+    pub map_bits: u64,
+}
+
+impl SegmentStats {
+    pub fn bits_per_id(&self) -> f64 {
+        self.id_bits as f64 / self.rows.max(1) as f64
     }
 }
 
@@ -58,6 +84,22 @@ pub struct IndexStats {
     pub id_bits: u64,
     pub code_bits: u64,
     pub link_bits: u64,
+    /// Searchable vectors (equals `n` for static indexes; for dynamic
+    /// indexes, assigned ids minus deletes).
+    pub live: usize,
+    /// Tombstoned rows still physically stored (0 for static indexes
+    /// and right after a full compaction).
+    pub deleted: usize,
+    /// Uncompressed rows in the mutable write buffer (0 for static
+    /// indexes).
+    pub buffer_rows: usize,
+    /// Deletion metadata (tombstone bitmap) in bits — reported next to,
+    /// not inside, `id_bits`, mirroring how the paper excludes overheads
+    /// from its bit counts.
+    pub aux_bits: u64,
+    /// Per-segment breakdown (one entry for a static IVF index, empty
+    /// for graphs).
+    pub segments: Vec<SegmentStats>,
 }
 
 impl IndexStats {
@@ -71,14 +113,17 @@ impl IndexStats {
         self.total_bits().div_ceil(8)
     }
 
-    /// Bits per vector id (Table-1 metric): `id_bits / n` for IVF; for
-    /// graphs, bits per *edge* id (`link_bits / edges`), following the
-    /// paper's NSG rows.
+    /// Bits per vector id (Table-1 metric): `id_bits / n` for the IVF
+    /// families (static and dynamic); for graphs, bits per *edge* id
+    /// (`link_bits / edges`), following the paper's NSG rows.
     pub fn bits_per_id(&self) -> f64 {
-        if self.kind == IndexKind::Ivf {
-            self.id_bits as f64 / (self.n.max(1)) as f64
-        } else {
-            self.link_bits as f64 / (self.edges.max(1)) as f64
+        match self.kind {
+            IndexKind::Nsg | IndexKind::Hnsw => {
+                self.link_bits as f64 / (self.edges.max(1)) as f64
+            }
+            IndexKind::Ivf | IndexKind::DynamicIvf => {
+                self.id_bits as f64 / (self.n.max(1)) as f64
+            }
         }
     }
 }
@@ -214,6 +259,11 @@ impl AnnIndex for IvfIndex {
             id_bits: self.id_bits(),
             code_bits: self.code_bits(),
             link_bits: 0,
+            live: self.n,
+            deleted: 0,
+            buffer_rows: 0,
+            aux_bits: 0,
+            segments: vec![SegmentStats { rows: self.n, id_bits: self.id_bits(), map_bits: 0 }],
         }
     }
 

@@ -4,7 +4,7 @@
 //! ```text
 //! byte 0..4   magic  b"ZANN"
 //! byte 4..6   format version (u16 LE, currently 1)
-//! byte 6      index kind (1 = IVF, 2 = graph)
+//! byte 6      index kind (1 = IVF, 2 = graph, 3 = dynamic IVF)
 //! byte 7      reserved (0)
 //! then until EOF, sections:
 //!   [tag: 4 ascii bytes] [payload length: u64 LE] [payload]
@@ -37,6 +37,11 @@ pub const VERSION: u16 = 1;
 pub const KIND_IVF: u8 = 1;
 /// Kind tag: graph index (NSG/HNSW; family is in the HEAD section).
 pub const KIND_GRAPH: u8 = 2;
+/// Kind tag: dynamic (multi-segment) IVF index. The section layout is
+/// versioned inside its `DHDR` section (see [`crate::dynamic::persist`]);
+/// pre-existing single-segment `KIND_IVF` containers are unaffected and
+/// keep opening byte-for-byte.
+pub const KIND_DYNAMIC: u8 = 3;
 
 /// Start a container file: magic + version + kind + reserved byte.
 pub fn file_header(kind: u8) -> Vec<u8> {
@@ -178,6 +183,7 @@ pub fn open_bytes(buf: Vec<u8>) -> Result<Box<dyn AnnIndex>> {
     match c.kind {
         KIND_IVF => Ok(Box::new(IvfIndex::from_container(&c)?)),
         KIND_GRAPH => Ok(Box::new(GraphIndex::from_container(&c)?)),
+        KIND_DYNAMIC => Ok(Box::new(crate::dynamic::persist::from_container(&c)?)),
         other => bail!("unknown index kind tag {other}"),
     }
 }
@@ -197,6 +203,25 @@ pub fn open_graph_bytes(buf: Vec<u8>) -> Result<GraphIndex> {
     let c = Container::parse(&region)?;
     ensure!(c.kind == KIND_GRAPH, "container holds kind {} (expected a graph index)", c.kind);
     GraphIndex::from_container(&c)
+}
+
+/// Typed open for dynamic (multi-segment) IVF containers — the CLI
+/// mutation subcommands need the concrete mutable index back.
+pub fn open_dynamic_bytes(buf: Vec<u8>) -> Result<crate::dynamic::DynamicIvf> {
+    let region = Bytes::from_vec(buf);
+    let c = Container::parse(&region)?;
+    ensure!(
+        c.kind == KIND_DYNAMIC,
+        "container holds kind {} (expected a dynamic IVF index)",
+        c.kind
+    );
+    crate::dynamic::persist::from_container(&c)
+}
+
+/// Open a saved dynamic index from `path`.
+pub fn open_dynamic(path: &Path) -> Result<crate::dynamic::DynamicIvf> {
+    let buf = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    open_dynamic_bytes(buf).with_context(|| format!("opening {}", path.display()))
 }
 
 #[cfg(test)]

@@ -163,6 +163,12 @@ impl RsBitVec {
         self.buf.words.len() * 64 + self.rank_samples.len() * 64
     }
 
+    /// The raw bitmap words (LSB-first), for serialization; rank
+    /// samples are rebuilt by [`RsBitVec::new`] on the way back in.
+    pub fn words(&self) -> &[u64] {
+        &self.buf.words
+    }
+
     /// Payload-only size in bits.
     pub fn payload_bits(&self) -> usize {
         self.buf.len

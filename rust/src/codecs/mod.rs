@@ -235,6 +235,59 @@ mod tests {
     }
 
     #[test]
+    fn decode_nth_agrees_with_full_decode_for_every_per_list_codec() {
+        // Property: for every registered per-list codec, random access
+        // (`decode_nth`) must agree position-by-position with the full
+        // `decode` order — the contract the tombstone-aware dynamic
+        // search path and §4.1's deferred id resolution both lean on —
+        // and codecs without random access must say so consistently.
+        use crate::util::Rng;
+        let mut rng = Rng::new(0xdec0de);
+        for name in PER_LIST_CODECS.iter() {
+            let codec = CodecSpec::parse(name).unwrap().id_codec().unwrap();
+            for trial in 0..40 {
+                let universe = match trial % 4 {
+                    0 => 1 + rng.below(64) as u32,
+                    1 => 1 + rng.below(4096) as u32,
+                    2 => 1 + rng.below(1 << 20) as u32,
+                    _ => u32::MAX - rng.below(1000) as u32,
+                };
+                let n = (rng.below(200) as usize).min(universe as usize);
+                let ids: Vec<u32> = rng
+                    .sample_distinct(universe as u64, n)
+                    .into_iter()
+                    .map(|v| v as u32)
+                    .collect();
+                let enc = codec.encode(&ids, universe);
+                let mut full = Vec::new();
+                codec.decode(&enc.bytes, universe, n, &mut full);
+                if codec.supports_random_access() {
+                    for k in 0..n {
+                        assert_eq!(
+                            codec.decode_nth(&enc.bytes, universe, n, k),
+                            Some(full[k]),
+                            "{name}: trial {trial}, nth({k}) of {n} (universe {universe})"
+                        );
+                    }
+                    assert_eq!(
+                        codec.decode_nth(&enc.bytes, universe, n, n),
+                        None,
+                        "{name}: nth past the end must be None"
+                    );
+                } else {
+                    for k in [0usize, n / 2, n.saturating_sub(1)] {
+                        assert_eq!(
+                            codec.decode_nth(&enc.bytes, universe, n, k),
+                            None,
+                            "{name}: claims no random access but answered nth({k})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn registry_covers_exactly_the_table1_per_list_columns() {
         // Every registered name resolves; the decode of an empty list is a
         // no-op for each of them.

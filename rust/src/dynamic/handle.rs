@@ -1,0 +1,254 @@
+//! Epoch-swapped publication of a [`DynamicIvf`] — mutate-while-serving
+//! without reader locks.
+//!
+//! The coordinator holds an `Arc<dyn AnnIndex>` and searches through
+//! `&self`; a mutable index therefore needs a publication layer. A
+//! reader/writer lock around the whole index would stall every
+//! in-flight query for the duration of a compaction. [`DynamicHandle`]
+//! avoids that with RCU-style epochs:
+//!
+//! * the **writer side** owns the canonical [`DynamicIvf`] behind a
+//!   writer-only mutex; `update` applies a mutation, then publishes a
+//!   snapshot. Snapshots are cheap — segments are `Arc`-shared, only
+//!   the write buffer and tombstone bitmap are copied;
+//! * the **reader side** grabs the current epoch `Arc` (a mutex held
+//!   for one pointer clone, never across a search) and runs the whole
+//!   query against that immutable snapshot. A compaction publishing a
+//!   new epoch never blocks or disturbs queries running on the old one;
+//!   the old epoch is freed when its last query drops it.
+//!
+//! The handle implements [`AnnIndex`] itself, so
+//! `Coordinator::start(Arc<DynamicHandle>, …)` serves a mutating index
+//! through the exact same batcher/worker path as the static backends.
+//! The coarse stage (centroids never change across epochs) is answered
+//! from the handle's own copy, which keeps [`AnnIndex::coarse_info`]
+//! borrowable without touching an epoch.
+
+use super::DynamicIvf;
+use crate::api::{AnnIndex, AnnScratch, CoarseInfo, IndexKind, IndexStats, QueryParams};
+use anyhow::Result;
+use std::sync::{Arc, Mutex};
+
+pub struct DynamicHandle {
+    /// Canonical mutable state; writers serialize here. Compaction runs
+    /// inside this lock — readers never take it.
+    writer: Mutex<DynamicIvf>,
+    /// The published epoch; the lock is held only to clone/replace the
+    /// `Arc`, never across a search.
+    epoch: Mutex<Arc<DynamicIvf>>,
+    /// Coarse stage, immutable across epochs.
+    centroids: Arc<Vec<f32>>,
+    centroid_norms: Arc<Vec<f32>>,
+    dim: usize,
+    k: usize,
+}
+
+impl DynamicHandle {
+    pub fn new(index: DynamicIvf) -> DynamicHandle {
+        let centroids = index.centroids_arc();
+        let centroid_norms = index.centroid_norms_arc();
+        let dim = index.dim();
+        let k = index.num_clusters();
+        let epoch = Mutex::new(Arc::new(index.clone()));
+        DynamicHandle { writer: Mutex::new(index), epoch, centroids, centroid_norms, dim, k }
+    }
+
+    /// The current published snapshot (what queries see).
+    pub fn load(&self) -> Arc<DynamicIvf> {
+        self.epoch.lock().unwrap().clone()
+    }
+
+    /// Apply a mutation to the canonical index, then publish a fresh
+    /// epoch. Concurrent `update` calls serialize; concurrent queries
+    /// keep running on the previous epoch until the swap.
+    pub fn update<R>(&self, f: impl FnOnce(&mut DynamicIvf) -> R) -> R {
+        let mut w = self.writer.lock().unwrap();
+        let r = f(&mut w);
+        let snap = Arc::new(w.clone());
+        *self.epoch.lock().unwrap() = snap;
+        r
+    }
+
+    /// Convenience wrappers over [`DynamicHandle::update`]. Each
+    /// `update` publishes one snapshot (cloning the write buffer and
+    /// tombstone bitmap), so batch mutations should go through one call
+    /// — `add` already takes a whole batch of rows, and bulk deletes
+    /// should use [`DynamicHandle::delete_many`], not `delete` in a
+    /// loop.
+    pub fn add(&self, rows: &[f32]) -> Result<std::ops::Range<u32>> {
+        self.update(|idx| idx.add(rows))
+    }
+
+    pub fn delete(&self, id: u32) -> Result<bool> {
+        self.update(|idx| idx.delete(id))
+    }
+
+    /// Tombstone a batch of ids under one writer lock and publish a
+    /// single epoch. Returns how many were live (unknown/already-dead
+    /// ids are skipped, like [`DynamicIvf::delete`]).
+    pub fn delete_many(&self, ids: impl IntoIterator<Item = u32>) -> Result<usize> {
+        self.update(|idx| {
+            let mut deleted = 0usize;
+            for id in ids {
+                if idx.delete(id)? {
+                    deleted += 1;
+                }
+            }
+            Ok(deleted)
+        })
+    }
+
+    pub fn compact(&self) -> Result<()> {
+        self.update(|idx| idx.compact())
+    }
+}
+
+impl AnnIndex for DynamicHandle {
+    fn kind(&self) -> IndexKind {
+        IndexKind::DynamicIvf
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.load().live()
+    }
+
+    fn stats(&self) -> IndexStats {
+        self.load().stats()
+    }
+
+    fn search_into(
+        &self,
+        query: &[f32],
+        params: &QueryParams,
+        scratch: &mut AnnScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        let epoch = self.load();
+        DynamicIvf::search_into(epoch.as_ref(), query, &params.ivf(), &mut scratch.ivf, out);
+    }
+
+    fn coarse_info(&self) -> Option<CoarseInfo<'_>> {
+        Some(CoarseInfo { centroids: &self.centroids, norms: &self.centroid_norms, k: self.k })
+    }
+
+    fn search_with_coarse_into(
+        &self,
+        query: &[f32],
+        coarse: &[f32],
+        params: &QueryParams,
+        scratch: &mut AnnScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        let epoch = self.load();
+        DynamicIvf::search_with_coarse_into(
+            epoch.as_ref(),
+            query,
+            coarse,
+            &params.ivf(),
+            &mut scratch.ivf,
+            out,
+        );
+    }
+
+    fn to_bytes(&self) -> Result<Vec<u8>> {
+        self.load().to_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, ServeConfig};
+    use crate::datasets::{generate, Kind};
+    use crate::dynamic::{CompactionPolicy, DynamicBuildParams};
+    use crate::index::{IvfBuildParams, SearchParams, SearchScratch};
+    use std::time::Duration;
+
+    #[test]
+    fn updates_publish_and_readers_see_snapshots() {
+        let ds = generate(Kind::DeepLike, 1500, 10, 8, 55);
+        let idx = DynamicIvf::build(
+            &ds.data[..1000 * ds.dim],
+            ds.dim,
+            &DynamicBuildParams {
+                ivf: IvfBuildParams {
+                    k: 16,
+                    id_codec: "roc".into(),
+                    threads: 2,
+                    ..Default::default()
+                },
+                policy: CompactionPolicy { auto: false, ..Default::default() },
+            },
+        )
+        .unwrap();
+        let handle = DynamicHandle::new(idx);
+        let before = handle.load();
+        assert_eq!(before.live(), 1000);
+        let range = handle.add(&ds.data[1000 * ds.dim..1200 * ds.dim]).unwrap();
+        assert_eq!(range, 1000..1200);
+        // The old epoch is genuinely frozen; the new one sees the adds.
+        assert_eq!(before.live(), 1000);
+        assert_eq!(handle.load().live(), 1200);
+        assert!(handle.delete(3).unwrap());
+        handle.compact().unwrap();
+        assert_eq!(handle.load().live(), 1199);
+        assert_eq!(handle.load().num_segments(), 1);
+        // Search on the retained pre-add epoch still works (no ABA, no
+        // torn state) and returns only pre-add ids.
+        let mut s = SearchScratch::default();
+        let hits = before.search(ds.query(0), &SearchParams { nprobe: 8, k: 5 }, &mut s);
+        assert!(hits.iter().all(|&(_, id)| id < 1000));
+    }
+
+    #[test]
+    fn coordinator_serves_a_mutating_dynamic_index() {
+        let ds = generate(Kind::DeepLike, 1600, 30, 8, 56);
+        let idx = DynamicIvf::build(
+            &ds.data[..1200 * ds.dim],
+            ds.dim,
+            &DynamicBuildParams {
+                ivf: IvfBuildParams {
+                    k: 16,
+                    id_codec: "roc".into(),
+                    threads: 2,
+                    ..Default::default()
+                },
+                policy: CompactionPolicy { flush_rows: 100, auto: true, ..Default::default() },
+            },
+        )
+        .unwrap();
+        let handle = Arc::new(DynamicHandle::new(idx));
+        let cfg = ServeConfig {
+            batch_size: 8,
+            max_wait: Duration::from_millis(1),
+            search: QueryParams { nprobe: 8, k: 5, ..Default::default() },
+            scan_threads: 2,
+        };
+        let coord = Coordinator::start(handle.clone(), None, cfg);
+        // Interleave serving with mutations (including a compaction).
+        let queries: Vec<Vec<f32>> = (0..ds.nq).map(|qi| ds.query(qi).to_vec()).collect();
+        let r1 = coord.client.search_many(queries[..10].to_vec()).unwrap();
+        handle.add(&ds.data[1200 * ds.dim..1600 * ds.dim]).unwrap();
+        assert_eq!(handle.delete_many(0..100u32).unwrap(), 100);
+        assert_eq!(handle.delete_many(0..100u32).unwrap(), 0, "already dead");
+        handle.compact().unwrap();
+        let r2 = coord.client.search_many(queries[10..].to_vec()).unwrap();
+        assert_eq!(r1.len() + r2.len(), ds.nq);
+        // Post-compaction responses must match a direct search on the
+        // current epoch and never serve a tombstoned id.
+        let epoch = handle.load();
+        let sp = SearchParams { nprobe: 8, k: 5 };
+        let mut s = SearchScratch::default();
+        for (i, resp) in r2.iter().enumerate() {
+            let qi = 10 + i;
+            let want = epoch.search(ds.query(qi), &sp, &mut s);
+            assert_eq!(resp.results, want, "query {qi}");
+            assert!(resp.results.iter().all(|&(_, id)| id >= 100));
+        }
+        coord.stop();
+    }
+}

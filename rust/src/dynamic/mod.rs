@@ -1,0 +1,909 @@
+//! Mutable IVF: LSM-style segmented ingestion over compressed id
+//! storage.
+//!
+//! The paper's codecs assume a frozen set of ids per inverted list; a
+//! serving system sees inserts and deletes. [`DynamicIvf`] keeps both
+//! properties by wrapping the static [`IvfIndex`] layout in an LSM-like
+//! structure:
+//!
+//! * the bulk of every inverted list lives in immutable **compressed
+//!   [`Segment`]s** (any registered per-list [`CodecSpec`] — the initial
+//!   segment adopts a static build's streams verbatim);
+//! * fresh inserts land in a small uncompressed **[`WriteBuffer`]**,
+//!   sealed into a new segment once it exceeds the
+//!   [`CompactionPolicy::flush_rows`] threshold;
+//! * deletes set a bit in a **[`Tombstones`]** bitmap; search filters
+//!   them out, so a delete is O(1) and never touches a compressed
+//!   stream;
+//! * the **compaction engine** ([`DynamicIvf::compact`]) merges segments
+//!   + buffer, drops tombstoned rows, and re-encodes each cluster on the
+//!   `util::pool` workers. Re-encoding happens in a *rank space* with
+//!   the dead ids squeezed out (see [`segment::IdMap`]), so
+//!   post-compaction bits/id matches a from-scratch static build over
+//!   the live set — compression does not decay under churn.
+//!
+//! `DynamicIvf` implements [`AnnIndex`], so persistence, the CLI and the
+//! batching coordinator serve it unchanged; [`DynamicHandle`] adds
+//! epoch-swapped publication so compaction never blocks in-flight
+//! queries.
+
+pub mod handle;
+pub mod persist;
+pub mod segment;
+
+pub use handle::DynamicHandle;
+pub use segment::{IdMap, Segment, Tombstones, WriteBuffer};
+
+use crate::api::{
+    AnnIndex, AnnScratch, CoarseInfo, IndexKind, IndexStats, QueryParams, SegmentStats,
+};
+use crate::bitvec::RsBitVec;
+use crate::codecs::{CodecSpec, DecodeScratch, PER_LIST_CODECS};
+use crate::index::{IvfBuildParams, IvfIndex, SearchParams, SearchScratch, VectorMode};
+use crate::quant::{coarse, kmeans, l2_sq};
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+
+/// Maintenance thresholds for the LSM structure. `auto` maintenance
+/// runs after every `add`/`delete`; an explicit [`DynamicIvf::flush`] /
+/// [`DynamicIvf::compact`] is always available regardless.
+#[derive(Clone, Copy, Debug)]
+pub struct CompactionPolicy {
+    /// Seal the write buffer into a compressed segment at this many rows.
+    pub flush_rows: usize,
+    /// Fully compact when the segment count exceeds this.
+    pub max_segments: usize,
+    /// Fully compact when tombstoned rows exceed this fraction of
+    /// stored rows.
+    pub max_dead_frac: f64,
+    /// Whether `add`/`delete` trigger maintenance automatically.
+    pub auto: bool,
+}
+
+impl Default for CompactionPolicy {
+    fn default() -> Self {
+        CompactionPolicy { flush_rows: 8192, max_segments: 8, max_dead_frac: 0.25, auto: true }
+    }
+}
+
+/// Build parameters: the wrapped static build plus the LSM policy.
+#[derive(Default)]
+pub struct DynamicBuildParams {
+    pub ivf: IvfBuildParams,
+    pub policy: CompactionPolicy,
+}
+
+/// Result of a parity audit against a from-scratch static rebuild over
+/// the same live id set ([`DynamicIvf::check_parity`]).
+#[derive(Clone, Debug)]
+pub struct Parity {
+    pub queries: usize,
+    /// Queries whose (distance, id) results matched the static build
+    /// exactly (ids mapped through the live-set numbering).
+    pub identical: usize,
+    /// Compressed id payload per live id of the dynamic index.
+    pub dynamic_bits_per_id: f64,
+    /// `bits_per_id` of the freshly built static index.
+    pub static_bits_per_id: f64,
+}
+
+/// A mutable IVF index: immutable compressed segments + write buffer +
+/// tombstones, sharing the coarse quantizer (and search semantics) of
+/// the static [`IvfIndex`] it wraps.
+///
+/// Snapshots are cheap ([`Clone`]): segments are `Arc`-shared, only the
+/// write buffer and tombstone bitmap are copied — the substrate of
+/// [`DynamicHandle`]'s epoch swapping.
+#[derive(Clone)]
+pub struct DynamicIvf {
+    dim: usize,
+    k: usize,
+    centroids: Arc<Vec<f32>>,
+    centroid_norms: Arc<Vec<f32>>,
+    spec: CodecSpec,
+    threads: usize,
+    policy: CompactionPolicy,
+    segments: Vec<Arc<Segment>>,
+    buffer: WriteBuffer,
+    tombs: Tombstones,
+    /// Next external id to assign; ids are never reused.
+    next_id: u32,
+    /// Tombstoned rows still physically present in segments/buffer.
+    dead_stored: usize,
+}
+
+impl DynamicIvf {
+    /// Build from row-major `data`: a static build whose compressed
+    /// streams become the first segment verbatim.
+    pub fn build(data: &[f32], dim: usize, params: &DynamicBuildParams) -> Result<DynamicIvf> {
+        let spec = CodecSpec::parse(&params.ivf.id_codec)?;
+        ensure!(
+            spec.is_per_list(),
+            "dynamic indexes need a per-list id codec ({})",
+            PER_LIST_CODECS.join("|")
+        );
+        ensure!(
+            matches!(params.ivf.vectors, VectorMode::Flat),
+            "dynamic indexes currently store Flat vectors"
+        );
+        let idx = IvfIndex::build(data, dim, &params.ivf);
+        Self::from_static(idx, params.policy, params.ivf.threads)
+    }
+
+    /// Wrap an existing static index (Flat vectors, per-list codec): its
+    /// id streams and vector rows are adopted as the initial segment
+    /// without re-encoding. `threads` sizes the insert-assignment and
+    /// compaction worker pools.
+    pub fn from_static(
+        idx: IvfIndex,
+        policy: CompactionPolicy,
+        threads: usize,
+    ) -> Result<DynamicIvf> {
+        let parts = idx.into_parts()?;
+        let k = parts.k;
+        let n = parts.n;
+        let seg = Segment::from_parts(
+            parts.blobs,
+            parts.offsets,
+            parts.vectors,
+            parts.spec,
+            n as u32,
+            IdMap::Identity,
+            parts.id_bits,
+            parts.dim,
+        )?;
+        Ok(DynamicIvf {
+            dim: parts.dim,
+            k,
+            centroids: Arc::new(parts.centroids),
+            centroid_norms: Arc::new(parts.centroid_norms),
+            spec: parts.spec,
+            threads: threads.max(1),
+            policy,
+            segments: vec![Arc::new(seg)],
+            buffer: WriteBuffer::new(k),
+            tombs: Tombstones::default(),
+            next_id: n as u32,
+            dead_stored: 0,
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn num_clusters(&self) -> usize {
+        self.k
+    }
+
+    /// Live (searchable) vectors: assigned ids minus deletes.
+    pub fn live(&self) -> usize {
+        (self.next_id as u64 - self.tombs.count()) as usize
+    }
+
+    /// Rows physically stored (segments + buffer), including tombstoned
+    /// ones not yet compacted away.
+    pub fn stored_rows(&self) -> usize {
+        self.segments.iter().map(|s| s.rows()).sum::<usize>() + self.buffer.rows
+    }
+
+    pub fn num_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    pub fn buffer_rows(&self) -> usize {
+        self.buffer.rows
+    }
+
+    /// Tombstoned rows still stored (removed at the next compaction).
+    pub fn dead_stored(&self) -> usize {
+        self.dead_stored
+    }
+
+    pub fn next_id(&self) -> u32 {
+        self.next_id
+    }
+
+    pub fn id_codec_name(&self) -> &str {
+        self.spec.name()
+    }
+
+    pub fn policy(&self) -> CompactionPolicy {
+        self.policy
+    }
+
+    pub fn set_policy(&mut self, policy: CompactionPolicy) {
+        self.policy = policy;
+    }
+
+    /// Compressed + buffered id payload in bits.
+    pub fn id_bits(&self) -> u64 {
+        self.segments.iter().map(|s| s.id_bits()).sum::<u64>() + self.buffer.id_bits()
+    }
+
+    /// Id payload per live id.
+    pub fn bits_per_id(&self) -> f64 {
+        self.id_bits() as f64 / self.live().max(1) as f64
+    }
+
+    /// Insert row-major vectors; returns the external ids assigned
+    /// (consecutive, never reused). May trigger a flush/compaction per
+    /// the policy.
+    pub fn add(&mut self, rows: &[f32]) -> Result<std::ops::Range<u32>> {
+        ensure!(
+            self.dim > 0 && rows.len() % self.dim == 0,
+            "row buffer of {} floats is not a multiple of dim {}",
+            rows.len(),
+            self.dim
+        );
+        let n = rows.len() / self.dim;
+        ensure!(
+            self.next_id as u64 + n as u64 <= u32::MAX as u64,
+            "id space exhausted ({} + {n} ids)",
+            self.next_id
+        );
+        let assign = kmeans::assign(rows, self.dim, &self.centroids, self.threads);
+        for (i, &c) in assign.iter().enumerate() {
+            self.buffer.push(
+                c as usize,
+                self.next_id + i as u32,
+                &rows[i * self.dim..(i + 1) * self.dim],
+            );
+        }
+        let range = self.next_id..self.next_id + n as u32;
+        self.next_id += n as u32;
+        self.maintain()?;
+        Ok(range)
+    }
+
+    /// Tombstone one id. Returns false (and changes nothing) when the
+    /// id was never assigned or is already deleted.
+    pub fn delete(&mut self, id: u32) -> Result<bool> {
+        if id >= self.next_id || !self.tombs.set(id) {
+            return Ok(false);
+        }
+        self.dead_stored += 1;
+        self.maintain()?;
+        Ok(true)
+    }
+
+    /// Whether `id` is currently searchable.
+    pub fn is_live(&self, id: u32) -> bool {
+        id < self.next_id && !self.tombs.get(id)
+    }
+
+    fn maintain(&mut self) -> Result<()> {
+        if !self.policy.auto {
+            return Ok(());
+        }
+        if self.buffer.rows >= self.policy.flush_rows.max(1) {
+            self.flush()?;
+        }
+        let stored = self.stored_rows();
+        let dead_frac =
+            if stored == 0 { 0.0 } else { self.dead_stored as f64 / stored as f64 };
+        if self.segments.len() > self.policy.max_segments
+            || dead_frac > self.policy.max_dead_frac
+        {
+            self.compact()?;
+        }
+        Ok(())
+    }
+
+    /// Seal the write buffer into a compressed segment (minor
+    /// compaction). Tombstoned buffer rows are dropped on the way.
+    pub fn flush(&mut self) -> Result<()> {
+        if self.buffer.rows == 0 {
+            return Ok(());
+        }
+        let dim = self.dim;
+        let mut lists: Vec<Vec<u32>> = Vec::with_capacity(self.k);
+        let mut vecs: Vec<Vec<f32>> = Vec::with_capacity(self.k);
+        let mut dropped = 0usize;
+        for c in 0..self.k {
+            let bl = &self.buffer.lists[c];
+            let bv = &self.buffer.vecs[c];
+            let mut l = Vec::with_capacity(bl.len());
+            let mut v = Vec::with_capacity(bv.len());
+            for (o, &ext) in bl.iter().enumerate() {
+                if self.tombs.get(ext) {
+                    dropped += 1;
+                    continue;
+                }
+                l.push(ext);
+                v.extend_from_slice(&bv[o * dim..(o + 1) * dim]);
+            }
+            lists.push(l);
+            vecs.push(v);
+        }
+        if lists.iter().any(|l| !l.is_empty()) {
+            // Buffer ids are a subset of [0, next_id) with no holes to
+            // squeeze (the streams are small and short-lived); encode
+            // them directly under the identity map.
+            let seg = Segment::build(
+                &lists,
+                self.next_id,
+                dim,
+                self.spec,
+                IdMap::Identity,
+                |c, pos| &vecs[c][pos * dim..(pos + 1) * dim],
+                self.threads,
+            )?;
+            self.segments.push(Arc::new(seg));
+        }
+        self.dead_stored -= dropped;
+        self.buffer.clear();
+        Ok(())
+    }
+
+    /// Gather every live row in external-id order: per-cluster rank
+    /// lists (sorted), rank-major vector rows, the external id of each
+    /// rank, and the live bitvector (None when the id space has no
+    /// holes, i.e. nothing was ever deleted).
+    fn gather_live(&self) -> (Vec<Vec<u32>>, Vec<f32>, Vec<u32>, Option<RsBitVec>) {
+        let dim = self.dim;
+        let live_n = self.live();
+        let live_bv = (self.tombs.count() > 0).then(|| self.tombs.live_bitvec(self.next_id));
+        let rank = |ext: u32| -> usize {
+            match &live_bv {
+                Some(bv) => bv.rank1(ext as usize) as usize,
+                None => ext as usize,
+            }
+        };
+        let mut lists: Vec<Vec<u32>> = vec![Vec::new(); self.k];
+        let mut rows = vec![0f32; live_n * dim];
+        let mut ext_of = vec![0u32; live_n];
+        let mut ids = Vec::new();
+        let mut scratch = DecodeScratch::default();
+        for seg in &self.segments {
+            for c in 0..self.k {
+                if seg.list_len(c) == 0 {
+                    continue;
+                }
+                seg.decode_list_into(c, &mut ids, &mut scratch);
+                let crows = seg.cluster_rows(c);
+                for (o, &r) in ids.iter().enumerate() {
+                    let ext = seg.ext_id(r);
+                    if self.tombs.get(ext) {
+                        continue;
+                    }
+                    let rk = rank(ext);
+                    lists[c].push(rk as u32);
+                    rows[rk * dim..(rk + 1) * dim]
+                        .copy_from_slice(&crows[o * dim..(o + 1) * dim]);
+                    ext_of[rk] = ext;
+                }
+            }
+        }
+        for c in 0..self.k {
+            for (o, &ext) in self.buffer.lists[c].iter().enumerate() {
+                if self.tombs.get(ext) {
+                    continue;
+                }
+                let rk = rank(ext);
+                lists[c].push(rk as u32);
+                rows[rk * dim..(rk + 1) * dim]
+                    .copy_from_slice(&self.buffer.vecs[c][o * dim..(o + 1) * dim]);
+                ext_of[rk] = ext;
+            }
+        }
+        for l in &mut lists {
+            l.sort_unstable();
+        }
+        (lists, rows, ext_of, live_bv)
+    }
+
+    /// Major compaction: merge every segment and the write buffer into
+    /// one segment holding only live rows, re-encoded through the codec
+    /// registry over the squeezed rank universe. Runs the per-cluster
+    /// re-encode data-parallel on the `util::pool` workers.
+    ///
+    /// The rank lists it encodes are exactly the lists a from-scratch
+    /// static build over the live vectors would produce (same centroids,
+    /// same assignment, live rows numbered in external-id order), so
+    /// post-compaction `bits_per_id` matches the static build.
+    pub fn compact(&mut self) -> Result<()> {
+        let dim = self.dim;
+        let (lists, rows, _ext_of, live_bv) = self.gather_live();
+        let universe = match &live_bv {
+            Some(bv) => bv.count_ones() as u32,
+            None => self.next_id,
+        };
+        let map = match live_bv {
+            Some(bv) => IdMap::Live(bv),
+            None => IdMap::Identity,
+        };
+        let seg = Segment::build(
+            &lists,
+            universe,
+            dim,
+            self.spec,
+            map,
+            |c, pos| {
+                let rk = lists[c][pos] as usize;
+                &rows[rk * dim..(rk + 1) * dim]
+            },
+            self.threads,
+        )?;
+        self.segments = vec![Arc::new(seg)];
+        self.buffer.clear();
+        self.dead_stored = 0;
+        Ok(())
+    }
+
+    /// Build a fresh static [`IvfIndex`] over the live vectors (same
+    /// centroids, same codec). Returns the index plus the external id of
+    /// each of its rows (`row i` ↔ `ext_of[i]`) — the audit baseline for
+    /// [`DynamicIvf::check_parity`] and the churn bench.
+    pub fn rebuild_static(&self) -> Result<(IvfIndex, Vec<u32>)> {
+        let (_, rows, ext_of, _) = self.gather_live();
+        let assign = kmeans::assign(&rows, self.dim, &self.centroids, self.threads);
+        let params = IvfBuildParams {
+            k: self.k,
+            id_codec: self.spec.name().into(),
+            vectors: VectorMode::Flat,
+            threads: self.threads,
+            ..Default::default()
+        };
+        let idx = IvfIndex::build_preassigned(
+            &rows,
+            self.dim,
+            &self.centroids,
+            &assign,
+            &params,
+            self.k,
+        );
+        Ok((idx, ext_of))
+    }
+
+    /// Audit search parity against a from-scratch static build over the
+    /// same live set: for each query, dynamic results must equal the
+    /// static results with row ids mapped back to external ids.
+    pub fn check_parity(&self, queries: &[f32], sp: &SearchParams) -> Result<Parity> {
+        ensure!(
+            self.dim > 0 && queries.len() % self.dim == 0,
+            "query buffer of {} floats is not a multiple of dim {}",
+            queries.len(),
+            self.dim
+        );
+        let (stat, ext_of) = self.rebuild_static()?;
+        let nq = queries.len() / self.dim;
+        let mut s_dyn = SearchScratch::default();
+        let mut s_stat = SearchScratch::default();
+        let (mut got, mut raw) = (Vec::new(), Vec::new());
+        let mut identical = 0usize;
+        for qi in 0..nq {
+            let q = &queries[qi * self.dim..(qi + 1) * self.dim];
+            self.search_into(q, sp, &mut s_dyn, &mut got);
+            stat.search_into(q, sp, &mut s_stat, &mut raw);
+            let want: Vec<(f32, u32)> =
+                raw.iter().map(|&(d, id)| (d, ext_of[id as usize])).collect();
+            if got == want {
+                identical += 1;
+            }
+        }
+        Ok(Parity {
+            queries: nq,
+            identical,
+            dynamic_bits_per_id: self.bits_per_id(),
+            static_bits_per_id: stat.bits_per_id(),
+        })
+    }
+
+    /// Search with coarse distances computed internally.
+    pub fn search(
+        &self,
+        query: &[f32],
+        p: &SearchParams,
+        scratch: &mut SearchScratch,
+    ) -> Vec<(f32, u32)> {
+        let mut out = Vec::with_capacity(p.k);
+        self.search_into(query, p, scratch, &mut out);
+        out
+    }
+
+    /// Buffer-reusing search (replaces `out`): scans the write buffer
+    /// and every segment of each probed cluster, translating rank ids
+    /// through the segment map and filtering tombstones inline.
+    pub fn search_into(
+        &self,
+        query: &[f32],
+        p: &SearchParams,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        scratch.coarse.clear();
+        scratch.coarse.resize(self.k, 0.0);
+        coarse::dists_into(
+            query,
+            &self.centroids,
+            self.dim,
+            &self.centroid_norms,
+            &mut scratch.coarse,
+        );
+        self.search_with_coarse_inner(query, p, scratch, out);
+    }
+
+    /// Search with externally supplied coarse distances (the batched
+    /// coordinator path).
+    pub fn search_with_coarse_into(
+        &self,
+        query: &[f32],
+        coarse: &[f32],
+        p: &SearchParams,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        assert_eq!(coarse.len(), self.k);
+        scratch.coarse.clear();
+        scratch.coarse.extend_from_slice(coarse);
+        self.search_with_coarse_inner(query, p, scratch, out);
+    }
+
+    fn search_with_coarse_inner(
+        &self,
+        query: &[f32],
+        p: &SearchParams,
+        scratch: &mut SearchScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        let dim = self.dim;
+        let nprobe = p.nprobe.min(self.k);
+        let SearchScratch { coarse, probe_order, ids, topk, winners, decode, .. } = scratch;
+        // Best-first probe ordering, exactly as the static index does it
+        // (same centroids ⇒ same probe set and order).
+        probe_order.clear();
+        probe_order.extend(0..self.k as u32);
+        if nprobe > 0 && nprobe < self.k {
+            probe_order.select_nth_unstable_by(nprobe - 1, |&a, &b| {
+                coarse[a as usize].total_cmp(&coarse[b as usize])
+            });
+        }
+        let probes = &mut probe_order[..nprobe];
+        probes.sort_unstable_by(|&a, &b| coarse[a as usize].total_cmp(&coarse[b as usize]));
+
+        topk.reset(p.k);
+        for &c in probes.iter() {
+            let c = c as usize;
+            // Write buffer: uncompressed external ids, filtered inline.
+            let bl = &self.buffer.lists[c];
+            if !bl.is_empty() {
+                let bv = &self.buffer.vecs[c];
+                for (o, &ext) in bl.iter().enumerate() {
+                    if self.tombs.get(ext) {
+                        continue;
+                    }
+                    let d = l2_sq(query, &bv[o * dim..(o + 1) * dim]);
+                    if d < topk.threshold() {
+                        topk.push(d, ext);
+                    }
+                }
+            }
+            // Immutable segments: bulk-decode the rank stream (tombstone
+            // filtering needs every row's id anyway), translate through
+            // the segment map, filter, scan.
+            for seg in &self.segments {
+                let len = seg.list_len(c);
+                if len == 0 {
+                    continue;
+                }
+                seg.decode_list_into(c, ids, decode);
+                let rows = seg.cluster_rows(c);
+                for (o, &r) in ids.iter().enumerate() {
+                    let ext = seg.ext_id(r);
+                    if self.tombs.get(ext) {
+                        continue;
+                    }
+                    let d = l2_sq(query, &rows[o * dim..(o + 1) * dim]);
+                    if d < topk.threshold() {
+                        topk.push(d, ext);
+                    }
+                }
+            }
+        }
+        topk.drain_sorted_into(winners);
+        out.clear();
+        out.extend(winners.iter().map(|&(d, pl)| (d, pl as u32)));
+    }
+
+    pub(crate) fn centroids_arc(&self) -> Arc<Vec<f32>> {
+        self.centroids.clone()
+    }
+
+    pub(crate) fn centroid_norms_arc(&self) -> Arc<Vec<f32>> {
+        self.centroid_norms.clone()
+    }
+
+    pub(crate) fn segments(&self) -> &[Arc<Segment>] {
+        &self.segments
+    }
+
+    pub(crate) fn parts(
+        &self,
+    ) -> (&Arc<Vec<f32>>, &WriteBuffer, &Tombstones, CompactionPolicy, u32, usize) {
+        (&self.centroids, &self.buffer, &self.tombs, self.policy, self.next_id, self.dead_stored)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_open_parts(
+        dim: usize,
+        k: usize,
+        centroids: Vec<f32>,
+        spec: CodecSpec,
+        policy: CompactionPolicy,
+        segments: Vec<Arc<Segment>>,
+        buffer: WriteBuffer,
+        tombs: Tombstones,
+        next_id: u32,
+        dead_stored: usize,
+    ) -> DynamicIvf {
+        let centroid_norms = coarse::centroid_norms(&centroids, dim);
+        DynamicIvf {
+            dim,
+            k,
+            centroids: Arc::new(centroids),
+            centroid_norms: Arc::new(centroid_norms),
+            spec,
+            threads: crate::util::pool::default_threads(),
+            policy,
+            segments,
+            buffer,
+            tombs,
+            next_id,
+            dead_stored,
+        }
+    }
+}
+
+impl AnnIndex for DynamicIvf {
+    fn kind(&self) -> IndexKind {
+        IndexKind::DynamicIvf
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.live()
+    }
+
+    fn stats(&self) -> IndexStats {
+        let segments: Vec<SegmentStats> = self
+            .segments
+            .iter()
+            .map(|s| SegmentStats { rows: s.rows(), id_bits: s.id_bits(), map_bits: s.map_bits() })
+            .collect();
+        IndexStats {
+            kind: IndexKind::DynamicIvf,
+            n: self.live(),
+            dim: self.dim,
+            edges: 0,
+            codec: self.spec.name().to_string(),
+            id_bits: self.id_bits(),
+            code_bits: self.stored_rows() as u64 * self.dim as u64 * 32,
+            link_bits: 0,
+            live: self.live(),
+            deleted: self.dead_stored,
+            buffer_rows: self.buffer.rows,
+            aux_bits: self.tombs.size_bits(),
+            segments,
+        }
+    }
+
+    fn search_into(
+        &self,
+        query: &[f32],
+        params: &QueryParams,
+        scratch: &mut AnnScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        DynamicIvf::search_into(self, query, &params.ivf(), &mut scratch.ivf, out);
+    }
+
+    fn coarse_info(&self) -> Option<CoarseInfo<'_>> {
+        Some(CoarseInfo { centroids: &self.centroids, norms: &self.centroid_norms, k: self.k })
+    }
+
+    fn search_with_coarse_into(
+        &self,
+        query: &[f32],
+        coarse: &[f32],
+        params: &QueryParams,
+        scratch: &mut AnnScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        DynamicIvf::search_with_coarse_into(
+            self,
+            query,
+            coarse,
+            &params.ivf(),
+            &mut scratch.ivf,
+            out,
+        );
+    }
+
+    fn to_bytes(&self) -> Result<Vec<u8>> {
+        persist::to_container_bytes(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{generate, Kind};
+    use crate::util::Rng;
+
+    fn build_dyn(n: usize, codec: &str, auto: bool) -> (crate::datasets::Dataset, DynamicIvf) {
+        let ds = generate(Kind::DeepLike, n + n / 2, 30, 8, 97);
+        let params = DynamicBuildParams {
+            ivf: IvfBuildParams { k: 16, id_codec: codec.into(), threads: 2, ..Default::default() },
+            policy: CompactionPolicy {
+                flush_rows: 200,
+                max_segments: 4,
+                auto,
+                ..Default::default()
+            },
+        };
+        let idx = DynamicIvf::build(&ds.data[..n * ds.dim], ds.dim, &params).unwrap();
+        (ds, idx)
+    }
+
+    #[test]
+    fn fresh_dynamic_matches_static_exactly() {
+        let (ds, idx) = build_dyn(2000, "roc", false);
+        let stat = IvfIndex::build(
+            &ds.data[..2000 * ds.dim],
+            ds.dim,
+            &IvfBuildParams { k: 16, id_codec: "roc".into(), threads: 2, ..Default::default() },
+        );
+        assert_eq!(idx.live(), 2000);
+        assert_eq!(idx.num_segments(), 1);
+        assert_eq!(idx.id_bits(), stat.id_bits(), "wrapped streams must be adopted verbatim");
+        let sp = SearchParams { nprobe: 8, k: 10 };
+        let mut s1 = SearchScratch::default();
+        let mut s2 = SearchScratch::default();
+        for qi in 0..ds.nq {
+            assert_eq!(
+                idx.search(ds.query(qi), &sp, &mut s1),
+                stat.search(ds.query(qi), &sp, &mut s2),
+                "query {qi}"
+            );
+        }
+    }
+
+    #[test]
+    fn add_delete_search_filters_and_finds() {
+        let (ds, mut idx) = build_dyn(1000, "roc", false);
+        let sp = SearchParams { nprobe: 16, k: 5 };
+        let mut scratch = SearchScratch::default();
+        // A brand-new vector must be findable immediately (from the
+        // write buffer), and gone right after delete.
+        let probe: Vec<f32> = ds.data[7 * ds.dim..8 * ds.dim].to_vec();
+        let range = idx.add(&probe).unwrap();
+        let new_id = range.start;
+        assert_eq!(new_id, 1000);
+        assert_eq!(idx.live(), 1001);
+        let hits = idx.search(&probe, &sp, &mut scratch);
+        assert!(hits.iter().any(|&(_, id)| id == new_id), "fresh insert not found: {hits:?}");
+        assert!(idx.delete(new_id).unwrap());
+        assert!(!idx.delete(new_id).unwrap(), "double delete must be a no-op");
+        assert!(!idx.delete(50_000).unwrap(), "unknown id must be a no-op");
+        let hits = idx.search(&probe, &sp, &mut scratch);
+        assert!(hits.iter().all(|&(_, id)| id != new_id), "tombstoned id served: {hits:?}");
+        // The original near-duplicate (id 7) is still served.
+        assert!(hits.iter().any(|&(_, id)| id == 7));
+        assert_eq!(idx.live(), 1000);
+    }
+
+    #[test]
+    fn flush_and_compact_preserve_results_for_every_codec() {
+        for codec in PER_LIST_CODECS {
+            let (ds, mut idx) = build_dyn(1200, codec, false);
+            let extra = &ds.data[1200 * ds.dim..1500 * ds.dim];
+            idx.add(extra).unwrap();
+            let mut rng = Rng::new(4);
+            for id in rng.sample_distinct(1200, 150) {
+                assert!(idx.delete(id as u32).unwrap());
+            }
+            let sp = SearchParams { nprobe: 8, k: 10 };
+            let mut s = SearchScratch::default();
+            let before: Vec<_> =
+                (0..ds.nq).map(|qi| idx.search(ds.query(qi), &sp, &mut s)).collect();
+            idx.flush().unwrap();
+            assert_eq!(idx.buffer_rows(), 0);
+            assert_eq!(idx.num_segments(), 2);
+            let after_flush: Vec<_> =
+                (0..ds.nq).map(|qi| idx.search(ds.query(qi), &sp, &mut s)).collect();
+            assert_eq!(before, after_flush, "{codec}: flush changed results");
+            idx.compact().unwrap();
+            assert_eq!(idx.num_segments(), 1);
+            assert_eq!(idx.dead_stored(), 0);
+            assert_eq!(idx.stored_rows(), idx.live());
+            let after_compact: Vec<_> =
+                (0..ds.nq).map(|qi| idx.search(ds.query(qi), &sp, &mut s)).collect();
+            assert_eq!(before, after_compact, "{codec}: compaction changed results");
+        }
+    }
+
+    #[test]
+    fn auto_policy_flushes_and_compacts() {
+        let (ds, mut idx) = build_dyn(1000, "roc", true);
+        // 450 inserts at flush_rows=200 → at least two sealed segments.
+        idx.add(&ds.data[1000 * ds.dim..1450 * ds.dim]).unwrap();
+        assert!(idx.num_segments() >= 2, "segments={}", idx.num_segments());
+        assert!(idx.buffer_rows() < 200);
+        // Deleting well past max_dead_frac=0.25 must trigger compaction
+        // (without it, all 500 tombstoned rows would still be stored).
+        for id in 0..500u32 {
+            idx.delete(id).unwrap();
+        }
+        assert_eq!(idx.num_segments(), 1, "compaction should have fired");
+        assert!(idx.dead_stored() < 250, "dead_stored={}", idx.dead_stored());
+        assert_eq!(idx.live(), 950);
+    }
+
+    #[test]
+    fn acceptance_churn_parity_and_bits_per_id() {
+        // The PR acceptance criterion: after 20% random deletes + 20%
+        // inserts and a full compaction, search results are identical to
+        // a fresh static build over the live set, and roc bits/id is
+        // within 2% of the static build.
+        let n = 4000usize;
+        let ds = generate(Kind::DeepLike, n + n / 5, 40, 16, 31);
+        let params = DynamicBuildParams {
+            ivf: IvfBuildParams { k: 64, id_codec: "roc".into(), threads: 2, ..Default::default() },
+            policy: CompactionPolicy { flush_rows: 300, auto: true, ..Default::default() },
+        };
+        let mut idx = DynamicIvf::build(&ds.data[..n * ds.dim], ds.dim, &params).unwrap();
+        let mut rng = Rng::new(77);
+        for id in rng.sample_distinct(n as u64, n / 5) {
+            assert!(idx.delete(id as u32).unwrap());
+        }
+        idx.add(&ds.data[n * ds.dim..]).unwrap();
+        idx.compact().unwrap();
+        assert_eq!(idx.live(), n, "20% out, 20% in");
+        let parity = idx
+            .check_parity(&ds.queries, &SearchParams { nprobe: 16, k: 10 })
+            .unwrap();
+        assert_eq!(
+            parity.identical, parity.queries,
+            "{}/{} queries diverged from the static rebuild",
+            parity.queries - parity.identical,
+            parity.queries
+        );
+        let ratio = parity.dynamic_bits_per_id / parity.static_bits_per_id;
+        assert!(
+            (ratio - 1.0).abs() < 0.02,
+            "post-compaction bits/id {} vs static {} (ratio {ratio})",
+            parity.dynamic_bits_per_id,
+            parity.static_bits_per_id
+        );
+    }
+
+    #[test]
+    fn trait_serving_matches_inherent_search() {
+        let (ds, mut idx) = build_dyn(1500, "ef", false);
+        idx.add(&ds.data[1500 * ds.dim..1800 * ds.dim]).unwrap();
+        for id in 0..200u32 {
+            idx.delete(id).unwrap();
+        }
+        let p = QueryParams { k: 10, nprobe: 8, ef: 0 };
+        let dyn_idx: &dyn AnnIndex = &idx;
+        assert_eq!(dyn_idx.len(), 1600);
+        assert!(dyn_idx.coarse_info().is_some());
+        let mut s = AnnScratch::default();
+        let mut s2 = SearchScratch::default();
+        let mut got = Vec::new();
+        for qi in 0..ds.nq {
+            dyn_idx.search_into(ds.query(qi), &p, &mut s, &mut got);
+            let want = idx.search(ds.query(qi), &p.ivf(), &mut s2);
+            assert_eq!(got, want, "query {qi}");
+        }
+        let stats = dyn_idx.stats();
+        assert_eq!(stats.live, 1600);
+        assert_eq!(stats.deleted, 200);
+        assert_eq!(stats.segments.len() + usize::from(stats.buffer_rows > 0), 2);
+        assert_eq!(stats.n, 1600);
+    }
+}

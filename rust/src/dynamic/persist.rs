@@ -1,0 +1,344 @@
+//! Container serialization for [`DynamicIvf`]: the multi-segment
+//! extension of the zann format.
+//!
+//! A dynamic container is a `ZANN` file with kind
+//! [`crate::api::persist::KIND_DYNAMIC`] and these sections:
+//!
+//! ```text
+//! DHDR   dynamic-layout version, dim/k/next_id/dead_stored, codec
+//!        spec, compaction policy, segment count
+//! CENT   coarse centroids (norms are recomputed on open)
+//! TOMB   tombstone bitmap (count + words)
+//! WBUF   write buffer: per cluster, external ids + vector rows
+//! S Hni  per segment i: universe, id bits, id map, row offsets,
+//!        blob offsets
+//! S Ini  per segment i: compressed id streams, written VERBATIM and
+//!        reopened zero-copy as `Blobs` over the file buffer
+//! S Vni  per segment i: vector rows in decode order
+//! ```
+//!
+//! (`n`/`i` above are the two raw bytes of the segment index.) The
+//! single-segment static containers (kind `KIND_IVF`, written by
+//! `IvfIndex::save` before this module existed) are untouched: they
+//! keep their layout, keep opening, and a static build is still saved
+//! in that format. `DHDR` carries its own layout version so the
+//! multi-segment section can evolve without breaking the outer
+//! container framing.
+
+use super::segment::{IdMap, Segment, Tombstones, WriteBuffer};
+use super::{CompactionPolicy, DynamicIvf};
+use crate::api::persist::{self, Container};
+use crate::bitvec::RsBitVec;
+use crate::codecs::CodecSpec;
+use crate::util::bits::BitBuf;
+use crate::util::bytes::Blobs;
+use crate::util::{ReadBuf, WriteBuf};
+use anyhow::{ensure, Context as _, Result};
+use std::sync::Arc;
+
+/// Version of the dynamic section layout (independent of the outer
+/// container version, which only covers the magic/section framing).
+pub const DYN_LAYOUT_VERSION: u32 = 1;
+
+/// Section tag of segment `i`, part `b'H'` (header), `b'I'` (id
+/// streams) or `b'V'` (vectors).
+fn seg_tag(part: u8, i: usize) -> [u8; 4] {
+    [b'S', part, (i >> 8) as u8, (i & 0xff) as u8]
+}
+
+pub(crate) fn to_container_bytes(idx: &DynamicIvf) -> Result<Vec<u8>> {
+    let (centroids, buffer, tombs, policy, next_id, dead_stored) = idx.parts();
+    let segments = idx.segments();
+    ensure!(segments.len() <= u16::MAX as usize, "too many segments ({})", segments.len());
+
+    let mut head = WriteBuf::new();
+    head.put_u32(DYN_LAYOUT_VERSION);
+    head.put_u64(idx.dim() as u64);
+    head.put_u64(idx.num_clusters() as u64);
+    head.put_u64(next_id as u64);
+    head.put_u64(dead_stored as u64);
+    head.put_u64(segments.len() as u64);
+    head.put_str(idx.id_codec_name());
+    head.put_u64(policy.flush_rows as u64);
+    head.put_u64(policy.max_segments as u64);
+    // f64 bit pattern, so the policy round-trips exactly.
+    head.put_u64(policy.max_dead_frac.to_bits());
+    head.put_u8(policy.auto as u8);
+
+    let mut file = persist::file_header(persist::KIND_DYNAMIC);
+    persist::push_section(&mut file, b"DHDR", &head.bytes);
+
+    let mut cent = WriteBuf::new();
+    cent.put_f32s(centroids);
+    persist::push_section(&mut file, b"CENT", &cent.bytes);
+
+    let mut tw = WriteBuf::new();
+    tw.put_u64(tombs.count());
+    tw.put_u64s(tombs.words());
+    persist::push_section(&mut file, b"TOMB", &tw.bytes);
+
+    let mut bw = WriteBuf::new();
+    for c in 0..idx.num_clusters() {
+        bw.put_u32s(&buffer.lists[c]);
+        bw.put_f32s(&buffer.vecs[c]);
+    }
+    persist::push_section(&mut file, b"WBUF", &bw.bytes);
+
+    for (i, seg) in segments.iter().enumerate() {
+        let mut sh = WriteBuf::new();
+        sh.put_u32(seg.universe());
+        sh.put_u64(seg.id_bits());
+        match seg.map() {
+            IdMap::Identity => sh.put_u8(0),
+            IdMap::Live(bv) => {
+                sh.put_u8(1);
+                sh.put_u64(bv.len() as u64);
+                sh.put_u64s(bv.words());
+            }
+        }
+        sh.put_u64s(&seg.row_offsets().iter().map(|&o| o as u64).collect::<Vec<u64>>());
+        sh.put_u64s(seg.blob_offsets());
+        persist::push_section(&mut file, &seg_tag(b'H', i), &sh.bytes);
+        persist::push_section(&mut file, &seg_tag(b'I', i), seg.blob_payload());
+        let mut sv = WriteBuf::new();
+        sv.put_f32s(seg.vectors());
+        persist::push_section(&mut file, &seg_tag(b'V', i), &sv.bytes);
+    }
+    Ok(file)
+}
+
+pub(crate) fn from_container(c: &Container) -> Result<DynamicIvf> {
+    let head = c.section(b"DHDR")?;
+    let mut r = ReadBuf::new(head.as_slice());
+    let version = r.get_u32()?;
+    ensure!(
+        version == DYN_LAYOUT_VERSION,
+        "unsupported dynamic-section layout version {version} (this build reads \
+         {DYN_LAYOUT_VERSION})"
+    );
+    let dim = r.get_u64()? as usize;
+    let k = r.get_u64()? as usize;
+    let next_id64 = r.get_u64()?;
+    let dead_stored = r.get_u64()? as usize;
+    let nseg = r.get_u64()? as usize;
+    let codec_name = r.get_str()?;
+    let flush_rows = r.get_u64()? as usize;
+    let max_segments = r.get_u64()? as usize;
+    let max_dead_frac = f64::from_bits(r.get_u64()?);
+    let auto = r.get_u8()? != 0;
+    ensure!(dim >= 1 && k >= 1, "degenerate dynamic header (dim={dim}, k={k})");
+    ensure!(next_id64 <= u32::MAX as u64, "next_id {next_id64} exceeds the id space");
+    let next_id = next_id64 as u32;
+    let spec = CodecSpec::parse(&codec_name).context("dynamic header names its id codec")?;
+    ensure!(spec.is_per_list(), "dynamic containers store per-list streams, not {codec_name:?}");
+    let policy = CompactionPolicy { flush_rows, max_segments, max_dead_frac, auto };
+
+    let sec = c.section(b"CENT")?;
+    let centroids = ReadBuf::new(sec.as_slice()).get_f32s()?;
+    ensure!(
+        centroids.len() == k * dim,
+        "centroid section holds {} floats for k={k}, dim={dim}",
+        centroids.len()
+    );
+
+    let sec = c.section(b"TOMB")?;
+    let mut r = ReadBuf::new(sec.as_slice());
+    let tomb_count = r.get_u64()?;
+    let tomb_words = r.get_u64s()?;
+    ensure!(tomb_count <= next_id as u64, "tombstone count {tomb_count} exceeds next_id");
+    let popcount: u64 = tomb_words.iter().map(|w| w.count_ones() as u64).sum();
+    ensure!(
+        popcount == tomb_count,
+        "tombstone bitmap holds {popcount} set bits, header says {tomb_count}"
+    );
+    let tombs = Tombstones::from_parts(tomb_words, tomb_count);
+
+    let sec = c.section(b"WBUF")?;
+    let mut r = ReadBuf::new(sec.as_slice());
+    let mut buffer = WriteBuffer::new(k);
+    for c_idx in 0..k {
+        let ids = r.get_u32s()?;
+        let vecs = r.get_f32s()?;
+        ensure!(
+            vecs.len() == ids.len() * dim,
+            "write buffer cluster {c_idx}: {} floats for {} ids",
+            vecs.len(),
+            ids.len()
+        );
+        ensure!(
+            ids.iter().all(|&id| id < next_id),
+            "write buffer cluster {c_idx} holds an id past next_id {next_id}"
+        );
+        buffer.rows += ids.len();
+        buffer.lists[c_idx] = ids;
+        buffer.vecs[c_idx] = vecs;
+    }
+
+    let mut segments = Vec::with_capacity(nseg);
+    for i in 0..nseg {
+        let sec = c.section(&seg_tag(b'H', i)).with_context(|| format!("segment {i} header"))?;
+        let mut r = ReadBuf::new(sec.as_slice());
+        let universe = r.get_u32()?;
+        let id_bits = r.get_u64()?;
+        let map = match r.get_u8()? {
+            0 => IdMap::Identity,
+            1 => {
+                let len = r.get_u64()? as usize;
+                let words = r.get_u64s()?;
+                ensure!(
+                    words.len() == len.div_ceil(64),
+                    "segment {i}: live map holds {} words for {len} bits",
+                    words.len()
+                );
+                IdMap::Live(RsBitVec::new(BitBuf { words, len }))
+            }
+            other => anyhow::bail!("segment {i}: unknown id-map tag {other}"),
+        };
+        let offsets_u64 = r.get_u64s()?;
+        ensure!(offsets_u64.len() == k + 1, "segment {i}: expected {} row offsets", k + 1);
+        ensure!(
+            offsets_u64[0] == 0 && offsets_u64.windows(2).all(|w| w[0] <= w[1]),
+            "segment {i}: row offsets are not a monotone partition"
+        );
+        let offsets: Vec<usize> = offsets_u64.iter().map(|&o| o as usize).collect();
+        let blob_offsets = r.get_u64s()?;
+        let blobs = Blobs::from_parts(
+            c.section(&seg_tag(b'I', i)).with_context(|| format!("segment {i} id streams"))?,
+            blob_offsets,
+        )?;
+        ensure!(blobs.count() == k, "segment {i}: {} blobs for k={k}", blobs.count());
+        let sec =
+            c.section(&seg_tag(b'V', i)).with_context(|| format!("segment {i} vectors"))?;
+        let vectors = ReadBuf::new(sec.as_slice()).get_f32s()?;
+        let seg = Segment::from_parts(blobs, offsets, vectors, spec, universe, map, id_bits, dim)
+            .with_context(|| format!("segment {i}"))?;
+        segments.push(Arc::new(seg));
+    }
+
+    let idx = DynamicIvf::from_open_parts(
+        dim,
+        k,
+        centroids,
+        spec,
+        policy,
+        segments,
+        buffer,
+        tombs,
+        next_id,
+        dead_stored,
+    );
+    ensure!(
+        idx.stored_rows() as u64 + tomb_count == next_id as u64 + idx.dead_stored() as u64,
+        "row accounting is inconsistent: {} stored + {tomb_count} tombstoned vs {next_id} \
+         assigned + {} dead-but-stored",
+        idx.stored_rows(),
+        idx.dead_stored()
+    );
+    Ok(idx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{DynamicBuildParams, DynamicIvf};
+    use super::*;
+    use crate::api::AnnIndex;
+    use crate::codecs::PER_LIST_CODECS;
+    use crate::datasets::{generate, Kind};
+    use crate::index::{IvfBuildParams, SearchParams, SearchScratch};
+    use crate::util::Rng;
+
+    fn churned(codec: &str) -> (crate::datasets::Dataset, DynamicIvf) {
+        let ds = generate(Kind::DeepLike, 1500, 20, 8, 61);
+        let mut idx = DynamicIvf::build(
+            &ds.data[..1000 * ds.dim],
+            ds.dim,
+            &DynamicBuildParams {
+                ivf: IvfBuildParams {
+                    k: 16,
+                    id_codec: codec.into(),
+                    threads: 2,
+                    ..Default::default()
+                },
+                policy: CompactionPolicy { flush_rows: 150, auto: true, ..Default::default() },
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::new(9);
+        for id in rng.sample_distinct(1000, 120) {
+            assert!(idx.delete(id as u32).unwrap());
+        }
+        idx.add(&ds.data[1000 * ds.dim..1500 * ds.dim]).unwrap();
+        (ds, idx)
+    }
+
+    #[test]
+    fn multi_segment_roundtrip_bit_identical_for_every_codec() {
+        for codec in PER_LIST_CODECS {
+            let (ds, idx) = churned(codec);
+            assert!(
+                idx.num_segments() >= 2 || idx.buffer_rows() > 0,
+                "{codec}: churn should leave a multi-part index"
+            );
+            let bytes = idx.to_bytes().unwrap();
+            let back = persist::open_dynamic_bytes(bytes.clone()).unwrap();
+            assert_eq!(back.live(), idx.live(), "{codec}");
+            assert_eq!(back.num_segments(), idx.num_segments(), "{codec}");
+            assert_eq!(back.buffer_rows(), idx.buffer_rows(), "{codec}");
+            assert_eq!(back.dead_stored(), idx.dead_stored(), "{codec}");
+            assert_eq!(back.id_bits(), idx.id_bits(), "{codec}: streams must survive verbatim");
+            let (bp, ip) = (back.policy(), idx.policy());
+            assert_eq!(
+                (bp.flush_rows, bp.max_segments, bp.auto, bp.max_dead_frac.to_bits()),
+                (ip.flush_rows, ip.max_segments, ip.auto, ip.max_dead_frac.to_bits()),
+                "{codec}: compaction policy must round-trip exactly"
+            );
+            let sp = SearchParams { nprobe: 8, k: 10 };
+            let mut s1 = SearchScratch::default();
+            let mut s2 = SearchScratch::default();
+            for qi in 0..ds.nq {
+                assert_eq!(
+                    back.search(ds.query(qi), &sp, &mut s1),
+                    idx.search(ds.query(qi), &sp, &mut s2),
+                    "{codec}: query {qi}"
+                );
+            }
+            // And the generic open dispatches on the kind byte.
+            let dyn_back = persist::open_bytes(bytes).unwrap();
+            assert_eq!(dyn_back.len(), idx.live(), "{codec}");
+        }
+    }
+
+    #[test]
+    fn reopened_index_stays_mutable() {
+        let (ds, idx) = churned("roc");
+        let live_before = idx.live();
+        let mut back = persist::open_dynamic_bytes(idx.to_bytes().unwrap()).unwrap();
+        let range = back.add(&ds.data[..3 * ds.dim]).unwrap();
+        assert_eq!(range.len(), 3);
+        assert!(back.delete(range.start).unwrap());
+        back.compact().unwrap();
+        assert_eq!(back.live(), live_before + 2);
+        assert_eq!(back.num_segments(), 1);
+        // Deleted-then-compacted ids stay dead after another round-trip.
+        let again = persist::open_dynamic_bytes(back.to_bytes().unwrap()).unwrap();
+        assert!(!again.is_live(range.start));
+        assert_eq!(again.live(), live_before + 2);
+    }
+
+    #[test]
+    fn corrupt_dynamic_sections_error_cleanly() {
+        let (_, idx) = churned("roc");
+        let good = idx.to_bytes().unwrap();
+        assert!(persist::open_bytes(good.clone()).is_ok());
+        // Unknown id-map tag inside a segment header → error, not panic.
+        for cut in [9usize, good.len() / 4, good.len() / 2, good.len() - 1] {
+            assert!(
+                persist::open_bytes(good[..cut].to_vec()).is_err(),
+                "truncation at {cut} must fail"
+            );
+        }
+        // A dynamic file is not a static IVF file.
+        let err = persist::open_ivf_bytes(good).expect_err("kind mismatch");
+        assert!(format!("{err}").contains("kind"), "{err}");
+    }
+}

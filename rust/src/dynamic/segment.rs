@@ -1,0 +1,411 @@
+//! Storage cells of the LSM-style mutable IVF: immutable compressed
+//! [`Segment`]s, the uncompressed [`WriteBuffer`] that absorbs fresh
+//! inserts, and the [`Tombstones`] bitmap that records deletes.
+//!
+//! A segment stores, per cluster, one compressed id stream (any per-list
+//! [`IdCodec`] from the registry) plus the vector rows in the codec's
+//! decode order — the same reordering invariance the static
+//! [`crate::index::IvfIndex`] relies on. Ids inside a stream live in a
+//! segment-local **rank space** translated to external ids by an
+//! [`IdMap`]: the identity for segments sealed from a dense id prefix,
+//! or `select1` over a frozen liveness bitmap for segments produced by
+//! compaction after deletes. The rank indirection is what keeps the
+//! compressed size at the static build's level — lists are re-encoded
+//! over a universe of exactly the live ids, not the ever-growing
+//! external id space with tombstone holes in it.
+
+use crate::bitvec::RsBitVec;
+use crate::codecs::{CodecSpec, DecodeScratch, IdCodec};
+use crate::util::bits::BitBuf;
+use crate::util::bytes::{Blobs, BlobsBuilder};
+use crate::util::pool::parallel_map;
+use anyhow::{ensure, Result};
+
+/// Frozen rank → external-id translation of one segment.
+pub enum IdMap {
+    /// Rank space == external-id space (no holes at seal time).
+    Identity,
+    /// `ext = select1(rank)` over the liveness bitmap frozen at seal
+    /// time (bit i set ⇔ external id i was live when the segment was
+    /// encoded).
+    Live(RsBitVec),
+}
+
+impl IdMap {
+    /// Translate a decoded rank id to an external id.
+    #[inline]
+    pub fn ext(&self, rank: u32) -> u32 {
+        match self {
+            IdMap::Identity => rank,
+            IdMap::Live(bv) => bv.select1(rank as u64).expect("rank within live universe") as u32,
+        }
+    }
+
+    /// Auxiliary bits this map occupies (0 for the identity).
+    pub fn size_bits(&self) -> u64 {
+        match self {
+            IdMap::Identity => 0,
+            IdMap::Live(bv) => bv.size_bits() as u64,
+        }
+    }
+}
+
+/// One immutable compressed segment: per-cluster id streams + vector
+/// rows in decode order.
+pub struct Segment {
+    /// One compressed rank-id stream per cluster (`k` blobs).
+    blobs: Blobs,
+    /// Cluster row boundaries (`k + 1` entries).
+    offsets: Vec<usize>,
+    /// Vector rows, cluster-major, in each stream's decode order.
+    vectors: Vec<f32>,
+    codec: Box<dyn IdCodec>,
+    /// Rank-space size the streams were encoded against.
+    universe: u32,
+    map: IdMap,
+    /// Exact compressed id payload in bits (sum over streams).
+    id_bits: u64,
+    dim: usize,
+}
+
+impl Segment {
+    /// Encode per-cluster rank-id `lists` (each strictly ascending) into
+    /// a sealed segment. `rows_for(c, pos)` returns the vector row of
+    /// `lists[c][pos]`; rows are laid out in the codec's decode order,
+    /// resolved back to list positions by binary search (the lists are
+    /// sorted). Encoding is data-parallel over clusters on the
+    /// `util::pool` workers — this is the compaction hot loop.
+    pub fn build<'a, F>(
+        lists: &[Vec<u32>],
+        universe: u32,
+        dim: usize,
+        spec: CodecSpec,
+        map: IdMap,
+        rows_for: F,
+        threads: usize,
+    ) -> Result<Segment>
+    where
+        F: Fn(usize, usize) -> &'a [f32] + Sync,
+    {
+        let codec = spec.id_codec()?;
+        let k = lists.len();
+        let encoded: Vec<(crate::codecs::Encoded, Vec<f32>)> = parallel_map(k, threads, |c| {
+            let l = &lists[c];
+            debug_assert!(l.windows(2).all(|w| w[0] < w[1]), "cluster {c}: list not ascending");
+            let enc = codec.encode(l, universe);
+            let mut order = Vec::with_capacity(l.len());
+            codec.decode(&enc.bytes, universe, l.len(), &mut order);
+            let mut rows = Vec::with_capacity(l.len() * dim);
+            for &v in &order {
+                let pos = l.binary_search(&v).expect("decoded id not in encoded list");
+                rows.extend_from_slice(rows_for(c, pos));
+            }
+            (enc, rows)
+        });
+        let mut blobs = BlobsBuilder::new();
+        let mut offsets = Vec::with_capacity(k + 1);
+        let mut vectors = Vec::with_capacity(lists.iter().map(|l| l.len()).sum::<usize>() * dim);
+        let mut id_bits = 0u64;
+        let mut acc = 0usize;
+        for (c, (enc, rows)) in encoded.into_iter().enumerate() {
+            offsets.push(acc);
+            acc += lists[c].len();
+            id_bits += enc.bits;
+            blobs.push(&enc.bytes);
+            vectors.extend_from_slice(&rows);
+        }
+        offsets.push(acc);
+        Ok(Segment { blobs: blobs.finish(), offsets, vectors, codec, universe, map, id_bits, dim })
+    }
+
+    /// Reassemble a segment from already-encoded parts (the static-index
+    /// wrap and the container-open paths: streams are adopted verbatim,
+    /// never re-encoded).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_parts(
+        blobs: Blobs,
+        offsets: Vec<usize>,
+        vectors: Vec<f32>,
+        spec: CodecSpec,
+        universe: u32,
+        map: IdMap,
+        id_bits: u64,
+        dim: usize,
+    ) -> Result<Segment> {
+        let codec = spec.id_codec()?;
+        ensure!(!offsets.is_empty(), "segment offset table is empty");
+        ensure!(blobs.count() == offsets.len() - 1, "segment blob/offset count mismatch");
+        let rows = *offsets.last().unwrap();
+        ensure!(
+            vectors.len() == rows * dim,
+            "segment holds {} floats for {rows} rows of dim {dim}",
+            vectors.len()
+        );
+        if let IdMap::Live(bv) = &map {
+            ensure!(
+                bv.count_ones() == universe as u64,
+                "live map covers {} ids but the streams use universe {universe}",
+                bv.count_ones()
+            );
+        }
+        Ok(Segment { blobs, offsets, vectors, codec, universe, map, id_bits, dim })
+    }
+
+    pub fn num_clusters(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn rows(&self) -> usize {
+        *self.offsets.last().unwrap()
+    }
+
+    pub fn list_len(&self, c: usize) -> usize {
+        self.offsets[c + 1] - self.offsets[c]
+    }
+
+    pub fn id_bits(&self) -> u64 {
+        self.id_bits
+    }
+
+    pub fn map_bits(&self) -> u64 {
+        self.map.size_bits()
+    }
+
+    pub fn universe(&self) -> u32 {
+        self.universe
+    }
+
+    pub fn map(&self) -> &IdMap {
+        &self.map
+    }
+
+    /// Translate a decoded rank to an external id.
+    #[inline]
+    pub fn ext_id(&self, rank: u32) -> u32 {
+        self.map.ext(rank)
+    }
+
+    /// The vector rows of cluster `c` (decode order).
+    #[inline]
+    pub fn cluster_rows(&self, c: usize) -> &[f32] {
+        &self.vectors[self.offsets[c] * self.dim..self.offsets[c + 1] * self.dim]
+    }
+
+    /// Decode cluster `c`'s rank ids into `out` (replacing its contents)
+    /// through a reusable scratch — the search-path bulk decode.
+    pub fn decode_list_into(&self, c: usize, out: &mut Vec<u32>, scratch: &mut DecodeScratch) {
+        out.clear();
+        self.codec.decode_into(self.blobs.get(c), self.universe, self.list_len(c), out, scratch);
+    }
+
+    /// Serialization accessors (streams are written verbatim).
+    pub fn blob_offsets(&self) -> &[u64] {
+        self.blobs.offsets()
+    }
+
+    pub fn blob_payload(&self) -> &[u8] {
+        self.blobs.payload()
+    }
+
+    pub fn row_offsets(&self) -> &[usize] {
+        &self.offsets
+    }
+
+    pub fn vectors(&self) -> &[f32] {
+        &self.vectors
+    }
+}
+
+/// The mutable head of the LSM structure: per-cluster uncompressed id
+/// lists + vector rows, appended on insert, sealed into a [`Segment`]
+/// by `flush`.
+#[derive(Clone, Default)]
+pub struct WriteBuffer {
+    /// External ids per cluster, in insertion (= ascending) order.
+    pub lists: Vec<Vec<u32>>,
+    /// Vector rows parallel to `lists`, per cluster.
+    pub vecs: Vec<Vec<f32>>,
+    pub rows: usize,
+}
+
+impl WriteBuffer {
+    pub fn new(k: usize) -> WriteBuffer {
+        WriteBuffer { lists: vec![Vec::new(); k], vecs: vec![Vec::new(); k], rows: 0 }
+    }
+
+    pub fn push(&mut self, cluster: usize, ext: u32, row: &[f32]) {
+        self.lists[cluster].push(ext);
+        self.vecs[cluster].extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    pub fn clear(&mut self) {
+        for l in &mut self.lists {
+            l.clear();
+        }
+        for v in &mut self.vecs {
+            v.clear();
+        }
+        self.rows = 0;
+    }
+
+    /// Uncompressed id payload of the buffer in bits (32 per id — the
+    /// honest cost of the mutable head, reported in the index stats).
+    pub fn id_bits(&self) -> u64 {
+        self.rows as u64 * 32
+    }
+}
+
+/// Growable delete bitmap over the external id space. Bits are never
+/// cleared: an id, once deleted, is dead forever (external ids are not
+/// reused), which is what makes `get` a complete liveness test and
+/// double-deletes detectable after the rows themselves were compacted
+/// away.
+#[derive(Clone, Default)]
+pub struct Tombstones {
+    words: Vec<u64>,
+    count: u64,
+}
+
+impl Tombstones {
+    pub fn from_parts(words: Vec<u64>, count: u64) -> Tombstones {
+        Tombstones { words, count }
+    }
+
+    #[inline]
+    pub fn get(&self, id: u32) -> bool {
+        self.words.get(id as usize / 64).is_some_and(|w| (w >> (id % 64)) & 1 == 1)
+    }
+
+    /// Mark `id` deleted; returns false if it already was.
+    pub fn set(&mut self, id: u32) -> bool {
+        let w = id as usize / 64;
+        if w >= self.words.len() {
+            self.words.resize(w + 1, 0);
+        }
+        let mask = 1u64 << (id % 64);
+        if self.words[w] & mask != 0 {
+            return false;
+        }
+        self.words[w] |= mask;
+        self.count += 1;
+        true
+    }
+
+    /// Total ids ever deleted (whether or not their rows still exist).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    pub fn size_bits(&self) -> u64 {
+        self.words.len() as u64 * 64
+    }
+
+    /// The complement bitvector over `[0, next_id)` with rank/select —
+    /// the compaction-time rank map (rank(ext) = number of live ids
+    /// below ext).
+    pub fn live_bitvec(&self, next_id: u32) -> RsBitVec {
+        let n = next_id as usize;
+        let n_words = n.div_ceil(64);
+        let mut words: Vec<u64> = (0..n_words)
+            .map(|i| !self.words.get(i).copied().unwrap_or(0))
+            .collect();
+        if n % 64 != 0 {
+            if let Some(last) = words.last_mut() {
+                *last &= u64::MAX >> (64 - (n % 64));
+            }
+        }
+        RsBitVec::new(BitBuf { words, len: n })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tombstones_set_get_count() {
+        let mut t = Tombstones::default();
+        assert!(!t.get(0));
+        assert!(!t.get(1000));
+        assert!(t.set(5));
+        assert!(!t.set(5), "double delete must report false");
+        assert!(t.set(200));
+        assert_eq!(t.count(), 2);
+        assert!(t.get(5) && t.get(200));
+        assert!(!t.get(6));
+    }
+
+    #[test]
+    fn live_bitvec_ranks_and_selects_around_holes() {
+        let mut t = Tombstones::default();
+        for id in [1u32, 3, 64, 65, 130] {
+            assert!(t.set(id));
+        }
+        let next_id = 131u32;
+        let bv = t.live_bitvec(next_id);
+        assert_eq!(bv.len(), 131);
+        assert_eq!(bv.count_ones(), 131 - 5);
+        // rank(ext) skips the dead; select1(rank) inverts it.
+        let mut rank = 0u64;
+        for ext in 0..next_id {
+            if t.get(ext) {
+                assert!(!bv.get(ext as usize), "dead id {ext} marked live");
+                continue;
+            }
+            assert_eq!(bv.rank1(ext as usize), rank, "rank of ext {ext}");
+            assert_eq!(bv.select1(rank), Some(ext as usize), "select of rank {rank}");
+            rank += 1;
+        }
+        assert_eq!(bv.select1(rank), None);
+    }
+
+    #[test]
+    fn segment_build_roundtrips_ids_and_rows() {
+        // Two clusters, rank universe 10, dim 2; rows keyed by rank value
+        // so decode-order placement is checkable.
+        let lists = vec![vec![0u32, 3, 7], vec![1u32, 9]];
+        let dim = 2;
+        let rows: Vec<f32> = (0..10 * dim).map(|i| i as f32).collect();
+        for codec in ["unc64", "compact", "ef", "roc"] {
+            let spec = CodecSpec::parse(codec).unwrap();
+            let seg = Segment::build(
+                &lists,
+                10,
+                dim,
+                spec,
+                IdMap::Identity,
+                |c, pos| {
+                    let r = lists[c][pos] as usize;
+                    &rows[r * dim..(r + 1) * dim]
+                },
+                2,
+            )
+            .unwrap();
+            assert_eq!(seg.num_clusters(), 2);
+            assert_eq!(seg.rows(), 5);
+            assert!(seg.id_bits() > 0);
+            let mut out = Vec::new();
+            let mut scratch = DecodeScratch::default();
+            for c in 0..2 {
+                seg.decode_list_into(c, &mut out, &mut scratch);
+                let mut sorted = out.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, lists[c], "{codec}: cluster {c} id set");
+                // Rows must follow decode order exactly.
+                let crows = seg.cluster_rows(c);
+                for (o, &r) in out.iter().enumerate() {
+                    assert_eq!(
+                        &crows[o * dim..(o + 1) * dim],
+                        &rows[r as usize * dim..(r as usize + 1) * dim],
+                        "{codec}: cluster {c} row {o}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -8,6 +8,7 @@
 //! (they depend on N/K, not N); wall-clock columns are testbed-specific
 //! and should be compared as *ratios* to the Unc. baseline.
 
+use crate::codecs::CodecSpec;
 use crate::datasets::Kind;
 use crate::eval::experiments::{self, Scale};
 use crate::eval::{fmt3, Table};
@@ -389,10 +390,160 @@ pub fn search_qps(args: &Args) {
         Some(p) => std::path::PathBuf::from(p),
         None => default_bench_json_path(),
     };
+    // A BENCH_search.json with no work behind it poisons cross-PR
+    // throughput tracking; refuse to write it and exit non-zero so
+    // scripts keying on the bench status see the failure.
+    if let Some(reason) = degenerate_qps_reason(scale.nq, &rows) {
+        eprintln!(
+            "bench-search-qps: refusing to write {}: {reason}",
+            out_path.display()
+        );
+        std::process::exit(1);
+    }
     let json = qps_json(&scale, kind.name(), k, &rows);
     match std::fs::write(&out_path, &json) {
         Ok(()) => println!("wrote {}", out_path.display()),
         Err(e) => eprintln!("failed to write {}: {e}", out_path.display()),
+    }
+}
+
+/// Why a QPS run would produce a degenerate `BENCH_search.json`
+/// (`None` when the report is sound). Factored out of [`search_qps`] so
+/// the guard is unit-testable next to the JSON contract.
+fn degenerate_qps_reason(nq: usize, rows: &[experiments::QpsRow]) -> Option<String> {
+    if nq == 0 {
+        return Some("zero queries executed (nq=0)".into());
+    }
+    if rows.is_empty() {
+        return Some("no result rows (empty sweep)".into());
+    }
+    if let Some(r) = rows.iter().find(|r| r.qps <= 0.0 || r.qps.is_nan()) {
+        return Some(format!(
+            "row {}/{} (nprobe={}, threads={}) reports qps={}, which means no query ran",
+            r.backend, r.codec, r.nprobe, r.threads, r.qps
+        ));
+    }
+    None
+}
+
+/// Default location of the churn report, next to `BENCH_search.json`.
+fn default_churn_json_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_churn.json")
+}
+
+/// Serialize a churn report to the `BENCH_churn.json` schema
+/// (docs/REPRODUCING.md).
+fn churn_json(r: &experiments::ChurnReport) -> String {
+    format!(
+        "{{\n  \"bench\": \"churn\",\n  \"dataset\": \"{}\",\n  \"n\": {},\n  \
+         \"inserts\": {},\n  \"deletes\": {},\n  \"dim\": {},\n  \"k\": {},\n  \
+         \"codec\": \"{}\",\n  \"seed\": {},\n  \"nq\": {},\n  \
+         \"insert_per_s\": {:.3},\n  \"delete_per_s\": {:.3},\n  \"compact_s\": {:.6},\n  \
+         \"segments_before_compact\": {},\n  \"pre_compact_bits_per_id\": {:.6},\n  \
+         \"bits_per_id_dynamic\": {:.6},\n  \"bits_per_id_static\": {:.6},\n  \
+         \"bpi_ratio\": {:.6},\n  \"queries_identical\": {},\n  \
+         \"results_identical\": {}\n}}\n",
+        r.dataset,
+        r.n0,
+        r.inserts,
+        r.deletes,
+        r.dim,
+        r.k,
+        r.codec,
+        r.seed,
+        r.nq,
+        r.insert_per_s,
+        r.delete_per_s,
+        r.compact_secs,
+        r.segments_before_compact,
+        r.pre_compact_bits_per_id,
+        r.bits_per_id_dynamic,
+        r.bits_per_id_static,
+        r.bpi_ratio(),
+        r.queries_identical,
+        r.results_identical(),
+    )
+}
+
+/// Mutable-IVF churn bench: delete/insert `--churn` of N, compact, and
+/// audit throughput + compression + search parity against a
+/// from-scratch static build. Writes `BENCH_churn.json` (override with
+/// `--out`) and exits non-zero if any query diverges from the static
+/// rebuild — the bench doubles as the correctness gate for live churn.
+pub fn churn(args: &Args) {
+    let scale = scale_from(args);
+    let kind = datasets_from(args)[0];
+    let k = args.usize("k", 1024.min((scale.n / 16).max(4)));
+    let codec = args.get_or("codec", "roc");
+    match CodecSpec::parse(codec) {
+        Ok(spec) if spec.is_per_list() => {}
+        Ok(spec) => {
+            eprintln!(
+                "bench-churn: codec {:?} is not a per-list codec (dynamic indexes need one of: {})",
+                spec.name(),
+                crate::codecs::PER_LIST_CODECS.join(", ")
+            );
+            std::process::exit(2);
+        }
+        Err(e) => {
+            eprintln!("bench-churn: {e}");
+            std::process::exit(2);
+        }
+    }
+    let churn_frac = args.f64("churn", 0.2);
+    let nprobe = args.usize("nprobe", 16);
+    println!(
+        "== churn: N={}, ±{:.0}% via delete/insert, K={k}, {} ({codec} ids, nprobe={nprobe}) ==",
+        scale.n,
+        churn_frac * 100.0,
+        kind.name()
+    );
+    let rep = match experiments::churn(&scale, kind, codec, k, churn_frac, nprobe) {
+        Ok(rep) => rep,
+        Err(e) => {
+            eprintln!("bench-churn: {e}");
+            std::process::exit(1);
+        }
+    };
+    let mut t = Table::new(&[
+        "metric",
+        "inserts/s",
+        "deletes/s",
+        "compact s",
+        "bits/id pre",
+        "bits/id post",
+        "bits/id static",
+        "ratio",
+        "parity",
+    ]);
+    t.row(vec![
+        format!("{}·{}", rep.dataset, rep.codec),
+        fmt3(rep.insert_per_s),
+        fmt3(rep.delete_per_s),
+        fmt3(rep.compact_secs),
+        fmt3(rep.pre_compact_bits_per_id),
+        fmt3(rep.bits_per_id_dynamic),
+        fmt3(rep.bits_per_id_static),
+        format!("{:.4}", rep.bpi_ratio()),
+        format!("{}/{}", rep.queries_identical, rep.nq),
+    ]);
+    println!("{}", t.render());
+    let out_path = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => default_churn_json_path(),
+    };
+    let json = churn_json(&rep);
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {}", out_path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", out_path.display()),
+    }
+    if !rep.results_identical() {
+        eprintln!(
+            "bench-churn: {}/{} queries diverged from the from-scratch static build",
+            rep.nq - rep.queries_identical,
+            rep.nq
+        );
+        std::process::exit(1);
     }
 }
 
@@ -457,5 +608,87 @@ mod tests {
         assert_eq!(s.matches('{').count(), s.matches('}').count());
         assert_eq!(s.matches('[').count(), s.matches(']').count());
         assert!(!s.contains(",\n  ]"), "trailing comma:\n{s}");
+    }
+
+    fn qps_row(qps: f64) -> experiments::QpsRow {
+        experiments::QpsRow {
+            backend: "ivf".into(),
+            codec: "roc".into(),
+            nprobe: 4,
+            threads: 2,
+            qps,
+            mean_ms: 0.5,
+            p50_ms: 0.4,
+            p95_ms: 0.9,
+        }
+    }
+
+    #[test]
+    fn degenerate_qps_runs_are_refused() {
+        // Healthy run → no objection.
+        assert_eq!(degenerate_qps_reason(100, &[qps_row(12.5)]), None);
+        // Zero queries, an empty sweep, or a zero-QPS row must all be
+        // named explicitly instead of landing in BENCH_search.json.
+        let msg = degenerate_qps_reason(0, &[qps_row(12.5)]).expect("nq=0");
+        assert!(msg.contains("zero queries"), "{msg}");
+        let msg = degenerate_qps_reason(100, &[]).expect("no rows");
+        assert!(msg.contains("no result rows"), "{msg}");
+        let msg = degenerate_qps_reason(100, &[qps_row(12.5), qps_row(0.0)]).expect("qps=0");
+        assert!(msg.contains("qps=0"), "{msg}");
+        assert!(degenerate_qps_reason(100, &[qps_row(f64::NAN)]).is_some());
+    }
+
+    #[test]
+    fn churn_json_contract() {
+        let rep = experiments::ChurnReport {
+            dataset: "deep-like",
+            n0: 1000,
+            inserts: 200,
+            deletes: 200,
+            dim: 8,
+            k: 16,
+            codec: "roc".into(),
+            seed: 42,
+            nq: 25,
+            insert_per_s: 123456.0,
+            delete_per_s: 654321.0,
+            compact_secs: 0.25,
+            segments_before_compact: 3,
+            pre_compact_bits_per_id: 10.5,
+            bits_per_id_dynamic: 8.01,
+            bits_per_id_static: 8.0,
+            queries_identical: 25,
+        };
+        let s = churn_json(&rep);
+        for key in [
+            "\"bench\"",
+            "\"churn\"",
+            "\"dataset\"",
+            "\"n\"",
+            "\"inserts\"",
+            "\"deletes\"",
+            "\"dim\"",
+            "\"k\"",
+            "\"codec\"",
+            "\"seed\"",
+            "\"nq\"",
+            "\"insert_per_s\"",
+            "\"delete_per_s\"",
+            "\"compact_s\"",
+            "\"segments_before_compact\"",
+            "\"pre_compact_bits_per_id\"",
+            "\"bits_per_id_dynamic\"",
+            "\"bits_per_id_static\"",
+            "\"bpi_ratio\"",
+            "\"queries_identical\"",
+            "\"results_identical\"",
+        ] {
+            assert!(s.contains(key), "missing {key} in\n{s}");
+        }
+        assert!(s.contains("\"results_identical\": true"), "{s}");
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        let partial = experiments::ChurnReport { queries_identical: 24, ..rep };
+        assert!(churn_json(&partial).contains("\"results_identical\": false"));
+        assert!((partial.bpi_ratio() - 8.01 / 8.0).abs() < 1e-12);
     }
 }

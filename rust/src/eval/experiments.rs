@@ -627,6 +627,133 @@ pub fn search_qps(
     Ok(out)
 }
 
+/// Churn-bench report: live-mutation throughput and post-compaction
+/// compression of a [`crate::dynamic::DynamicIvf`] against a
+/// from-scratch static build over the same live set (what
+/// `BENCH_churn.json` serializes).
+pub struct ChurnReport {
+    pub dataset: &'static str,
+    /// Initial build size; `deletes` ids are tombstoned, then `inserts`
+    /// fresh vectors are added, then the index is fully compacted.
+    pub n0: usize,
+    pub inserts: usize,
+    pub deletes: usize,
+    pub dim: usize,
+    pub k: usize,
+    pub codec: String,
+    pub seed: u64,
+    pub nq: usize,
+    pub insert_per_s: f64,
+    pub delete_per_s: f64,
+    pub compact_secs: f64,
+    /// Segments + (non-empty) write buffer right before the compaction.
+    pub segments_before_compact: usize,
+    pub pre_compact_bits_per_id: f64,
+    pub bits_per_id_dynamic: f64,
+    pub bits_per_id_static: f64,
+    /// Queries (out of `nq`) whose results matched the static rebuild
+    /// exactly.
+    pub queries_identical: usize,
+}
+
+impl ChurnReport {
+    /// Post-compaction compression relative to the static build
+    /// (1.0 = no decay under churn; the PR acceptance bound is 1.02).
+    pub fn bpi_ratio(&self) -> f64 {
+        self.bits_per_id_dynamic / self.bits_per_id_static.max(f64::MIN_POSITIVE)
+    }
+
+    pub fn results_identical(&self) -> bool {
+        self.queries_identical == self.nq
+    }
+}
+
+/// The churn experiment behind `bench-churn`: build, delete
+/// `churn_frac·n` random ids, insert `churn_frac·n` fresh vectors
+/// (timed, through the auto flush policy), compact, then audit search
+/// parity and bits/id against a fresh static build over the live set.
+pub fn churn(
+    scale: &Scale,
+    kind: Kind,
+    codec: &str,
+    k: usize,
+    churn_frac: f64,
+    nprobe: usize,
+) -> anyhow::Result<ChurnReport> {
+    use crate::dynamic::{CompactionPolicy, DynamicBuildParams, DynamicIvf};
+    let n0 = scale.n;
+    let moved = ((n0 as f64) * churn_frac).round().max(1.0) as usize;
+    let ds = generate(kind, n0 + moved, scale.nq, scale.dim, scale.seed);
+    // Auto *flush* stays on (sealing segments is part of the ingest path
+    // being measured) but threshold-triggered full compaction is
+    // disabled, so the timed delete/insert loops never hide a compaction
+    // inside them and compact_s measures the one explicit call below —
+    // otherwise any --churn above max_dead_frac would corrupt
+    // delete_per_s and report compact_s for a near-no-op.
+    let mut idx = DynamicIvf::build(
+        &ds.data[..n0 * scale.dim],
+        scale.dim,
+        &DynamicBuildParams {
+            ivf: IvfBuildParams {
+                k,
+                id_codec: codec.into(),
+                threads: scale.threads,
+                seed: scale.seed,
+                ..Default::default()
+            },
+            policy: CompactionPolicy {
+                max_segments: usize::MAX,
+                max_dead_frac: 1.0,
+                ..Default::default()
+            },
+        },
+    )?;
+
+    let mut rng = crate::util::Rng::new(scale.seed ^ 0xc0ffee);
+    let victims = rng.sample_distinct(n0 as u64, moved.min(n0));
+    let t0 = Instant::now();
+    for &id in &victims {
+        idx.delete(id as u32)?;
+    }
+    let delete_secs = t0.elapsed().as_secs_f64();
+
+    // Incremental ingest in serving-sized batches (assignment is
+    // amortized per batch; the auto policy seals segments as it goes).
+    let batch = 512 * scale.dim;
+    let t0 = Instant::now();
+    for chunk in ds.data[n0 * scale.dim..].chunks(batch) {
+        idx.add(chunk)?;
+    }
+    let insert_secs = t0.elapsed().as_secs_f64();
+
+    let pre_compact_bits_per_id = idx.bits_per_id();
+    let segments_before_compact = idx.num_segments() + usize::from(idx.buffer_rows() > 0);
+    let t0 = Instant::now();
+    idx.compact()?;
+    let compact_secs = t0.elapsed().as_secs_f64();
+
+    let parity = idx.check_parity(&ds.queries, &SearchParams { nprobe, k: 10 })?;
+    Ok(ChurnReport {
+        dataset: kind.name(),
+        n0,
+        inserts: moved,
+        deletes: victims.len(),
+        dim: scale.dim,
+        k,
+        codec: codec.to_string(),
+        seed: scale.seed,
+        nq: parity.queries,
+        insert_per_s: moved as f64 / insert_secs.max(1e-12),
+        delete_per_s: victims.len() as f64 / delete_secs.max(1e-12),
+        compact_secs,
+        segments_before_compact,
+        pre_compact_bits_per_id,
+        bits_per_id_dynamic: parity.dynamic_bits_per_id,
+        bits_per_id_static: parity.static_bits_per_id,
+        queries_identical: parity.identical,
+    })
+}
+
 /// Table 4 (scaled): large-N IVF-PQ with K=2^14 clusters standing in for
 /// the paper's 1B / 2^20 setup. Reports bits/id + batch search seconds.
 pub struct T4Row {
@@ -788,6 +915,18 @@ mod tests {
         assert!(validate_qps_spec("nsg:zuckerli").is_err(), "whole-graph codec per node");
         assert!(validate_qps_spec("turbo:roc").is_err());
         assert!(validate_qps_spec("rec").is_err(), "no IVF id store for rec");
+    }
+
+    #[test]
+    fn churn_smoke_parity_and_compression_hold() {
+        let scale = Scale { n: 2500, nq: 25, dim: 8, seed: 5, threads: 2 };
+        let rep = churn(&scale, Kind::DeepLike, "roc", 32, 0.2, 8).unwrap();
+        assert_eq!(rep.deletes, 500);
+        assert_eq!(rep.inserts, 500);
+        assert!(rep.results_identical(), "{}/{} queries", rep.queries_identical, rep.nq);
+        assert!((rep.bpi_ratio() - 1.0).abs() < 0.02, "bpi ratio {}", rep.bpi_ratio());
+        assert!(rep.insert_per_s > 0.0 && rep.delete_per_s > 0.0);
+        assert!(rep.segments_before_compact >= 1);
     }
 
     #[test]

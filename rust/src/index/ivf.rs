@@ -116,14 +116,14 @@ enum CodeStore {
 /// scratch growth for the per-cluster decoders (ROC, PqCompressed).
 #[derive(Default)]
 pub struct SearchScratch {
-    coarse: Vec<f32>,
-    probe_order: Vec<u32>,
-    lut: Vec<f32>,
-    ids: Vec<u32>,
-    codes: Vec<u16>,
-    topk: TopK,
-    winners: Vec<(f32, u64)>,
-    decode: DecodeScratch,
+    pub(crate) coarse: Vec<f32>,
+    pub(crate) probe_order: Vec<u32>,
+    pub(crate) lut: Vec<f32>,
+    pub(crate) ids: Vec<u32>,
+    pub(crate) codes: Vec<u16>,
+    pub(crate) topk: TopK,
+    pub(crate) winners: Vec<(f32, u64)>,
+    pub(crate) decode: DecodeScratch,
 }
 
 pub struct IvfIndex {
@@ -501,6 +501,58 @@ impl IvfIndex {
     /// Canonical id-store spec name (bench labels, persisted header).
     pub fn id_codec_name(&self) -> &str {
         self.spec.name()
+    }
+}
+
+/// The raw building blocks of a Flat, per-list-codec IVF index —
+/// consumed by `dynamic::DynamicIvf::from_static`, which adopts the
+/// compressed id streams and reordered rows verbatim as its first
+/// immutable segment.
+pub(crate) struct IvfParts {
+    pub dim: usize,
+    pub n: usize,
+    pub k: usize,
+    pub centroids: Vec<f32>,
+    pub centroid_norms: Vec<f32>,
+    pub offsets: Vec<usize>,
+    pub blobs: Blobs,
+    pub id_bits: u64,
+    pub spec: CodecSpec,
+    /// Cluster-major rows in codec decode order.
+    pub vectors: Vec<f32>,
+}
+
+impl IvfIndex {
+    /// Decompose into [`IvfParts`] without touching the compressed
+    /// streams. Only Flat per-list indexes qualify (the combinations a
+    /// dynamic index can absorb today); anything else is an actionable
+    /// error.
+    pub(crate) fn into_parts(self) -> Result<IvfParts> {
+        let (blobs, id_bits) = match self.ids {
+            IdStore::PerList { blobs, bits, .. } => (blobs, bits),
+            IdStore::Wavelet { .. } => bail!(
+                "dynamic indexes need a per-list id codec ({}), not a wavelet store",
+                crate::codecs::PER_LIST_CODECS.join("|")
+            ),
+        };
+        let vectors = match self.store {
+            CodeStore::Flat(v) => v,
+            CodeStore::Pq { .. } | CodeStore::PqCompressed { .. } => {
+                bail!("dynamic indexes currently store Flat vectors, not PQ codes")
+            }
+        };
+        Ok(IvfParts {
+            dim: self.dim,
+            n: self.n,
+            k: self.k,
+            centroids: self.centroids,
+            centroid_norms: self.centroid_norms,
+            offsets: self.offsets,
+            blobs,
+            id_bits,
+            spec: self.spec,
+            vectors,
+        })
     }
 }
 

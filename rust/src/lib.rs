@@ -6,9 +6,10 @@
 //!
 //! * **Layer 3 (this crate)** — the ANN serving system: IVF and graph
 //!   (NSG/HNSW) indexes whose vector-id payloads are stored through pluggable
-//!   lossless codecs ([`codecs`]), a batching query coordinator
-//!   ([`coordinator`]) and the PJRT runtime ([`runtime`]) that executes the
-//!   AOT-compiled distance kernels.
+//!   lossless codecs ([`codecs`]), a mutable LSM-style IVF ([`dynamic`])
+//!   that keeps those payloads compressed under live inserts/deletes, a
+//!   batching query coordinator ([`coordinator`]) and the PJRT runtime
+//!   ([`runtime`]) that executes the AOT-compiled distance kernels.
 //! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for coarse
 //!   quantizer assignment and PQ look-up-table construction, lowered once to
 //!   HLO text in `artifacts/`.
@@ -103,6 +104,7 @@ pub mod codecs;
 pub mod quant;
 pub mod datasets;
 pub mod index;
+pub mod dynamic;
 pub mod graph;
 pub mod runtime;
 pub mod api;

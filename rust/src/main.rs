@@ -6,8 +6,16 @@
 //!   bench-search-qps    — search throughput sweep over IVF *and* graph
 //!                         backends (QPS + latency percentiles, writes
 //!                         BENCH_search.json)
-//!   build               — build an index (--backend ivf|nsg|hnsw) and
-//!                         save it to the zann container (--out PATH)
+//!   bench-churn         — mutable-IVF churn: delete/insert throughput,
+//!                         post-compaction bits/id vs a static build,
+//!                         search parity (writes BENCH_churn.json)
+//!   build               — build an index (--backend ivf|nsg|hnsw|dynamic)
+//!                         and save it to the zann container (--out PATH)
+//!   add                 — insert vectors into a saved dynamic index
+//!   delete              — tombstone ids in a saved dynamic index
+//!   compact             — merge + re-encode a saved dynamic index
+//!   check-parity        — audit a dynamic index against a from-scratch
+//!                         static build over the same live set
 //!   info                — print the stats header of a saved index
 //!   serve               — reopen a saved index (zero transcode) and
 //!                         serve a query batch through the coordinator,
@@ -25,11 +33,12 @@ use zann::api::{persist, AnnIndex, AnnScratch, GraphIndex, IndexStats, QueryPara
 use zann::codecs::CodecSpec;
 use zann::coordinator::{Coordinator, ServeConfig};
 use zann::datasets::generate;
+use zann::dynamic::{CompactionPolicy, DynamicBuildParams, DynamicIvf};
 use zann::eval::experiments::{self, Scale};
 use zann::eval::{bench_entries, fmt3, Table};
 use zann::graph::hnsw::{Hnsw, HnswParams};
 use zann::graph::nsg::{Nsg, NsgParams};
-use zann::index::{IvfBuildParams, IvfIndex, VectorMode};
+use zann::index::{IvfBuildParams, IvfIndex, SearchParams, VectorMode};
 use zann::runtime::{default_artifact_dir, EngineHandle};
 use zann::util::cli::Args;
 
@@ -44,16 +53,23 @@ fn main() {
         "bench-fig2" => bench_entries::fig2(&args),
         "bench-fig3" => bench_entries::fig3(&args),
         "bench-search-qps" => bench_entries::search_qps(&args),
+        "bench-churn" => bench_entries::churn(&args),
         "sizes" => sizes(&args),
         "build" => build_cmd(&args),
+        "add" => add_cmd(&args),
+        "delete" => delete_cmd(&args),
+        "compact" => compact_cmd(&args),
+        "check-parity" => check_parity_cmd(&args),
         "info" => info_cmd(&args),
         "serve" => serve_cmd(&args),
         "serve-demo" => serve_demo(&args),
         _ => {
             eprintln!(
                 "usage: zann <bench-table1|bench-table2|bench-table3|bench-table4|\n\
-                 bench-fig2|bench-fig3|bench-search-qps|sizes|\n\
-                 build --out PATH [--backend ivf|nsg|hnsw]|info PATH|serve PATH|\n\
+                 bench-fig2|bench-fig3|bench-search-qps|bench-churn|sizes|\n\
+                 build --out PATH [--backend ivf|nsg|hnsw|dynamic]|\n\
+                 add PATH --add-n N|delete PATH --frac F|--ids A,B|compact PATH|\n\
+                 check-parity PATH|info PATH|serve PATH|\n\
                  serve-demo> [--n N] [--dataset sift|deep|ssnpp] [--codec NAME] ..."
             );
         }
@@ -74,10 +90,15 @@ fn codec_or_exit(args: &Args, default: &str) -> String {
 }
 
 /// One parseable stats line shared by build/info/serve (ci.sh greps it).
+/// Beyond the totals it carries the churn-visibility fields: live and
+/// tombstoned-but-stored counts, write-buffer rows, segment count and
+/// per-segment bits/id, so compression under live mutation is
+/// observable from the CLI alone.
 fn print_stats(s: &IndexStats, file_bytes: Option<u64>) {
     let mut line = format!(
         "zann-index kind={} codec={} n={} dim={} edges={} id_bits={} code_bits={} link_bits={} \
-         bits_per_id={:.3} payload_bytes={}",
+         bits_per_id={:.3} payload_bytes={} live={} deleted={} buffer_rows={} segments={} \
+         aux_bits={}",
         s.kind.name(),
         s.codec,
         s.n,
@@ -88,7 +109,17 @@ fn print_stats(s: &IndexStats, file_bytes: Option<u64>) {
         s.link_bits,
         s.bits_per_id(),
         s.payload_bytes(),
+        s.live,
+        s.deleted,
+        s.buffer_rows,
+        s.segments.len(),
+        s.aux_bits,
     );
+    if !s.segments.is_empty() {
+        let per: Vec<String> =
+            s.segments.iter().map(|g| format!("{:.3}", g.bits_per_id())).collect();
+        line.push_str(&format!(" seg_bpi={}", per.join(",")));
+    }
     if let Some(b) = file_bytes {
         line.push_str(&format!(" file_bytes={b}"));
     }
@@ -152,6 +183,26 @@ fn build_cmd(args: &Args) {
                 },
             ))
         }
+        "dynamic" => {
+            let params = DynamicBuildParams {
+                ivf: IvfBuildParams {
+                    k: args.usize("k", 1024.min((scale.n / 16).max(4))),
+                    id_codec: codec.clone(),
+                    vectors: VectorMode::Flat,
+                    threads: scale.threads,
+                    seed: scale.seed,
+                    ..Default::default()
+                },
+                policy: policy_from(args, CompactionPolicy::default()),
+            };
+            match DynamicIvf::build(&ds.data, ds.dim, &params) {
+                Ok(idx) => Box::new(idx),
+                Err(e) => {
+                    eprintln!("build: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
         "nsg" => {
             let r = args.usize("r", 32);
             let nsg = Nsg::build(
@@ -188,7 +239,7 @@ fn build_cmd(args: &Args) {
             }
         }
         other => {
-            eprintln!("build: unknown --backend {other:?} (ivf|nsg|hnsw)");
+            eprintln!("build: unknown --backend {other:?} (ivf|nsg|hnsw|dynamic)");
             std::process::exit(2);
         }
     };
@@ -206,6 +257,198 @@ fn build_cmd(args: &Args) {
             eprintln!("build: save failed: {e}");
             std::process::exit(1);
         }
+    }
+}
+
+/// Compaction knobs for the dynamic subcommands, overriding `base` only
+/// where a flag was actually passed — `base` is the persisted policy
+/// when reopening an index (so `add`/`delete`/`compact` respect the
+/// knobs the index was built with) and the defaults for `build`.
+fn policy_from(args: &Args, base: CompactionPolicy) -> CompactionPolicy {
+    CompactionPolicy {
+        flush_rows: args.usize("flush-rows", base.flush_rows),
+        max_segments: args.usize("max-segments", base.max_segments),
+        max_dead_frac: args.f64("max-dead-frac", base.max_dead_frac),
+        auto: if args.has("no-auto-compact") {
+            false
+        } else if args.has("auto-compact") {
+            true
+        } else {
+            base.auto
+        },
+    }
+}
+
+/// Reopen a dynamic container (the mutation subcommands need the
+/// concrete mutable index, not a `dyn AnnIndex`).
+fn open_dynamic_or_exit(args: &Args, cmd: &str) -> (String, DynamicIvf) {
+    let path = match args.positional.get(1) {
+        Some(p) => p.clone(),
+        None => {
+            eprintln!("usage: zann {cmd} PATH [flags]");
+            std::process::exit(2);
+        }
+    };
+    match persist::open_dynamic(Path::new(&path)) {
+        Ok(mut idx) => {
+            idx.set_policy(policy_from(args, idx.policy()));
+            (path, idx)
+        }
+        Err(e) => {
+            eprintln!("{cmd}: {e:?}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn save_dynamic_or_exit(idx: &DynamicIvf, path: &str, cmd: &str) -> u64 {
+    match idx.save(Path::new(path)) {
+        Ok(bytes) => bytes,
+        Err(e) => {
+            eprintln!("{cmd}: save failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Insert `--add-n` seeded random vectors into a saved dynamic index
+/// and write it back (exercises the write buffer + auto flush path).
+fn add_cmd(args: &Args) {
+    let (path, mut idx) = open_dynamic_or_exit(args, "add");
+    let n = args.usize("add-n", 1000);
+    let dim = idx.dim();
+    let mut rng = zann::util::Rng::new(args.u64("seed", 43));
+    let rows: Vec<f32> = (0..n * dim).map(|_| rng.normal()).collect();
+    let t0 = std::time::Instant::now();
+    let range = match idx.add(&rows) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("add: {e}");
+            std::process::exit(1);
+        }
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "added {n} vectors (ids {}..{}) in {:.3}s ({:.0}/s); {} segments + {} buffered rows",
+        range.start,
+        range.end,
+        secs,
+        n as f64 / secs.max(1e-12),
+        idx.num_segments(),
+        idx.buffer_rows(),
+    );
+    let bytes = save_dynamic_or_exit(&idx, &path, "add");
+    print_stats(&AnnIndex::stats(&idx), Some(bytes));
+}
+
+/// Tombstone ids in a saved dynamic index: an explicit `--ids` list, or
+/// `--frac` of the live set sampled with `--seed`.
+fn delete_cmd(args: &Args) {
+    let (path, mut idx) = open_dynamic_or_exit(args, "delete");
+    let victims: Vec<u32> = if let Some(list) = args.get("ids") {
+        list.split(',')
+            .map(|v| {
+                v.trim().parse().unwrap_or_else(|_| {
+                    eprintln!("delete: bad --ids entry {v:?}");
+                    std::process::exit(2);
+                })
+            })
+            .collect()
+    } else {
+        let frac = args.f64("frac", 0.1);
+        if !(0.0..=1.0).contains(&frac) {
+            eprintln!("delete: --frac {frac} out of [0, 1]");
+            std::process::exit(2);
+        }
+        let live: Vec<u32> = (0..idx.next_id()).filter(|&id| idx.is_live(id)).collect();
+        let target = ((live.len() as f64) * frac).round() as usize;
+        let mut rng = zann::util::Rng::new(args.u64("seed", 44));
+        rng.sample_distinct(live.len() as u64, target)
+            .into_iter()
+            .map(|i| live[i as usize])
+            .collect()
+    };
+    let t0 = std::time::Instant::now();
+    let mut deleted = 0usize;
+    let mut missing = 0usize;
+    for &id in &victims {
+        match idx.delete(id) {
+            Ok(true) => deleted += 1,
+            Ok(false) => missing += 1,
+            Err(e) => {
+                eprintln!("delete: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "deleted {deleted} ids ({missing} unknown/already dead) in {:.3}s ({:.0}/s); \
+         {} tombstoned rows awaiting compaction",
+        secs,
+        deleted as f64 / secs.max(1e-12),
+        idx.dead_stored(),
+    );
+    let bytes = save_dynamic_or_exit(&idx, &path, "delete");
+    print_stats(&AnnIndex::stats(&idx), Some(bytes));
+}
+
+/// Fully compact a saved dynamic index and write it back.
+fn compact_cmd(args: &Args) {
+    let (path, mut idx) = open_dynamic_or_exit(args, "compact");
+    let before = AnnIndex::stats(&idx);
+    let t0 = std::time::Instant::now();
+    if let Err(e) = idx.compact() {
+        eprintln!("compact: {e}");
+        std::process::exit(1);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "compacted {} segments + {} buffered rows (dropping {} tombstoned) in {:.3}s: \
+         bits/id {:.3} -> {:.3}",
+        before.segments.len(),
+        before.buffer_rows,
+        before.deleted,
+        secs,
+        before.bits_per_id(),
+        idx.bits_per_id(),
+    );
+    let bytes = save_dynamic_or_exit(&idx, &path, "compact");
+    print_stats(&AnnIndex::stats(&idx), Some(bytes));
+}
+
+/// Audit a saved dynamic index against a from-scratch static build over
+/// the same live set: every seeded random query must return identical
+/// (distance, id) results, and the bits/id ratio is reported. Exits
+/// non-zero on any divergence — the CI churn gate.
+fn check_parity_cmd(args: &Args) {
+    let (_, idx) = open_dynamic_or_exit(args, "check-parity");
+    let nq = args.usize("nq", 256);
+    let sp = SearchParams { nprobe: args.usize("nprobe", 16), k: args.usize("topk", 10) };
+    let mut rng = zann::util::Rng::new(args.u64("seed", 42));
+    let queries: Vec<f32> = (0..nq * idx.dim()).map(|_| rng.normal()).collect();
+    let parity = match idx.check_parity(&queries, &sp) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("check-parity: {e}");
+            std::process::exit(1);
+        }
+    };
+    println!(
+        "parity: {}/{} queries identical to a from-scratch static build; \
+         dynamic_bpi={:.3} static_bpi={:.3} ratio={:.4}",
+        parity.identical,
+        parity.queries,
+        parity.dynamic_bits_per_id,
+        parity.static_bits_per_id,
+        parity.dynamic_bits_per_id / parity.static_bits_per_id.max(f64::MIN_POSITIVE),
+    );
+    if parity.identical != parity.queries {
+        eprintln!(
+            "check-parity: {} queries diverged from the static rebuild",
+            parity.queries - parity.identical
+        );
+        std::process::exit(1);
     }
 }
 

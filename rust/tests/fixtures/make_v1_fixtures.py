@@ -1,0 +1,117 @@
+#!/usr/bin/env python3
+"""Generate the frozen version-1 single-segment IVF container fixtures.
+
+These bytes replicate, independently of the Rust writer, the container
+layout `IvfIndex::to_container_bytes` produced *before* the dynamic
+(multi-segment) subsystem existed: `ZANN` magic, container version 1,
+kind 1 (IVF), sections HEAD/CENT/OFFS/IDOF/IDBL/VECS, Flat vectors,
+with `unc64` (64-bit words per id) and `compact` (ceil(log2 N)-bit
+packed) id streams. `rust/tests/persist_compat.rs` opens them and
+asserts stats + search results bit-identically, so any reader change
+that would orphan pre-dynamic index files fails CI.
+
+The dataset is tiny and fully deterministic: n=12, dim=4, k=2;
+id i lands in cluster i%2; row(i)[j] = center(i) + i*i/32 + j/16 with
+center 0.0 / 8.0 (all values exact in f32; the quadratic term keeps
+every pairwise distance distinct, so search comparisons are
+tie-free). Rewriting the fixtures
+requires rerunning this script AND updating the constants in
+persist_compat.rs — by design, so it cannot happen accidentally.
+"""
+import struct
+from pathlib import Path
+
+N, DIM, K = 12, 4, 2
+
+
+def row(i):
+    center = 0.0 if i % 2 == 0 else 8.0
+    return [center + (i * i) / 32.0 + j / 16.0 for j in range(DIM)]
+
+
+LISTS = [[i for i in range(N) if i % 2 == 0], [i for i in range(N) if i % 2 == 1]]
+CENTROIDS = [0.0] * DIM + [8.0] * DIM
+
+
+def put_u64s(vals):
+    return struct.pack("<Q", len(vals)) + b"".join(struct.pack("<Q", v) for v in vals)
+
+
+def put_f32s(vals):
+    return struct.pack("<Q", len(vals)) + b"".join(struct.pack("<f", v) for v in vals)
+
+
+def put_str(s):
+    b = s.encode()
+    return struct.pack("<Q", len(b)) + b
+
+
+def section(tag, payload):
+    assert len(tag) == 4
+    return tag + struct.pack("<Q", len(payload)) + payload
+
+
+def head(codec, id_bits):
+    return (
+        struct.pack("<Q", DIM)
+        + struct.pack("<Q", N)
+        + struct.pack("<Q", K)
+        + put_str(codec)
+        + struct.pack("<B", 0)      # vector mode 0 = Flat
+        + struct.pack("<Q", 0)      # pq m
+        + struct.pack("<I", 0)      # pq bits
+        + struct.pack("<Q", id_bits)
+        + struct.pack("<Q", N * DIM * 32)  # code_bits: flat f32 rows
+    )
+
+
+def encode_unc64(ids):
+    return b"".join(struct.pack("<Q", i) for i in ids), len(ids) * 64
+
+
+def encode_compact(ids, universe=N):
+    width = max((universe - 1).bit_length(), 1)  # bits_for(12) = 4
+    acc, nbits, words = 0, 0, []
+    for i in ids:
+        acc |= i << nbits
+        nbits += width
+        while nbits >= 64:
+            words.append(acc & ((1 << 64) - 1))
+            acc >>= 64
+            nbits -= 64
+    if nbits > 0 or not words:
+        words.append(acc & ((1 << 64) - 1))
+    # The rust codec serializes whole u64 words, little-endian.
+    return b"".join(struct.pack("<Q", w) for w in words), len(ids) * width
+
+
+def container(codec, encode):
+    blobs, id_bits, idof = [], 0, [0]
+    for lst in LISTS:
+        blob, bits = encode(lst)
+        blobs.append(blob)
+        id_bits += bits
+        idof.append(idof[-1] + len(blob))
+    offsets = [0, len(LISTS[0]), N]
+    vecs = [v for lst in LISTS for i in lst for v in row(i)]
+    out = b"ZANN" + struct.pack("<H", 1) + bytes([1, 0])  # version 1, kind IVF
+    out += section(b"HEAD", head(codec, id_bits))
+    out += section(b"CENT", put_f32s(CENTROIDS))
+    out += section(b"OFFS", put_u64s(offsets))
+    out += section(b"IDOF", put_u64s(idof))
+    out += section(b"IDBL", b"".join(blobs))
+    out += section(b"VECS", put_f32s(vecs))
+    return out
+
+
+def main():
+    here = Path(__file__).parent
+    for codec, encode in [("unc64", encode_unc64), ("compact", encode_compact)]:
+        path = here / f"v1_ivf_{codec}.zann"
+        data = container(codec, encode)
+        path.write_bytes(data)
+        print(f"wrote {path} ({len(data)} bytes)")
+
+
+if __name__ == "__main__":
+    main()
