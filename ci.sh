@@ -18,12 +18,12 @@ echo "== bench_search_qps smoke (JSON contract, IVF + graph backends) =="
 # Tiny-N end-to-end run; validate that the emitted BENCH_search.json
 # parses and carries the documented keys — including at least one
 # graph-backend row served through the same AnnIndex path — so the bench
-# wiring cannot rot silently. Writes to a scratch path to keep the
-# checkout clean in CI.
-QPS_JSON="$(mktemp /tmp/zann_bench_search.XXXXXX.json)"
+# wiring cannot rot silently. Writes to the repo-root default path so
+# every CI run refreshes the committed perf-trajectory seed in place.
+QPS_JSON="BENCH_search.json"
 cargo bench --bench bench_search_qps -- \
   --n 2000 --nq 40 --k 16 --runs 1 --nprobe 4 --sweep-threads 2 \
-  --codecs unc64,roc,pq-compressed,nsg:roc --out "$QPS_JSON"
+  --codecs unc64,roc,ans-i4,pq-compressed,nsg:roc --out "$QPS_JSON"
 python3 - "$QPS_JSON" <<'EOF'
 import json, sys
 with open(sys.argv[1]) as f:
@@ -42,7 +42,71 @@ assert "ivf" in backends, backends
 assert backends & {"nsg", "hnsw"}, f"no graph-backend row: {backends}"
 print(f"bench JSON ok: {len(d['results'])} rows, backends {sorted(backends)}")
 EOF
-rm -f "$QPS_JSON"
+
+echo "== bench_decode smoke (decode-throughput JSON at repo root) =="
+# Per-codec decode throughput (single-stream and interleaved ANS) plus
+# the blocked ADC and fused coarse kernels scalar-vs-dispatched; the
+# bench itself asserts bitwise kernel parity on this host. Refreshes the
+# committed BENCH_decode.json in place.
+cargo bench --bench bench_decode -- \
+  --universe 200000 --list-lens 64,1024 --lists 8 --reps 2 \
+  --adc-rows 4000 --coarse-k 64 --out BENCH_decode.json
+python3 - BENCH_decode.json <<'EOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    d = json.load(f)
+assert d["bench"] == "decode", d.get("bench")
+for key in ("universe", "lists", "reps", "seed", "simd_level", "results", "adc", "coarse"):
+    assert key in d, f"missing top-level key {key}"
+assert d["simd_level"] in ("scalar", "sse4.1", "avx2"), d["simd_level"]
+assert d["results"], "no decode rows"
+codecs = {r["codec"] for r in d["results"]}
+assert {"roc", "ans-i2", "ans-i4", "ans-i8"} <= codecs, codecs
+for row in d["results"]:
+    for key in ("codec", "list_len", "lists", "bits_per_id", "ids_per_s", "mb_per_s"):
+        assert key in row, f"missing row key {key}"
+    if row["list_len"] > 0:
+        assert row["ids_per_s"] > 0, row
+for section, keys in (("adc", ("codes_per_s_scalar", "codes_per_s_simd")),
+                      ("coarse", ("rows_per_s_scalar", "rows_per_s_simd"))):
+    for key in keys:
+        assert d[section][key] > 0, (section, key, d[section])
+print(f"decode JSON ok: {len(d['results'])} rows, simd_level={d['simd_level']}")
+EOF
+# A degenerate (zero-item) run must exit non-zero and leave no JSON.
+DEGEN_JSON="$(mktemp -u /tmp/zann_degen.XXXXXX.json)"
+if cargo bench --bench bench_decode -- --universe 1000 --list-lens 64 --lists 0 \
+    --out "$DEGEN_JSON" >/dev/null 2>&1; then
+  echo "bench_decode: degenerate zero-item run should have exited non-zero"; exit 1
+fi
+test ! -f "$DEGEN_JSON" || { echo "degenerate run wrote $DEGEN_JSON"; exit 1; }
+
+echo "== SIMD vs scalar end-to-end identity (build->save->open->serve both ways) =="
+# The dispatched kernels are documented bit-identical to the scalar
+# reference; prove it end-to-end by serving the same saved containers —
+# flat/ROC (coarse kernel) and PQ-compressed (blocked ADC scan) — under
+# ZANN_SIMD=scalar and under the default dispatch, then byte-comparing
+# the (query, rank, distance-bits, id) dumps.
+SIMD_DIR="$(mktemp -d /tmp/zann_simd.XXXXXX)"
+cargo run --release --bin zann -- build --out "$SIMD_DIR/flat.zann" \
+  --backend ivf --codec roc --n 2000 --dim 16 --k 32
+cargo run --release --bin zann -- build --out "$SIMD_DIR/pqc.zann" \
+  --backend ivf --codec ans-i4 --vectors pq-compressed --m 4 --n 2000 --dim 16 --k 32
+for IDX in flat pqc; do
+  ZANN_SIMD=scalar cargo run --release --bin zann -- serve "$SIMD_DIR/$IDX.zann" \
+    --nq 64 --nprobe 8 --dump-results "$SIMD_DIR/$IDX.scalar.txt" \
+    | tee "$SIMD_DIR/$IDX.scalar.log"
+  grep -q "verified 64/64" "$SIMD_DIR/$IDX.scalar.log"
+  cargo run --release --bin zann -- serve "$SIMD_DIR/$IDX.zann" \
+    --nq 64 --nprobe 8 --dump-results "$SIMD_DIR/$IDX.auto.txt" \
+    | tee "$SIMD_DIR/$IDX.auto.log"
+  grep -q "verified 64/64" "$SIMD_DIR/$IDX.auto.log"
+  cmp "$SIMD_DIR/$IDX.scalar.txt" "$SIMD_DIR/$IDX.auto.txt" \
+    || { echo "SIMD/scalar divergence on $IDX index"; exit 1; }
+  test -s "$SIMD_DIR/$IDX.scalar.txt" || { echo "empty result dump for $IDX"; exit 1; }
+done
+echo "SIMD vs scalar: result dumps identical"
+rm -rf "$SIMD_DIR"
 
 echo "== persistence smoke: build -> save -> info -> serve =="
 # Round-trip both index families through the container format and assert

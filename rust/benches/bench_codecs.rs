@@ -25,7 +25,7 @@ fn main() {
 
     println!("== codec microbench: {lists} lists x {n} ids from [0, {universe}) ==");
     let mut t = Table::new(&["codec", "bits/id", "enc Mids/s", "dec Mids/s"]);
-    for name in ["unc64", "unc32", "compact", "ef", "roc"] {
+    for name in zann::codecs::PER_LIST_CODECS {
         let codec = CodecSpec::parse(name).unwrap().id_codec().unwrap();
         let mut enc_best = f64::INFINITY;
         let mut blobs = Vec::new();

@@ -1,0 +1,27 @@
+//! Decode-throughput bench: per-codec bulk-decode MB/s and ids/s across
+//! list sizes (single-stream vs interleaved ANS), plus the blocked PQ
+//! ADC scan and the fused coarse kernel scalar-vs-dispatched. Writes a
+//! machine-readable `BENCH_decode.json` at the repo root.
+//!
+//! `cargo bench --bench bench_decode -- [--universe N] [--list-lens 64,1024,4096]
+//!  [--lists L] [--reps R] [--adc-rows N] [--adc-m M] [--coarse-k K]
+//!  [--coarse-dim D] [--seed S] [--out PATH]`
+//!
+//! Bare invocations run at a tiny smoke scale (see `smoke.rs`); the
+//! bench exits non-zero without writing on a degenerate (zero-item)
+//! run, and asserts scalar/SIMD kernel parity bitwise on the host it
+//! runs on (docs/REPRODUCING.md).
+
+#[path = "smoke.rs"]
+mod smoke;
+
+fn main() {
+    let args = zann::util::cli::Args::parse(smoke::args_with_tiny_default(
+        &["--full", "--universe", "--list-lens"],
+        &[
+            "--universe", "200000", "--list-lens", "64,1024", "--lists", "8", "--reps", "2",
+            "--adc-rows", "4000", "--coarse-k", "64",
+        ],
+    ));
+    zann::eval::bench_entries::decode(&args);
+}

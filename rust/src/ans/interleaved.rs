@@ -1,0 +1,302 @@
+//! N-way interleaved rANS over one shared byte stream — the decode-side
+//! throughput engine behind the `ans-i2`/`ans-i4`/`ans-i8` codecs.
+//!
+//! The single-state coder in [`crate::ans`] is exact but *serial*: every
+//! decoded symbol depends on the head value left by the previous one, so
+//! a modern core spends the whole list waiting on one dependency chain.
+//! The standard fix (Giesen's interleaved rANS, also what Faiss-style
+//! scan kernels assume of their entropy decoders) is `W` independent
+//! states that round-robin over the symbols: symbol `i` belongs to state
+//! `i mod W`, so `W` dependency chains are in flight at once and the
+//! out-of-order core overlaps them "for free".
+//!
+//! Two properties make the shared stream work:
+//!
+//! * **Renorm mirroring.** Encoding walks the symbols in *reverse* order
+//!   (`i = n−1 … 0`), each state pushing its renormalization words onto
+//!   one shared LIFO word stack; decoding walks forward (`i = 0 … n−1`)
+//!   and pops. Because a state's encode-renorm condition mirrors its
+//!   decode-renorm condition exactly (the invariant the single-stream
+//!   coder's tests pin), the pops at decode step `i` retrieve precisely
+//!   the words pushed at encode step `i` — no per-state framing needed.
+//! * **Division-free decode.** The uniform model's rescaled boundary
+//!   `C(z) = ⌊z·2³²/m⌋` is the only place the coder divides. `m` is
+//!   constant for a whole list, so decode precomputes `M = ⌊2⁹⁶/m⌋` and
+//!   evaluates `C` as a 128-bit multiply plus a one-step fixup
+//!   ([`UniformModel::boundary`] proves exactness inline); the decoder
+//!   then performs no division at all.
+//!
+//! The encoder reproduces [`crate::ans::Ans::encode_uniform`]'s state
+//! transition bit-for-bit (asserted by a test against the single-stream
+//! coder at `W = 1`), so the serialized format is the natural extension
+//! of the single-stream one: `u32` word count, the shared stream words
+//! (LE), then the `W` final heads (LE `u64` each).
+
+/// Lower bound of the normalized interval (mirrors `ans::LOW`).
+const LOW: u64 = 1 << 32;
+
+/// Supported interleaving widths (heads are kept in a fixed array).
+pub const MAX_WAYS: usize = 8;
+
+/// Exact size in bits of an interleaved stream's payload: stream words
+/// plus `ways` 64-bit heads (each state pays the single-stream coder's
+/// "initial bits" — short lists amortize it poorly, exactly like ROC).
+pub fn size_bits(stream_words: usize, ways: usize) -> u64 {
+    stream_words as u64 * 32 + ways as u64 * 64
+}
+
+/// `C(z) = ⌊z·2³²/m⌋` by long division — the encoder-side boundary,
+/// identical to the single-stream coder's.
+#[inline]
+fn boundary_div(z: u64, m: u32) -> u64 {
+    debug_assert!(z <= m as u64);
+    (z << 32) / m as u64
+}
+
+/// Uniform([0, m)) model with a precomputed reciprocal for division-free
+/// decoding.
+#[derive(Clone, Copy)]
+pub struct UniformModel {
+    m: u32,
+    /// `⌊2⁹⁶ / m⌋`; fits u128 for every m ≥ 1.
+    magic: u128,
+}
+
+impl UniformModel {
+    pub fn new(m: u32) -> UniformModel {
+        debug_assert!(m > 0);
+        UniformModel { m, magic: (1u128 << 96) / m as u128 }
+    }
+
+    /// Exact `⌊z·2³²/m⌋` without dividing. With `M = ⌊2⁹⁶/m⌋` the
+    /// estimate `a = ⌊z·M/2⁶⁴⌋` satisfies `true−1 ≤ a ≤ true` (for
+    /// `z ≤ m < 2³²`: `z·M ≤ 2⁹⁶` so the product fits u128, and
+    /// `z·M/2⁶⁴ ≥ z·2³²/m − z/2⁶⁴ > true − 2`), so one fixup step —
+    /// bump iff `(a+1)·m ≤ z·2³²` — lands on the floor exactly.
+    #[inline]
+    pub fn boundary(&self, z: u64) -> u64 {
+        let mut a = ((z as u128 * self.magic) >> 64) as u64;
+        if (a as u128 + 1) * self.m as u128 <= (z as u128) << 32 {
+            a += 1;
+        }
+        debug_assert_eq!(a, boundary_div(z, self.m));
+        a
+    }
+
+    /// One decode step on `head`, popping renorm words from `bytes` via
+    /// `cursor` (a word index into the shared stream, counting down).
+    #[inline]
+    fn decode_step(&self, head: &mut u64, bytes: &[u8], cursor: &mut usize) -> u32 {
+        let slot = *head & (LOW - 1);
+        let mut v = ((slot as u128 * self.m as u128) >> 32) as u64;
+        let mut lo = self.boundary(v);
+        let mut hi = self.boundary(v + 1);
+        if hi <= slot {
+            v += 1;
+            lo = hi;
+            hi = self.boundary(v + 1);
+        }
+        *head = (hi - lo) * (*head >> 32) + slot - lo;
+        while *head < LOW {
+            if *cursor == 0 {
+                // Popping past the initial state: malformed input; keep
+                // the head as-is (same policy as the single-stream coder).
+                break;
+            }
+            *cursor -= 1;
+            let off = 4 + *cursor * 4;
+            let w = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+            *head = (*head << 32) | w as u64;
+        }
+        v as u32
+    }
+}
+
+/// One encode step (identical state transition to
+/// [`crate::ans::Ans::encode_uniform`]); renorm words go onto the shared
+/// stack.
+#[inline]
+fn encode_step(head: &mut u64, stream: &mut Vec<u32>, x: u32, m: u32) {
+    debug_assert!(x < m);
+    let c32 = boundary_div(x as u64, m);
+    let f32_ = boundary_div(x as u64 + 1, m) - c32;
+    if f32_ < LOW {
+        let limit = f32_ << 32;
+        while *head >= limit {
+            stream.push(*head as u32);
+            *head >>= 32;
+        }
+    }
+    *head = (*head / f32_) * LOW + c32 + *head % f32_;
+}
+
+/// Encode `symbols` under `Uniform([0, m))` with `ways` interleaved
+/// states sharing one word stream. Returns the serialized blob:
+/// `[u32 word count][stream words][ways × u64 heads]`, all LE.
+pub fn encode_uniform(symbols: &[u32], m: u32, ways: usize) -> Vec<u8> {
+    assert!((1..=MAX_WAYS).contains(&ways), "ways {ways} out of [1, {MAX_WAYS}]");
+    let mut heads = [LOW; MAX_WAYS];
+    let mut stream: Vec<u32> = Vec::new();
+    // Reverse symbol order; state i % ways — the decode loop's mirror.
+    for i in (0..symbols.len()).rev() {
+        encode_step(&mut heads[i % ways], &mut stream, symbols[i], m);
+    }
+    let mut out = Vec::with_capacity(4 + stream.len() * 4 + ways * 8);
+    out.extend_from_slice(&(stream.len() as u32).to_le_bytes());
+    for w in &stream {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    for h in &heads[..ways] {
+        out.extend_from_slice(&h.to_le_bytes());
+    }
+    out
+}
+
+/// Decode `n` symbols from a blob produced by [`encode_uniform`] with the
+/// same `(m, ways)`, appending them to `out`. Stream words are read
+/// in place from `bytes` (no copy, no scratch); the only state is the
+/// `ways` heads and a word cursor.
+///
+/// The loop body is blocked over the `ways` states: each iteration of
+/// the outer loop advances every chain by one symbol, so the `ways`
+/// multiply/fixup chains are independent and retire in parallel on an
+/// out-of-order core — this is the bulk-decode path the `bench-decode`
+/// harness measures against the serial coders.
+pub fn decode_uniform_into(bytes: &[u8], m: u32, n: usize, ways: usize, out: &mut Vec<u32>) {
+    assert!((1..=MAX_WAYS).contains(&ways), "ways {ways} out of [1, {MAX_WAYS}]");
+    let words = u32::from_le_bytes(bytes[0..4].try_into().expect("truncated ans-i blob")) as usize;
+    let heads_off = 4 + words * 4;
+    assert!(
+        bytes.len() >= heads_off + ways * 8,
+        "ans-i blob holds {} bytes, need {} for {words} words + {ways} heads",
+        bytes.len(),
+        heads_off + ways * 8
+    );
+    let mut heads = [LOW; MAX_WAYS];
+    for (w, h) in heads[..ways].iter_mut().enumerate() {
+        let off = heads_off + w * 8;
+        *h = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+    }
+    let model = UniformModel::new(m);
+    let mut cursor = words;
+    out.reserve(n);
+    let full = n - n % ways;
+    let mut i = 0;
+    while i < full {
+        // One symbol per state; the chains only couple through the shared
+        // cursor, and a renorm pop is rare for large m.
+        for head in heads[..ways].iter_mut() {
+            out.push(model.decode_step(head, bytes, &mut cursor));
+        }
+        i += ways;
+    }
+    for head in heads[..n - full].iter_mut() {
+        out.push(model.decode_step(head, bytes, &mut cursor));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ans::Ans;
+    use crate::util::Rng;
+
+    #[test]
+    fn boundary_magic_is_exact() {
+        // Adversarial denominators: tiny, prime-ish, near-2^32, powers of
+        // two; z sweeps the extremes plus random interior points.
+        let mut rng = Rng::new(0xd1f);
+        let mut ms: Vec<u32> =
+            vec![1, 2, 3, 5, 7, 255, 256, 257, 65535, 65536, 218_560, u32::MAX - 1, u32::MAX];
+        for _ in 0..100 {
+            ms.push(1 + rng.below((u32::MAX as u64) - 1) as u32);
+        }
+        for &m in &ms {
+            let model = UniformModel::new(m);
+            let mut zs = vec![0u64, 1, m as u64 / 2, (m as u64).saturating_sub(1), m as u64];
+            for _ in 0..200 {
+                zs.push(rng.below(m as u64 + 1));
+            }
+            for &z in &zs {
+                assert_eq!(model.boundary(z), boundary_div(z, m), "m={m} z={z}");
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_ways_and_shapes() {
+        let mut rng = Rng::new(0xd2f);
+        for &m in &[1u32, 2, 17, 1000, 1 << 20, u32::MAX] {
+            for &n in &[0usize, 1, 2, 3, 7, 8, 9, 63, 64, 65, 1000] {
+                if n as u64 > m as u64 {
+                    continue;
+                }
+                let mut syms: Vec<u32> =
+                    rng.sample_distinct(m as u64, n).into_iter().map(|v| v as u32).collect();
+                syms.sort_unstable();
+                for ways in [1usize, 2, 3, 4, 8] {
+                    let blob = encode_uniform(&syms, m, ways);
+                    let mut out = Vec::new();
+                    decode_uniform_into(&blob, m, n, ways, &mut out);
+                    assert_eq!(out, syms, "m={m} n={n} ways={ways}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_way_is_bit_identical_to_the_single_stream_coder() {
+        // The interleaved encoder at W=1 must reproduce Ans::encode_uniform
+        // exactly — stream words and head — which pins the per-state
+        // transition to the single-stream format.
+        let mut rng = Rng::new(0xd3f);
+        let m = 1 << 20;
+        let mut syms: Vec<u32> =
+            rng.sample_distinct(m as u64, 500).into_iter().map(|v| v as u32).collect();
+        syms.sort_unstable();
+        let blob = encode_uniform(&syms, m, 1);
+        let mut ans = Ans::new();
+        for &x in syms.iter().rev() {
+            ans.encode_uniform(x, m);
+        }
+        assert_eq!(blob, ans.to_bytes(), "W=1 framing/words/head must match Ans::to_bytes");
+    }
+
+    #[test]
+    fn decode_order_is_ascending_for_every_way_count() {
+        // Cross-way contract: every W decodes the same (sorted) sequence,
+        // so the id codecs built on top are drop-in interchangeable.
+        let mut rng = Rng::new(0xd4f);
+        let m = 1 << 16;
+        let mut syms: Vec<u32> =
+            rng.sample_distinct(m as u64, 777).into_iter().map(|v| v as u32).collect();
+        syms.sort_unstable();
+        let mut reference = Vec::new();
+        decode_uniform_into(&encode_uniform(&syms, m, 1), m, syms.len(), 1, &mut reference);
+        for ways in [2usize, 4, 8] {
+            let mut out = Vec::new();
+            decode_uniform_into(&encode_uniform(&syms, m, ways), m, syms.len(), ways, &mut out);
+            assert_eq!(out, reference, "ways={ways}");
+        }
+        assert_eq!(reference, syms);
+    }
+
+    #[test]
+    fn rate_is_log2_m_plus_per_state_overhead() {
+        let mut rng = Rng::new(0xd5f);
+        let m = 1u32 << 20;
+        let n = 4096usize;
+        let mut syms: Vec<u32> =
+            rng.sample_distinct(m as u64, n).into_iter().map(|v| v as u32).collect();
+        syms.sort_unstable();
+        for ways in [2usize, 8] {
+            let blob = encode_uniform(&syms, m, ways);
+            let bits = (blob.len() - 4) as f64 * 8.0;
+            let ideal = n as f64 * 20.0 + ways as f64 * 64.0;
+            assert!(
+                bits >= n as f64 * 20.0 && bits < ideal + 64.0,
+                "ways={ways}: {bits} bits vs ideal {ideal}"
+            );
+        }
+    }
+}

@@ -17,6 +17,7 @@
 //! here rely on and the tests assert.
 
 pub mod adaptive;
+pub mod interleaved;
 
 pub use adaptive::ReverseAdaptiveCoder;
 

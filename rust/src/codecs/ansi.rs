@@ -1,0 +1,122 @@
+//! `ans-i2` / `ans-i4` / `ans-i8` — interleaved multi-stream ANS id
+//! codecs (the decode-throughput members of the per-list family).
+//!
+//! Each list is sorted and entropy-coded under `Uniform([0, universe))`
+//! with `W` interleaved rANS states over one shared stream
+//! ([`crate::ans::interleaved`]). Rate is `n·log₂(universe)` — the
+//! `Comp.` baseline's cost without the ⌈·⌉ (so marginally *below*
+//! `compact` whenever the universe is not a power of two) plus `W` heads
+//! of framing — while decode runs `W` independent dependency chains with
+//! no division, which is what the `bench-decode` table quantifies
+//! against `roc`/`ef`/`compact`. ROC remains the rate-optimal choice;
+//! this family is the speed end of the rate/throughput trade-off.
+//!
+//! Decode order is ascending (the sorted sequence), identical for every
+//! `W` and for the `W = 1` single-stream special case — the cross-decode
+//! contract `rust/tests/simd_parity.rs` pins. Streams are read in place
+//! from the blob (no scratch state), so `decode_into` is the same
+//! allocation-free bulk path as `decode`.
+
+use super::{Encoded, IdCodec};
+use crate::ans::interleaved;
+
+/// Interleaved-ANS id codec with a fixed way count (2, 4 or 8).
+pub struct AnsInterleaved {
+    ways: usize,
+    name: &'static str,
+}
+
+impl AnsInterleaved {
+    /// `ways` must be one of 2/4/8 (the registered spec variants).
+    pub fn new(ways: usize) -> AnsInterleaved {
+        let name = match ways {
+            2 => "ans-i2",
+            4 => "ans-i4",
+            8 => "ans-i8",
+            other => panic!("unregistered interleave width {other} (use 2, 4 or 8)"),
+        };
+        AnsInterleaved { ways, name }
+    }
+
+    pub fn ways(&self) -> usize {
+        self.ways
+    }
+}
+
+impl IdCodec for AnsInterleaved {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn encode(&self, ids: &[u32], universe: u32) -> Encoded {
+        let mut sorted = ids.to_vec();
+        sorted.sort_unstable();
+        debug_assert!(sorted.windows(2).all(|w| w[0] != w[1]), "ids must be distinct");
+        let m = universe.max(1);
+        let bytes = interleaved::encode_uniform(&sorted, m, self.ways);
+        // Payload accounting mirrors ROC's: stream words + serialized
+        // heads; the u32 length prefix is framing, not payload.
+        let words = (bytes.len() - 4 - self.ways * 8) / 4;
+        Encoded { bits: interleaved::size_bits(words, self.ways), bytes }
+    }
+
+    fn decode(&self, bytes: &[u8], universe: u32, n: usize, out: &mut Vec<u32>) {
+        interleaved::decode_uniform_into(bytes, universe.max(1), n, self.ways, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::testutil::check_roundtrip;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        check_roundtrip(&AnsInterleaved::new(2), 0xa152);
+        check_roundtrip(&AnsInterleaved::new(4), 0xa154);
+        check_roundtrip(&AnsInterleaved::new(8), 0xa158);
+    }
+
+    #[test]
+    fn decode_is_ascending_and_width_invariant() {
+        let mut rng = Rng::new(0xa15a);
+        for &(u, n) in &[(1u32 << 20, 1000usize), (100, 100), (1000, 1), (1 << 16, 63)] {
+            let ids: Vec<u32> =
+                rng.sample_distinct(u as u64, n).into_iter().map(|v| v as u32).collect();
+            let mut want = ids.clone();
+            want.sort_unstable();
+            for ways in [2usize, 4, 8] {
+                let codec = AnsInterleaved::new(ways);
+                let enc = codec.encode(&ids, u);
+                let mut out = Vec::new();
+                codec.decode(&enc.bytes, u, n, &mut out);
+                assert_eq!(out, want, "u={u} n={n} ways={ways}");
+            }
+        }
+    }
+
+    #[test]
+    fn rate_tracks_compact_not_roc() {
+        // n·log2(u) + W·64: within a hair of compact on large lists, far
+        // from ROC's set-optimal size — the documented trade-off.
+        let mut rng = Rng::new(0xa15b);
+        let (u, n) = (1_000_000u32, 4096usize);
+        let ids: Vec<u32> =
+            rng.sample_distinct(u as u64, n).into_iter().map(|v| v as u32).collect();
+        let enc = AnsInterleaved::new(4).encode(&ids, u);
+        let bpe = enc.bits as f64 / n as f64;
+        let log2u = (u as f64).log2(); // ≈ 19.93 < compact's 20
+        assert!(bpe > log2u && bpe < log2u + 0.2, "bpe={bpe}");
+    }
+
+    #[test]
+    fn bits_never_exceed_storage() {
+        for ways in [2usize, 4, 8] {
+            let codec = AnsInterleaved::new(ways);
+            let enc = codec.encode(&[], 1000);
+            assert_eq!(enc.bits, ways as u64 * 64, "empty list carries only the heads");
+            assert!(enc.bits as usize <= enc.bytes.len() * 8);
+        }
+    }
+}

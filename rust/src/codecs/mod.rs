@@ -5,8 +5,10 @@
 //! * **Per-list codecs** ([`IdCodec`]) compress one inverted list or friend
 //!   list into its own bit stream — the *online* setting. Implementations:
 //!   [`fixed::Unc64`]/[`fixed::Unc32`] (uncompressed baselines),
-//!   [`fixed::Compact`] (⌈log₂N⌉-bit packing), [`elias_fano::EliasFano`]
-//!   and [`roc::Roc`] (bits-back ANS, the paper's main contribution).
+//!   [`fixed::Compact`] (⌈log₂N⌉-bit packing), [`elias_fano::EliasFano`],
+//!   [`roc::Roc`] (bits-back ANS, the paper's main contribution) and
+//!   [`ansi::AnsInterleaved`] (`ans-i2/i4/i8`: N-way interleaved rANS,
+//!   the division-free parallel-decode end of the trade-off).
 //! * **Whole-structure codecs** compress an entire index component into one
 //!   stream: [`wavelet::WaveletTree`] (full random access over the IVF
 //!   assignment sequence), [`rec::Rec`] and [`zuckerli::Zuckerli`]
@@ -19,6 +21,7 @@
 
 pub mod fixed;
 pub mod elias_fano;
+pub mod ansi;
 pub mod roc;
 pub mod wavelet;
 pub mod rec;
@@ -107,7 +110,8 @@ pub trait IdCodec: Send + Sync {
 /// and printed in bench labels.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CodecSpec {
-    /// One stream per list (`unc64`, `unc32`, `compact`, `ef`, `roc`).
+    /// One stream per list (`unc64`, `unc32`, `compact`, `ef`, `roc`,
+    /// `ans-i2`, `ans-i4`, `ans-i8`).
     PerList(&'static str),
     /// Wavelet tree over the whole IVF assignment sequence (`wt`, `wt1`).
     Wavelet(WtStorage),
@@ -120,7 +124,8 @@ pub enum CodecSpec {
 impl CodecSpec {
     /// Every canonical codec name, for error messages and docs.
     pub const VALID: &'static [&'static str] = &[
-        "unc64", "unc32", "compact", "ef", "roc", "wt", "wt1", "rec", "rec-uniform", "zuckerli",
+        "unc64", "unc32", "compact", "ef", "roc", "ans-i2", "ans-i4", "ans-i8", "wt", "wt1",
+        "rec", "rec-uniform", "zuckerli",
     ];
 
     /// Parse a codec name (canonical or alias) into a spec.
@@ -131,6 +136,9 @@ impl CodecSpec {
             "compact" | "comp" => CodecSpec::PerList("compact"),
             "ef" => CodecSpec::PerList("ef"),
             "roc" => CodecSpec::PerList("roc"),
+            "ans-i2" => CodecSpec::PerList("ans-i2"),
+            "ans-i4" => CodecSpec::PerList("ans-i4"),
+            "ans-i8" => CodecSpec::PerList("ans-i8"),
             "wt" => CodecSpec::Wavelet(WtStorage::Flat),
             "wt1" => CodecSpec::Wavelet(WtStorage::Rrr),
             "rec" => CodecSpec::Rec(RecModel::PolyaUrn),
@@ -170,6 +178,9 @@ impl CodecSpec {
             CodecSpec::PerList("compact") => Ok(Box::new(fixed::Compact)),
             CodecSpec::PerList("ef") => Ok(Box::new(elias_fano::EliasFano)),
             CodecSpec::PerList("roc") => Ok(Box::new(roc::Roc)),
+            CodecSpec::PerList("ans-i2") => Ok(Box::new(ansi::AnsInterleaved::new(2))),
+            CodecSpec::PerList("ans-i4") => Ok(Box::new(ansi::AnsInterleaved::new(4))),
+            CodecSpec::PerList("ans-i8") => Ok(Box::new(ansi::AnsInterleaved::new(8))),
             CodecSpec::PerList(other) => bail!("unregistered per-list codec {other:?}"),
             other => bail!(
                 "codec {:?} is a whole-structure codec, not a per-list codec \
@@ -181,8 +192,11 @@ impl CodecSpec {
     }
 }
 
-/// All per-list codec names, in the column order of Table 1.
-pub const PER_LIST_CODECS: [&str; 5] = ["unc64", "compact", "ef", "unc32", "roc"];
+/// All per-list codec names: the Table-1 columns first, then the
+/// interleaved-ANS throughput family (`ans-iW`: `W` round-robin rANS
+/// states over one stream — same ids, division-free parallel decode).
+pub const PER_LIST_CODECS: [&str; 8] =
+    ["unc64", "compact", "ef", "unc32", "roc", "ans-i2", "ans-i4", "ans-i8"];
 
 #[cfg(test)]
 mod tests {
@@ -288,7 +302,7 @@ mod tests {
     }
 
     #[test]
-    fn registry_covers_exactly_the_table1_per_list_columns() {
+    fn registry_covers_every_per_list_codec() {
         // Every registered name resolves; the decode of an empty list is a
         // no-op for each of them.
         for name in PER_LIST_CODECS {

@@ -504,7 +504,8 @@ impl DynamicIvf {
 
     /// Buffer-reusing search (replaces `out`): scans the write buffer
     /// and every segment of each probed cluster, translating rank ids
-    /// through the segment map and filtering tombstones inline.
+    /// through the segment map and filtering tombstones in a batched
+    /// pass ([`crate::simd::filter`]) ahead of the dense distance loop.
     pub fn search_into(
         &self,
         query: &[f32],
@@ -549,7 +550,8 @@ impl DynamicIvf {
     ) {
         let dim = self.dim;
         let nprobe = p.nprobe.min(self.k);
-        let SearchScratch { coarse, probe_order, ids, topk, winners, decode, .. } = scratch;
+        let SearchScratch { coarse, probe_order, ids, exts, keep, topk, winners, decode, .. } =
+            scratch;
         // Best-first probe ordering, exactly as the static index does it
         // (same centroids ⇒ same probe set and order).
         probe_order.clear();
@@ -563,25 +565,40 @@ impl DynamicIvf {
         probes.sort_unstable_by(|&a, &b| coarse[a as usize].total_cmp(&coarse[b as usize]));
 
         topk.reset(p.k);
+        // With no deletes ever, the tombstone bitmap is empty: skip the
+        // filter phase outright. Otherwise each list is filtered in a
+        // batch (8 bitmap tests per AVX2 gather, scalar elsewhere) and
+        // the distance loop runs dense over the survivors — same
+        // survivor order, identical results to the fused test-per-row
+        // loop.
+        let no_deletes = self.tombs.count() == 0;
         for &c in probes.iter() {
             let c = c as usize;
-            // Write buffer: uncompressed external ids, filtered inline.
+            // Write buffer: uncompressed external ids.
             let bl = &self.buffer.lists[c];
             if !bl.is_empty() {
                 let bv = &self.buffer.vecs[c];
-                for (o, &ext) in bl.iter().enumerate() {
-                    if self.tombs.get(ext) {
-                        continue;
+                if no_deletes {
+                    for (o, &ext) in bl.iter().enumerate() {
+                        let d = l2_sq(query, &bv[o * dim..(o + 1) * dim]);
+                        if d < topk.threshold() {
+                            topk.push(d, ext);
+                        }
                     }
-                    let d = l2_sq(query, &bv[o * dim..(o + 1) * dim]);
-                    if d < topk.threshold() {
-                        topk.push(d, ext);
+                } else {
+                    crate::simd::filter::live_positions_into(self.tombs.words(), bl, keep);
+                    for &o in keep.iter() {
+                        let o = o as usize;
+                        let d = l2_sq(query, &bv[o * dim..(o + 1) * dim]);
+                        if d < topk.threshold() {
+                            topk.push(d, bl[o]);
+                        }
                     }
                 }
             }
             // Immutable segments: bulk-decode the rank stream (tombstone
-            // filtering needs every row's id anyway), translate through
-            // the segment map, filter, scan.
+            // filtering needs every row's id anyway), batch-translate
+            // through the segment map, batch-filter, then scan dense.
             for seg in &self.segments {
                 let len = seg.list_len(c);
                 if len == 0 {
@@ -589,14 +606,27 @@ impl DynamicIvf {
                 }
                 seg.decode_list_into(c, ids, decode);
                 let rows = seg.cluster_rows(c);
-                for (o, &r) in ids.iter().enumerate() {
-                    let ext = seg.ext_id(r);
-                    if self.tombs.get(ext) {
-                        continue;
+                if no_deletes {
+                    for (o, &r) in ids.iter().enumerate() {
+                        let ext = seg.ext_id(r);
+                        let d = l2_sq(query, &rows[o * dim..(o + 1) * dim]);
+                        if d < topk.threshold() {
+                            topk.push(d, ext);
+                        }
                     }
-                    let d = l2_sq(query, &rows[o * dim..(o + 1) * dim]);
-                    if d < topk.threshold() {
-                        topk.push(d, ext);
+                } else {
+                    exts.clear();
+                    match seg.map() {
+                        IdMap::Identity => exts.extend_from_slice(ids),
+                        IdMap::Live(_) => exts.extend(ids.iter().map(|&r| seg.ext_id(r))),
+                    }
+                    crate::simd::filter::live_positions_into(self.tombs.words(), exts, keep);
+                    for &o in keep.iter() {
+                        let o = o as usize;
+                        let d = l2_sq(query, &rows[o * dim..(o + 1) * dim]);
+                        if d < topk.threshold() {
+                            topk.push(d, exts[o]);
+                        }
                     }
                 }
             }

@@ -426,6 +426,153 @@ fn degenerate_qps_reason(nq: usize, rows: &[experiments::QpsRow]) -> Option<Stri
     None
 }
 
+/// Default location of the decode-throughput report, next to
+/// `BENCH_search.json` at the repo root.
+fn default_decode_json_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_decode.json")
+}
+
+/// Serialize a decode report to the `BENCH_decode.json` schema
+/// (docs/REPRODUCING.md): per-codec decode throughput rows plus the two
+/// scan kernels, scalar against the dispatched SIMD level.
+fn decode_json(rep: &experiments::DecodeReport, seed: u64) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!(
+        "  \"bench\": \"decode\",\n  \"universe\": {},\n  \"lists\": {},\n  \
+         \"reps\": {},\n  \"seed\": {seed},\n  \"simd_level\": \"{}\",\n",
+        rep.universe, rep.lists, rep.reps, rep.simd_level
+    ));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in rep.rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"codec\": \"{}\", \"list_len\": {}, \"lists\": {}, \
+             \"bits_per_id\": {:.6}, \"ids_per_s\": {:.3}, \"mb_per_s\": {:.6}}}{}\n",
+            r.codec,
+            r.list_len,
+            r.lists,
+            r.bits_per_id,
+            r.ids_per_s,
+            r.mb_per_s,
+            if i + 1 == rep.rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"adc\": {{\"m\": {}, \"ksub\": {}, \"codes\": {}, \
+         \"codes_per_s_scalar\": {:.3}, \"codes_per_s_simd\": {:.3}}},\n",
+        rep.adc_m, rep.adc_ksub, rep.adc.items, rep.adc.scalar_per_s, rep.adc.simd_per_s
+    ));
+    s.push_str(&format!(
+        "  \"coarse\": {{\"k\": {}, \"dim\": {}, \
+         \"rows_per_s_scalar\": {:.3}, \"rows_per_s_simd\": {:.3}}}\n",
+        rep.coarse_k, rep.coarse_dim, rep.coarse.scalar_per_s, rep.coarse.simd_per_s
+    ));
+    s.push_str("}\n");
+    s
+}
+
+/// Why a decode run would produce a degenerate `BENCH_decode.json`
+/// (`None` when the report is sound). A zero-item run — no lists, or
+/// only empty lists — must exit non-zero instead of poisoning the
+/// decode-throughput trajectory.
+fn degenerate_decode_reason(rep: &experiments::DecodeReport) -> Option<String> {
+    if rep.rows.is_empty() {
+        return Some("no codec rows (empty sweep)".into());
+    }
+    if rep.total_ids() == 0 {
+        return Some("zero-item run: no ids were decoded".into());
+    }
+    if let Some(r) = rep
+        .rows
+        .iter()
+        .find(|r| r.list_len > 0 && (r.ids_per_s <= 0.0 || r.ids_per_s.is_nan()))
+    {
+        return Some(format!(
+            "row {}/len {} reports ids_per_s={}, which means no decode ran",
+            r.codec, r.list_len, r.ids_per_s
+        ));
+    }
+    if rep.adc.scalar_per_s <= 0.0 || rep.adc.simd_per_s <= 0.0 {
+        return Some("ADC kernel timing is degenerate".into());
+    }
+    if rep.coarse.scalar_per_s <= 0.0 || rep.coarse.simd_per_s <= 0.0 {
+        return Some("coarse kernel timing is degenerate".into());
+    }
+    None
+}
+
+/// Decode-throughput bench: per-codec bulk-decode MB/s and ids/s across
+/// list sizes (including the interleaved-ANS family), plus the blocked
+/// ADC and fused coarse kernels scalar-vs-dispatched — the baseline
+/// every future read-path change is measured against. Writes
+/// `BENCH_decode.json` at the repo root (override with `--out`); exits
+/// non-zero without writing on a degenerate (zero-item) run.
+pub fn decode(args: &Args) {
+    let universe = args.u64("universe", 1_000_000) as u32;
+    let list_lens: Vec<usize> = parse_usize_list(args, "list-lens", &[64, 1024, 4096]);
+    let lists = args.usize("lists", 32);
+    let reps = args.usize("reps", 3);
+    let seed = args.u64("seed", 42);
+    let adc_rows = args.usize("adc-rows", 20_000);
+    let adc_m = args.usize("adc-m", 8);
+    let coarse_k = args.usize("coarse-k", 1024);
+    let coarse_dim = args.usize("coarse-dim", 32);
+    println!(
+        "== decode throughput: {lists} lists × {:?} ids from [0, {universe}), reps={reps} ==",
+        list_lens
+    );
+    let rep = match experiments::decode_bench(
+        universe, &list_lens, lists, reps, seed, adc_rows, adc_m, coarse_k, coarse_dim,
+    ) {
+        Ok(rep) => rep,
+        Err(e) => {
+            eprintln!("bench-decode: {e}");
+            std::process::exit(1);
+        }
+    };
+    let mut t = Table::new(&["codec", "list len", "bits/id", "Mids/s", "MB/s"]);
+    for r in &rep.rows {
+        t.row(vec![
+            r.codec.clone(),
+            r.list_len.to_string(),
+            fmt3(r.bits_per_id),
+            fmt3(r.ids_per_s / 1e6),
+            fmt3(r.mb_per_s),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "ADC scan ({}x{} codes):   scalar {} Mcodes/s | {} {} Mcodes/s",
+        adc_rows,
+        rep.adc_m,
+        fmt3(rep.adc.scalar_per_s / 1e6),
+        rep.simd_level,
+        fmt3(rep.adc.simd_per_s / 1e6),
+    );
+    println!(
+        "coarse kernel (K={}, dim={}): scalar {} Mrows/s | {} {} Mrows/s",
+        rep.coarse_k,
+        rep.coarse_dim,
+        fmt3(rep.coarse.scalar_per_s / 1e6),
+        rep.simd_level,
+        fmt3(rep.coarse.simd_per_s / 1e6),
+    );
+    let out_path = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => default_decode_json_path(),
+    };
+    if let Some(reason) = degenerate_decode_reason(&rep) {
+        eprintln!("bench-decode: refusing to write {}: {reason}", out_path.display());
+        std::process::exit(1);
+    }
+    let json = decode_json(&rep, seed);
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {}", out_path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", out_path.display()),
+    }
+}
+
 /// Default location of the churn report, next to `BENCH_search.json`.
 fn default_churn_json_path() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_churn.json")
@@ -636,6 +783,85 @@ mod tests {
         let msg = degenerate_qps_reason(100, &[qps_row(12.5), qps_row(0.0)]).expect("qps=0");
         assert!(msg.contains("qps=0"), "{msg}");
         assert!(degenerate_qps_reason(100, &[qps_row(f64::NAN)]).is_some());
+    }
+
+    fn decode_report(rows: Vec<experiments::DecodeRow>) -> experiments::DecodeReport {
+        experiments::DecodeReport {
+            universe: 100_000,
+            lists: 8,
+            reps: 2,
+            simd_level: "avx2",
+            rows,
+            adc_m: 8,
+            adc_ksub: 256,
+            adc: experiments::KernelThroughput {
+                items: 1600,
+                scalar_per_s: 1e8,
+                simd_per_s: 3e8,
+            },
+            coarse_k: 64,
+            coarse_dim: 16,
+            coarse: experiments::KernelThroughput {
+                items: 64,
+                scalar_per_s: 2e7,
+                simd_per_s: 5e7,
+            },
+        }
+    }
+
+    fn decode_row(codec: &str, len: usize, ids_per_s: f64) -> experiments::DecodeRow {
+        experiments::DecodeRow {
+            codec: codec.into(),
+            list_len: len,
+            lists: 8,
+            bits_per_id: 17.0,
+            ids_per_s,
+            mb_per_s: ids_per_s * 17.0 / 8.0 / 1e6,
+        }
+    }
+
+    #[test]
+    fn decode_json_contract() {
+        let rep = decode_report(vec![
+            decode_row("roc", 1024, 1.5e7),
+            decode_row("ans-i4", 1024, 6.0e7),
+        ]);
+        let s = decode_json(&rep, 42);
+        for key in [
+            "\"bench\"", "\"decode\"", "\"universe\"", "\"lists\"", "\"reps\"", "\"seed\"",
+            "\"simd_level\"", "\"results\"", "\"codec\"", "\"list_len\"", "\"bits_per_id\"",
+            "\"ids_per_s\"", "\"mb_per_s\"", "\"adc\"", "\"codes_per_s_scalar\"",
+            "\"codes_per_s_simd\"", "\"coarse\"", "\"rows_per_s_scalar\"",
+            "\"rows_per_s_simd\"",
+        ] {
+            assert!(s.contains(key), "missing {key} in\n{s}");
+        }
+        assert!(s.contains("\"ans-i4\""), "interleaved family must appear:\n{s}");
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+        assert!(!s.contains(",\n  ]"), "trailing comma:\n{s}");
+    }
+
+    #[test]
+    fn degenerate_decode_runs_are_refused() {
+        // Healthy report → no objection (len-0 rows are fine alongside
+        // real ones: the property suite covers empty lists, the bench
+        // only needs nonzero total work).
+        let ok = decode_report(vec![decode_row("roc", 0, 0.0), decode_row("roc", 64, 1e7)]);
+        assert_eq!(degenerate_decode_reason(&ok), None);
+        // No rows, a zero-item run, or a zero-throughput row must all be
+        // named explicitly instead of landing in BENCH_decode.json.
+        let msg = degenerate_decode_reason(&decode_report(vec![])).expect("no rows");
+        assert!(msg.contains("no codec rows"), "{msg}");
+        let msg = degenerate_decode_reason(&decode_report(vec![decode_row("roc", 0, 0.0)]))
+            .expect("zero items");
+        assert!(msg.contains("zero-item"), "{msg}");
+        let msg = degenerate_decode_reason(&decode_report(vec![decode_row("ef", 64, 0.0)]))
+            .expect("zero throughput");
+        assert!(msg.contains("ids_per_s"), "{msg}");
+        let mut bad = decode_report(vec![decode_row("roc", 64, 1e7)]);
+        bad.adc.simd_per_s = 0.0;
+        assert!(degenerate_decode_reason(&bad).unwrap().contains("ADC"));
     }
 
     #[test]

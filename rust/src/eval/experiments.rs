@@ -823,6 +823,208 @@ pub fn table4(n: usize, nq: usize, dim: usize, k: usize, threads: usize, seed: u
     out
 }
 
+/// One decode-throughput cell: a per-list codec at one list size.
+pub struct DecodeRow {
+    pub codec: String,
+    pub list_len: usize,
+    pub lists: usize,
+    /// Exact compressed payload per id (the rate this throughput buys).
+    pub bits_per_id: f64,
+    /// Ids decoded per second through `decode_into` + `DecodeScratch`
+    /// (best of `reps`).
+    pub ids_per_s: f64,
+    /// Compressed megabytes consumed per second over the same run.
+    pub mb_per_s: f64,
+}
+
+/// Scalar-vs-dispatched throughput of one SIMD-backed kernel.
+pub struct KernelThroughput {
+    /// Work items per invocation set (codes for ADC, centroid rows for
+    /// the coarse kernel).
+    pub items: usize,
+    pub scalar_per_s: f64,
+    pub simd_per_s: f64,
+}
+
+/// The `bench-decode` report: per-codec decode throughput plus the two
+/// scan kernels, scalar against the active dispatch level.
+pub struct DecodeReport {
+    pub universe: u32,
+    pub lists: usize,
+    pub reps: usize,
+    pub simd_level: &'static str,
+    pub rows: Vec<DecodeRow>,
+    pub adc_m: usize,
+    pub adc_ksub: usize,
+    pub adc: KernelThroughput,
+    pub coarse_k: usize,
+    pub coarse_dim: usize,
+    pub coarse: KernelThroughput,
+}
+
+impl DecodeReport {
+    /// Total ids decoded across every codec row (the degenerate-run
+    /// detector keys on this being nonzero).
+    pub fn total_ids(&self) -> usize {
+        self.rows.iter().map(|r| r.list_len * r.lists).sum()
+    }
+}
+
+/// Codecs the decode table sweeps: exactly the per-list registry, so a
+/// codec added there can never silently drop out of the throughput
+/// trajectory.
+pub const DECODE_CODECS: [&str; crate::codecs::PER_LIST_CODECS.len()] =
+    crate::codecs::PER_LIST_CODECS;
+
+/// Decode-and-scan throughput bench (`bench-decode` / `BENCH_decode.json`).
+///
+/// Per codec × list size: encode `lists` random id lists from
+/// `[0, universe)`, then time the bulk decode through the same
+/// `decode_into` + scratch path the search scan uses. The two scan
+/// kernels (blocked PQ ADC, fused coarse) are each timed at
+/// `Level::Scalar` and at the dispatched level, with the outputs
+/// asserted bit-identical — the bench doubles as a dispatch-parity
+/// check on whatever machine it runs on.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_bench(
+    universe: u32,
+    list_lens: &[usize],
+    lists: usize,
+    reps: usize,
+    seed: u64,
+    adc_rows: usize,
+    adc_m: usize,
+    coarse_k: usize,
+    coarse_dim: usize,
+) -> anyhow::Result<DecodeReport> {
+    use crate::codecs::{CodecSpec, DecodeScratch};
+    use crate::simd;
+    let mut rng = crate::util::Rng::new(seed);
+    let reps = reps.max(1);
+    let mut rows = Vec::new();
+    for &len in list_lens {
+        anyhow::ensure!(
+            len as u64 <= universe as u64,
+            "list length {len} exceeds universe {universe}"
+        );
+        let data: Vec<Vec<u32>> = (0..lists)
+            .map(|_| {
+                rng.sample_distinct(universe as u64, len).into_iter().map(|v| v as u32).collect()
+            })
+            .collect();
+        for name in DECODE_CODECS {
+            let codec = CodecSpec::parse(name)?.id_codec()?;
+            let mut bits = 0u64;
+            let mut bytes = 0usize;
+            let blobs: Vec<Vec<u8>> = data
+                .iter()
+                .map(|l| {
+                    let e = codec.encode(l, universe);
+                    bits += e.bits;
+                    bytes += e.bytes.len();
+                    e.bytes
+                })
+                .collect();
+            let mut scratch = DecodeScratch::default();
+            let mut out = Vec::with_capacity(len);
+            let mut best = f64::INFINITY;
+            let mut decoded = 0usize;
+            for _ in 0..reps {
+                decoded = 0;
+                let t0 = Instant::now();
+                for blob in &blobs {
+                    out.clear();
+                    codec.decode_into(blob, universe, len, &mut out, &mut scratch);
+                    decoded += out.len();
+                }
+                best = best.min(t0.elapsed().as_secs_f64()).max(1e-12);
+            }
+            debug_assert_eq!(decoded, len * lists);
+            rows.push(DecodeRow {
+                codec: name.to_string(),
+                list_len: len,
+                lists,
+                bits_per_id: if decoded == 0 { 0.0 } else { bits as f64 / decoded as f64 },
+                ids_per_s: decoded as f64 / best,
+                mb_per_s: bytes as f64 / best / 1e6,
+            });
+        }
+    }
+
+    // Blocked ADC scan, scalar vs dispatched, outputs compared bitwise.
+    let adc_ksub = 256usize;
+    let adc_m = adc_m.max(1);
+    let lut: Vec<f32> = (0..adc_m * adc_ksub).map(|_| rng.normal()).collect();
+    let codes: Vec<u16> =
+        (0..adc_rows * adc_m).map(|_| rng.below(adc_ksub as u64) as u16).collect();
+    let mut scalar_out = vec![0f32; adc_rows];
+    let mut simd_out = vec![0f32; adc_rows];
+    let time_adc = |level: simd::Level, out: &mut [f32]| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            simd::adc::adc_scan_level(level, &lut, adc_ksub, adc_m, &codes, out);
+            best = best.min(t0.elapsed().as_secs_f64()).max(1e-12);
+        }
+        best
+    };
+    let adc_scalar_t = time_adc(simd::Level::Scalar, &mut scalar_out);
+    let adc_simd_t = time_adc(simd::level(), &mut simd_out);
+    anyhow::ensure!(
+        scalar_out.iter().zip(&simd_out).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "ADC kernel parity violation: {} output differs from scalar",
+        simd::level().name()
+    );
+    let adc_codes = adc_rows * adc_m;
+    let adc = KernelThroughput {
+        items: adc_codes,
+        scalar_per_s: adc_codes as f64 / adc_scalar_t,
+        simd_per_s: adc_codes as f64 / adc_simd_t,
+    };
+
+    // Fused coarse kernel, scalar vs dispatched, bitwise-compared.
+    let query: Vec<f32> = (0..coarse_dim).map(|_| rng.normal()).collect();
+    let cents: Vec<f32> = (0..coarse_k * coarse_dim).map(|_| rng.normal()).collect();
+    let norms = crate::quant::coarse::centroid_norms(&cents, coarse_dim);
+    let mut scalar_d = vec![0f32; coarse_k];
+    let mut simd_d = vec![0f32; coarse_k];
+    let time_coarse = |level: simd::Level, out: &mut [f32]| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(3) {
+            let t0 = Instant::now();
+            simd::coarse::dists_into_level(level, &query, &cents, coarse_dim, &norms, out);
+            best = best.min(t0.elapsed().as_secs_f64()).max(1e-12);
+        }
+        best
+    };
+    let coarse_scalar_t = time_coarse(simd::Level::Scalar, &mut scalar_d);
+    let coarse_simd_t = time_coarse(simd::level(), &mut simd_d);
+    anyhow::ensure!(
+        scalar_d.iter().zip(&simd_d).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "coarse kernel parity violation: {} output differs from scalar",
+        simd::level().name()
+    );
+    let coarse = KernelThroughput {
+        items: coarse_k,
+        scalar_per_s: coarse_k as f64 / coarse_scalar_t,
+        simd_per_s: coarse_k as f64 / coarse_simd_t,
+    };
+
+    Ok(DecodeReport {
+        universe,
+        lists,
+        reps,
+        simd_level: simd::level().name(),
+        rows,
+        adc_m,
+        adc_ksub,
+        adc,
+        coarse_k,
+        coarse_dim,
+        coarse,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -927,6 +1129,34 @@ mod tests {
         assert!((rep.bpi_ratio() - 1.0).abs() < 0.02, "bpi ratio {}", rep.bpi_ratio());
         assert!(rep.insert_per_s > 0.0 && rep.delete_per_s > 0.0);
         assert!(rep.segments_before_compact >= 1);
+    }
+
+    #[test]
+    fn decode_bench_smoke_covers_every_codec_and_kernels_agree() {
+        let rep = decode_bench(10_000, &[0, 1, 65, 500], 4, 1, 7, 512, 8, 64, 16).unwrap();
+        assert_eq!(rep.rows.len(), 4 * DECODE_CODECS.len());
+        // Each (len, codec) row decodes len × 4 lists.
+        assert_eq!(rep.total_ids(), (1 + 65 + 500) * 4 * DECODE_CODECS.len());
+        for r in &rep.rows {
+            if r.list_len > 0 {
+                assert!(r.ids_per_s > 0.0, "{} len {}", r.codec, r.list_len);
+                assert!(r.bits_per_id > 0.0, "{} len {}", r.codec, r.list_len);
+            }
+        }
+        // The ANS family's rate must sit between roc and unc32 on a
+        // non-power-of-two universe at the large list size.
+        let get = |name: &str| {
+            rep.rows.iter().find(|r| r.codec == name && r.list_len == 500).unwrap().bits_per_id
+        };
+        assert!(get("roc") < get("ans-i4"), "roc stays rate-optimal");
+        assert!(get("ans-i4") < get("unc32"));
+        // Kernel sections carry positive throughput on both paths
+        // (parity is asserted inside decode_bench itself).
+        assert!(rep.adc.scalar_per_s > 0.0 && rep.adc.simd_per_s > 0.0);
+        assert!(rep.coarse.scalar_per_s > 0.0 && rep.coarse.simd_per_s > 0.0);
+        assert!(!rep.simd_level.is_empty());
+        // Oversized lists are an error, not a silent clamp.
+        assert!(decode_bench(10, &[100], 2, 1, 7, 8, 2, 4, 4).is_err());
     }
 
     #[test]

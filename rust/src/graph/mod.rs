@@ -87,6 +87,25 @@ impl GraphStore {
         }
     }
 
+    /// Software-prefetch node `i`'s adjacency block (the compressed
+    /// stream, or the raw list) into L1. Beam search issues this for the
+    /// best pending candidate while the current node's neighbors are
+    /// being scored, hiding the dependent-load latency of the next hop.
+    /// Purely advisory — results are untouched.
+    #[inline]
+    pub fn prefetch_adjacency(&self, i: usize) {
+        match self {
+            GraphStore::Raw(adj) => crate::simd::prefetch_read(adj[i].as_ptr()),
+            GraphStore::Compressed { blobs, .. } => {
+                let blob = blobs.get(i);
+                crate::simd::prefetch_read(blob.as_ptr());
+                if blob.len() > 64 {
+                    crate::simd::prefetch_read(blob[64..].as_ptr());
+                }
+            }
+        }
+    }
+
     pub fn num_nodes(&self) -> usize {
         match self {
             GraphStore::Raw(adj) => adj.len(),
@@ -154,8 +173,17 @@ pub fn beam_search(
         if d > results.threshold() {
             break;
         }
+        // Overlap the next hop's dependent load with this node's scoring.
+        if let Some(Reverse((_, next))) = cand.peek() {
+            store.prefetch_adjacency(*next as usize);
+        }
         // Sequential access to the friend list: decode the node's stream.
         let neigh = store.neighbors(node as usize, scratch);
+        // First pass: prefetch every neighbor's vector row; the distance
+        // loop below then hits warm lines instead of serial cache misses.
+        for &nb in neigh {
+            crate::simd::prefetch_read(data[nb as usize * dim..].as_ptr());
+        }
         for &nb in neigh {
             if visited.insert(nb) {
                 let dn =

@@ -121,6 +121,13 @@ pub struct SearchScratch {
     pub(crate) lut: Vec<f32>,
     pub(crate) ids: Vec<u32>,
     pub(crate) codes: Vec<u16>,
+    /// Per-list ADC distances from the blocked SIMD scan (one entry per
+    /// scanned row, reused across lists).
+    pub(crate) dists: Vec<f32>,
+    /// Batch-translated external ids of one segment list (dynamic index).
+    pub(crate) exts: Vec<u32>,
+    /// Surviving positions after batched tombstone filtering (dynamic).
+    pub(crate) keep: Vec<u32>,
     pub(crate) topk: TopK,
     pub(crate) winners: Vec<(f32, u64)>,
     pub(crate) decode: DecodeScratch,
@@ -368,8 +375,9 @@ impl IvfIndex {
         out: &mut Vec<(f32, u32)>,
     ) {
         let nprobe = p.nprobe.min(self.k);
-        let SearchScratch { coarse, probe_order, lut, ids, codes, topk, winners, decode } =
-            scratch;
+        let SearchScratch {
+            coarse, probe_order, lut, ids, codes, dists, topk, winners, decode, ..
+        } = scratch;
         // Select the nprobe nearest centroids, then order that prefix
         // best-first: visiting the closest cluster first tightens the
         // top-k threshold early, so later clusters prune more rows.
@@ -384,7 +392,9 @@ impl IvfIndex {
         probes.sort_unstable_by(|&a, &b| coarse[a as usize].total_cmp(&coarse[b as usize]));
 
         topk.reset(p.k);
-        // Prepare per-query LUT once for PQ stores.
+        // Prepare the per-query LUT once for PQ stores — hoisted out of
+        // the per-list probe loop (each probed cluster reuses the same
+        // table) and written into the preshaped scratch slice.
         if let CodeStore::Pq { pq, .. } | CodeStore::PqCompressed { pq, .. } = &self.store {
             pq.lut(query, lut);
         }
@@ -422,9 +432,11 @@ impl IvfIndex {
                     }
                 }
                 CodeStore::Pq { pq, codes: stored } => {
-                    for (o, row) in stored[start * pq.m..end * pq.m].chunks_exact(pq.m).enumerate()
-                    {
-                        let d = pq.adc(lut, row);
+                    // Two-phase blocked scan: the SIMD kernel fills one
+                    // distance per row (bit-identical to per-row adc),
+                    // then a dense pass feeds the top-k.
+                    pq.adc_scan_into(lut, &stored[start * pq.m..end * pq.m], dists);
+                    for (o, &d) in dists.iter().enumerate() {
                         if d < topk.threshold() {
                             topk.push(d, payload(c, o, defer_ids, ids));
                         }
@@ -438,8 +450,8 @@ impl IvfIndex {
                         codes,
                         decode,
                     );
-                    for (o, row) in codes.chunks_exact(pq.m).enumerate() {
-                        let d = pq.adc(lut, row);
+                    pq.adc_scan_into(lut, codes, dists);
+                    for (o, &d) in dists.iter().enumerate() {
                         if d < topk.threshold() {
                             topk.push(d, payload(c, o, defer_ids, ids));
                         }

@@ -8,8 +8,10 @@
 //!   (NSG/HNSW) indexes whose vector-id payloads are stored through pluggable
 //!   lossless codecs ([`codecs`]), a mutable LSM-style IVF ([`dynamic`])
 //!   that keeps those payloads compressed under live inserts/deletes, a
-//!   batching query coordinator ([`coordinator`]) and the PJRT runtime
-//!   ([`runtime`]) that executes the AOT-compiled distance kernels.
+//!   batching query coordinator ([`coordinator`]), runtime-dispatched
+//!   SIMD scan kernels ([`simd`]: AVX2/SSE4.1 with a bit-identical
+//!   scalar reference) and the PJRT runtime ([`runtime`]) that executes
+//!   the AOT-compiled distance kernels.
 //! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for coarse
 //!   quantizer assignment and PQ look-up-table construction, lowered once to
 //!   HLO text in `artifacts/`.
@@ -101,6 +103,7 @@ pub mod bitvec;
 pub mod ans;
 pub mod fenwick;
 pub mod codecs;
+pub mod simd;
 pub mod quant;
 pub mod datasets;
 pub mod index;

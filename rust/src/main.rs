@@ -6,6 +6,10 @@
 //!   bench-search-qps    — search throughput sweep over IVF *and* graph
 //!                         backends (QPS + latency percentiles, writes
 //!                         BENCH_search.json)
+//!   bench-decode        — id-decode + scan-kernel throughput: per-codec
+//!                         MB/s and ids/s across list sizes, blocked ADC
+//!                         and fused coarse scalar vs dispatched SIMD
+//!                         (writes BENCH_decode.json)
 //!   bench-churn         — mutable-IVF churn: delete/insert throughput,
 //!                         post-compaction bits/id vs a static build,
 //!                         search parity (writes BENCH_churn.json)
@@ -53,6 +57,7 @@ fn main() {
         "bench-fig2" => bench_entries::fig2(&args),
         "bench-fig3" => bench_entries::fig3(&args),
         "bench-search-qps" => bench_entries::search_qps(&args),
+        "bench-decode" => bench_entries::decode(&args),
         "bench-churn" => bench_entries::churn(&args),
         "sizes" => sizes(&args),
         "build" => build_cmd(&args),
@@ -66,7 +71,7 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: zann <bench-table1|bench-table2|bench-table3|bench-table4|\n\
-                 bench-fig2|bench-fig3|bench-search-qps|bench-churn|sizes|\n\
+                 bench-fig2|bench-fig3|bench-search-qps|bench-decode|bench-churn|sizes|\n\
                  build --out PATH [--backend ivf|nsg|hnsw|dynamic]|\n\
                  add PATH --add-n N|delete PATH --frac F|--ids A,B|compact PATH|\n\
                  check-parity PATH|info PATH|serve PATH|\n\
@@ -479,7 +484,10 @@ fn serve_cmd(args: &Args) {
     let path = match args.positional.get(1) {
         Some(p) => p.clone(),
         None => {
-            eprintln!("usage: zann serve PATH [--nq N] [--nprobe P] [--ef E] [--topk K]");
+            eprintln!(
+                "usage: zann serve PATH [--nq N] [--nprobe P] [--ef E] [--topk K] \
+                 [--dump-results FILE]"
+            );
             std::process::exit(2);
         }
     };
@@ -548,6 +556,23 @@ fn serve_cmd(args: &Args) {
         if resp.results == want {
             ok += 1;
         }
+    }
+    // Machine-comparable result dump: one line per (query, rank) with
+    // the distance's exact f32 bit pattern. ci.sh serves the same index
+    // under ZANN_SIMD=scalar and under the default dispatch and `cmp`s
+    // the two dumps — the end-to-end SIMD/scalar identity gate.
+    if let Some(dump) = args.get("dump-results") {
+        let mut s = String::new();
+        for (qi, resp) in responses.iter().enumerate() {
+            for (ri, &(d, id)) in resp.results.iter().enumerate() {
+                s.push_str(&format!("{qi} {ri} {:08x} {id} {}\n", d.to_bits(), resp.via_pjrt));
+            }
+        }
+        if let Err(e) = std::fs::write(dump, &s) {
+            eprintln!("serve: failed to write --dump-results {dump}: {e}");
+            std::process::exit(1);
+        }
+        println!("dumped {} result lines to {dump}", s.lines().count());
     }
     let checked = responses.len() - via_pjrt;
     let note = if via_pjrt > 0 {

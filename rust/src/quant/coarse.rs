@@ -45,7 +45,26 @@ pub fn centroid_norms(centroids: &[f32], dim: usize) -> Vec<f32> {
 
 /// Fused distances from one query to every centroid row, written into
 /// `out` (`out.len()` must equal `norms.len()`).
+///
+/// Routed through the runtime-dispatched SIMD kernels
+/// ([`crate::simd::coarse`]); every dispatch level reproduces
+/// [`dists_into_scalar`] bit-for-bit (same lane layout, same reduction
+/// order), so the determinism contract above is unchanged — force
+/// `ZANN_SIMD=scalar` to pin the reference path.
 pub fn dists_into(query: &[f32], centroids: &[f32], dim: usize, norms: &[f32], out: &mut [f32]) {
+    crate::simd::coarse::dists_into(query, centroids, dim, norms, out);
+}
+
+/// The scalar reference kernel (4 centroids × 4 lanes in flight): the
+/// accumulation-order ground truth every SIMD variant must reproduce
+/// exactly.
+pub fn dists_into_scalar(
+    query: &[f32],
+    centroids: &[f32],
+    dim: usize,
+    norms: &[f32],
+    out: &mut [f32],
+) {
     let k = norms.len();
     debug_assert_eq!(centroids.len(), k * dim);
     debug_assert_eq!(out.len(), k);

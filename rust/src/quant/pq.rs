@@ -147,19 +147,30 @@ impl Pq {
         }
     }
 
-    /// ADC look-up table for `query`: `m × ksub` squared sub-distances.
-    pub fn lut(&self, query: &[f32], out: &mut Vec<f32>) {
+    /// ADC look-up table for `query`, filled into a preshaped `m × ksub`
+    /// slice — the allocation-free form the search scratch uses (the LUT
+    /// buffer is sized once per query, written in place here, and hoisted
+    /// out of the per-list probe loop by `IvfIndex::search`).
+    pub fn lut_into(&self, query: &[f32], out: &mut [f32]) {
         debug_assert_eq!(query.len(), self.dim());
         let ksub = self.ksub();
-        out.clear();
-        out.reserve(self.m * ksub);
+        assert_eq!(out.len(), self.m * ksub, "LUT scratch must be m × ksub");
         for j in 0..self.m {
             let sub = &query[j * self.dsub..(j + 1) * self.dsub];
             let book = self.book(j);
-            for c in 0..ksub {
-                out.push(crate::quant::l2_sq(sub, &book[c * self.dsub..(c + 1) * self.dsub]));
+            for (c, slot) in out[j * ksub..(j + 1) * ksub].iter_mut().enumerate() {
+                *slot = crate::quant::l2_sq(sub, &book[c * self.dsub..(c + 1) * self.dsub]);
             }
         }
+    }
+
+    /// ADC look-up table for `query`: `m × ksub` squared sub-distances
+    /// (reshapes `out`, then delegates to [`Pq::lut_into`]; at
+    /// steady-state shape the resize is a no-op — no allocation, no
+    /// zero-fill — and every slot is overwritten in place).
+    pub fn lut(&self, query: &[f32], out: &mut Vec<f32>) {
+        out.resize(self.m * self.ksub(), 0.0);
+        self.lut_into(query, &mut out[..]);
     }
 
     /// ADC distance of one code row against a prebuilt LUT.
@@ -171,6 +182,15 @@ impl Pq {
             s += lut[j * ksub + c as usize];
         }
         s
+    }
+
+    /// Blocked ADC over a whole code list (row-major `n × m`), replacing
+    /// `out` with one distance per row. Runs the runtime-dispatched SIMD
+    /// scan ([`crate::simd::adc`]): 8 rows of LUT gathers in flight on
+    /// AVX2, bit-identical to calling [`Pq::adc`] row by row — the IVF
+    /// scan loop consumes this instead of per-row adds.
+    pub fn adc_scan_into(&self, lut: &[f32], codes: &[u16], out: &mut Vec<f32>) {
+        crate::simd::adc::adc_scan_into(lut, self.ksub(), self.m, codes, out);
     }
 
     pub fn serialize(&self, w: &mut WriteBuf) {
@@ -272,6 +292,28 @@ mod tests {
         let mut codes = Vec::new();
         pq.encode(&data[..dim], &mut codes);
         assert!(codes.iter().all(|&c| (c as usize) < 1024));
+    }
+
+    #[test]
+    fn adc_scan_matches_per_row_adc_bitwise() {
+        let mut rng = Rng::new(75);
+        let dim = 32;
+        let data = gaussian(&mut rng, 600, dim);
+        let pq = Pq::train(&data, dim, 8, 8, 6, 2);
+        let codes = pq.encode_batch(&data, 2);
+        let q: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+        let mut lut = Vec::new();
+        pq.lut(&q, &mut lut);
+        let mut dists = Vec::new();
+        pq.adc_scan_into(&lut, &codes, &mut dists);
+        assert_eq!(dists.len(), 600);
+        for (r, row) in codes.chunks_exact(pq.m).enumerate() {
+            assert_eq!(dists[r].to_bits(), pq.adc(&lut, row).to_bits(), "row {r}");
+        }
+        // lut_into over a reused slice equals the Vec wrapper.
+        let mut lut2 = vec![0f32; lut.len()];
+        pq.lut_into(&q, &mut lut2);
+        assert_eq!(lut, lut2);
     }
 
     #[test]

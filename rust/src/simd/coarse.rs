@@ -1,0 +1,219 @@
+//! SIMD variants of the fused coarse kernel
+//! `d(q, c) = ‖q‖² − 2·q·c + ‖c‖²`.
+//!
+//! The scalar reference is [`crate::quant::coarse::dists_into_scalar`]:
+//! blocks of 4 centroids, 4 f32 lanes per dim-chunk, left-associated
+//! lane reduction, scalar remainders. Each variant here replays those
+//! operations with vector registers of the *same lane layout* — SSE4.1
+//! holds one centroid's 4 lanes per `__m128`, AVX2 packs two centroids'
+//! lane quads into one `__m256` — multiply-then-add (no FMA), so every
+//! intermediate equals the scalar one bit-for-bit and the final
+//! distances are identical. That bit-exactness is load-bearing: the
+//! serving/churn/persistence suites compare full result lists with
+//! `assert_eq!` across paths that may run on different dispatch levels.
+
+use super::Level;
+use crate::quant::coarse::dists_into_scalar;
+#[cfg(target_arch = "x86_64")]
+use crate::quant::coarse::dot;
+
+/// Fused distances from one query to every centroid row at the given
+/// dispatch level (`out.len() == norms.len()`). Bit-identical across
+/// levels.
+pub fn dists_into_level(
+    level: Level,
+    query: &[f32],
+    centroids: &[f32],
+    dim: usize,
+    norms: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(centroids.len(), norms.len() * dim);
+    debug_assert_eq!(out.len(), norms.len());
+    debug_assert_eq!(query.len(), dim);
+    #[cfg(target_arch = "x86_64")]
+    {
+        match level {
+            Level::Avx2 => unsafe { x86::dists_into_avx2(query, centroids, dim, norms, out) },
+            Level::Sse41 => unsafe { x86::dists_into_sse41(query, centroids, dim, norms, out) },
+            Level::Scalar => dists_into_scalar(query, centroids, dim, norms, out),
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = level;
+        dists_into_scalar(query, centroids, dim, norms, out);
+    }
+}
+
+/// Dispatched entry point (the body of
+/// [`crate::quant::coarse::dists_into`]).
+#[inline]
+pub fn dists_into(query: &[f32], centroids: &[f32], dim: usize, norms: &[f32], out: &mut [f32]) {
+    dists_into_level(super::level(), query, centroids, dim, norms, out);
+}
+
+/// Scalar epilogue shared by every level: the centroids left over after
+/// the 4-wide blocks, scored with the same [`dot`] the scalar path uses.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn tail(
+    query: &[f32],
+    centroids: &[f32],
+    dim: usize,
+    norms: &[f32],
+    out: &mut [f32],
+    q_norm: f32,
+    from: usize,
+) {
+    for c in from..norms.len() {
+        let d = dot(query, &centroids[c * dim..(c + 1) * dim]);
+        out[c] = (q_norm - 2.0 * d + norms[c]).max(0.0);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{dot, tail};
+    use core::arch::x86_64::*;
+
+    /// Left-associated horizontal sum — the scalar reduction
+    /// `acc[0] + acc[1] + acc[2] + acc[3]`, performed in that order.
+    #[inline(always)]
+    unsafe fn hsum_ordered(v: __m128) -> f32 {
+        let a: [f32; 4] = core::mem::transmute(v);
+        a[0] + a[1] + a[2] + a[3]
+    }
+
+    #[target_feature(enable = "sse4.1")]
+    pub unsafe fn dists_into_sse41(
+        query: &[f32],
+        centroids: &[f32],
+        dim: usize,
+        norms: &[f32],
+        out: &mut [f32],
+    ) {
+        let k = norms.len();
+        let q_norm = dot(query, query);
+        let chunks = dim / 4;
+        let blocks = k / 4;
+        let q = query.as_ptr();
+        for b in 0..blocks {
+            let base = centroids.as_ptr().add(b * 4 * dim);
+            let mut acc = [_mm_setzero_ps(); 4];
+            for i in 0..chunks {
+                let qv = _mm_loadu_ps(q.add(i * 4));
+                for (j, a) in acc.iter_mut().enumerate() {
+                    let cv = _mm_loadu_ps(base.add(j * dim + i * 4));
+                    *a = _mm_add_ps(*a, _mm_mul_ps(qv, cv));
+                }
+            }
+            let mut d = [
+                hsum_ordered(acc[0]),
+                hsum_ordered(acc[1]),
+                hsum_ordered(acc[2]),
+                hsum_ordered(acc[3]),
+            ];
+            for i in chunks * 4..dim {
+                let qi = *query.get_unchecked(i);
+                for (j, dj) in d.iter_mut().enumerate() {
+                    *dj += qi * *base.add(j * dim + i);
+                }
+            }
+            for (j, &dj) in d.iter().enumerate() {
+                out[b * 4 + j] = (q_norm - 2.0 * dj + norms[b * 4 + j]).max(0.0);
+            }
+        }
+        tail(query, centroids, dim, norms, out, q_norm, blocks * 4);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dists_into_avx2(
+        query: &[f32],
+        centroids: &[f32],
+        dim: usize,
+        norms: &[f32],
+        out: &mut [f32],
+    ) {
+        let k = norms.len();
+        let q_norm = dot(query, query);
+        let chunks = dim / 4;
+        let blocks = k / 4;
+        let q = query.as_ptr();
+        for b in 0..blocks {
+            let base = centroids.as_ptr().add(b * 4 * dim);
+            // Two centroids' lane quads per 256-bit accumulator: low half
+            // tracks centroid 2j, high half 2j+1 — per lane exactly the
+            // scalar acc[c][l] sequence.
+            let mut acc01 = _mm256_setzero_ps();
+            let mut acc23 = _mm256_setzero_ps();
+            for i in 0..chunks {
+                let qv = _mm_loadu_ps(q.add(i * 4));
+                let q2 = _mm256_insertf128_ps::<1>(_mm256_castps128_ps256(qv), qv);
+                let c01 = _mm256_insertf128_ps::<1>(
+                    _mm256_castps128_ps256(_mm_loadu_ps(base.add(i * 4))),
+                    _mm_loadu_ps(base.add(dim + i * 4)),
+                );
+                let c23 = _mm256_insertf128_ps::<1>(
+                    _mm256_castps128_ps256(_mm_loadu_ps(base.add(2 * dim + i * 4))),
+                    _mm_loadu_ps(base.add(3 * dim + i * 4)),
+                );
+                acc01 = _mm256_add_ps(acc01, _mm256_mul_ps(q2, c01));
+                acc23 = _mm256_add_ps(acc23, _mm256_mul_ps(q2, c23));
+            }
+            let mut d = [
+                hsum_ordered(_mm256_castps256_ps128(acc01)),
+                hsum_ordered(_mm256_extractf128_ps::<1>(acc01)),
+                hsum_ordered(_mm256_castps256_ps128(acc23)),
+                hsum_ordered(_mm256_extractf128_ps::<1>(acc23)),
+            ];
+            for i in chunks * 4..dim {
+                let qi = *query.get_unchecked(i);
+                for (j, dj) in d.iter_mut().enumerate() {
+                    *dj += qi * *base.add(j * dim + i);
+                }
+            }
+            for (j, &dj) in d.iter().enumerate() {
+                out[b * 4 + j] = (q_norm - 2.0 * dj + norms[b * 4 + j]).max(0.0);
+            }
+        }
+        tail(query, centroids, dim, norms, out, q_norm, blocks * 4);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::coarse::centroid_norms;
+    use crate::util::Rng;
+
+    #[test]
+    fn every_supported_level_is_bit_identical_to_scalar() {
+        let mut rng = Rng::new(0x51bd);
+        let hw = super::super::detected();
+        for &dim in &[1usize, 3, 4, 5, 8, 19, 32, 33, 96] {
+            for &k in &[0usize, 1, 3, 4, 5, 17, 64] {
+                let q: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+                let cents: Vec<f32> = (0..k * dim).map(|_| rng.normal()).collect();
+                let norms = centroid_norms(&cents, dim);
+                let mut want = vec![0f32; k];
+                dists_into_level(Level::Scalar, &q, &cents, dim, &norms, &mut want);
+                for level in Level::ALL {
+                    if level > hw {
+                        continue;
+                    }
+                    let mut got = vec![0f32; k];
+                    dists_into_level(level, &q, &cents, dim, &norms, &mut got);
+                    for (c, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "{}: dim={dim} k={k} c={c}: {g} vs {w}",
+                            level.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

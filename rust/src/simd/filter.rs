@@ -1,0 +1,152 @@
+//! Batched tombstone filtering for the dynamic index's segment scan.
+//!
+//! The scan used to interleave a bitmap test with every distance
+//! computation; this module separates the phases: one pass classifies a
+//! whole decoded list against the tombstone bitmap (8 ids per AVX2
+//! gather), emitting the surviving positions, and the caller then runs a
+//! dense, branch-light distance loop over the survivors. Survivor order
+//! is the decode order, so downstream results are identical to the
+//! fused loop's.
+//!
+//! Bitmap layout: the tombstone words are `u64` (bit `id % 64` of word
+//! `id / 64`); on little-endian x86 the same memory read as `u32` words
+//! indexes as bit `id % 32` of word `id / 32`, which is what the gather
+//! uses. Ids at or beyond the bitmap's end are live (the bitmap only
+//! grows on delete).
+
+use super::Level;
+
+/// Append to `keep` (after clearing it) the positions `o` of every id in
+/// `exts` whose tombstone bit is unset. `words` is the delete bitmap.
+pub fn live_positions_into(words: &[u64], exts: &[u32], keep: &mut Vec<u32>) {
+    live_positions_level(super::level(), words, exts, keep);
+}
+
+/// Level-explicit variant (parity tests sweep it).
+pub fn live_positions_level(level: Level, words: &[u64], exts: &[u32], keep: &mut Vec<u32>) {
+    keep.clear();
+    keep.reserve(exts.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if level == Level::Avx2 {
+            let full = exts.len() - exts.len() % 8;
+            let mut o = 0usize;
+            while o < full {
+                let dead = unsafe { x86::dead_mask8_avx2(words, &exts[o..o + 8]) };
+                if dead == 0 {
+                    for lane in 0..8u32 {
+                        keep.push(o as u32 + lane);
+                    }
+                } else {
+                    let mut live = (!dead) & 0xff;
+                    while live != 0 {
+                        keep.push(o as u32 + live.trailing_zeros());
+                        live &= live - 1;
+                    }
+                }
+                o += 8;
+            }
+            scalar_tail(words, exts, keep, full);
+            return;
+        }
+    }
+    let _ = level;
+    scalar_tail(words, exts, keep, 0);
+}
+
+#[inline]
+fn is_dead(words: &[u64], id: u32) -> bool {
+    words.get(id as usize / 64).is_some_and(|w| (w >> (id % 64)) & 1 == 1)
+}
+
+#[inline]
+fn scalar_tail(words: &[u64], exts: &[u32], keep: &mut Vec<u32>, from: usize) {
+    for (o, &e) in exts.iter().enumerate().skip(from) {
+        if !is_dead(words, e) {
+            keep.push(o as u32);
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    /// Bitmask (low 8 bits) of the lanes of `exts` whose tombstone bit is
+    /// set. `exts.len() == 8`; out-of-bitmap ids report live (gather
+    /// lanes outside the word range are masked to 0).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dead_mask8_avx2(words: &[u64], exts: &[u32]) -> u32 {
+        let words32 = words.as_ptr() as *const i32;
+        let n32 = (words.len() * 2) as i32;
+        let e = _mm256_loadu_si256(exts.as_ptr() as *const __m256i);
+        // Word index (id / 32) fits 27 bits, so signed compares are safe.
+        let widx = _mm256_srli_epi32::<5>(e);
+        let inb = _mm256_cmpgt_epi32(_mm256_set1_epi32(n32), widx);
+        let w = _mm256_mask_i32gather_epi32::<4>(_mm256_setzero_si256(), words32, widx, inb);
+        let bit = _mm256_and_si256(
+            _mm256_srlv_epi32(w, _mm256_and_si256(e, _mm256_set1_epi32(31))),
+            _mm256_set1_epi32(1),
+        );
+        let dead = _mm256_cmpeq_epi32(bit, _mm256_set1_epi32(1));
+        _mm256_movemask_ps(_mm256_castsi256_ps(dead)) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn every_level_matches_the_scalar_filter() {
+        let mut rng = Rng::new(0xf11e);
+        let hw = super::super::detected();
+        for trial in 0..30 {
+            // Bitmap covering [0, 4096) with random deletes; ids probe
+            // inside, at the boundary, and far beyond the bitmap.
+            let mut words = vec![0u64; 64];
+            for _ in 0..(trial * 37) % 2000 {
+                let id = rng.below(4096) as usize;
+                words[id / 64] |= 1 << (id % 64);
+            }
+            let n = (rng.below(200)) as usize;
+            let exts: Vec<u32> = (0..n)
+                .map(|i| match i % 5 {
+                    0 => rng.below(4096) as u32,
+                    1 => 4095,
+                    2 => 4096 + rng.below(1000) as u32,
+                    3 => u32::MAX - rng.below(100) as u32,
+                    _ => rng.below(64) as u32,
+                })
+                .collect();
+            let mut want = Vec::new();
+            live_positions_level(Level::Scalar, &words, &exts, &mut want);
+            for level in Level::ALL {
+                if level > hw {
+                    continue;
+                }
+                let mut got = Vec::new();
+                live_positions_level(level, &words, &exts, &mut got);
+                assert_eq!(got, want, "{}: trial {trial} n={n}", level.name());
+            }
+            // Cross-check against the bitmap definition directly.
+            for &o in &want {
+                assert!(!is_dead(&words, exts[o as usize]));
+            }
+            assert_eq!(
+                want.len(),
+                exts.iter().filter(|&&e| !is_dead(&words, e)).count(),
+                "trial {trial}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_bitmap_keeps_everything() {
+        let exts: Vec<u32> = (0..100).map(|i| i * 7919).collect();
+        let mut keep = Vec::new();
+        live_positions_into(&[], &exts, &mut keep);
+        assert_eq!(keep, (0..100u32).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,157 @@
+//! Runtime-dispatched SIMD kernels for the search read path.
+//!
+//! Three kernels live here, each with a scalar reference and (on
+//! `x86_64`) hand-written SSE4.1/AVX2 variants selected once per process
+//! by [`level`]:
+//!
+//! * [`coarse`] — the fused coarse distance kernel
+//!   `‖q‖² − 2·q·c + ‖c‖²` (consumed through
+//!   [`crate::quant::coarse::dists_into`], so IVF, the runtime fallback
+//!   and the coordinator pick it up without signature churn);
+//! * [`adc`] — a blocked PQ ADC scan (the per-query LUT gathered for
+//!   8 codes at a time, accumulated in registers);
+//! * [`filter`] — batched tombstone filtering for the dynamic index
+//!   (bitmap tests for 8 ids per gather).
+//!
+//! **Determinism contract:** every SIMD variant performs *exactly* the
+//! same per-lane operations in the same order as its scalar reference —
+//! same 4-lane accumulators, same left-associated reductions, multiply
+//! then add (no FMA contraction) — so dispatched and scalar results are
+//! **bit-identical**, not merely close. `rust/tests/simd_parity.rs`
+//! asserts exact equality on random inputs for every level the host
+//! supports, and `ci.sh` runs the build→save→open→serve smoke under
+//! `ZANN_SIMD=scalar` and under the default dispatch and `cmp`s the
+//! result dumps. This is what lets every existing `assert_eq!`-style
+//! parity test (serving, churn, persistence fixtures) hold regardless of
+//! the host's instruction set.
+//!
+//! **Forcing a level:** set `ZANN_SIMD` to `scalar`, `sse4.1`, `avx2` or
+//! `auto` (default). Requests above what the host supports clamp down;
+//! unknown values warn once and fall back to `auto`. On non-x86_64
+//! targets every request resolves to `scalar` (NEON variants are a
+//! roadmap item; the scalar reference is the portable path).
+
+pub mod adc;
+pub mod coarse;
+pub mod filter;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Instruction-set tier of the dispatched kernels, ordered by capability.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Scalar,
+    Sse41,
+    Avx2,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Sse41 => "sse4.1",
+            Level::Avx2 => "avx2",
+        }
+    }
+
+    /// Every level this build knows, weakest first (test sweeps iterate
+    /// the prefix supported by the host).
+    pub const ALL: [Level; 3] = [Level::Scalar, Level::Sse41, Level::Avx2];
+}
+
+/// Cached dispatch decision: 0 = undecided, else `level as u8 + 1`.
+static LEVEL: AtomicU8 = AtomicU8::new(0);
+
+fn from_tag(tag: u8) -> Level {
+    match tag {
+        1 => Level::Scalar,
+        2 => Level::Sse41,
+        _ => Level::Avx2,
+    }
+}
+
+/// Highest tier the host CPU supports (ignores the env override).
+pub fn detected() -> Level {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return Level::Avx2;
+        }
+        if is_x86_feature_detected!("sse4.1") {
+            return Level::Sse41;
+        }
+        Level::Scalar
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        Level::Scalar
+    }
+}
+
+fn decide() -> Level {
+    let hw = detected();
+    match std::env::var("ZANN_SIMD") {
+        Ok(v) => match v.to_ascii_lowercase().as_str() {
+            "scalar" => Level::Scalar,
+            "sse4.1" | "sse41" => hw.min(Level::Sse41),
+            "avx2" => hw.min(Level::Avx2),
+            "" | "auto" => hw,
+            other => {
+                eprintln!(
+                    "ZANN_SIMD={other:?} not recognized (scalar|sse4.1|avx2|auto); using auto"
+                );
+                hw
+            }
+        },
+        Err(_) => hw,
+    }
+}
+
+/// The active dispatch level: hardware detection clamped by the
+/// `ZANN_SIMD` override, decided once and cached for the process.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => {
+            let l = decide();
+            // A racing thread computes the same value; last store wins.
+            LEVEL.store(l as u8 + 1, Ordering::Relaxed);
+            l
+        }
+        tag => from_tag(tag),
+    }
+}
+
+/// Prefetch the cache line at `ptr` into L1 (read intent). No-op on
+/// targets without a prefetch intrinsic; never a correctness concern —
+/// the address does not need to be valid to prefetch.
+#[inline(always)]
+pub fn prefetch_read<T>(ptr: *const T) {
+    #[cfg(target_arch = "x86_64")]
+    unsafe {
+        core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(ptr as *const i8);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = ptr;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_is_cached_and_within_detection() {
+        let l = level();
+        assert!(l <= detected());
+        assert_eq!(level(), l, "second call must return the cached decision");
+        assert!(["scalar", "sse4.1", "avx2"].contains(&l.name()));
+    }
+
+    #[test]
+    fn prefetch_accepts_any_pointer() {
+        let v = [1f32, 2.0, 3.0];
+        prefetch_read(v.as_ptr());
+        prefetch_read(std::ptr::null::<f32>());
+    }
+}

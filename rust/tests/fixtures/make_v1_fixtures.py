@@ -69,6 +69,68 @@ def encode_unc64(ids):
     return b"".join(struct.pack("<Q", i) for i in ids), len(ids) * 64
 
 
+# --- interleaved rANS (the `ans-i4` codec), replicated independently ---
+# of the Rust coder: 4 states round-robin over the sorted ids (state of
+# symbol i is i % 4), symbols encoded in reverse order under
+# Uniform([0, universe)) with the standard 64-bit-head / 32-bit-word
+# renormalization, all states pushing to one shared word stack. Blob
+# layout: u32 word count, stream words (LE), then the 4 final heads
+# (LE u64 each). Bits accounting: 32 per stream word + 64 per head.
+
+ANS_LOW = 1 << 32
+ANS_WAYS = 4
+
+
+def _boundary(z, m):
+    return (z << 32) // m
+
+
+def _ans_encode_uniform(head, stream, x, m):
+    c32 = _boundary(x, m)
+    f32 = _boundary(x + 1, m) - c32
+    if f32 < ANS_LOW:
+        limit = f32 << 32
+        while head >= limit:
+            stream.append(head & 0xFFFFFFFF)
+            head >>= 32
+    return (head // f32) * ANS_LOW + c32 + head % f32
+
+
+def _ans_decode_uniform(head, stream, cursor, m):
+    slot = head & 0xFFFFFFFF
+    v = (slot * m) >> 32
+    lo, hi = _boundary(v, m), _boundary(v + 1, m)
+    if hi <= slot:
+        v += 1
+        lo, hi = hi, _boundary(v + 1, m)
+    head = (hi - lo) * (head >> 32) + slot - lo
+    while head < ANS_LOW and cursor > 0:
+        cursor -= 1
+        head = (head << 32) | stream[cursor]
+    return head, cursor, v
+
+
+def encode_ansi4(ids, universe=N):
+    srt = sorted(ids)
+    heads = [ANS_LOW] * ANS_WAYS
+    stream = []
+    for i in range(len(srt) - 1, -1, -1):
+        w = i % ANS_WAYS
+        heads[w] = _ans_encode_uniform(heads[w], stream, srt[i], universe)
+    # Self-check: the mirrored decode must reproduce the sorted list and
+    # drain every state back to the initial value.
+    dheads, cursor, out = list(heads), len(stream), []
+    for i in range(len(srt)):
+        w = i % ANS_WAYS
+        dheads[w], cursor, v = _ans_decode_uniform(dheads[w], stream, cursor, universe)
+        out.append(v)
+    assert out == srt and cursor == 0 and all(h == ANS_LOW for h in dheads)
+    blob = struct.pack("<I", len(stream))
+    blob += b"".join(struct.pack("<I", w) for w in stream)
+    blob += b"".join(struct.pack("<Q", h) for h in heads)
+    return blob, len(stream) * 32 + ANS_WAYS * 64
+
+
 def encode_compact(ids, universe=N):
     width = max((universe - 1).bit_length(), 1)  # bits_for(12) = 4
     acc, nbits, words = 0, 0, []
@@ -106,11 +168,18 @@ def container(codec, encode):
 
 def main():
     here = Path(__file__).parent
-    for codec, encode in [("unc64", encode_unc64), ("compact", encode_compact)]:
-        path = here / f"v1_ivf_{codec}.zann"
+    for codec, encode, fname in [
+        ("unc64", encode_unc64, "v1_ivf_unc64.zann"),
+        ("compact", encode_compact, "v1_ivf_compact.zann"),
+        # The interleaved-ANS layout, frozen from day one so the shared
+        # word stack + trailing heads framing can never drift silently.
+        ("ans-i4", encode_ansi4, "v1_ivf_ansi4.zann"),
+    ]:
+        path = here / fname
         data = container(codec, encode)
         path.write_bytes(data)
-        print(f"wrote {path} ({len(data)} bytes)")
+        id_bits = sum(encode(lst)[1] for lst in LISTS)
+        print(f"wrote {path} ({len(data)} bytes, id_bits={id_bits})")
 
 
 if __name__ == "__main__":

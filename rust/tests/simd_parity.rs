@@ -1,0 +1,218 @@
+//! The two pillars of the vectorized decode-and-scan engine, pinned as
+//! properties:
+//!
+//! 1. **SIMD kernel parity** — every dispatch level the host supports
+//!    must be *bit-identical* to the scalar reference on random inputs:
+//!    the fused coarse kernel, the blocked ADC scan, and the batched
+//!    tombstone filter. (ci.sh additionally runs the build→save→serve
+//!    smoke under `ZANN_SIMD=scalar` and under the default dispatch and
+//!    byte-compares the result dumps end-to-end.)
+//! 2. **Interleaved ANS cross-decode** — `ans-i2`/`ans-i4`/`ans-i8`
+//!    round-trip every list shape (0 / 1 / odd / power-of-two / large)
+//!    and decode to *exactly* the same id sequence as their single-
+//!    stream counterpart (one-way interleaving, whose encoder is pinned
+//!    bit-identical to `Ans::encode_uniform` in the unit suite), across
+//!    every per-list codec's set semantics.
+
+use zann::ans::interleaved;
+use zann::codecs::{CodecSpec, DecodeScratch, PER_LIST_CODECS};
+use zann::datasets::{generate, Kind};
+use zann::index::{IvfBuildParams, IvfIndex, SearchParams, SearchScratch, VectorMode};
+use zann::quant::coarse;
+use zann::simd;
+use zann::util::Rng;
+
+/// Dispatch levels this host can execute, weakest first.
+fn supported_levels() -> Vec<simd::Level> {
+    simd::Level::ALL.into_iter().filter(|&l| l <= simd::detected()).collect()
+}
+
+#[test]
+fn coarse_kernel_levels_bit_identical_on_random_shapes() {
+    let mut rng = Rng::new(0x51ead);
+    for trial in 0..40 {
+        let dim = 1 + rng.below(70) as usize;
+        let k = rng.below(200) as usize;
+        let q: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+        let cents: Vec<f32> = (0..k * dim).map(|_| rng.normal()).collect();
+        let norms = coarse::centroid_norms(&cents, dim);
+        let mut want = vec![0f32; k];
+        simd::coarse::dists_into_level(simd::Level::Scalar, &q, &cents, dim, &norms, &mut want);
+        // The scalar reference function itself is the level-0 path.
+        let mut reference = vec![0f32; k];
+        coarse::dists_into_scalar(&q, &cents, dim, &norms, &mut reference);
+        assert_eq!(
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            reference.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "trial {trial}: Level::Scalar must be the scalar reference"
+        );
+        for level in supported_levels() {
+            let mut got = vec![0f32; k];
+            simd::coarse::dists_into_level(level, &q, &cents, dim, &norms, &mut got);
+            for c in 0..k {
+                assert_eq!(
+                    got[c].to_bits(),
+                    want[c].to_bits(),
+                    "{}: trial {trial} dim={dim} k={k} c={c}",
+                    level.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn adc_scan_levels_bit_identical_on_random_shapes() {
+    let mut rng = Rng::new(0x51eae);
+    for trial in 0..30 {
+        let m = 1 + rng.below(12) as usize;
+        let ksub = [16usize, 256, 1024][trial % 3];
+        let n = rng.below(300) as usize;
+        let lut: Vec<f32> = (0..m * ksub).map(|_| rng.normal()).collect();
+        let codes: Vec<u16> = (0..n * m).map(|_| rng.below(ksub as u64) as u16).collect();
+        let mut want = vec![0f32; n];
+        simd::adc::adc_scan_level(simd::Level::Scalar, &lut, ksub, m, &codes, &mut want);
+        for level in supported_levels() {
+            let mut got = vec![0f32; n];
+            simd::adc::adc_scan_level(level, &lut, ksub, m, &codes, &mut got);
+            for r in 0..n {
+                assert_eq!(
+                    got[r].to_bits(),
+                    want[r].to_bits(),
+                    "{}: trial {trial} m={m} ksub={ksub} row {r}",
+                    level.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tombstone_filter_levels_agree_on_random_bitmaps() {
+    let mut rng = Rng::new(0x51eaf);
+    for trial in 0..30 {
+        let universe = 1 + rng.below(10_000) as u32;
+        let mut words = vec![0u64; (universe as usize).div_ceil(64)];
+        for _ in 0..rng.below(universe as u64 / 2 + 1) {
+            let id = rng.below(universe as u64) as usize;
+            words[id / 64] |= 1 << (id % 64);
+        }
+        let n = rng.below(500) as usize;
+        let exts: Vec<u32> = (0..n)
+            .map(|i| {
+                if i % 7 == 0 {
+                    universe.saturating_add(rng.below(1000) as u32)
+                } else {
+                    rng.below(universe as u64) as u32
+                }
+            })
+            .collect();
+        let mut want = Vec::new();
+        simd::filter::live_positions_level(simd::Level::Scalar, &words, &exts, &mut want);
+        for level in supported_levels() {
+            let mut got = Vec::new();
+            simd::filter::live_positions_level(level, &words, &exts, &mut got);
+            assert_eq!(got, want, "{}: trial {trial} n={n}", level.name());
+        }
+    }
+}
+
+#[test]
+fn interleaved_roundtrip_and_cross_decode_against_single_stream() {
+    // (a) of the property-test satellite: for every list shape — empty,
+    // singleton, odd, power-of-two, larger-than-any-interleave, and the
+    // full universe — each interleaved width round-trips the set and
+    // decodes the exact sequence the single-stream (1-way) coder emits.
+    let mut rng = Rng::new(0xc0de);
+    for &universe in &[1u32, 2, 97, 4096, 1 << 20, u32::MAX] {
+        for &n in &[0usize, 1, 3, 8, 17, 64, 257, 2000] {
+            if n as u64 > universe as u64 {
+                continue;
+            }
+            let ids: Vec<u32> =
+                rng.sample_distinct(universe as u64, n).into_iter().map(|v| v as u32).collect();
+            let mut sorted = ids.clone();
+            sorted.sort_unstable();
+            // Single-stream reference: 1-way interleaving.
+            let mut single = Vec::new();
+            interleaved::decode_uniform_into(
+                &interleaved::encode_uniform(&sorted, universe.max(1), 1),
+                universe.max(1),
+                n,
+                1,
+                &mut single,
+            );
+            assert_eq!(single, sorted, "single-stream decode must be ascending");
+            for name in ["ans-i2", "ans-i4", "ans-i8"] {
+                let codec = CodecSpec::parse(name).unwrap().id_codec().unwrap();
+                let enc = codec.encode(&ids, universe);
+                let mut out = Vec::new();
+                codec.decode(&enc.bytes, universe, n, &mut out);
+                assert_eq!(out, single, "{name}: universe={universe} n={n} cross-decode");
+                let mut scratched = Vec::new();
+                codec.decode_into(
+                    &enc.bytes,
+                    universe,
+                    n,
+                    &mut scratched,
+                    &mut DecodeScratch::default(),
+                );
+                assert_eq!(scratched, out, "{name}: decode_into parity");
+            }
+        }
+    }
+}
+
+#[test]
+fn every_per_list_codec_decodes_the_same_id_set() {
+    // Set-level cross-codec agreement on one list (sorted views equal),
+    // covering the whole registry including the interleaved family.
+    let mut rng = Rng::new(0xc0df);
+    let universe = 50_000u32;
+    for &n in &[0usize, 1, 13, 777] {
+        let ids: Vec<u32> =
+            rng.sample_distinct(universe as u64, n).into_iter().map(|v| v as u32).collect();
+        let mut want = ids.clone();
+        want.sort_unstable();
+        for name in PER_LIST_CODECS {
+            let codec = CodecSpec::parse(name).unwrap().id_codec().unwrap();
+            let enc = codec.encode(&ids, universe);
+            let mut out = Vec::new();
+            codec.decode(&enc.bytes, universe, n, &mut out);
+            out.sort_unstable();
+            assert_eq!(out, want, "{name}: n={n}");
+        }
+    }
+}
+
+#[test]
+fn ivf_search_results_identical_across_ans_widths_and_stores() {
+    // End-to-end: the interleaved codecs are lossless, so search results
+    // must equal the unc64 baseline's exactly — including through the
+    // blocked SIMD ADC scan of the PQ store.
+    let ds = generate(Kind::DeepLike, 3000, 25, 16, 0xbeef);
+    let sp = SearchParams { nprobe: 8, k: 10 };
+    for vectors in [VectorMode::Flat, VectorMode::Pq { m: 4, bits: 8 }] {
+        let mut baseline: Option<Vec<Vec<(f32, u32)>>> = None;
+        for codec in ["unc64", "ans-i2", "ans-i4", "ans-i8"] {
+            let idx = IvfIndex::build(
+                &ds.data,
+                ds.dim,
+                &IvfBuildParams {
+                    k: 32,
+                    id_codec: codec.into(),
+                    vectors: vectors.clone(),
+                    threads: 2,
+                    ..Default::default()
+                },
+            );
+            let mut scratch = SearchScratch::default();
+            let res: Vec<Vec<(f32, u32)>> =
+                (0..ds.nq).map(|qi| idx.search(ds.query(qi), &sp, &mut scratch)).collect();
+            match &baseline {
+                None => baseline = Some(res),
+                Some(b) => assert_eq!(&res, b, "codec={codec} vectors={vectors:?}"),
+            }
+        }
+    }
+}
