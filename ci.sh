@@ -199,6 +199,80 @@ print(f"churn JSON ok: ratio={d['bpi_ratio']:.4f}, "
 EOF
 rm -f "$CHURN_JSON"
 
+echo "== bench_recall smoke + committed-baseline regression gate =="
+# Recall-aware eval: sweep codec × backend × search knob against exact
+# groundtruth at tiny scale, refresh the committed BENCH_recall.json in
+# place, and gate recall against the committed baseline. Recall is
+# exact-match (lossless ids + seeded pipeline ⇒ any drop at equal
+# parameters is a correctness bug, not noise); QPS stays advisory on
+# this runner. The gate is then *proven to fire* three ways: a
+# corrupted-ids sweep, a hand-perturbed recall value, and a zero-query
+# run that must refuse to write at all.
+RECALL_JSON="BENCH_recall.json"
+RECALL_BASE="rust/tests/fixtures/recall_baseline.json"
+RECALL_FLAGS=(--n 3000 --nq 80 --dim 16 --k 32 --knobs 4,32 --runs 1
+              --codecs unc64,roc,ans-i4 --churn 0.2 --seed 42 --dataset sift)
+cargo bench --bench bench_recall -- "${RECALL_FLAGS[@]}" --out "$RECALL_JSON"
+python3 tools/check_recall_baseline.py "$RECALL_JSON" "$RECALL_BASE" \
+  --require-backends ivf,ivf-pq,nsg,hnsw,dynamic
+# First toolchain-equipped run: replace the placeholder baseline with
+# this run's measured numbers so later runs gate against real recall.
+python3 - "$RECALL_JSON" "$RECALL_BASE" <<'EOF'
+import json, sys
+fresh_path, base_path = sys.argv[1], sys.argv[2]
+with open(base_path) as f:
+    base = json.load(f)
+if base.get("provenance") == "placeholder":
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    env = fresh["env"]
+    fresh["provenance"] = "measured by ci.sh ({} / {})".format(
+        env["rustc"], env["simd_level"])
+    with open(base_path, "w") as f:
+        json.dump(fresh, f, indent=2)
+        f.write("\n")
+    print(f"bootstrapped measured baseline into {base_path}")
+else:
+    print("baseline already measured; gate compared real numbers")
+EOF
+python3 tools/check_recall_baseline.py "$RECALL_JSON" "$RECALL_BASE" \
+  --require-backends ivf,ivf-pq,nsg,hnsw,dynamic
+# Gate-fires proof (a): a corrupted-ids sweep (every returned id
+# bit-flipped at scoring time) must fail the checker.
+SAB_JSON="$(mktemp /tmp/zann_recall_sab.XXXXXX.json)"
+cargo bench --bench bench_recall -- "${RECALL_FLAGS[@]}" --corrupt-ids --out "$SAB_JSON"
+if python3 tools/check_recall_baseline.py "$SAB_JSON" "$RECALL_BASE" >/dev/null 2>&1; then
+  echo "recall gate FAILED TO FIRE on corrupted ids"; exit 1
+fi
+echo "recall gate fires on corrupted ids"
+rm -f "$SAB_JSON"
+# Gate-fires proof (b): a single hand-perturbed recall value (-0.05 on
+# one row) must fail the numeric comparison path too.
+PERT_JSON="$(mktemp /tmp/zann_recall_pert.XXXXXX.json)"
+python3 - "$RECALL_JSON" "$PERT_JSON" <<'EOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    d = json.load(f)
+row = d["results"][0]
+assert row["recall_at_10"] > 0.05, "smoke recall too low to perturb meaningfully"
+row["recall_at_10"] -= 0.05
+with open(sys.argv[2], "w") as f:
+    json.dump(d, f)
+EOF
+if python3 tools/check_recall_baseline.py "$PERT_JSON" "$RECALL_BASE" >/dev/null 2>&1; then
+  echo "recall gate FAILED TO FIRE on a perturbed recall value"; exit 1
+fi
+echo "recall gate fires on a perturbed recall value"
+rm -f "$PERT_JSON"
+# Gate-fires proof (c): a zero-query run must exit non-zero and write
+# nothing — an empty report may never poison the recall trajectory.
+DEGEN_RECALL="$(mktemp -u /tmp/zann_recall_degen.XXXXXX.json)"
+if cargo bench --bench bench_recall -- --n 1000 --nq 0 --out "$DEGEN_RECALL" \
+    >/dev/null 2>&1; then
+  echo "bench_recall: zero-query run should have exited non-zero"; exit 1
+fi
+test ! -f "$DEGEN_RECALL" || { echo "degenerate run wrote $DEGEN_RECALL"; exit 1; }
+
 echo "== rustfmt =="
 cargo fmt --all -- --check
 

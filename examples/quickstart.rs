@@ -35,7 +35,7 @@ fn main() {
         same &= a.iter().map(|r| r.1).eq(b.iter().map(|r| r.1));
         results.push(b.into_iter().map(|(_, id)| id).collect::<Vec<_>>());
     }
-    let recall = groundtruth::recall_at_k(&gt, 10, &results, 10);
+    let recall = groundtruth::nn_recall_at_k(&gt, 10, &results, 10);
     println!("identical results across codecs: {same}");
     println!("recall@10 = {recall:.3} (nprobe=16)");
     assert!(same, "lossless id compression must not change results");

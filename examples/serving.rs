@@ -83,7 +83,7 @@ fn main() {
         .iter()
         .map(|r| r.results.iter().map(|&(_, id)| id).collect())
         .collect();
-    let recall = groundtruth::recall_at_k(&gt, 10, &results, 10);
+    let recall = groundtruth::nn_recall_at_k(&gt, 10, &results, 10);
 
     println!("---------------------------------------------");
     println!("throughput: {:.0} queries/s ({} queries in {:.3}s)", nq as f64 / wall, nq, wall);

@@ -1,0 +1,30 @@
+//! Recall-aware evaluation bench: sweep codec × backend × search knob
+//! (nprobe/ef) against exact brute-force groundtruth and report
+//! recall@1, set-intersection recall@10, 1-recall@10 (the paper's
+//! Table-4 metric), QPS, latency percentiles and bits/id per operating
+//! point. Writes a machine-readable `BENCH_recall.json` at the repo
+//! root, stamped with an environment manifest (rustc / SIMD tier /
+//! threads); CI gates it against a committed baseline with
+//! tools/check_recall_baseline.py.
+//!
+//! `cargo bench --bench bench_recall -- [--full] [--n N] [--nq Q]
+//!  [--k K] [--topk 10] [--knobs 4,16,64] [--codecs unc64,roc,ans-i4]
+//!  [--pq-m M|--skip-pq] [--skip-graphs] [--skip-dynamic] [--churn 0.2]
+//!  [--dataset sift|deep|ssnpp] [--runs R] [--corrupt-ids] [--out PATH]`
+//!
+//! Bare invocations run at a tiny smoke scale (see `smoke.rs`). The
+//! bench exits non-zero without writing on any degenerate run — zero
+//! queries, NaN/out-of-range recall, zero QPS — and on a
+//! lossless-codec invariance violation (two lossless id codecs
+//! returning different results is a correctness bug, not noise).
+
+#[path = "smoke.rs"]
+mod smoke;
+
+fn main() {
+    let args = zann::util::cli::Args::parse(smoke::args_with_tiny_default(
+        &["--full", "--n", "--nq"],
+        &["--n", "4000", "--nq", "60", "--k", "32", "--knobs", "4,16", "--runs", "1"],
+    ));
+    zann::eval::bench_entries::recall(&args);
+}

@@ -1,0 +1,18 @@
+//! Capture the compiler version at build time so `bench-recall` can stamp
+//! its environment manifest (`BENCH_recall.json` is only comparable
+//! across runs when the toolchain is recorded next to the numbers).
+
+use std::process::Command;
+
+fn main() {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".into());
+    let version = Command::new(&rustc)
+        .arg("--version")
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .unwrap_or_else(|| "unknown".into());
+    println!("cargo:rustc-env=ZANN_RUSTC_VERSION={version}");
+    println!("cargo:rerun-if-changed=build.rs");
+}

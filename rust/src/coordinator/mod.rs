@@ -298,7 +298,7 @@ mod tests {
             .iter()
             .map(|r| r.results.iter().map(|&(_, id)| id).collect())
             .collect();
-        assert!(groundtruth::recall_at_k(&gt, 10, &res, 10) > 0.8);
+        assert!(groundtruth::nn_recall_at_k(&gt, 10, &res, 10) > 0.8);
         assert!(coord.metrics.queries() >= 40);
         coord.stop();
     }

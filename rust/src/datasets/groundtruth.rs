@@ -1,10 +1,25 @@
 //! Exact nearest-neighbor ground truth (brute force, parallel) and recall.
+//!
+//! Two recall definitions coexist in the ANN literature and both are used
+//! here, so they get distinct names instead of one overloaded function:
+//!
+//! * [`nn_recall_at_k`] — "1-recall@k": fraction of queries whose *single
+//!   true nearest neighbor* appears in the first `k` results. This is the
+//!   paper's Table-4 "recall@10" metric and the Faiss convention.
+//! * [`recall_at_k`] — set-intersection "k-recall@k":
+//!   `|results[..k] ∩ gt[..k]| / k` averaged over queries, the stricter
+//!   metric used for kNN-graph quality and the eval-recall harness.
 
 use crate::quant::top_k;
 use crate::util::pool::parallel_map;
 
 /// Exact top-`k` neighbors for every query (row-major inputs).
 /// Returns `nq × k` ids, row-major.
+///
+/// Ties are pinned: candidates are ordered by `(distance, id)` with
+/// `f32::total_cmp` (the [`crate::quant::TopK`] order), so the output is
+/// identical for any `threads` value — queries are data-parallel and each
+/// query's scan is sequential.
 pub fn exact_knn(
     data: &[f32],
     queries: &[f32],
@@ -22,33 +37,59 @@ pub fn exact_knn(
     rows.into_iter().flatten().collect()
 }
 
-/// recall@k: fraction of queries whose true nearest neighbor appears in
-/// the first `k` results (the paper's recall@10 metric in Table 4).
+fn check_recall_inputs(gt: &[u32], gt_k: usize, results: &[Vec<u32>], k: usize) {
+    assert!(!results.is_empty(), "recall over zero queries is undefined");
+    assert!(k > 0, "recall@0 is undefined");
+    assert!(gt_k > 0, "groundtruth depth gt_k must be positive");
+    assert_eq!(
+        gt.len(),
+        results.len() * gt_k,
+        "groundtruth length {} does not match {} queries × gt_k {}",
+        gt.len(),
+        results.len(),
+        gt_k
+    );
+}
+
+/// Set-intersection recall@k: `|results[..k] ∩ gt[..min(k, gt_k)]| /
+/// min(k, gt_k)` averaged over queries.
+///
+/// Each groundtruth id is credited at most once, so duplicate ids in a
+/// result list cannot inflate the score. Degenerate inputs (zero
+/// queries, `k == 0`, `gt_k == 0`, length mismatch) panic instead of
+/// returning a silent `NaN`.
 pub fn recall_at_k(gt: &[u32], gt_k: usize, results: &[Vec<u32>], k: usize) -> f64 {
-    let nq = results.len();
-    assert_eq!(gt.len(), nq * gt_k);
+    check_recall_inputs(gt, gt_k, results, k);
+    let eff = k.min(gt_k);
+    let mut hits = 0usize;
+    let mut truth = Vec::with_capacity(eff);
+    for (qi, res) in results.iter().enumerate() {
+        truth.clear();
+        truth.extend_from_slice(&gt[qi * gt_k..qi * gt_k + eff]);
+        for &id in res.iter().take(k) {
+            if let Some(pos) = truth.iter().position(|&t| t == id) {
+                truth.swap_remove(pos);
+                hits += 1;
+            }
+        }
+    }
+    hits as f64 / (results.len() * eff) as f64
+}
+
+/// 1-recall@k: fraction of queries whose true nearest neighbor
+/// (`gt[qi * gt_k]`) appears in the first `k` results — the paper's
+/// Table-4 "recall@10". Panics on degenerate inputs like
+/// [`recall_at_k`].
+pub fn nn_recall_at_k(gt: &[u32], gt_k: usize, results: &[Vec<u32>], k: usize) -> f64 {
+    check_recall_inputs(gt, gt_k, results, k);
     let mut hits = 0usize;
     for (qi, res) in results.iter().enumerate() {
-        let truth = gt[qi * gt_k]; // the single true NN
+        let truth = gt[qi * gt_k];
         if res.iter().take(k).any(|&id| id == truth) {
             hits += 1;
         }
     }
-    hits as f64 / nq as f64
-}
-
-/// Intersection recall: |result ∩ gt| / k averaged over queries
-/// (the stricter "k-recall@k" used for kNN-graph quality checks).
-pub fn intersection_recall(gt: &[u32], gt_k: usize, results: &[Vec<u32>], k: usize) -> f64 {
-    let nq = results.len();
-    let mut acc = 0f64;
-    for (qi, res) in results.iter().enumerate() {
-        let truth: std::collections::HashSet<u32> =
-            gt[qi * gt_k..qi * gt_k + k.min(gt_k)].iter().copied().collect();
-        let inter = res.iter().take(k).filter(|id| truth.contains(id)).count();
-        acc += inter as f64 / k.min(gt_k) as f64;
-    }
-    acc / nq as f64
+    hits as f64 / results.len() as f64
 }
 
 #[cfg(test)]
@@ -61,7 +102,7 @@ mod tests {
         let mut rng = Rng::new(80);
         let dim = 8;
         let n = 500;
-        let mut data: Vec<f32> = (0..n * dim).map(|_| rng.normal()).collect();
+        let data: Vec<f32> = (0..n * dim).map(|_| rng.normal()).collect();
         // Plant each query as a tiny perturbation of a known row.
         let mut queries = Vec::new();
         let mut planted = Vec::new();
@@ -72,7 +113,6 @@ mod tests {
                 queries.push(data[target * dim + d] + 1e-4 * rng.normal());
             }
         }
-        let _ = &mut data;
         let gt = exact_knn(&data, &queries, dim, 5, 4);
         for q in 0..20 {
             assert_eq!(gt[q * 5], planted[q], "query {q}");
@@ -80,12 +120,64 @@ mod tests {
     }
 
     #[test]
-    fn recall_metrics() {
-        let gt = vec![1u32, 9, 9, 9, 2, 9, 9, 9]; // 2 queries, gt_k=4
+    fn nn_recall_counts_true_nn_only() {
+        let gt = vec![1u32, 9, 8, 7, 2, 9, 8, 7]; // 2 queries, gt_k=4
         let results = vec![vec![5u32, 1, 7], vec![3u32, 4, 8]];
-        assert_eq!(recall_at_k(&gt, 4, &results, 3), 0.5);
+        // q0 has its true NN (1) in the top 3, q1 does not (2 missing).
+        assert_eq!(nn_recall_at_k(&gt, 4, &results, 3), 0.5);
+        assert_eq!(nn_recall_at_k(&gt, 4, &results, 1), 0.0);
+    }
+
+    #[test]
+    fn intersection_recall_is_set_based() {
+        let gt = vec![1u32, 9, 8, 7, 2, 9, 8, 7]; // 2 queries, gt_k=4
+        let results = vec![vec![5u32, 1, 7], vec![3u32, 4, 8]];
+        // q0 ∩ gt[..3] = {1}, q1 ∩ gt[..3] = {8}: (1 + 1) / (2 × 3).
+        let r = recall_at_k(&gt, 4, &results, 3);
+        assert!((r - 1.0 / 3.0).abs() < 1e-12, "r={r}");
+        // k=1: q0 top-1 is 5 (miss), q1 top-1 is 3 (miss).
         assert_eq!(recall_at_k(&gt, 4, &results, 1), 0.0);
-        let r2 = intersection_recall(&gt, 4, &results, 2);
-        assert!((r2 - 0.25).abs() < 1e-9); // q0 hits {1}, q1 hits none
+    }
+
+    #[test]
+    fn recall_with_gt_shallower_than_k() {
+        // gt_k=2 < k=4: the denominator is min(k, gt_k)=2, and only the
+        // two known-true ids can score, so a result list containing both
+        // reaches exactly 1.0 instead of being capped below it.
+        let gt = vec![3u32, 4];
+        let full = vec![vec![9u32, 4, 8, 3]];
+        assert_eq!(recall_at_k(&gt, 2, &full, 4), 1.0);
+        let half = vec![vec![9u32, 4, 8, 7]];
+        assert_eq!(recall_at_k(&gt, 2, &half, 4), 0.5);
+    }
+
+    #[test]
+    fn duplicate_result_ids_do_not_inflate_recall() {
+        // A buggy backend returning the same true id k times must score
+        // one hit, not k hits.
+        let gt = vec![3u32, 4, 5];
+        let dup = vec![vec![4u32, 4, 4]];
+        let r = recall_at_k(&gt, 3, &dup, 3);
+        assert!((r - 1.0 / 3.0).abs() < 1e-12, "r={r}");
+        // nn-recall is membership-based, so duplicates are harmless there.
+        assert_eq!(nn_recall_at_k(&gt, 3, &[vec![3u32, 3, 3]], 3), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero queries")]
+    fn recall_over_zero_queries_panics() {
+        let _ = recall_at_k(&[], 4, &[], 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero queries")]
+    fn nn_recall_over_zero_queries_panics() {
+        let _ = nn_recall_at_k(&[], 4, &[], 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn recall_length_mismatch_panics() {
+        let _ = recall_at_k(&[1u32, 2, 3], 2, &[vec![1u32]], 1);
     }
 }

@@ -272,6 +272,13 @@ impl DynamicIvf {
         id < self.next_id && !self.tombs.get(id)
     }
 
+    /// Every currently-searchable external id, ascending — the exact id
+    /// universe a search can return, which is what the recall harness
+    /// builds its post-churn groundtruth over.
+    pub fn live_ids(&self) -> Vec<u32> {
+        (0..self.next_id).filter(|&id| self.is_live(id)).collect()
+    }
+
     fn maintain(&mut self) -> Result<()> {
         if !self.policy.auto {
             return Ok(());

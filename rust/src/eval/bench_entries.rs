@@ -11,6 +11,7 @@
 use crate::codecs::CodecSpec;
 use crate::datasets::Kind;
 use crate::eval::experiments::{self, Scale};
+use crate::eval::recall;
 use crate::eval::{fmt3, Table};
 use crate::index::VectorMode;
 use crate::util::cli::Args;
@@ -694,6 +695,254 @@ pub fn churn(args: &Args) {
     }
 }
 
+/// Default location of the recall report, next to `BENCH_search.json`.
+fn default_recall_json_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_recall.json")
+}
+
+/// Minimal JSON string escape (quotes/backslashes; enough for codec
+/// names and `rustc --version` output).
+fn jesc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Serialize a recall report to the `BENCH_recall.json` schema
+/// (docs/REPRODUCING.md): run parameters, environment manifest, and one
+/// object per (backend, codec, knob) operating point.
+fn recall_json(rep: &recall::RecallReport) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!(
+        "  \"bench\": \"recall\",\n  \"dataset\": \"{}\",\n  \"n\": {},\n  \"nq\": {},\n  \
+         \"dim\": {},\n  \"seed\": {},\n  \"clusters\": {},\n  \"topk\": {},\n  \
+         \"churn_frac\": {:.6},\n  \"corrupt_ids\": {},\n",
+        rep.dataset, rep.n, rep.nq, rep.dim, rep.seed, rep.clusters, rep.topk,
+        rep.churn_frac, rep.corrupt_ids
+    ));
+    s.push_str(&format!(
+        "  \"env\": {{\"rustc\": \"{}\", \"pkg_version\": \"{}\", \"target_arch\": \"{}\", \
+         \"simd_level\": \"{}\", \"simd_override\": \"{}\", \"threads\": {}}},\n",
+        jesc(rep.env.rustc),
+        jesc(rep.env.pkg_version),
+        rep.env.target_arch,
+        rep.env.simd_level,
+        jesc(&rep.env.simd_override),
+        rep.env.threads
+    ));
+    s.push_str("  \"results\": [\n");
+    for (i, p) in rep.points.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"backend\": \"{}\", \"codec\": \"{}\", \"knob\": {}, \
+             \"recall_at_1\": {:.6}, \"recall_at_10\": {:.6}, \"nn_recall_at_10\": {:.6}, \
+             \"qps\": {:.3}, \"mean_ms\": {:.6}, \"p50_ms\": {:.6}, \"p95_ms\": {:.6}, \
+             \"bits_per_id\": {:.6}, \"lossless_ids\": {}}}{}\n",
+            p.backend,
+            jesc(&p.codec),
+            p.knob,
+            p.recall_at_1,
+            p.recall_at_10,
+            p.nn_recall_at_10,
+            p.qps,
+            p.mean_ms,
+            p.p50_ms,
+            p.p95_ms,
+            p.bits_per_id,
+            p.lossless_ids,
+            if i + 1 == rep.points.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Why a recall run would produce a degenerate `BENCH_recall.json`
+/// (`None` when the report is sound). Called twice: before the sweep
+/// with `points: None` (an nq=0 run must exit before building anything)
+/// and after with the measured points. Recall is a probability — a NaN
+/// or out-of-range value means the scoring pipeline is broken, and a
+/// zero/NaN QPS means no query actually ran; neither may land in the
+/// committed trajectory file.
+fn degenerate_recall_reason(nq: usize, points: Option<&[recall::RecallPoint]>) -> Option<String> {
+    if nq == 0 {
+        return Some("zero queries executed (nq=0)".into());
+    }
+    let points = points?;
+    if points.is_empty() {
+        return Some("no result rows (empty sweep)".into());
+    }
+    for p in points {
+        for (name, v) in [
+            ("recall_at_1", p.recall_at_1),
+            ("recall_at_10", p.recall_at_10),
+            ("nn_recall_at_10", p.nn_recall_at_10),
+        ] {
+            if !(0.0..=1.0).contains(&v) {
+                return Some(format!(
+                    "row {}/{} (knob={}) reports {name}={v}, outside [0, 1]",
+                    p.backend, p.codec, p.knob
+                ));
+            }
+        }
+        if p.qps <= 0.0 || p.qps.is_nan() {
+            return Some(format!(
+                "row {}/{} (knob={}) reports qps={}, which means no query ran",
+                p.backend, p.codec, p.knob, p.qps
+            ));
+        }
+    }
+    None
+}
+
+/// Recall-aware evaluation bench: sweep codec × backend × search knob
+/// against exact groundtruth and write `BENCH_recall.json` (override
+/// with `--out`) — the paper's "no impact on accuracy" claim as a
+/// measured artifact, gated in CI by tools/check_recall_baseline.py.
+///
+/// `--corrupt-ids` sabotages every returned id at scoring time so the
+/// CI gate can prove it fires; it requires an explicit `--out` so the
+/// sabotaged report can never land on the committed trajectory file.
+/// Exits non-zero without writing on any degenerate run, including a
+/// lossless-codec invariance violation inside the sweep itself.
+pub fn recall(args: &Args) {
+    let mut scale = scale_from(args);
+    if args.get("nq").is_none() {
+        // Exact groundtruth is O(n·nq); default to a lighter query load
+        // than the throughput benches.
+        scale.nq = 2000;
+    }
+    let kind = datasets_from(args)[0];
+    let clusters = args.usize("k", 1024.min((scale.n / 16).max(4)));
+    let topk = args.usize("topk", 10);
+    let knobs = parse_usize_list(args, "knobs", &[4, 16, 64]);
+    let ivf_codecs: Vec<String> = match args.get("codecs") {
+        Some(s) => s.split(',').map(|v| v.trim().to_string()).collect(),
+        None => ["unc64", "roc", "ans-i4"].iter().map(|s| s.to_string()).collect(),
+    };
+    for codec in &ivf_codecs {
+        match CodecSpec::parse(codec) {
+            Ok(spec) if spec.is_per_list() || matches!(spec, CodecSpec::Wavelet(_)) => {}
+            Ok(spec) => {
+                eprintln!(
+                    "bench-recall: codec {:?} is not an IVF id store (need a per-list codec or wt/wt1)",
+                    spec.name()
+                );
+                std::process::exit(2);
+            }
+            Err(e) => {
+                eprintln!("bench-recall: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let pq_m = if args.bool("skip-pq") {
+        0
+    } else {
+        // Largest of the Table-2 sub-quantizer counts that divides dim.
+        args.usize(
+            "pq-m",
+            [8usize, 4, 2, 1].into_iter().find(|&m| scale.dim % m == 0).unwrap_or(1),
+        )
+    };
+    let dynamic_codec = args.get_or("dynamic-codec", "roc").to_string();
+    match CodecSpec::parse(&dynamic_codec) {
+        Ok(spec) if spec.is_per_list() => {}
+        Ok(spec) => {
+            eprintln!(
+                "bench-recall: --dynamic-codec {:?} is not a per-list codec (need one of: {})",
+                spec.name(),
+                crate::codecs::PER_LIST_CODECS.join(", ")
+            );
+            std::process::exit(2);
+        }
+        Err(e) => {
+            eprintln!("bench-recall: {e}");
+            std::process::exit(2);
+        }
+    }
+    let cfg = recall::RecallConfig {
+        scale: scale.clone(),
+        kind,
+        clusters,
+        topk,
+        knobs,
+        ivf_codecs,
+        pq_m,
+        graphs: !args.bool("skip-graphs"),
+        graph_codec: args.get_or("graph-codec", "roc").to_string(),
+        dynamic: !args.bool("skip-dynamic"),
+        dynamic_codec,
+        churn_frac: args.f64("churn", 0.2),
+        runs: args.usize("runs", 2),
+        corrupt_ids: args.bool("corrupt-ids"),
+    };
+    let out_path = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => {
+            if cfg.corrupt_ids {
+                eprintln!(
+                    "bench-recall: --corrupt-ids requires an explicit --out (refusing to \
+                     overwrite the committed trajectory file with sabotaged numbers)"
+                );
+                std::process::exit(2);
+            }
+            default_recall_json_path()
+        }
+    };
+    if let Some(reason) = degenerate_recall_reason(scale.nq, None) {
+        eprintln!("bench-recall: refusing to write {}: {reason}", out_path.display());
+        std::process::exit(1);
+    }
+    println!(
+        "== recall: N={}, {} queries, K={clusters}, topk={topk}, {} \
+         (knobs={:?}, runs={}; graph backends capped at N={}) ==",
+        scale.n,
+        scale.nq,
+        kind.name(),
+        cfg.knobs,
+        cfg.runs,
+        scale.n.min(experiments::QPS_GRAPH_N_CAP)
+    );
+    let rep = match recall::sweep(&cfg) {
+        Ok(rep) => rep,
+        Err(e) => {
+            eprintln!("bench-recall: {e}");
+            std::process::exit(1);
+        }
+    };
+    let mut t = Table::new(&[
+        "backend", "codec", "knob", "r@1", "r@10", "1-r@10", "QPS", "p50 ms", "p95 ms",
+        "bits/id",
+    ]);
+    for p in &rep.points {
+        t.row(vec![
+            p.backend.into(),
+            p.codec.clone(),
+            p.knob.to_string(),
+            format!("{:.4}", p.recall_at_1),
+            format!("{:.4}", p.recall_at_10),
+            format!("{:.4}", p.nn_recall_at_10),
+            fmt3(p.qps),
+            fmt3(p.p50_ms),
+            fmt3(p.p95_ms),
+            fmt3(p.bits_per_id),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "env: {} | simd={} (override={}) | threads={}",
+        rep.env.rustc, rep.env.simd_level, rep.env.simd_override, rep.env.threads
+    );
+    if let Some(reason) = degenerate_recall_reason(rep.nq, Some(&rep.points)) {
+        eprintln!("bench-recall: refusing to write {}: {reason}", out_path.display());
+        std::process::exit(1);
+    }
+    let json = recall_json(&rep);
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {}", out_path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", out_path.display()),
+    }
+}
+
 pub fn fig3(args: &Args) {
     let scale = scale_from(args);
     println!("== Figure 3: cluster-conditioned PQ code compression (8 bits uncompressed) ==");
@@ -862,6 +1111,92 @@ mod tests {
         let mut bad = decode_report(vec![decode_row("roc", 64, 1e7)]);
         bad.adc.simd_per_s = 0.0;
         assert!(degenerate_decode_reason(&bad).unwrap().contains("ADC"));
+    }
+
+    fn recall_point(backend: &'static str, r10: f64, qps: f64) -> recall::RecallPoint {
+        recall::RecallPoint {
+            backend,
+            codec: "roc".into(),
+            knob: 16,
+            recall_at_1: r10.min(1.0),
+            recall_at_10: r10,
+            nn_recall_at_10: r10.min(1.0),
+            qps,
+            mean_ms: 0.5,
+            p50_ms: 0.4,
+            p95_ms: 0.9,
+            bits_per_id: 12.5,
+            lossless_ids: true,
+        }
+    }
+
+    fn recall_report(points: Vec<recall::RecallPoint>) -> recall::RecallReport {
+        recall::RecallReport {
+            dataset: "deep-like",
+            n: 3000,
+            nq: 80,
+            dim: 16,
+            seed: 42,
+            clusters: 32,
+            topk: 10,
+            churn_frac: 0.2,
+            corrupt_ids: false,
+            env: recall::EnvManifest {
+                rustc: "rustc 1.76.0 (07dca489a 2024-02-04)",
+                pkg_version: "0.1.0",
+                target_arch: "x86_64",
+                simd_level: "avx2",
+                simd_override: "auto".into(),
+                threads: 8,
+            },
+            points,
+        }
+    }
+
+    #[test]
+    fn recall_json_contract() {
+        let rep = recall_report(vec![
+            recall_point("ivf", 0.98, 1200.0),
+            recall_point("dynamic", 0.97, 900.0),
+        ]);
+        let s = recall_json(&rep);
+        for key in [
+            "\"bench\"", "\"recall\"", "\"dataset\"", "\"n\"", "\"nq\"", "\"dim\"",
+            "\"seed\"", "\"clusters\"", "\"topk\"", "\"churn_frac\"", "\"corrupt_ids\"",
+            "\"env\"", "\"rustc\"", "\"pkg_version\"", "\"target_arch\"", "\"simd_level\"",
+            "\"simd_override\"", "\"threads\"", "\"results\"", "\"backend\"", "\"codec\"",
+            "\"knob\"", "\"recall_at_1\"", "\"recall_at_10\"", "\"nn_recall_at_10\"",
+            "\"qps\"", "\"mean_ms\"", "\"p50_ms\"", "\"p95_ms\"", "\"bits_per_id\"",
+            "\"lossless_ids\"",
+        ] {
+            assert!(s.contains(key), "missing {key} in\n{s}");
+        }
+        assert!(s.contains("\"dynamic\""), "dynamic backend row must appear:\n{s}");
+        assert!(s.contains("\"corrupt_ids\": false"), "{s}");
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+        assert!(!s.contains(",\n  ]"), "trailing comma:\n{s}");
+    }
+
+    #[test]
+    fn degenerate_recall_runs_are_refused() {
+        let ok = vec![recall_point("ivf", 0.98, 1200.0)];
+        assert_eq!(degenerate_recall_reason(80, Some(&ok)), None);
+        // The pre-sweep check only objects to nq=0.
+        assert_eq!(degenerate_recall_reason(80, None), None);
+        let msg = degenerate_recall_reason(0, None).expect("nq=0");
+        assert!(msg.contains("zero queries"), "{msg}");
+        let msg = degenerate_recall_reason(80, Some(&[])).expect("no rows");
+        assert!(msg.contains("no result rows"), "{msg}");
+        let msg = degenerate_recall_reason(80, Some(&[recall_point("ivf", 0.98, 0.0)]))
+            .expect("qps=0");
+        assert!(msg.contains("qps=0"), "{msg}");
+        let msg = degenerate_recall_reason(80, Some(&[recall_point("ivf", f64::NAN, 10.0)]))
+            .expect("NaN recall");
+        assert!(msg.contains("recall_at_"), "{msg}");
+        let msg = degenerate_recall_reason(80, Some(&[recall_point("ivf", 1.5, 10.0)]))
+            .expect("recall > 1");
+        assert!(msg.contains("outside [0, 1]"), "{msg}");
     }
 
     #[test]

@@ -812,7 +812,7 @@ pub fn table4(n: usize, nq: usize, dim: usize, k: usize, threads: usize, seed: u
                 idx.search(ds.query(qi), &sp, &mut scratch).into_iter().map(|(_, id)| id).collect()
             })
             .collect();
-        let recall = crate::datasets::groundtruth::recall_at_k(&gt, 10, &results, 10);
+        let recall = crate::datasets::groundtruth::nn_recall_at_k(&gt, 10, &results, 10);
         out.push(T4Row {
             codec: codec.into(),
             bits_per_id: idx.bits_per_id(),

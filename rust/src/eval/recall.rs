@@ -1,0 +1,558 @@
+//! Recall-aware evaluation: the accuracy half of the paper's headline
+//! claim ("7× id compression with **no impact on accuracy** or search
+//! runtime", §1).
+//!
+//! [`sweep`] drives every backend family — IVF-Flat per lossless id
+//! codec, IVF-PQ, NSG, HNSW and the post-churn [`DynamicIvf`] — through
+//! the same [`AnnIndex`] path the coordinator serves, sweeps the search
+//! knob (`nprobe` for IVF, `ef` for graphs), and scores each operating
+//! point against exact brute-force groundtruth: recall@1, set-intersection
+//! recall@k, 1-recall@k (the paper's Table-4 metric), QPS, latency
+//! percentiles and bits/id. The report carries an [`EnvManifest`] so
+//! committed `BENCH_recall.json` baselines are only ever compared against
+//! runs from a recorded toolchain/SIMD tier.
+//!
+//! The lossless claim is enforced *inside* the sweep, not just reported:
+//! every IVF-Flat row produced by a lossless per-list codec must return
+//! results bit-identical to the first codec's at the same knob, or the
+//! sweep errors out (and the bench exits non-zero before writing JSON).
+
+use crate::api::{AnnIndex, AnnScratch, GraphIndex, QueryParams};
+use crate::datasets::{generate, groundtruth, Kind};
+use crate::dynamic::{CompactionPolicy, DynamicBuildParams, DynamicIvf};
+use crate::eval::experiments::{Scale, QPS_GRAPH_N_CAP};
+use crate::graph::hnsw::{Hnsw, HnswParams};
+use crate::graph::nsg::{Nsg, NsgParams};
+use crate::index::{IvfBuildParams, IvfIndex, VectorMode};
+use crate::quant::kmeans;
+use anyhow::{ensure, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Where a `BENCH_recall.json` run came from: toolchain, SIMD dispatch
+/// tier and thread count. Recall rows are only comparable across runs
+/// when these match (recall itself is deterministic, but QPS is not, and
+/// a SIMD-tier change is exactly the kind of event the baseline gate
+/// should surface instead of silently absorbing).
+pub struct EnvManifest {
+    /// `rustc --version` of the compiler that built this binary
+    /// (captured by `build.rs`; "unknown" when unavailable).
+    pub rustc: &'static str,
+    pub pkg_version: &'static str,
+    pub target_arch: &'static str,
+    /// Active SIMD dispatch tier ("scalar" | "sse4.1" | "avx2").
+    pub simd_level: &'static str,
+    /// The `ZANN_SIMD` override in effect, or "auto".
+    pub simd_override: String,
+    pub threads: usize,
+}
+
+impl EnvManifest {
+    pub fn capture(threads: usize) -> EnvManifest {
+        EnvManifest {
+            rustc: env!("ZANN_RUSTC_VERSION"),
+            pkg_version: env!("CARGO_PKG_VERSION"),
+            target_arch: std::env::consts::ARCH,
+            simd_level: crate::simd::level().name(),
+            simd_override: std::env::var("ZANN_SIMD").unwrap_or_else(|_| "auto".into()),
+            threads,
+        }
+    }
+}
+
+/// One operating point of the accuracy/speed/size tradeoff: a (backend,
+/// codec, knob) cell with its recall, throughput and storage rate.
+pub struct RecallPoint {
+    pub backend: &'static str,
+    pub codec: String,
+    /// The swept search knob: `nprobe` for IVF families, `ef` for graphs.
+    pub knob: usize,
+    /// 1-recall@1: the true NN ranked first among the top-1.
+    pub recall_at_1: f64,
+    /// Set-intersection recall@topk.
+    pub recall_at_10: f64,
+    /// 1-recall@topk — the paper's Table-4 "recall@10" definition.
+    pub nn_recall_at_10: f64,
+    pub qps: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub bits_per_id: f64,
+    /// Whether the id store is lossless (always true today; recorded so
+    /// the baseline checker can keep exact-match tolerances scoped to
+    /// lossless rows if a lossy store ever lands).
+    pub lossless_ids: bool,
+}
+
+/// Everything [`sweep`] needs; the bench entry builds this from CLI
+/// flags, tests build it literally.
+pub struct RecallConfig {
+    pub scale: Scale,
+    pub kind: Kind,
+    /// IVF coarse clusters (shared across every IVF-family backend).
+    pub clusters: usize,
+    /// Result depth and groundtruth depth (the "@10" in the JSON keys).
+    pub topk: usize,
+    /// Search-knob sweep: `nprobe` for IVF backends, `ef` for graphs.
+    pub knobs: Vec<usize>,
+    /// Lossless per-list id codecs for the IVF-Flat rows (first entry is
+    /// the invariance reference).
+    pub ivf_codecs: Vec<String>,
+    /// PQ sub-quantizers for the IVF-PQ row; 0 skips the backend.
+    pub pq_m: usize,
+    /// Build the NSG + HNSW rows (over at most [`QPS_GRAPH_N_CAP`] rows).
+    pub graphs: bool,
+    pub graph_codec: String,
+    /// Build the post-churn dynamic row (delete/insert `churn_frac`·n,
+    /// then compact).
+    pub dynamic: bool,
+    pub dynamic_codec: String,
+    pub churn_frac: f64,
+    /// Timed passes per cell (QPS is best-of-runs; results come from a
+    /// separate warm pass and are deterministic).
+    pub runs: usize,
+    /// Sabotage mode for the CI gate-fires check: corrupt every returned
+    /// id (bit-flip of the low bit) *at scoring time*, after the
+    /// invariance check, so recall collapses while the pipeline stays
+    /// intact. The JSON records the flag so a sabotaged report can never
+    /// pass for a measurement.
+    pub corrupt_ids: bool,
+}
+
+/// The `BENCH_recall.json` payload: run parameters, environment manifest
+/// and one [`RecallPoint`] per (backend, codec, knob).
+pub struct RecallReport {
+    pub dataset: &'static str,
+    pub n: usize,
+    pub nq: usize,
+    pub dim: usize,
+    pub seed: u64,
+    pub clusters: usize,
+    pub topk: usize,
+    pub churn_frac: f64,
+    pub corrupt_ids: bool,
+    pub env: EnvManifest,
+    pub points: Vec<RecallPoint>,
+}
+
+/// One backend ready to be measured: its index, the groundtruth in the
+/// id space the index returns, and whether it participates in the
+/// lossless-codec invariance check.
+struct BackendRun {
+    backend: &'static str,
+    codec: String,
+    index: Box<dyn AnnIndex>,
+    gt: Arc<Vec<u32>>,
+    check_invariance: bool,
+}
+
+struct Measured {
+    results: Vec<Vec<(f32, u32)>>,
+    qps: f64,
+    mean_ms: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+}
+
+/// Measure one (index, knob) cell: a warm pass collects the (
+/// deterministic) result lists, then `runs` timed passes take the best
+/// wall-clock — the same per-worker-scratch discipline as the QPS bench,
+/// so latencies reflect the steady-state allocation-free path.
+fn measure(
+    index: &dyn AnnIndex,
+    queries: &[f32],
+    dim: usize,
+    nq: usize,
+    sp: &QueryParams,
+    threads: usize,
+    runs: usize,
+) -> Measured {
+    let threads = threads.max(1);
+    let scratches: Vec<Mutex<(AnnScratch, Vec<(f32, u32)>)>> =
+        (0..threads).map(|_| Mutex::new((AnnScratch::default(), Vec::new()))).collect();
+    let collected: Vec<Mutex<Vec<(f32, u32)>>> = (0..nq).map(|_| Mutex::new(Vec::new())).collect();
+    let lat_cells: Vec<AtomicU64> = (0..nq).map(|_| AtomicU64::new(0)).collect();
+    let run_pass = |record: bool, collect: bool| {
+        crate::util::pool::parallel_chunks(nq, threads, |w, range| {
+            let mut guard = scratches[w % scratches.len()].lock().unwrap();
+            let (scratch, results) = &mut *guard;
+            for qi in range {
+                let q0 = Instant::now();
+                index.search_into(&queries[qi * dim..(qi + 1) * dim], sp, scratch, results);
+                if record {
+                    lat_cells[qi].store(q0.elapsed().as_secs_f64().to_bits(), Ordering::Relaxed);
+                }
+                if collect {
+                    collected[qi].lock().unwrap().clone_from(results);
+                }
+            }
+        });
+    };
+    run_pass(false, true); // warm every scratch + collect result lists
+    let mut best_wall = f64::INFINITY;
+    let mut lat: Vec<f64> = Vec::new();
+    for _ in 0..runs.max(1) {
+        let t0 = Instant::now();
+        run_pass(true, false);
+        let wall = t0.elapsed().as_secs_f64();
+        if wall < best_wall {
+            best_wall = wall;
+            lat = lat_cells.iter().map(|c| f64::from_bits(c.load(Ordering::Relaxed))).collect();
+        }
+    }
+    lat.sort_by(|a, b| a.total_cmp(b));
+    let pct = |p: f64| -> f64 {
+        if lat.is_empty() {
+            0.0
+        } else {
+            lat[((lat.len() - 1) as f64 * p).round() as usize]
+        }
+    };
+    let mean = lat.iter().sum::<f64>() / (lat.len().max(1) as f64);
+    Measured {
+        results: collected.into_iter().map(|m| m.into_inner().unwrap()).collect(),
+        qps: nq as f64 / best_wall.max(1e-12),
+        mean_ms: mean * 1e3,
+        p50_ms: pct(0.5) * 1e3,
+        p95_ms: pct(0.95) * 1e3,
+    }
+}
+
+/// Build every configured backend and measure each at every knob.
+///
+/// IVF-family backends share one coarse clustering (codec comparisons
+/// stay apples-to-apples); graph backends build over at most
+/// [`QPS_GRAPH_N_CAP`] rows with their own groundtruth over that prefix;
+/// the dynamic backend goes through a full delete → insert → compact
+/// churn cycle first and is scored against groundtruth computed over its
+/// *live* vector set in external-id space.
+pub fn sweep(cfg: &RecallConfig) -> Result<RecallReport> {
+    let Scale { n, nq, dim, seed, threads } = cfg.scale;
+    ensure!(nq > 0, "recall sweep needs at least one query (nq=0)");
+    ensure!(cfg.topk > 0, "topk must be positive");
+    ensure!(!cfg.knobs.is_empty(), "empty --knobs sweep");
+    ensure!(
+        !cfg.ivf_codecs.is_empty() || cfg.pq_m > 0 || cfg.graphs || cfg.dynamic,
+        "no backends selected"
+    );
+    if cfg.pq_m > 0 {
+        ensure!(dim % cfg.pq_m == 0, "--pq-m {} does not divide dim {dim}", cfg.pq_m);
+    }
+    let moved = if cfg.dynamic {
+        ((n as f64) * cfg.churn_frac).round().max(1.0) as usize
+    } else {
+        0
+    };
+    let ds = generate(cfg.kind, n + moved, nq, dim, seed);
+    let base = &ds.data[..n * dim];
+    let gt_k = cfg.topk;
+    let gt_base: Arc<Vec<u32>> =
+        Arc::new(groundtruth::exact_knn(base, &ds.queries, dim, gt_k, threads));
+
+    let mut backends: Vec<BackendRun> = Vec::new();
+
+    // IVF family over one shared coarse clustering.
+    let shared = if !cfg.ivf_codecs.is_empty() || cfg.pq_m > 0 {
+        let cents = kmeans::train(
+            base,
+            dim,
+            &kmeans::KmeansConfig {
+                k: cfg.clusters,
+                iters: 8,
+                seed,
+                threads,
+                ..Default::default()
+            },
+        );
+        let kk = cents.len() / dim;
+        let assign = kmeans::assign(base, dim, &cents, threads);
+        Some((cents, kk, assign))
+    } else {
+        None
+    };
+    if let Some((cents, kk, assign)) = &shared {
+        let build = |id_codec: &str, vectors: VectorMode| -> IvfIndex {
+            IvfIndex::build_preassigned(
+                base,
+                dim,
+                cents,
+                assign,
+                &IvfBuildParams {
+                    k: *kk,
+                    id_codec: id_codec.into(),
+                    vectors,
+                    threads,
+                    seed,
+                    ..Default::default()
+                },
+                *kk,
+            )
+        };
+        for codec in &cfg.ivf_codecs {
+            backends.push(BackendRun {
+                backend: "ivf",
+                codec: codec.clone(),
+                index: Box::new(build(codec, VectorMode::Flat)),
+                gt: gt_base.clone(),
+                check_invariance: true,
+            });
+        }
+        if cfg.pq_m > 0 {
+            backends.push(BackendRun {
+                backend: "ivf-pq",
+                codec: format!("compact+pq{}", cfg.pq_m),
+                index: Box::new(build("compact", VectorMode::Pq { m: cfg.pq_m, bits: 8 })),
+                gt: gt_base.clone(),
+                check_invariance: false,
+            });
+        }
+    }
+
+    if cfg.graphs {
+        let graph_n = n.min(QPS_GRAPH_N_CAP);
+        let gdata = &ds.data[..graph_n * dim];
+        let gt_graph = if graph_n == n {
+            gt_base.clone()
+        } else {
+            Arc::new(groundtruth::exact_knn(gdata, &ds.queries, dim, gt_k, threads))
+        };
+        let nsg = Nsg::build(
+            gdata,
+            dim,
+            &NsgParams { r: 32, knn_k: 48, threads, seed, ..Default::default() },
+        );
+        backends.push(BackendRun {
+            backend: "nsg",
+            codec: cfg.graph_codec.clone(),
+            index: Box::new(GraphIndex::from_nsg(&nsg, gdata, &cfg.graph_codec)?),
+            gt: gt_graph.clone(),
+            check_invariance: false,
+        });
+        let h = Hnsw::build(gdata, dim, &HnswParams { m: 16, ef_construction: 100, seed });
+        backends.push(BackendRun {
+            backend: "hnsw",
+            codec: cfg.graph_codec.clone(),
+            index: Box::new(GraphIndex::from_hnsw(&h, gdata, &cfg.graph_codec)?),
+            gt: gt_graph,
+            check_invariance: false,
+        });
+    }
+
+    if cfg.dynamic {
+        // Same churn protocol as the churn bench: build over n, delete
+        // `moved` random ids, insert `moved` fresh rows, compact.
+        let mut idx = DynamicIvf::build(
+            base,
+            dim,
+            &DynamicBuildParams {
+                ivf: IvfBuildParams {
+                    k: cfg.clusters,
+                    id_codec: cfg.dynamic_codec.clone(),
+                    threads,
+                    seed,
+                    ..Default::default()
+                },
+                policy: CompactionPolicy::default(),
+            },
+        )?;
+        let mut rng = crate::util::Rng::new(seed ^ 0xc0ffee);
+        for &id in &rng.sample_distinct(n as u64, moved.min(n)) {
+            idx.delete(id as u32)?;
+        }
+        for chunk in ds.data[n * dim..].chunks(512 * dim) {
+            idx.add(chunk)?;
+        }
+        idx.compact()?;
+        // Groundtruth over the live set, in external-id space: searches
+        // return external ids, so exact-knn row indices over the gathered
+        // live vectors are translated through the live-id list.
+        let live = idx.live_ids();
+        ensure!(!live.is_empty(), "churn cycle left no live vectors");
+        let mut live_data = Vec::with_capacity(live.len() * dim);
+        for &e in &live {
+            live_data.extend_from_slice(ds.vector(e as usize));
+        }
+        let gt_live: Arc<Vec<u32>> = Arc::new(
+            groundtruth::exact_knn(&live_data, &ds.queries, dim, gt_k, threads)
+                .into_iter()
+                .map(|row| live[row as usize])
+                .collect(),
+        );
+        backends.push(BackendRun {
+            backend: "dynamic",
+            codec: cfg.dynamic_codec.clone(),
+            index: Box::new(idx),
+            gt: gt_live,
+            check_invariance: false,
+        });
+    }
+
+    let mut points = Vec::new();
+    for &knob in &cfg.knobs {
+        // Reference results for the lossless-invariance check at this
+        // knob: (codec name, per-query (distance-bits, id) lists).
+        let mut inv_ref: Option<(&str, Vec<Vec<(u32, u32)>>)> = None;
+        for br in &backends {
+            let sp = QueryParams { k: cfg.topk, nprobe: knob, ef: knob };
+            let m = measure(&*br.index, &ds.queries, dim, nq, &sp, threads, cfg.runs);
+            if br.check_invariance {
+                let bits: Vec<Vec<(u32, u32)>> = m
+                    .results
+                    .iter()
+                    .map(|r| r.iter().map(|&(d, id)| (d.to_bits(), id)).collect())
+                    .collect();
+                match &inv_ref {
+                    None => inv_ref = Some((&br.codec, bits)),
+                    Some((first, want)) => ensure!(
+                        &bits == want,
+                        "lossless-codec invariance violated at nprobe={knob}: \
+                         {:?} returned different results than {first:?}",
+                        br.codec
+                    ),
+                }
+            }
+            let ids: Vec<Vec<u32>> = m
+                .results
+                .iter()
+                .map(|r| {
+                    r.iter()
+                        .map(|&(_, id)| if cfg.corrupt_ids { id ^ 1 } else { id })
+                        .collect()
+                })
+                .collect();
+            points.push(RecallPoint {
+                backend: br.backend,
+                codec: br.codec.clone(),
+                knob,
+                recall_at_1: groundtruth::nn_recall_at_k(&br.gt, gt_k, &ids, 1),
+                recall_at_10: groundtruth::recall_at_k(&br.gt, gt_k, &ids, cfg.topk),
+                nn_recall_at_10: groundtruth::nn_recall_at_k(&br.gt, gt_k, &ids, cfg.topk),
+                qps: m.qps,
+                mean_ms: m.mean_ms,
+                p50_ms: m.p50_ms,
+                p95_ms: m.p95_ms,
+                bits_per_id: br.index.stats().bits_per_id(),
+                lossless_ids: true,
+            });
+        }
+    }
+
+    Ok(RecallReport {
+        dataset: cfg.kind.name(),
+        n,
+        nq,
+        dim,
+        seed,
+        clusters: cfg.clusters,
+        topk: cfg.topk,
+        churn_frac: if cfg.dynamic { cfg.churn_frac } else { 0.0 },
+        corrupt_ids: cfg.corrupt_ids,
+        env: EnvManifest::capture(threads),
+        points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> RecallConfig {
+        RecallConfig {
+            scale: Scale { n: 1200, nq: 20, dim: 8, seed: 7, threads: 2 },
+            kind: Kind::DeepLike,
+            clusters: 16,
+            topk: 10,
+            knobs: vec![4, 16],
+            ivf_codecs: vec!["unc64".into(), "roc".into()],
+            pq_m: 4,
+            graphs: true,
+            graph_codec: "roc".into(),
+            dynamic: true,
+            dynamic_codec: "roc".into(),
+            churn_frac: 0.2,
+            runs: 1,
+            corrupt_ids: false,
+        }
+    }
+
+    #[test]
+    fn sweep_covers_every_backend_and_scores_sanely() {
+        let rep = sweep(&tiny_cfg()).expect("sweep");
+        // (2 ivf codecs + pq + nsg + hnsw + dynamic) × 2 knobs.
+        assert_eq!(rep.points.len(), 12);
+        for want in ["ivf", "ivf-pq", "nsg", "hnsw", "dynamic"] {
+            assert!(rep.points.iter().any(|p| p.backend == want), "missing {want}");
+        }
+        for p in &rep.points {
+            for (name, v) in [
+                ("recall_at_1", p.recall_at_1),
+                ("recall_at_10", p.recall_at_10),
+                ("nn_recall_at_10", p.nn_recall_at_10),
+            ] {
+                assert!((0.0..=1.0).contains(&v), "{}/{} {name}={v}", p.backend, p.codec);
+            }
+            // The true NN ranked first implies it is present in the
+            // top-k, so recall@1 never exceeds 1-recall@k.
+            assert!(p.recall_at_1 <= p.nn_recall_at_10 + 1e-12, "{}/{}", p.backend, p.codec);
+            assert!(p.qps > 0.0 && p.bits_per_id > 0.0, "{}/{}", p.backend, p.codec);
+        }
+        // Lossless id codecs ⇒ identical recall at every knob (the sweep
+        // already asserted bit-identical result lists internally).
+        for &knob in &[4usize, 16] {
+            let ivf: Vec<&RecallPoint> =
+                rep.points.iter().filter(|p| p.backend == "ivf" && p.knob == knob).collect();
+            assert_eq!(ivf.len(), 2);
+            assert_eq!(ivf[0].recall_at_10, ivf[1].recall_at_10, "knob={knob}");
+            assert_eq!(ivf[0].recall_at_1, ivf[1].recall_at_1, "knob={knob}");
+        }
+        // Full probe (knob = clusters) over Flat vectors is a near-exact
+        // search; recall must be essentially perfect.
+        let full = rep
+            .points
+            .iter()
+            .find(|p| p.backend == "ivf" && p.knob == 16)
+            .expect("full-probe row");
+        assert!(full.recall_at_10 > 0.95, "full-probe recall {}", full.recall_at_10);
+        // The environment manifest is populated.
+        assert!(!rep.env.rustc.is_empty() && !rep.env.simd_level.is_empty());
+        assert_eq!(rep.dataset, "deep-like");
+    }
+
+    #[test]
+    fn corrupt_ids_mode_collapses_recall() {
+        // The CI gate-fires mechanism: a bit-flip on every returned id
+        // must tank recall relative to the clean run, while the report
+        // itself stays well-formed and flagged.
+        let mut cfg = tiny_cfg();
+        cfg.ivf_codecs = vec!["roc".into()];
+        cfg.pq_m = 0;
+        cfg.graphs = false;
+        cfg.dynamic = false;
+        cfg.knobs = vec![16];
+        let clean = sweep(&cfg).expect("clean sweep");
+        cfg.corrupt_ids = true;
+        let bad = sweep(&cfg).expect("corrupt sweep");
+        assert!(!clean.corrupt_ids && bad.corrupt_ids);
+        let (c, b) = (&clean.points[0], &bad.points[0]);
+        assert!(
+            b.recall_at_10 < c.recall_at_10 - 0.2,
+            "corruption not visible: clean={} corrupt={}",
+            c.recall_at_10,
+            b.recall_at_10
+        );
+    }
+
+    #[test]
+    fn degenerate_configs_are_rejected() {
+        let mut cfg = tiny_cfg();
+        cfg.scale.nq = 0;
+        assert!(sweep(&cfg).is_err(), "nq=0 must not produce a report");
+        let mut cfg = tiny_cfg();
+        cfg.knobs.clear();
+        assert!(sweep(&cfg).is_err(), "empty knob sweep must not produce a report");
+        let mut cfg = tiny_cfg();
+        cfg.pq_m = 5; // does not divide dim=8
+        assert!(sweep(&cfg).is_err(), "pq_m must divide dim");
+    }
+}

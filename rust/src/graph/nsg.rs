@@ -297,7 +297,7 @@ mod tests {
                 nsg.search(&ds.data, ds.query(qi), 64, 10).into_iter().map(|(_, id)| id).collect()
             })
             .collect();
-        let recall = groundtruth::recall_at_k(&gt, 10, &results, 10);
+        let recall = groundtruth::nn_recall_at_k(&gt, 10, &results, 10);
         assert!(recall > 0.75, "recall={recall}");
     }
 

@@ -763,7 +763,7 @@ mod tests {
         let results: Vec<Vec<u32>> = (0..ds.nq)
             .map(|qi| idx.search(ds.query(qi), &sp, &mut scratch).into_iter().map(|(_, id)| id).collect())
             .collect();
-        let recall = groundtruth::recall_at_k(&gt, 10, &results, 10);
+        let recall = groundtruth::nn_recall_at_k(&gt, 10, &results, 10);
         assert!(recall >= min_recall, "{codec} {:?}: recall={recall}", idx.id_codec_name());
     }
 

@@ -13,6 +13,10 @@
 //!   bench-churn         — mutable-IVF churn: delete/insert throughput,
 //!                         post-compaction bits/id vs a static build,
 //!                         search parity (writes BENCH_churn.json)
+//!   bench-recall        — recall@1/recall@10 vs exact groundtruth across
+//!                         codec × backend × search knob, with QPS and
+//!                         bits/id per point (writes BENCH_recall.json;
+//!                         gated in CI against a committed baseline)
 //!   build               — build an index (--backend ivf|nsg|hnsw|dynamic)
 //!                         and save it to the zann container (--out PATH)
 //!   add                 — insert vectors into a saved dynamic index
@@ -59,6 +63,7 @@ fn main() {
         "bench-search-qps" => bench_entries::search_qps(&args),
         "bench-decode" => bench_entries::decode(&args),
         "bench-churn" => bench_entries::churn(&args),
+        "bench-recall" => bench_entries::recall(&args),
         "sizes" => sizes(&args),
         "build" => build_cmd(&args),
         "add" => add_cmd(&args),
@@ -71,7 +76,8 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: zann <bench-table1|bench-table2|bench-table3|bench-table4|\n\
-                 bench-fig2|bench-fig3|bench-search-qps|bench-decode|bench-churn|sizes|\n\
+                 bench-fig2|bench-fig3|bench-search-qps|bench-decode|bench-churn|\n\
+                 bench-recall|sizes|\n\
                  build --out PATH [--backend ivf|nsg|hnsw|dynamic]|\n\
                  add PATH --add-n N|delete PATH --frac F|--ids A,B|compact PATH|\n\
                  check-parity PATH|info PATH|serve PATH|\n\
@@ -365,7 +371,7 @@ fn delete_cmd(args: &Args) {
             eprintln!("delete: --frac {frac} out of [0, 1]");
             std::process::exit(2);
         }
-        let live: Vec<u32> = (0..idx.next_id()).filter(|&id| idx.is_live(id)).collect();
+        let live = idx.live_ids();
         let target = ((live.len() as f64) * frac).round() as usize;
         let mut rng = zann::util::Rng::new(args.u64("seed", 44));
         rng.sample_distinct(live.len() as u64, target)

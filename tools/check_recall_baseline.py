@@ -1,0 +1,212 @@
+#!/usr/bin/env python3
+"""Regression gate for BENCH_recall.json against a committed baseline.
+
+Usage:
+    check_recall_baseline.py FRESH BASELINE [options]
+
+Compares a freshly measured recall report (written by `zann bench-recall`
+/ `cargo bench --bench bench_recall`) against a committed baseline with
+explicit per-metric tolerances:
+
+* recall_at_1 / recall_at_10 / nn_recall_at_10 — exact by default
+  (``--recall-tol 0``): every backend here stores ids losslessly and the
+  whole pipeline is seeded, so any recall drop at equal sweep parameters
+  is a correctness bug, not noise. A recall *rise* is a WARN suggesting a
+  baseline refresh.
+* bits_per_id — relative tolerance ``--bpi-tol`` (default 2%): compressed
+  sizes are deterministic, but a small slack absorbs intentional codec
+  tuning without a lockstep baseline edit.
+* qps / latency — advisory WARN only, unless ``--enforce-qps FRAC`` asks
+  to fail when fresh QPS < FRAC × baseline. Wall-clock depends on the
+  runner; recall does not.
+
+A baseline whose top-level ``provenance`` is ``"placeholder"`` (the
+committed schema seed, before any toolchain-equipped runner has measured
+one) only schema-checks the fresh report and exits 0 — ci.sh then
+bootstraps the baseline from the fresh run.
+
+Exit codes: 0 = gate passed, 1 = regression or schema violation,
+2 = usage error.
+"""
+
+import argparse
+import json
+import sys
+
+TOP_KEYS = (
+    "bench", "dataset", "n", "nq", "dim", "seed", "clusters", "topk",
+    "churn_frac", "corrupt_ids", "env", "results",
+)
+ENV_KEYS = (
+    "rustc", "pkg_version", "target_arch", "simd_level", "simd_override", "threads",
+)
+ROW_KEYS = (
+    "backend", "codec", "knob", "recall_at_1", "recall_at_10", "nn_recall_at_10",
+    "qps", "mean_ms", "p50_ms", "p95_ms", "bits_per_id", "lossless_ids",
+)
+RECALL_METRICS = ("recall_at_1", "recall_at_10", "nn_recall_at_10")
+# Sweep parameters that must match for rows to be comparable at all.
+PARAM_KEYS = ("dataset", "n", "nq", "dim", "seed", "clusters", "topk", "churn_frac")
+
+failures = []
+warnings = []
+
+
+def fail(msg):
+    failures.append(msg)
+    print(f"FAIL: {msg}")
+
+
+def warn(msg):
+    warnings.append(msg)
+    print(f"WARN: {msg}")
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: cannot load {path}: {e}")
+        sys.exit(1)
+
+
+def check_schema(d, label):
+    ok = True
+    for key in TOP_KEYS:
+        if key not in d:
+            fail(f"{label}: missing top-level key {key!r}")
+            ok = False
+    if not ok:
+        return False
+    if d["bench"] != "recall":
+        fail(f"{label}: bench is {d['bench']!r}, expected 'recall'")
+        return False
+    for key in ENV_KEYS:
+        if key not in d["env"]:
+            fail(f"{label}: missing env key {key!r}")
+            ok = False
+    if not d["results"]:
+        fail(f"{label}: empty results array")
+        return False
+    for row in d["results"]:
+        for key in ROW_KEYS:
+            if key not in row:
+                fail(f"{label}: row {row.get('backend')}/{row.get('codec')} "
+                     f"missing key {key!r}")
+                return False
+        tag = f"{label}: {row['backend']}/{row['codec']}@{row['knob']}"
+        for m in RECALL_METRICS:
+            if not 0.0 <= row[m] <= 1.0:
+                fail(f"{tag}: {m}={row[m]} outside [0, 1]")
+                ok = False
+        if not row["qps"] > 0:
+            fail(f"{tag}: qps={row['qps']} (no query ran?)")
+            ok = False
+        if not row["bits_per_id"] > 0:
+            fail(f"{tag}: bits_per_id={row['bits_per_id']}")
+            ok = False
+    return ok
+
+
+def key_of(row):
+    return (row["backend"], row["codec"], row["knob"])
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="freshly measured BENCH_recall.json")
+    ap.add_argument("baseline", help="committed baseline to gate against")
+    ap.add_argument("--recall-tol", type=float, default=0.0,
+                    help="allowed recall drop per metric (default 0: exact)")
+    ap.add_argument("--bpi-tol", type=float, default=0.02,
+                    help="allowed relative bits/id change (default 0.02)")
+    ap.add_argument("--enforce-qps", type=float, default=None, metavar="FRAC",
+                    help="fail if fresh qps < FRAC x baseline (default: warn only)")
+    ap.add_argument("--require-backends", default=None,
+                    help="comma-separated backends the fresh report must cover")
+    args = ap.parse_args()
+
+    fresh = load(args.fresh)
+    base = load(args.baseline)
+
+    if not check_schema(fresh, "fresh"):
+        return 1
+    if args.require_backends:
+        have = {row["backend"] for row in fresh["results"]}
+        need = {b.strip() for b in args.require_backends.split(",") if b.strip()}
+        missing = need - have
+        if missing:
+            fail(f"fresh report covers {sorted(have)}, missing required "
+                 f"backends {sorted(missing)}")
+
+    if base.get("provenance") == "placeholder":
+        # Committed schema seed: nothing measured to compare against yet.
+        if failures:
+            return 1
+        print("baseline is a placeholder seed: schema-checked the fresh report "
+              "only; bootstrap a measured baseline from this run")
+        return 0
+
+    if not check_schema(base, "baseline"):
+        return 1
+
+    for key in PARAM_KEYS:
+        if fresh.get(key) != base.get(key):
+            fail(f"sweep parameter {key!r} differs: fresh={fresh.get(key)!r} "
+                 f"baseline={base.get(key)!r} — rows are not comparable")
+    if failures:
+        return 1
+    if fresh["corrupt_ids"] or base["corrupt_ids"]:
+        warn("corrupt_ids run in the comparison (sabotage mode) — recall is "
+             "expected to collapse")
+    for key in ("rustc", "simd_level"):
+        if fresh["env"].get(key) != base["env"].get(key):
+            warn(f"env {key} differs: fresh={fresh['env'].get(key)!r} "
+                 f"baseline={base['env'].get(key)!r} — QPS not comparable, "
+                 f"recall still gated")
+
+    fresh_rows = {key_of(r): r for r in fresh["results"]}
+    compared = 0
+    for bkey, brow in ((key_of(r), r) for r in base["results"]):
+        tag = "{}/{}@{}".format(*bkey)
+        frow = fresh_rows.get(bkey)
+        if frow is None:
+            fail(f"{tag}: present in baseline but missing from the fresh "
+                 f"sweep (coverage regressed)")
+            continue
+        compared += 1
+        for m in RECALL_METRICS:
+            drop = brow[m] - frow[m]
+            if drop > args.recall_tol:
+                fail(f"{tag}: {m} dropped {brow[m]:.6f} -> {frow[m]:.6f} "
+                     f"(tolerance {args.recall_tol}); lossless ids make any "
+                     f"drop at equal parameters a correctness bug")
+            elif drop < -args.recall_tol and frow[m] > brow[m]:
+                warn(f"{tag}: {m} improved {brow[m]:.6f} -> {frow[m]:.6f}; "
+                     f"refresh the baseline to lock in the gain")
+        if brow["bits_per_id"] > 0:
+            rel = abs(frow["bits_per_id"] - brow["bits_per_id"]) / brow["bits_per_id"]
+            if rel > args.bpi_tol:
+                fail(f"{tag}: bits_per_id moved {brow['bits_per_id']:.4f} -> "
+                     f"{frow['bits_per_id']:.4f} ({rel:.1%} > {args.bpi_tol:.1%})")
+        if brow["qps"] > 0:
+            ratio = frow["qps"] / brow["qps"]
+            if args.enforce_qps is not None and ratio < args.enforce_qps:
+                fail(f"{tag}: qps {brow['qps']:.1f} -> {frow['qps']:.1f} "
+                     f"({ratio:.2f}x < enforced {args.enforce_qps}x)")
+            elif ratio < 0.8:
+                warn(f"{tag}: qps {brow['qps']:.1f} -> {frow['qps']:.1f} "
+                     f"({ratio:.2f}x) — advisory only on this runner")
+
+    if failures:
+        print(f"recall gate: {len(failures)} failure(s), {len(warnings)} "
+              f"warning(s) over {compared} compared row(s)")
+        return 1
+    print(f"recall gate passed: {compared} row(s) compared, "
+          f"{len(warnings)} warning(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
