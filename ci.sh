@@ -140,6 +140,47 @@ cargo run --release --bin zann -- serve "$IDX_DIR/nsg.zann" --nq 32 --ef 32 \
 grep -q "verified 32/32" "$IDX_DIR/serve_nsg.txt"
 rm -rf "$IDX_DIR"
 
+echo "== integrity: chaos sweep + corrupted-container rejection + deadline degradation =="
+# (a) The fault-injection sweep: >=500 seeded mutations (bit flips,
+# truncations, section swaps) across every codec x backend container;
+# every mutant must be detected or harmless — a crash, hang or silently
+# wrong answer exits non-zero (docs/REPRODUCING.md, failure-modes table).
+CHAOS_DIR="$(mktemp -d /tmp/zann_chaos.XXXXXX)"
+cargo run --release --bin zann -- inject-faults | tee "$CHAOS_DIR/chaos.log"
+grep -q "verdict=PASS" "$CHAOS_DIR/chaos.log"
+grep -Eq "mutations=([5-9][0-9][0-9]|[0-9]{4,})" "$CHAOS_DIR/chaos.log" \
+  || { echo "chaos sweep ran fewer than 500 mutations"; exit 1; }
+# (b) A v2 container advertises its checksums, and a single hand-flipped
+# bit mid-file must be rejected by open (CRC-32C), not served.
+cargo run --release --bin zann -- build --out "$CHAOS_DIR/victim.zann" \
+  --backend ivf --codec roc --n 1000 --dim 8 --k 8
+cargo run --release --bin zann -- info "$CHAOS_DIR/victim.zann" \
+  | grep -q "checksummed=true"
+python3 - "$CHAOS_DIR/victim.zann" <<'EOF'
+import sys
+path = sys.argv[1]
+data = bytearray(open(path, "rb").read())
+data[len(data) // 2] ^= 0x40  # one flipped bit, middle of a payload
+open(path, "wb").write(bytes(data))
+EOF
+if cargo run --release --bin zann -- info "$CHAOS_DIR/victim.zann" \
+    > "$CHAOS_DIR/corrupt_info.log" 2>&1; then
+  echo "corrupted container was accepted by open"; exit 1
+fi
+echo "corrupted container rejected at open"
+# (c) Deadline degradation: an oversized batch under a 1 ms per-query
+# deadline must shed stragglers as structured Timeout responses (the
+# metrics summary shows a nonzero timeouts= count) and still exit 0 —
+# the hard timeout(1) wrapper proves "degrade", not "hang".
+cargo run --release --bin zann -- build --out "$CHAOS_DIR/slow.zann" \
+  --backend ivf --codec roc --n 2000 --dim 16 --k 32
+timeout 120 cargo run --release --bin zann -- serve "$CHAOS_DIR/slow.zann" \
+  --nq 4096 --batch 16 --nprobe 16 --deadline-ms 1 \
+  | tee "$CHAOS_DIR/deadline.log"
+grep -Eq "timeouts=[1-9]" "$CHAOS_DIR/deadline.log" \
+  || { echo "tiny deadline produced no Timeout responses"; exit 1; }
+rm -rf "$CHAOS_DIR"
+
 echo "== dynamic IVF smoke: build -> add -> delete -> compact -> parity =="
 # Drive the mutable index through the CLI and assert (a) search recall
 # parity: after churn + compaction, results are identical to a

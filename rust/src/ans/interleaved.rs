@@ -163,15 +163,35 @@ pub fn encode_uniform(symbols: &[u32], m: u32, ways: usize) -> Vec<u8> {
 /// out-of-order core — this is the bulk-decode path the `bench-decode`
 /// harness measures against the serial coders.
 pub fn decode_uniform_into(bytes: &[u8], m: u32, n: usize, ways: usize, out: &mut Vec<u32>) {
-    assert!((1..=MAX_WAYS).contains(&ways), "ways {ways} out of [1, {MAX_WAYS}]");
-    let words = u32::from_le_bytes(bytes[0..4].try_into().expect("truncated ans-i blob")) as usize;
-    let heads_off = 4 + words * 4;
-    assert!(
-        bytes.len() >= heads_off + ways * 8,
-        "ans-i blob holds {} bytes, need {} for {words} words + {ways} heads",
-        bytes.len(),
-        heads_off + ways * 8
+    try_decode_uniform_into(bytes, m, n, ways, out).expect("corrupt ans-i blob")
+}
+
+/// Fallible variant of [`decode_uniform_into`] for **untrusted** blobs:
+/// framing problems (a missing word count, a word count the blob cannot
+/// hold, absent heads) are structured errors instead of panics. The
+/// decode loop itself is already bounded — the shared cursor only counts
+/// down and stops at zero, and every decoded symbol is `< m` by
+/// construction — so after the frame checks no input can index out of
+/// bounds, spin, or emit an out-of-range value. Nothing is appended to
+/// `out` on `Err`.
+pub fn try_decode_uniform_into(
+    bytes: &[u8],
+    m: u32,
+    n: usize,
+    ways: usize,
+    out: &mut Vec<u32>,
+) -> anyhow::Result<()> {
+    anyhow::ensure!((1..=MAX_WAYS).contains(&ways), "ways {ways} out of [1, {MAX_WAYS}]");
+    anyhow::ensure!(m > 0, "uniform model over an empty range");
+    anyhow::ensure!(bytes.len() >= 4, "blob of {} bytes has no word count", bytes.len());
+    let words = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+    let need = 4u64 + words as u64 * 4 + ways as u64 * 8;
+    anyhow::ensure!(
+        bytes.len() as u64 >= need,
+        "blob holds {} bytes, need {need} for {words} words + {ways} heads",
+        bytes.len()
     );
+    let heads_off = 4 + words * 4;
     let mut heads = [LOW; MAX_WAYS];
     for (w, h) in heads[..ways].iter_mut().enumerate() {
         let off = heads_off + w * 8;
@@ -193,6 +213,7 @@ pub fn decode_uniform_into(bytes: &[u8], m: u32, n: usize, ways: usize, out: &mu
     for head in heads[..n - full].iter_mut() {
         out.push(model.decode_step(head, bytes, &mut cursor));
     }
+    Ok(())
 }
 
 #[cfg(test)]

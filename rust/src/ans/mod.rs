@@ -196,6 +196,14 @@ impl Ans {
     pub fn read_from(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
         use anyhow::Context;
         let n = u32::from_le_bytes(bytes.get(0..4).context("len")?.try_into()?) as usize;
+        // Check the claimed word count against the blob *before* reserving:
+        // a corrupt length field must not become a multi-gigabyte
+        // allocation.
+        anyhow::ensure!(
+            bytes.len() as u64 >= 4 + n as u64 * 4 + 8,
+            "ans stream claims {n} words but the blob holds only {} bytes",
+            bytes.len()
+        );
         self.stream.clear();
         self.stream.reserve(n);
         for i in 0..n {

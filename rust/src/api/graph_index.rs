@@ -50,6 +50,9 @@ pub struct GraphIndex {
     dim: usize,
     entries: Vec<u32>,
     codec: CodecSpec,
+    /// False only when opened from a legacy v1 container (no per-section
+    /// CRCs on disk); surfaced through [`IndexStats::checksummed`].
+    checksummed: bool,
 }
 
 impl GraphIndex {
@@ -72,6 +75,7 @@ impl GraphIndex {
             dim: nsg.dim,
             entries: nsg.entries.clone(),
             codec: spec,
+            checksummed: true,
         })
     }
 
@@ -95,6 +99,7 @@ impl GraphIndex {
             dim: h.dim,
             entries: vec![h.entry],
             codec: spec,
+            checksummed: true,
         })
     }
 
@@ -181,7 +186,21 @@ impl GraphIndex {
         let goff = ReadBuf::new(sec.as_slice()).get_u64s()?;
         let blobs = Blobs::from_parts(c.section(b"GBLB")?, goff)?;
         let store = GraphStore::from_compressed_parts(&spec, blobs, lens, n as u32, bits)?;
-        Ok(GraphIndex { family, store, data, dim, entries, codec: spec })
+        if !c.checksummed() {
+            // Legacy v1 file: no per-section CRC protected the adjacency
+            // streams, so decode every friend list once now — corruption
+            // surfaces as an open error instead of a panic mid-query.
+            store.validate_decode().context("v1 graph container failed decode validation")?;
+        }
+        Ok(GraphIndex {
+            family,
+            store,
+            data,
+            dim,
+            entries,
+            codec: spec,
+            checksummed: c.checksummed(),
+        })
     }
 }
 
@@ -215,6 +234,7 @@ impl AnnIndex for GraphIndex {
             deleted: 0,
             buffer_rows: 0,
             aux_bits: 0,
+            checksummed: self.checksummed,
             segments: Vec::new(),
         }
     }

@@ -97,6 +97,12 @@ pub struct IndexStats {
     /// not inside, `id_bits`, mirroring how the paper excludes overheads
     /// from its bit counts.
     pub aux_bits: u64,
+    /// Whether the index payload is covered by per-section CRC-32C
+    /// checksums: true for indexes built in memory or opened from a v2
+    /// container (checksums verified at open), false for indexes opened
+    /// from a legacy v1 container (no checksums on disk; a deep decode
+    /// validation ran at open instead).
+    pub checksummed: bool,
     /// Per-segment breakdown (one entry for a static IVF index, empty
     /// for graphs).
     pub segments: Vec<SegmentStats>,
@@ -263,6 +269,7 @@ impl AnnIndex for IvfIndex {
             deleted: 0,
             buffer_rows: 0,
             aux_bits: 0,
+            checksummed: self.checksummed(),
             segments: vec![SegmentStats { rows: self.n, id_bits: self.id_bits(), map_bits: 0 }],
         }
     }

@@ -3,12 +3,22 @@
 //!
 //! ```text
 //! byte 0..4   magic  b"ZANN"
-//! byte 4..6   format version (u16 LE, currently 1)
+//! byte 4..6   format version (u16 LE, currently 2)
 //! byte 6      index kind (1 = IVF, 2 = graph, 3 = dynamic IVF)
 //! byte 7      reserved (0)
 //! then until EOF, sections:
-//!   [tag: 4 ascii bytes] [payload length: u64 LE] [payload]
+//!   v1: [tag: 4 ascii bytes] [payload length: u64 LE] [payload]
+//!   v2: [tag: 4 ascii bytes] [payload length: u64 LE] [payload] [CRC-32C: u32 LE]
 //! ```
+//!
+//! The v2 trailer is the CRC-32C of `tag ‖ payload`, verified during
+//! [`Container::parse`] — a bit flip anywhere in a section (including its
+//! tag, so swapping tags between two sections is also caught) fails the
+//! open with a structured checksum error instead of reaching a decoder.
+//! Version-1 files (written before the checksum existed) still open; they
+//! carry no per-section CRC, are reported `checksummed=false` in
+//! [`crate::api::IndexStats`], and get a one-time deep decode validation
+//! at open (see the backend `from_container` impls) as a substitute.
 //!
 //! Design rule: **compressed payloads are stored verbatim**. The id
 //! streams (and entropy-coded PQ columns / adjacency streams) produced at
@@ -26,13 +36,17 @@ use crate::api::{AnnIndex, GraphIndex};
 use crate::index::IvfIndex;
 use crate::util::bits::read_bits_at;
 use crate::util::bytes::Bytes;
+use crate::util::crc32c::Crc32c;
 use anyhow::{bail, ensure, Context as _, Result};
 use std::path::Path;
 
 /// File magic.
 pub const MAGIC: [u8; 4] = *b"ZANN";
-/// Container format version this build reads and writes.
-pub const VERSION: u16 = 1;
+/// Container format version this build writes (per-section CRC-32C).
+pub const VERSION: u16 = 2;
+/// Oldest container format version this build still reads (v1: no
+/// per-section checksums).
+pub const MIN_VERSION: u16 = 1;
 /// Kind tag: IVF index.
 pub const KIND_IVF: u8 = 1;
 /// Kind tag: graph index (NSG/HNSW; family is in the HEAD section).
@@ -53,28 +67,43 @@ pub fn file_header(kind: u8) -> Vec<u8> {
     out
 }
 
-/// Append one tagged section.
+/// Append one tagged section (v2: with the CRC-32C trailer over
+/// `tag ‖ payload`).
 pub fn push_section(out: &mut Vec<u8>, tag: &[u8; 4], payload: &[u8]) {
     out.extend_from_slice(tag);
     out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
     out.extend_from_slice(payload);
+    let mut h = Crc32c::new();
+    h.update(tag);
+    h.update(payload);
+    out.extend_from_slice(&h.finalize().to_le_bytes());
 }
 
 fn tag_str(tag: &[u8; 4]) -> String {
     String::from_utf8_lossy(tag).into_owned()
 }
 
-/// A parsed container: kind byte + tagged sections, each a [`Bytes`]
-/// sub-region of the one file buffer.
+/// A parsed container: kind byte + format version + tagged sections, each
+/// a [`Bytes`] sub-region of the one file buffer.
 pub struct Container {
     pub kind: u8,
+    /// Container format version the file was written at.
+    pub version: u16,
     sections: Vec<([u8; 4], Bytes)>,
 }
 
 impl Container {
+    /// Whether every section carried (and passed) a CRC-32C check — true
+    /// for v2 files, false for legacy v1 files.
+    pub fn checksummed(&self) -> bool {
+        self.version >= 2
+    }
+
     /// Parse the header and section table. Every framing problem — short
-    /// file, bad magic, unsupported version, truncated section — is a
-    /// structured error, never a panic.
+    /// file, bad magic, unsupported version, truncated section, checksum
+    /// mismatch — is a structured error, never a panic. For v2 files the
+    /// CRC-32C of every section is verified here, so corruption anywhere
+    /// in the payload is rejected before any decoder sees it.
     pub fn parse(region: &Bytes) -> Result<Container> {
         let s = region.as_slice();
         ensure!(s.len() >= 8, "file too short ({} bytes) for the zann header", s.len());
@@ -85,9 +114,11 @@ impl Container {
         );
         let version = u16::from_le_bytes([s[4], s[5]]);
         ensure!(
-            version == VERSION,
-            "unsupported container version {version} (this build reads version {VERSION})"
+            (MIN_VERSION..=VERSION).contains(&version),
+            "unsupported container version {version} \
+             (this build reads versions {MIN_VERSION}..={VERSION})"
         );
+        let trailer: u64 = if version >= 2 { 4 } else { 0 };
         let kind = s[6];
         let mut sections = Vec::new();
         let mut pos = 8usize;
@@ -99,18 +130,32 @@ impl Container {
             );
             let tag: [u8; 4] = s[pos..pos + 4].try_into().unwrap();
             let len = u64::from_le_bytes(s[pos + 4..pos + 12].try_into().unwrap());
+            let remaining = (s.len() - pos - 12) as u64;
             ensure!(
-                len <= (s.len() - pos - 12) as u64,
-                "section {} claims {len} bytes but only {} remain",
+                len <= remaining && trailer <= remaining - len,
+                "section {} claims {len} bytes but only {remaining} remain",
                 tag_str(&tag),
-                s.len() - pos - 12
             );
             pos += 12;
             let body = region.slice(pos, len as usize)?;
-            sections.push((tag, body));
             pos += len as usize;
+            if version >= 2 {
+                let stored = u32::from_le_bytes(s[pos..pos + 4].try_into().unwrap());
+                let mut h = Crc32c::new();
+                h.update(&tag);
+                h.update(body.as_slice());
+                let computed = h.finalize();
+                ensure!(
+                    stored == computed,
+                    "checksum mismatch in section {} (stored {stored:08x}, computed \
+                     {computed:08x}) — the file is corrupt",
+                    tag_str(&tag),
+                );
+                pos += 4;
+            }
+            sections.push((tag, body));
         }
-        Ok(Container { kind, sections })
+        Ok(Container { kind, version, sections })
     }
 
     /// Look up a section by tag (first match; later duplicates are
@@ -268,6 +313,77 @@ mod tests {
         let len_at = 8 + 4;
         bad[len_at] = 0xff;
         assert!(Container::parse(&Bytes::from_vec(bad)).is_err());
+    }
+
+    /// Build a legacy v1 container (no section CRCs) by hand.
+    fn v1_container(kind: u8, sections: &[(&[u8; 4], &[u8])]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&1u16.to_le_bytes());
+        out.push(kind);
+        out.push(0);
+        for (tag, payload) in sections {
+            out.extend_from_slice(*tag);
+            out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            out.extend_from_slice(payload);
+        }
+        out
+    }
+
+    #[test]
+    fn v2_checksum_catches_every_single_byte_flip() {
+        let mut f = file_header(KIND_IVF);
+        push_section(&mut f, b"AAAA", &[0x11; 24]);
+        push_section(&mut f, b"BBBB", &[0x22; 9]);
+        assert!(Container::parse(&Bytes::from_vec(f.clone())).is_ok());
+        // Every byte past the 8-byte header participates in a section's
+        // tag, length, payload or CRC — flipping any one must fail parse.
+        for i in 8..f.len() {
+            let mut bad = f.clone();
+            bad[i] ^= 0x40;
+            assert!(
+                Container::parse(&Bytes::from_vec(bad)).is_err(),
+                "flip at byte {i} went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn v2_checksum_catches_tag_swaps() {
+        // Swapping the tags of two sections leaves both payloads and CRCs
+        // byte-identical — only the tag under the CRC changes. The CRC
+        // covers the tag precisely so this mutation is caught.
+        let mut f = file_header(KIND_IVF);
+        push_section(&mut f, b"AAAA", &[0x11; 16]);
+        push_section(&mut f, b"BBBB", &[0x22; 16]);
+        let first_tag = 8;
+        let second_tag = 8 + 12 + 16 + 4;
+        let mut bad = f.clone();
+        for j in 0..4 {
+            bad.swap(first_tag + j, second_tag + j);
+        }
+        let err = Container::parse(&Bytes::from_vec(bad)).unwrap_err();
+        assert!(format!("{err}").contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn v1_containers_still_parse_and_are_flagged_unchecksummed() {
+        let f = v1_container(KIND_IVF, &[(b"AAAA", b"hello"), (b"BBBB", &[1, 2, 3])]);
+        let c = Container::parse(&Bytes::from_vec(f.clone())).unwrap();
+        assert_eq!(c.version, 1);
+        assert!(!c.checksummed());
+        assert_eq!(c.section(b"AAAA").unwrap().as_slice(), b"hello");
+        let c2 = {
+            let mut f2 = file_header(KIND_IVF);
+            push_section(&mut f2, b"AAAA", b"hello");
+            Container::parse(&Bytes::from_vec(f2)).unwrap()
+        };
+        assert_eq!(c2.version, VERSION);
+        assert!(c2.checksummed());
+        // A v1 file re-labeled v2 fails: its sections carry no CRC.
+        let mut relabeled = f;
+        relabeled[4] = 2;
+        assert!(Container::parse(&Bytes::from_vec(relabeled)).is_err());
     }
 
     #[test]

@@ -17,8 +17,9 @@
 //! from the blob (no scratch state), so `decode_into` is the same
 //! allocation-free bulk path as `decode`.
 
-use super::{Encoded, IdCodec};
+use super::{ensure_list_shape, DecodeScratch, Encoded, IdCodec};
 use crate::ans::interleaved;
+use anyhow::{Context as _, Result};
 
 /// Interleaved-ANS id codec with a fixed way count (2, 4 or 8).
 pub struct AnsInterleaved {
@@ -62,6 +63,31 @@ impl IdCodec for AnsInterleaved {
 
     fn decode(&self, bytes: &[u8], universe: u32, n: usize, out: &mut Vec<u32>) {
         interleaved::decode_uniform_into(bytes, universe.max(1), n, self.ways, out);
+    }
+
+    fn try_decode_into(
+        &self,
+        bytes: &[u8],
+        universe: u32,
+        n: usize,
+        out: &mut Vec<u32>,
+        _scratch: &mut DecodeScratch,
+    ) -> Result<()> {
+        ensure_list_shape(self.name, universe, n)?;
+        let start = out.len();
+        interleaved::try_decode_uniform_into(bytes, universe.max(1), n, self.ways, out)
+            .with_context(|| format!("{}: corrupt blob", self.name))?;
+        // Every decoded symbol is < universe by construction (the uniform
+        // model cannot emit a slot outside [0, m)), so range needs no
+        // re-check. The sorted-distinct contract does: a corrupted stream
+        // decodes to in-range garbage that only the ascending-order check
+        // can catch.
+        if let Some(i) = (start + 1..out.len()).find(|&i| out[i] <= out[i - 1]) {
+            let (a, b) = (out[i - 1], out[i]);
+            out.truncate(start);
+            anyhow::bail!("{}: ids not strictly increasing ({a} then {b})", self.name);
+        }
+        Ok(())
     }
 }
 

@@ -10,10 +10,11 @@
 //! upper-bits bitvector, which the IVF search path uses to resolve
 //! (cluster, offset) pairs without decoding whole lists.
 
-use super::{Encoded, IdCodec};
+use super::{ensure_list_shape, DecodeScratch, Encoded, IdCodec};
 use crate::bitvec::RsBitVec;
 use crate::util::bits::{read_bits_at, BitBuf, BitWriter};
 use crate::util::{ReadBuf, WriteBuf};
+use anyhow::{ensure, Context as _, Result};
 
 pub struct EliasFano;
 
@@ -94,6 +95,94 @@ impl IdCodec for EliasFano {
         let hi = pos - k as u64;
         let lo = read_bits_at(v.lower, k * v.l as usize, v.l);
         Some(((hi << v.l) | lo) as u32)
+    }
+
+    fn try_decode_into(
+        &self,
+        bytes: &[u8],
+        universe: u32,
+        n: usize,
+        out: &mut Vec<u32>,
+        _scratch: &mut DecodeScratch,
+    ) -> Result<()> {
+        ensure_list_shape("ef", universe, n)?;
+        if n == 0 {
+            return Ok(());
+        }
+        let (l, lower, upper) = parse(bytes).context("ef: corrupt blob header")?;
+        // Internal length fields can lie about the word payloads — every
+        // read below must stay inside the deserialized word vectors, so
+        // pin the bit lengths to what was actually stored first.
+        ensure!(l <= 31, "ef: low-bit width {l} is impossible for u32 ids");
+        ensure!(
+            lower.len <= lower.words.len() * 64,
+            "ef: lower stream claims {} bits but stores {}",
+            lower.len,
+            lower.words.len() * 64
+        );
+        ensure!(
+            upper.len <= upper.words.len() * 64,
+            "ef: upper stream claims {} bits but stores {}",
+            upper.len,
+            upper.words.len() * 64
+        );
+        ensure!(
+            (n as u64) * (l as u64) <= lower.len as u64,
+            "ef: lower stream holds {} bits, need {} for {n} ids",
+            lower.len,
+            (n as u64) * (l as u64)
+        );
+        let hi_cap = (universe.saturating_sub(1) as u64) >> l;
+        let start = out.len();
+        let mut pos = 0usize;
+        let mut hi = 0u64;
+        let mut prev: Option<u32> = None;
+        for i in 0..n {
+            // Bounded unary read: a corrupt all-zeros tail can never spin
+            // or index past the word vector — the position check fails
+            // first.
+            let mut delta = 0u64;
+            loop {
+                if pos >= upper.len {
+                    out.truncate(start);
+                    anyhow::bail!("ef: upper stream exhausted after {i} of {n} ids");
+                }
+                let w = upper.words[pos >> 6] >> (pos & 63);
+                if w == 0 {
+                    delta += (64 - (pos & 63)) as u64;
+                    pos += 64 - (pos & 63);
+                } else {
+                    let tz = w.trailing_zeros() as usize;
+                    if pos + tz >= upper.len {
+                        out.truncate(start);
+                        anyhow::bail!("ef: upper stream exhausted after {i} of {n} ids");
+                    }
+                    delta += tz as u64;
+                    pos += tz + 1;
+                    break;
+                }
+            }
+            hi += delta;
+            if hi > hi_cap {
+                out.truncate(start);
+                anyhow::bail!("ef: high bits {hi} exceed universe {universe}");
+            }
+            let lo = lower.read(i * l as usize, l);
+            let v = ((hi << l) | lo) as u32;
+            if v as u64 >= universe as u64 {
+                out.truncate(start);
+                anyhow::bail!("ef: id {v} outside universe [0, {universe})");
+            }
+            if let Some(p) = prev {
+                if v <= p {
+                    out.truncate(start);
+                    anyhow::bail!("ef: ids not strictly increasing ({p} then {v})");
+                }
+            }
+            prev = Some(v);
+            out.push(v);
+        }
+        Ok(())
     }
 }
 

@@ -1,9 +1,10 @@
 //! Fixed-width id storage: the paper's **Unc.** (64/32-bit machine words)
 //! and **Comp.** (⌈log₂N⌉-bit packed) baselines.
 
-use super::{Encoded, IdCodec};
+use super::{ensure_list_shape, DecodeScratch, Encoded, IdCodec};
 use crate::util::bits::{read_bits_at, BitWriter};
 use crate::util::bits_for;
+use anyhow::{ensure, Result};
 
 /// 64-bit words per id — Faiss's default representation.
 pub struct Unc64;
@@ -38,6 +39,33 @@ impl IdCodec for Unc64 {
         }
         Some(u64::from_le_bytes(bytes[k * 8..k * 8 + 8].try_into().unwrap()) as u32)
     }
+
+    fn try_decode_into(
+        &self,
+        bytes: &[u8],
+        universe: u32,
+        n: usize,
+        out: &mut Vec<u32>,
+        _scratch: &mut DecodeScratch,
+    ) -> Result<()> {
+        ensure_list_shape("unc64", universe, n)?;
+        ensure!(
+            bytes.len() / 8 >= n,
+            "unc64: stream holds {} bytes, need {} for {n} ids",
+            bytes.len(),
+            n.saturating_mul(8)
+        );
+        let start = out.len();
+        for i in 0..n {
+            let v = u64::from_le_bytes(bytes[i * 8..i * 8 + 8].try_into().unwrap());
+            if v >= universe as u64 {
+                out.truncate(start);
+                anyhow::bail!("unc64: id {v} outside universe [0, {universe})");
+            }
+            out.push(v as u32);
+        }
+        Ok(())
+    }
 }
 
 /// 32-bit words per id — the graph-index default.
@@ -71,6 +99,33 @@ impl IdCodec for Unc32 {
             return None;
         }
         Some(u32::from_le_bytes(bytes[k * 4..k * 4 + 4].try_into().unwrap()))
+    }
+
+    fn try_decode_into(
+        &self,
+        bytes: &[u8],
+        universe: u32,
+        n: usize,
+        out: &mut Vec<u32>,
+        _scratch: &mut DecodeScratch,
+    ) -> Result<()> {
+        ensure_list_shape("unc32", universe, n)?;
+        ensure!(
+            bytes.len() / 4 >= n,
+            "unc32: stream holds {} bytes, need {} for {n} ids",
+            bytes.len(),
+            n.saturating_mul(4)
+        );
+        let start = out.len();
+        for i in 0..n {
+            let v = u32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+            if v as u64 >= universe as u64 {
+                out.truncate(start);
+                anyhow::bail!("unc32: id {v} outside universe [0, {universe})");
+            }
+            out.push(v);
+        }
+        Ok(())
     }
 }
 
@@ -125,6 +180,37 @@ impl IdCodec for Compact {
         }
         let w = Self::width(universe);
         Some(read_bits_at(bytes, k * w as usize, w) as u32)
+    }
+
+    fn try_decode_into(
+        &self,
+        bytes: &[u8],
+        universe: u32,
+        n: usize,
+        out: &mut Vec<u32>,
+        _scratch: &mut DecodeScratch,
+    ) -> Result<()> {
+        ensure_list_shape("compact", universe, n)?;
+        let w = Self::width(universe);
+        // `read_bits_at` zero-fills past the blob end in release builds —
+        // a truncated stream would silently decode as id 0 — so the
+        // length check here is what turns truncation into an error.
+        ensure!(
+            (n as u64) * (w as u64) <= (bytes.len() as u64) * 8,
+            "compact: stream holds {} bits, need {} for {n} ids of width {w}",
+            bytes.len() * 8,
+            (n as u64) * (w as u64)
+        );
+        let start = out.len();
+        for i in 0..n {
+            let v = read_bits_at(bytes, i * w as usize, w);
+            if v >= universe as u64 {
+                out.truncate(start);
+                anyhow::bail!("compact: id {v} outside universe [0, {universe})");
+            }
+            out.push(v as u32);
+        }
+        Ok(())
     }
 }
 

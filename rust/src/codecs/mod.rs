@@ -32,7 +32,7 @@ use crate::ans::Ans;
 use crate::codecs::rec::RecModel;
 use crate::codecs::wavelet::WtStorage;
 use crate::fenwick::Fenwick;
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 /// A compressed list plus its exact size in bits.
 #[derive(Clone, Debug)]
@@ -97,6 +97,69 @@ pub trait IdCodec: Send + Sync {
     fn decode_nth(&self, _bytes: &[u8], _universe: u32, _n: usize, _k: usize) -> Option<u32> {
         None
     }
+
+    /// Fallible decode for **untrusted** bytes — the corruption boundary.
+    ///
+    /// Same contract as [`IdCodec::decode_into`] (appends exactly `n` ids
+    /// in the deterministic decode order) except that every structural
+    /// problem — truncated stream, internal length field lying about the
+    /// payload, a decoded id outside `[0, universe)`, an impossible
+    /// `(universe, n)` shape — is a structured `Err`, never a panic, an
+    /// unbounded loop or an attacker-sized allocation. On `Err`, nothing
+    /// is appended to `out`.
+    ///
+    /// The infallible [`IdCodec::decode_into`] remains the hot path for
+    /// streams whose container checksum already verified; this method is
+    /// what the fault-injection harness, the corrupt-stream property
+    /// tests and the legacy-v1 deep validation at open call.
+    fn try_decode_into(
+        &self,
+        bytes: &[u8],
+        universe: u32,
+        n: usize,
+        out: &mut Vec<u32>,
+        scratch: &mut DecodeScratch,
+    ) -> Result<()>;
+
+    /// Fallible encode: validates the distinct-ids-in-universe
+    /// precondition in **release builds too** (the infallible
+    /// [`IdCodec::encode`] only `debug_assert`s it), so a duplicate-id
+    /// list from a buggy producer yields a structured error instead of
+    /// silently encoding garbage. Build paths whose input is distinct by
+    /// construction keep calling `encode`.
+    fn try_encode(&self, ids: &[u32], universe: u32) -> Result<Encoded> {
+        validate_id_list(self.name(), ids, universe)?;
+        Ok(self.encode(ids, universe))
+    }
+}
+
+/// Release-mode validation of the [`IdCodec`] encode precondition: every
+/// id in `[0, universe)` and no duplicates.
+pub fn validate_id_list(codec: &str, ids: &[u32], universe: u32) -> Result<()> {
+    ensure!(
+        ids.len() as u64 <= universe as u64,
+        "{codec}: {} ids cannot be distinct in a universe of {universe}",
+        ids.len()
+    );
+    if let Some(&bad) = ids.iter().find(|&&id| id as u64 >= universe as u64) {
+        bail!("{codec}: id {bad} outside universe [0, {universe})");
+    }
+    let mut sorted = ids.to_vec();
+    sorted.sort_unstable();
+    if let Some(w) = sorted.windows(2).find(|w| w[0] == w[1]) {
+        bail!("{codec}: duplicate id {} (ids must be distinct)", w[0]);
+    }
+    Ok(())
+}
+
+/// Shared shape guard for [`IdCodec::try_decode_into`] impls: a list of
+/// `n` *distinct* ids cannot come from a smaller universe.
+pub(crate) fn ensure_list_shape(codec: &str, universe: u32, n: usize) -> Result<()> {
+    ensure!(
+        n as u64 <= universe as u64,
+        "{codec}: claimed {n} distinct ids from a universe of {universe}"
+    );
+    Ok(())
 }
 
 /// A parsed codec specification — the single registry covering both
@@ -302,6 +365,46 @@ mod tests {
     }
 
     #[test]
+    fn try_encode_rejects_bad_id_lists_in_release_builds() {
+        for name in PER_LIST_CODECS {
+            let codec = CodecSpec::parse(name).unwrap().id_codec().unwrap();
+            // Valid list passes and matches the infallible encode.
+            let enc = codec.try_encode(&[3, 1, 7], 10).unwrap();
+            assert_eq!(enc.bytes, codec.encode(&[3, 1, 7], 10).bytes, "{name}");
+            // Duplicate ids are a structured error, not silent garbage.
+            let err = codec.try_encode(&[3, 1, 3], 10).expect_err(name);
+            assert!(format!("{err}").contains("duplicate"), "{name}: {err}");
+            // Out-of-universe ids are rejected.
+            let err = codec.try_encode(&[3, 10], 10).expect_err(name);
+            assert!(format!("{err}").contains("universe"), "{name}: {err}");
+            // More ids than the universe can hold.
+            assert!(codec.try_encode(&[0, 1, 2], 2).is_err(), "{name}");
+        }
+    }
+
+    #[test]
+    fn try_decode_rejects_impossible_shapes() {
+        for name in PER_LIST_CODECS {
+            let codec = CodecSpec::parse(name).unwrap().id_codec().unwrap();
+            let mut scratch = DecodeScratch::default();
+            let mut out = Vec::new();
+            // n > universe is impossible for distinct ids, whatever the
+            // bytes claim.
+            let err = codec
+                .try_decode_into(&[0u8; 1024], 8, 9, &mut out, &mut scratch)
+                .expect_err(name);
+            assert!(format!("{err}").contains("universe"), "{name}: {err}");
+            assert!(out.is_empty(), "{name}: out must stay untouched on error");
+            // The empty stream can never hold a nonempty list.
+            assert!(
+                codec.try_decode_into(&[], 100, 5, &mut out, &mut scratch).is_err(),
+                "{name}: empty stream decoded 5 ids"
+            );
+            assert!(out.is_empty(), "{name}");
+        }
+    }
+
+    #[test]
     fn registry_covers_every_per_list_codec() {
         // Every registered name resolves; the decode of an empty list is a
         // no-op for each of them.
@@ -352,6 +455,22 @@ pub(crate) mod testutil {
                 out_scratch,
                 out,
                 "{}: decode_into disagrees with decode (universe={universe} n={n})",
+                codec.name()
+            );
+            let mut out_try = Vec::new();
+            codec
+                .try_decode_into(&enc.bytes, universe, n, &mut out_try, &mut scratch)
+                .unwrap_or_else(|e| {
+                    panic!(
+                        "{}: try_decode_into rejected a valid stream \
+                         (universe={universe} n={n}): {e}",
+                        codec.name()
+                    )
+                });
+            assert_eq!(
+                out_try,
+                out,
+                "{}: try_decode_into disagrees with decode (universe={universe} n={n})",
                 codec.name()
             );
             let mut got = out.clone();

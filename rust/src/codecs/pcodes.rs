@@ -103,6 +103,55 @@ impl ClusterCodeCodec {
         debug_assert_eq!(cols, m, "expected one blob per sub-quantizer");
     }
 
+    /// Fallible variant of [`ClusterCodeCodec::decode_columns_into`] for
+    /// **untrusted** blobs: a truncated or length-lying stream is a
+    /// structured error instead of a panic. The decode loop itself is
+    /// bounded (`n` symbols per column, every symbol `< ksub` by model
+    /// construction), and each well-formed column drains its ANS state
+    /// back to exactly the fresh one — the restoration check below is
+    /// what catches in-place byte flips. `out` is cleared on `Err`.
+    pub fn try_decode_columns_into<'a, I>(
+        &self,
+        columns: I,
+        n: usize,
+        out: &mut Vec<u16>,
+        scratch: &mut DecodeScratch,
+    ) -> anyhow::Result<()>
+    where
+        I: IntoIterator<Item = &'a [u8]>,
+    {
+        out.clear();
+        out.resize(n * self.m, 0);
+        let coder = ReverseAdaptiveCoder::new(self.ksub);
+        let DecodeScratch { ans, urn, .. } = scratch;
+        let a = self.ksub as usize;
+        if !matches!(urn, Some(w) if w.len() == a) {
+            *urn = Some(Fenwick::new(a));
+        }
+        let weights = urn.as_mut().expect("urn installed above");
+        let m = self.m;
+        let mut cols = 0usize;
+        for (j, blob) in columns.into_iter().enumerate() {
+            if let Err(e) = ans.read_from(blob) {
+                out.clear();
+                anyhow::bail!("pcodes: corrupt stream for column {j}: {e}");
+            }
+            coder.decode_with(ans, n, weights, |i, v| out[i * m + j] = v as u16);
+            if ans.head != 1 << 32 || !ans.stream.is_empty() {
+                out.clear();
+                anyhow::bail!(
+                    "pcodes: ANS state not restored after column {j} — the blob is corrupt"
+                );
+            }
+            cols += 1;
+        }
+        if cols != m {
+            out.clear();
+            anyhow::bail!("pcodes: {cols} column blobs for {m} sub-quantizers");
+        }
+        Ok(())
+    }
+
     /// Ideal (model) bits for the cluster — used for rate accounting.
     pub fn ideal_bits(&self, codes: &[u16], n: usize) -> f64 {
         let coder = ReverseAdaptiveCoder::new(self.ksub);

@@ -25,9 +25,10 @@
 //! (`RankSet`), which profiles faster than a universe-sized Fenwick for
 //! cluster-sized lists.
 
-use super::{DecodeScratch, Encoded, IdCodec};
+use super::{ensure_list_shape, DecodeScratch, Encoded, IdCodec};
 use crate::ans::Ans;
 use crate::fenwick::Fenwick;
+use anyhow::{Context as _, Result};
 
 pub struct Roc;
 
@@ -88,6 +89,55 @@ impl IdCodec for Roc {
             ans.encode_uniform(j, i);
         }
         debug_assert_eq!(out.len() - start, n);
+    }
+
+    fn try_decode_into(
+        &self,
+        bytes: &[u8],
+        universe: u32,
+        n: usize,
+        out: &mut Vec<u32>,
+        scratch: &mut DecodeScratch,
+    ) -> Result<()> {
+        ensure_list_shape("roc", universe, n)?;
+        let DecodeScratch { ans, ranks, .. } = scratch;
+        ans.read_from(bytes).context("roc: corrupt blob")?;
+        if matches!(ranks, Some(r) if r.covers(universe, n)) {
+            ranks.as_mut().expect("checked above").clear();
+        } else {
+            *ranks = Some(RankSet::new(universe, n));
+        }
+        let ranks = ranks.as_mut().expect("rank set installed above");
+        let start = out.len();
+        for i in 1..=n as u32 {
+            // Safe on arbitrary state: decode_uniform yields < universe by
+            // construction, terminates on any input (stream pops stop at
+            // the initial state), and the re-encoded rank j is < i, so the
+            // loop body cannot panic or spin — corruption surfaces in the
+            // exit checks below instead.
+            let x = ans.decode_uniform(universe);
+            out.push(x);
+            let j = ranks.insert_and_rank(x);
+            ans.encode_uniform(j, i);
+        }
+        // The bits-back loop is a bijection, so decoding a well-formed
+        // blob returns the state to exactly the fresh one; a flip or
+        // truncation that got this far leaves head/stream off with
+        // overwhelming probability.
+        if ans.head != 1 << 32 || !ans.stream.is_empty() {
+            out.truncate(start);
+            anyhow::bail!("roc: ANS state not restored after decode — the blob is corrupt");
+        }
+        // The ids must form a set; a corrupt stream can still decode
+        // in-range duplicates.
+        let mut sorted = out[start..].to_vec();
+        sorted.sort_unstable();
+        if let Some(w) = sorted.windows(2).find(|w| w[0] == w[1]) {
+            let dup = w[0];
+            out.truncate(start);
+            anyhow::bail!("roc: duplicate id {dup} in decoded set");
+        }
+        Ok(())
     }
 }
 

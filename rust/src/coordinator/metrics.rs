@@ -10,6 +10,9 @@ pub struct Metrics {
     batches: AtomicU64,
     pjrt_queries: AtomicU64,
     batch_fill: AtomicU64,
+    timeouts: AtomicU64,
+    rejections: AtomicU64,
+    worker_panics: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -24,7 +27,25 @@ impl Metrics {
         if via_pjrt {
             self.pjrt_queries.fetch_add(1, Ordering::Relaxed);
         }
-        self.latencies_us.lock().unwrap().push(latency.as_micros() as u64);
+        // A caught worker panic may have poisoned the histogram lock;
+        // the Vec underneath is still fine (push is all-or-nothing).
+        self.latencies_us.lock().unwrap_or_else(|e| e.into_inner()).push(latency.as_micros() as u64);
+    }
+
+    /// A request aged past its deadline before a worker reached it.
+    pub fn record_timeout(&self) {
+        self.timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request bounced off the full admission queue.
+    pub fn record_rejection(&self) {
+        self.rejections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A panic was caught while serving one request (or the batcher
+    /// itself was respawned after one).
+    pub fn record_worker_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn queries(&self) -> u64 {
@@ -33,6 +54,18 @@ impl Metrics {
 
     pub fn batches(&self) -> u64 {
         self.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn timeouts(&self) -> u64 {
+        self.timeouts.load(Ordering::Relaxed)
+    }
+
+    pub fn rejections(&self) -> u64 {
+        self.rejections.load(Ordering::Relaxed)
+    }
+
+    pub fn worker_panics(&self) -> u64 {
+        self.worker_panics.load(Ordering::Relaxed)
     }
 
     pub fn pjrt_fraction(&self) -> f64 {
@@ -47,7 +80,7 @@ impl Metrics {
 
     /// Latency percentile in microseconds (p in [0, 100]).
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        let mut v = self.latencies_us.lock().unwrap().clone();
+        let mut v = self.latencies_us.lock().unwrap_or_else(|e| e.into_inner()).clone();
         if v.is_empty() {
             return 0;
         }
@@ -58,7 +91,8 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "queries={} batches={} mean_fill={:.1} pjrt={:.0}% p50={}us p95={}us p99={}us",
+            "queries={} batches={} mean_fill={:.1} pjrt={:.0}% p50={}us p95={}us p99={}us \
+             timeouts={} rejections={} worker_panics={}",
             self.queries(),
             self.batches(),
             self.mean_batch_fill(),
@@ -66,6 +100,9 @@ impl Metrics {
             self.latency_percentile_us(50.0),
             self.latency_percentile_us(95.0),
             self.latency_percentile_us(99.0),
+            self.timeouts(),
+            self.rejections(),
+            self.worker_panics(),
         )
     }
 }
@@ -89,6 +126,21 @@ mod tests {
         assert!((49..=51).contains(&p50), "p50={p50}");
         assert_eq!(m.latency_percentile_us(100.0), 100);
         assert!(m.summary().contains("queries=100"));
+    }
+
+    #[test]
+    fn degradation_counters() {
+        let m = Metrics::default();
+        m.record_timeout();
+        m.record_timeout();
+        m.record_rejection();
+        m.record_worker_panic();
+        assert_eq!(m.timeouts(), 2);
+        assert_eq!(m.rejections(), 1);
+        assert_eq!(m.worker_panics(), 1);
+        let s = m.summary();
+        assert!(s.contains("timeouts=2") && s.contains("rejections=1"), "{s}");
+        assert!(s.contains("worker_panics=1"), "{s}");
     }
 
     #[test]

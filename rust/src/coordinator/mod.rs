@@ -4,11 +4,11 @@
 //! Topology (std threads + channels; the offline vendor set has no tokio):
 //!
 //! ```text
-//!   clients ──(mpsc)──▶ batcher ──▶ engine thread (PJRT coarse scoring)
-//!                          │                │
-//!                          └──▶ worker pool ◀┘   (scan + id resolution)
-//!                                   │
-//!                            reply channels
+//!   clients ──(bounded mpsc)──▶ batcher ──▶ engine thread (PJRT coarse scoring)
+//!                                  │                │
+//!                                  └──▶ worker pool ◀┘   (scan + id resolution)
+//!                                           │
+//!                                    reply channels
 //! ```
 //!
 //! The batcher accumulates queries up to the artifact batch size (or a
@@ -19,6 +19,15 @@
 //! without one (graphs) skip the coarse hop and are served query-at-a-time
 //! by the same worker pool, so batching, metrics and reply plumbing are
 //! one code path for every index family.
+//!
+//! Degradation is structured, never silent: the admission queue is
+//! bounded (a full queue yields [`ResponseStatus::Overloaded`], not
+//! unbounded memory growth), requests that age past the configured
+//! deadline are answered [`ResponseStatus::Timeout`] instead of occupying
+//! a worker, and a panic while serving one request is caught, counted and
+//! answered [`ResponseStatus::Failed`] — the pool keeps serving everyone
+//! else. The [`metrics::Metrics`] counters (`timeouts`, `rejections`,
+//! `worker_panics`) make every degraded path observable.
 
 pub mod metrics;
 
@@ -27,6 +36,7 @@ use crate::runtime::EngineHandle;
 use crate::util::pool::default_threads;
 use anyhow::Result;
 use metrics::Metrics;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -38,12 +48,38 @@ pub struct Request {
     pub submitted: Instant,
 }
 
+/// How a request left the coordinator. Anything but `Ok` carries empty
+/// `results`; callers gate on the status, not on result emptiness (an
+/// `Ok` answer over a tiny index may legitimately be empty too).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResponseStatus {
+    /// Served normally.
+    Ok,
+    /// Aged past [`ServeConfig::deadline`] before a worker reached it.
+    Timeout,
+    /// Bounced off the full admission queue without being enqueued.
+    Overloaded,
+    /// A panic was caught while serving this request; the pool survived.
+    Failed,
+}
+
 #[derive(Clone, Debug)]
 pub struct Response {
     pub results: Vec<(f32, u32)>,
     pub latency: Duration,
     /// Whether the coarse stage ran on the PJRT executable.
     pub via_pjrt: bool,
+    pub status: ResponseStatus,
+}
+
+impl Response {
+    pub fn is_ok(&self) -> bool {
+        self.status == ResponseStatus::Ok
+    }
+
+    fn degraded(status: ResponseStatus, latency: Duration) -> Response {
+        Response { results: Vec::new(), latency, via_pjrt: false, status }
+    }
 }
 
 pub struct ServeConfig {
@@ -55,6 +91,14 @@ pub struct ServeConfig {
     /// read `ef`).
     pub search: QueryParams,
     pub scan_threads: usize,
+    /// Admission-queue capacity: at most this many requests wait for the
+    /// batcher; further submissions are answered `Overloaded` instead of
+    /// growing an unbounded backlog.
+    pub queue_depth: usize,
+    /// Per-query deadline measured from submission. A request older than
+    /// this when a worker picks it up is answered `Timeout` without
+    /// searching. `None` disables the check.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServeConfig {
@@ -64,6 +108,8 @@ impl Default for ServeConfig {
             max_wait: Duration::from_millis(2),
             search: QueryParams::default(),
             scan_threads: default_threads(),
+            queue_depth: 1024,
+            deadline: None,
         }
     }
 }
@@ -71,31 +117,63 @@ impl Default for ServeConfig {
 /// Handle used by clients to submit queries.
 #[derive(Clone)]
 pub struct CoordinatorClient {
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::SyncSender<Request>,
+    metrics: Arc<Metrics>,
 }
 
 impl CoordinatorClient {
-    /// Blocking search round-trip.
+    /// Blocking search round-trip. A full admission queue is a normal
+    /// (`Overloaded`) response, not an error — errors mean the
+    /// coordinator is gone.
     pub fn search(&self, query: Vec<f32>) -> Result<Response> {
+        let submitted = Instant::now();
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Request { query, reply, submitted: Instant::now() })
-            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("coordinator dropped reply"))
+        match self.tx.try_send(Request { query, reply, submitted }) {
+            Ok(()) => rx.recv().map_err(|_| anyhow::anyhow!("coordinator dropped reply")),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.record_rejection();
+                Ok(Response::degraded(ResponseStatus::Overloaded, submitted.elapsed()))
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                Err(anyhow::anyhow!("coordinator stopped"))
+            }
+        }
     }
 
-    /// Fire-and-collect a whole batch (examples / benches).
+    /// Fire-and-collect a whole batch (examples / benches). Requests that
+    /// bounce off the full queue come back `Overloaded` in their slot, so
+    /// the output stays index-aligned with `queries`.
     pub fn search_many(&self, queries: Vec<Vec<f32>>) -> Result<Vec<Response>> {
-        let mut rxs = Vec::with_capacity(queries.len());
-        for q in queries {
-            let (reply, rx) = mpsc::channel();
-            self.tx
-                .send(Request { query: q, reply, submitted: Instant::now() })
-                .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
-            rxs.push(rx);
+        enum Pending {
+            Waiting(mpsc::Receiver<Response>),
+            Done(Response),
         }
-        rxs.into_iter()
-            .map(|rx| rx.recv().map_err(|_| anyhow::anyhow!("reply dropped")))
+        let mut pending = Vec::with_capacity(queries.len());
+        for q in queries {
+            let submitted = Instant::now();
+            let (reply, rx) = mpsc::channel();
+            match self.tx.try_send(Request { query: q, reply, submitted }) {
+                Ok(()) => pending.push(Pending::Waiting(rx)),
+                Err(mpsc::TrySendError::Full(_)) => {
+                    self.metrics.record_rejection();
+                    pending.push(Pending::Done(Response::degraded(
+                        ResponseStatus::Overloaded,
+                        submitted.elapsed(),
+                    )));
+                }
+                Err(mpsc::TrySendError::Disconnected(_)) => {
+                    return Err(anyhow::anyhow!("coordinator stopped"))
+                }
+            }
+        }
+        pending
+            .into_iter()
+            .map(|p| match p {
+                Pending::Waiting(rx) => {
+                    rx.recv().map_err(|_| anyhow::anyhow!("reply dropped"))
+                }
+                Pending::Done(r) => Ok(r),
+            })
             .collect()
     }
 }
@@ -117,16 +195,40 @@ impl Coordinator {
         engine: Option<EngineHandle>,
         cfg: ServeConfig,
     ) -> Coordinator {
-        let (tx, rx) = mpsc::channel::<Request>();
+        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth.max(1));
         let metrics = Arc::new(Metrics::default());
         let stop = Arc::new(AtomicBool::new(false));
         let m = metrics.clone();
         let s = stop.clone();
         let batcher = std::thread::Builder::new()
             .name("zann-batcher".into())
-            .spawn(move || batcher_loop(rx, index, engine, cfg, m, s))
+            .spawn(move || {
+                // Respawn-on-panic: per-request panics are caught inside
+                // the fan-out, but if the batch pipeline itself unwinds
+                // (engine call, coarse fallback), the queue and serving
+                // loop come straight back. Requests mid-batch at the
+                // panic are dropped; their clients see a closed reply
+                // channel, not a hang.
+                loop {
+                    let run = catch_unwind(AssertUnwindSafe(|| {
+                        batcher_loop(&rx, &index, &engine, &cfg, &m, &s)
+                    }));
+                    match run {
+                        Ok(()) => return, // stop flag or all senders gone
+                        Err(_) => m.record_worker_panic(),
+                    }
+                    if s.load(Ordering::SeqCst) {
+                        return;
+                    }
+                }
+            })
             .expect("spawn batcher");
-        Coordinator { client: CoordinatorClient { tx }, metrics, stop, batcher: Some(batcher) }
+        Coordinator {
+            client: CoordinatorClient { tx, metrics: metrics.clone() },
+            metrics,
+            stop,
+            batcher: Some(batcher),
+        }
     }
 
     pub fn stop(mut self) {
@@ -148,12 +250,12 @@ impl Drop for Coordinator {
 }
 
 fn batcher_loop(
-    rx: mpsc::Receiver<Request>,
-    index: Arc<dyn AnnIndex>,
-    engine: Option<EngineHandle>,
-    cfg: ServeConfig,
-    metrics: Arc<Metrics>,
-    stop: Arc<AtomicBool>,
+    rx: &mpsc::Receiver<Request>,
+    index: &Arc<dyn AnnIndex>,
+    engine: &Option<EngineHandle>,
+    cfg: &ServeConfig,
+    metrics: &Arc<Metrics>,
+    stop: &Arc<AtomicBool>,
 ) {
     let dim = index.dim();
     let b = cfg.batch_size;
@@ -203,7 +305,7 @@ fn batcher_loop(
             }
             flat[batch.len() * dim..].fill(0.0); // clear stale padding rows
         }
-        let engine_out = match (&engine, &coarse_stage) {
+        let engine_out = match (engine.as_ref(), &coarse_stage) {
             (Some(h), Some((centroids, _, k))) => {
                 h.coarse(&flat, b, dim, centroids.clone(), *k).ok()
             }
@@ -234,16 +336,31 @@ fn batcher_loop(
         // Fan out scans to the worker pool.
         let nb = batch.len();
         let reqs: Vec<Request> = batch.drain(..).collect();
-        let index_ref = &*index;
+        let index_ref = &**index;
         let sp = &cfg.search;
         let scratches_ref = &scratches;
-        let metrics_ref = &metrics;
+        let metrics_ref = &**metrics;
+        let per_query_deadline = cfg.deadline;
         crate::util::pool::parallel_chunks(nb, cfg.scan_threads, |t, range| {
-            let mut scratch = scratches_ref[t % scratches_ref.len()].lock().unwrap();
+            // A caught panic below never unwinds past the guard, so the
+            // lock cannot actually poison from this loop; recover anyway
+            // in case another worker died in the pool machinery itself.
+            let mut scratch =
+                scratches_ref[t % scratches_ref.len()].lock().unwrap_or_else(|e| e.into_inner());
             for i in range {
                 let r = &reqs[i];
+                if let Some(dl) = per_query_deadline {
+                    if r.submitted.elapsed() >= dl {
+                        metrics_ref.record_timeout();
+                        let _ = r.reply.send(Response::degraded(
+                            ResponseStatus::Timeout,
+                            r.submitted.elapsed(),
+                        ));
+                        continue;
+                    }
+                }
                 let mut results = Vec::with_capacity(sp.k);
-                match coarse {
+                let searched = catch_unwind(AssertUnwindSafe(|| match coarse {
                     Some(c) => index_ref.search_with_coarse_into(
                         &r.query,
                         &c[i * k..(i + 1) * k],
@@ -252,10 +369,23 @@ fn batcher_loop(
                         &mut results,
                     ),
                     None => index_ref.search_into(&r.query, sp, &mut scratch, &mut results),
-                }
+                }));
                 let latency = r.submitted.elapsed();
+                if searched.is_err() {
+                    // The scratch may hold arbitrary mid-search state;
+                    // replace it before the next request reuses it.
+                    *scratch = AnnScratch::default();
+                    metrics_ref.record_worker_panic();
+                    let _ = r.reply.send(Response::degraded(ResponseStatus::Failed, latency));
+                    continue;
+                }
                 metrics_ref.record_query(latency, via_pjrt);
-                let _ = r.reply.send(Response { results, latency, via_pjrt });
+                let _ = r.reply.send(Response {
+                    results,
+                    latency,
+                    via_pjrt,
+                    status: ResponseStatus::Ok,
+                });
             }
         });
     }
@@ -264,6 +394,7 @@ fn batcher_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{CoarseInfo, IndexKind, IndexStats};
     use crate::datasets::{generate, groundtruth, Kind};
     use crate::index::{IvfBuildParams, IvfIndex, SearchParams, SearchScratch};
 
@@ -280,6 +411,7 @@ mod tests {
             max_wait: Duration::from_millis(1),
             search: QueryParams { nprobe: 8, k: 10, ..Default::default() },
             scan_threads: 2,
+            ..Default::default()
         };
         let coord = Coordinator::start(idx.clone(), None, cfg);
         // Compare against direct index search.
@@ -291,6 +423,7 @@ mod tests {
             let want = idx.search(ds.query(qi), &sp, &mut scratch);
             assert_eq!(resp.results, want, "query {qi}");
             assert!(!resp.via_pjrt);
+            assert_eq!(resp.status, ResponseStatus::Ok);
         }
         // Recall sanity end-to-end.
         let gt = groundtruth::exact_knn(&ds.data, &ds.queries, ds.dim, 10, 2);
@@ -300,6 +433,9 @@ mod tests {
             .collect();
         assert!(groundtruth::nn_recall_at_k(&gt, 10, &res, 10) > 0.8);
         assert!(coord.metrics.queries() >= 40);
+        assert_eq!(coord.metrics.timeouts(), 0);
+        assert_eq!(coord.metrics.rejections(), 0);
+        assert_eq!(coord.metrics.worker_panics(), 0);
         coord.stop();
     }
 
@@ -316,6 +452,7 @@ mod tests {
             max_wait: Duration::from_millis(20),
             search: QueryParams { nprobe: 4, k: 5, ..Default::default() },
             scan_threads: 2,
+            ..Default::default()
         };
         let coord = Coordinator::start(idx, None, cfg);
         let queries: Vec<Vec<f32>> = (0..30).map(|qi| ds.query(qi).to_vec()).collect();
@@ -341,6 +478,7 @@ mod tests {
             max_wait: Duration::from_millis(1),
             search: QueryParams { k: 5, ef: 32, nprobe: 0 },
             scan_threads: 2,
+            ..Default::default()
         };
         let coord = Coordinator::start(gi.clone(), None, cfg);
         let queries: Vec<Vec<f32>> = (0..ds.nq).map(|qi| ds.query(qi).to_vec()).collect();
@@ -353,6 +491,176 @@ mod tests {
             assert_eq!(resp.results, want, "query {qi}");
             assert!(!resp.via_pjrt, "graphs have no PJRT coarse stage");
         }
+        coord.stop();
+    }
+
+    /// Fault-injection wrapper: delegates to a real IVF index but can
+    /// panic on demand (NaN query) or serve slowly. `coarse_info` is
+    /// hidden so every request takes the direct per-query path, which is
+    /// where the injected faults land.
+    struct ChaosIndex {
+        inner: Arc<IvfIndex>,
+        sleep: Option<Duration>,
+        panic_on_nan: bool,
+    }
+
+    impl AnnIndex for ChaosIndex {
+        fn kind(&self) -> IndexKind {
+            AnnIndex::kind(&*self.inner)
+        }
+
+        fn dim(&self) -> usize {
+            AnnIndex::dim(&*self.inner)
+        }
+
+        fn len(&self) -> usize {
+            AnnIndex::len(&*self.inner)
+        }
+
+        fn stats(&self) -> IndexStats {
+            AnnIndex::stats(&*self.inner)
+        }
+
+        fn coarse_info(&self) -> Option<CoarseInfo<'_>> {
+            None
+        }
+
+        fn search_into(
+            &self,
+            query: &[f32],
+            params: &QueryParams,
+            scratch: &mut AnnScratch,
+            out: &mut Vec<(f32, u32)>,
+        ) {
+            if self.panic_on_nan && query[0].is_nan() {
+                panic!("injected worker panic");
+            }
+            if let Some(d) = self.sleep {
+                std::thread::sleep(d);
+            }
+            AnnIndex::search_into(&*self.inner, query, params, scratch, out);
+        }
+
+        fn to_bytes(&self) -> Result<Vec<u8>> {
+            AnnIndex::to_bytes(&*self.inner)
+        }
+    }
+
+    fn tiny_ivf() -> Arc<IvfIndex> {
+        let ds = generate(Kind::DeepLike, 400, 4, 8, 24);
+        Arc::new(IvfIndex::build(
+            &ds.data,
+            ds.dim,
+            &IvfBuildParams { k: 8, id_codec: "roc".into(), threads: 1, ..Default::default() },
+        ))
+    }
+
+    #[test]
+    fn survives_injected_worker_panic_and_keeps_serving() {
+        let inner = tiny_ivf();
+        let chaos =
+            Arc::new(ChaosIndex { inner: inner.clone(), sleep: None, panic_on_nan: true });
+        let cfg = ServeConfig {
+            batch_size: 4,
+            max_wait: Duration::from_millis(1),
+            search: QueryParams { nprobe: 4, k: 5, ..Default::default() },
+            scan_threads: 2,
+            ..Default::default()
+        };
+        let coord = Coordinator::start(chaos, None, cfg);
+        let dim = inner.dim;
+        let bad = coord.client.search(vec![f32::NAN; dim]).unwrap();
+        assert_eq!(bad.status, ResponseStatus::Failed);
+        assert!(bad.results.is_empty());
+        // The pool is still alive and answers clean queries normally.
+        let good = coord.client.search(vec![0.25; dim]).unwrap();
+        assert_eq!(good.status, ResponseStatus::Ok);
+        assert!(!good.results.is_empty());
+        assert!(coord.metrics.worker_panics() >= 1);
+        assert!(coord.metrics.summary().contains("worker_panics="));
+        coord.stop();
+    }
+
+    #[test]
+    fn per_query_deadline_yields_timeout_not_a_hang() {
+        let inner = tiny_ivf();
+        let dim = inner.dim;
+        let chaos = Arc::new(ChaosIndex { inner, sleep: None, panic_on_nan: false });
+        let cfg = ServeConfig {
+            batch_size: 4,
+            max_wait: Duration::from_millis(1),
+            search: QueryParams { nprobe: 4, k: 5, ..Default::default() },
+            scan_threads: 1,
+            // Zero-length budget: every request is already late when a
+            // worker reaches it — deterministic timeout.
+            deadline: Some(Duration::ZERO),
+            ..Default::default()
+        };
+        let coord = Coordinator::start(chaos, None, cfg);
+        let resp = coord.client.search(vec![0.5; dim]).unwrap();
+        assert_eq!(resp.status, ResponseStatus::Timeout);
+        assert!(resp.results.is_empty());
+        assert!(coord.metrics.timeouts() >= 1);
+        coord.stop();
+    }
+
+    #[test]
+    fn bounded_queue_rejects_overload_in_order() {
+        let inner = tiny_ivf();
+        let dim = inner.dim;
+        // Each query holds a worker for 30ms, and only one request may
+        // wait — the rest of the burst must bounce immediately.
+        let chaos = Arc::new(ChaosIndex {
+            inner,
+            sleep: Some(Duration::from_millis(30)),
+            panic_on_nan: false,
+        });
+        let cfg = ServeConfig {
+            batch_size: 1,
+            max_wait: Duration::from_millis(1),
+            search: QueryParams { nprobe: 4, k: 5, ..Default::default() },
+            scan_threads: 1,
+            queue_depth: 1,
+            ..Default::default()
+        };
+        let coord = Coordinator::start(chaos, None, cfg);
+        let queries: Vec<Vec<f32>> = (0..8).map(|_| vec![0.5; dim]).collect();
+        let responses = coord.client.search_many(queries).unwrap();
+        assert_eq!(responses.len(), 8, "every request gets an answer, served or rejected");
+        let served = responses.iter().filter(|r| r.is_ok()).count();
+        let rejected =
+            responses.iter().filter(|r| r.status == ResponseStatus::Overloaded).count();
+        assert_eq!(served + rejected, 8);
+        assert!(served >= 1, "the queue admits at least the first request");
+        assert!(rejected >= 5, "a burst of 8 into depth-1 must mostly bounce, got {rejected}");
+        assert!(coord.metrics.rejections() >= rejected as u64);
+        coord.stop();
+    }
+
+    #[test]
+    fn dropped_reply_receivers_are_ignored() {
+        let inner = tiny_ivf();
+        let dim = inner.dim;
+        let cfg = ServeConfig {
+            batch_size: 4,
+            max_wait: Duration::from_millis(1),
+            search: QueryParams { nprobe: 4, k: 5, ..Default::default() },
+            scan_threads: 1,
+            ..Default::default()
+        };
+        let coord = Coordinator::start(inner, None, cfg);
+        // A client that gave up: its reply receiver is gone before the
+        // worker answers. The send must be ignored, not unwind the pool.
+        let (reply, rx) = mpsc::channel();
+        drop(rx);
+        coord
+            .client
+            .tx
+            .try_send(Request { query: vec![0.5; dim], reply, submitted: Instant::now() })
+            .unwrap();
+        let resp = coord.client.search(vec![0.5; dim]).unwrap();
+        assert_eq!(resp.status, ResponseStatus::Ok);
+        assert_eq!(coord.metrics.worker_panics(), 0);
         coord.stop();
     }
 }

@@ -227,6 +227,7 @@ mod tests {
             max_wait: Duration::from_millis(1),
             search: QueryParams { nprobe: 8, k: 5, ..Default::default() },
             scan_threads: 2,
+            ..Default::default()
         };
         let coord = Coordinator::start(handle.clone(), None, cfg);
         // Interleave serving with mutations (including a compaction).

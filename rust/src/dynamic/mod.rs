@@ -110,6 +110,9 @@ pub struct DynamicIvf {
     next_id: u32,
     /// Tombstoned rows still physically present in segments/buffer.
     dead_stored: usize,
+    /// False only when opened from a legacy v1 container (no per-section
+    /// CRCs on disk); surfaced through `IndexStats::checksummed`.
+    pub(crate) checksummed: bool,
 }
 
 impl DynamicIvf {
@@ -165,6 +168,7 @@ impl DynamicIvf {
             tombs: Tombstones::default(),
             next_id: n as u32,
             dead_stored: 0,
+            checksummed: true,
         })
     }
 
@@ -688,6 +692,7 @@ impl DynamicIvf {
             tombs,
             next_id,
             dead_stored,
+            checksummed: true,
         }
     }
 }
@@ -724,6 +729,7 @@ impl AnnIndex for DynamicIvf {
             deleted: self.dead_stored,
             buffer_rows: self.buffer.rows,
             aux_bits: self.tombs.size_bits(),
+            checksummed: self.checksummed,
             segments,
         }
     }

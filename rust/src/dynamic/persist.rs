@@ -215,7 +215,7 @@ pub(crate) fn from_container(c: &Container) -> Result<DynamicIvf> {
         segments.push(Arc::new(seg));
     }
 
-    let idx = DynamicIvf::from_open_parts(
+    let mut idx = DynamicIvf::from_open_parts(
         dim,
         k,
         centroids,
@@ -227,6 +227,7 @@ pub(crate) fn from_container(c: &Container) -> Result<DynamicIvf> {
         next_id,
         dead_stored,
     );
+    idx.checksummed = c.checksummed();
     ensure!(
         idx.stored_rows() as u64 + tomb_count == next_id as u64 + idx.dead_stored() as u64,
         "row accounting is inconsistent: {} stored + {tomb_count} tombstoned vs {next_id} \
@@ -234,6 +235,12 @@ pub(crate) fn from_container(c: &Container) -> Result<DynamicIvf> {
         idx.stored_rows(),
         idx.dead_stored()
     );
+    if !c.checksummed() {
+        for (i, seg) in idx.segments().iter().enumerate() {
+            seg.validate_decode()
+                .with_context(|| format!("v1 dynamic container: segment {i} failed decode validation"))?;
+        }
+    }
     Ok(idx)
 }
 

@@ -198,6 +198,25 @@ impl Segment {
         self.codec.decode_into(self.blobs.get(c), self.universe, self.list_len(c), out, scratch);
     }
 
+    /// Decode every cluster's id stream once through the fallible codec
+    /// path, so structural corruption surfaces as an open-time error
+    /// instead of a panic mid-query. Called when a legacy (unchecksummed)
+    /// container is opened — checksummed containers already verified
+    /// their bytes. A clean decode also proves every rank is inside the
+    /// segment universe, which is exactly the [`IdMap::ext`] precondition.
+    pub fn validate_decode(&self) -> Result<()> {
+        use anyhow::Context as _;
+        let mut scratch = DecodeScratch::default();
+        let mut out = Vec::new();
+        for c in 0..self.num_clusters() {
+            out.clear();
+            self.codec
+                .try_decode_into(self.blobs.get(c), self.universe, self.list_len(c), &mut out, &mut scratch)
+                .with_context(|| format!("cluster {c} id stream failed to decode"))?;
+        }
+        Ok(())
+    }
+
     /// Serialization accessors (streams are written verbatim).
     pub fn blob_offsets(&self) -> &[u64] {
         self.blobs.offsets()

@@ -1,0 +1,317 @@
+//! Deterministic fault-injection sweep over the container format: every
+//! codec × backend builds a tiny index, its serialized bytes are mutated
+//! (seeded byte flips, truncations, word/block swaps), and every mutant
+//! must be *detected* — rejected by the CRC check at open or by a
+//! structured decode error — never a panic, a hang, or a silently wrong
+//! answer. The CLI `inject-faults` subcommand runs this sweep and exits
+//! non-zero on any crash/hang/silent-wrong, which is the CI chaos gate.
+
+use crate::api::{persist, AnnIndex, AnnScratch, GraphIndex, QueryParams};
+use crate::datasets::{generate, Kind};
+use crate::dynamic::{CompactionPolicy, DynamicBuildParams, DynamicIvf};
+use crate::graph::hnsw::{Hnsw, HnswParams};
+use crate::graph::nsg::{Nsg, NsgParams};
+use crate::index::{IvfBuildParams, IvfIndex, VectorMode};
+use crate::util::Rng;
+use anyhow::{ensure, Context as _, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Knobs of one sweep. Defaults give 13 targets × 40 mutants = 520
+/// seeded corruptions, each bounded by `timeout`.
+pub struct ChaosConfig {
+    pub seed: u64,
+    pub mutations_per_target: usize,
+    /// Per-mutant wall-clock guard: open + probe past this is a hang.
+    pub timeout: Duration,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig { seed: 7, mutations_per_target: 40, timeout: Duration::from_secs(5) }
+    }
+}
+
+/// What one mutated container did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Open or decode returned a structured error — the corruption was
+    /// caught.
+    Detected,
+    /// The mutant opened and answered the probe queries bit-identically
+    /// to the clean container (the mutation hit a byte with no
+    /// observable meaning, e.g. the reserved header byte).
+    Harmless,
+    /// The mutant opened and answered *differently* — undetected
+    /// corruption. Always a failure.
+    SilentWrong,
+    /// Open or probe panicked. Always a failure.
+    Crash,
+    /// Open or probe exceeded the time guard. Always a failure.
+    Hang,
+}
+
+/// Aggregated sweep result.
+#[derive(Default)]
+pub struct FaultReport {
+    pub targets: usize,
+    pub mutations: usize,
+    pub detected: usize,
+    pub harmless: usize,
+    pub silent_wrong: usize,
+    pub crashes: usize,
+    pub hangs: usize,
+    /// One line per failing mutant: `target: mutation -> outcome`.
+    pub failures: Vec<String>,
+}
+
+impl FaultReport {
+    pub fn passed(&self) -> bool {
+        self.silent_wrong == 0 && self.crashes == 0 && self.hangs == 0
+    }
+
+    /// One machine-greppable line (ci.sh keys off `verdict=`).
+    pub fn summary(&self) -> String {
+        format!(
+            "chaos: targets={} mutations={} detected={} harmless={} silent_wrong={} \
+             crashes={} hangs={} verdict={}",
+            self.targets,
+            self.mutations,
+            self.detected,
+            self.harmless,
+            self.silent_wrong,
+            self.crashes,
+            self.hangs,
+            if self.passed() { "PASS" } else { "FAIL" },
+        )
+    }
+
+    fn count(&mut self, target: &str, mutation: &str, o: Outcome) {
+        self.mutations += 1;
+        match o {
+            Outcome::Detected => self.detected += 1,
+            Outcome::Harmless => self.harmless += 1,
+            Outcome::SilentWrong => self.silent_wrong += 1,
+            Outcome::Crash => self.crashes += 1,
+            Outcome::Hang => self.hangs += 1,
+        }
+        if !matches!(o, Outcome::Detected | Outcome::Harmless) {
+            self.failures.push(format!("{target}: {mutation} -> {o:?}"));
+        }
+    }
+}
+
+/// Build the codec × backend container zoo: one tiny IVF per per-list
+/// codec, the two PQ vector modes, both graph families, and a churned
+/// multi-segment dynamic index. Each entry is (name, container bytes).
+pub fn build_targets(seed: u64) -> Result<Vec<(String, Vec<u8>)>> {
+    let ds = generate(Kind::DeepLike, 300, 4, 8, seed);
+    let mut out = Vec::new();
+
+    for codec in crate::codecs::PER_LIST_CODECS {
+        let idx = IvfIndex::build(
+            &ds.data,
+            ds.dim,
+            &IvfBuildParams { k: 8, id_codec: codec.to_string(), threads: 2, ..Default::default() },
+        );
+        out.push((format!("ivf-flat/{codec}"), idx.to_container_bytes()?));
+    }
+
+    for (label, vectors) in [
+        ("ivf-pq/roc", VectorMode::Pq { m: 4, bits: 4 }),
+        ("ivf-pqc/roc", VectorMode::PqCompressed { m: 4, bits: 4 }),
+    ] {
+        let idx = IvfIndex::build(
+            &ds.data,
+            ds.dim,
+            &IvfBuildParams {
+                k: 8,
+                id_codec: "roc".into(),
+                vectors,
+                threads: 2,
+                ..Default::default()
+            },
+        );
+        out.push((label.to_string(), idx.to_container_bytes()?));
+    }
+
+    let nsg = Nsg::build(
+        &ds.data,
+        ds.dim,
+        &NsgParams { r: 12, knn_k: 16, threads: 2, seed, ..Default::default() },
+    );
+    out.push(("nsg/roc".into(), GraphIndex::from_nsg(&nsg, &ds.data, "roc")?.to_bytes()?));
+
+    let hnsw = Hnsw::build(&ds.data, ds.dim, &HnswParams { m: 8, ef_construction: 40, seed });
+    out.push(("hnsw/ef".into(), GraphIndex::from_hnsw(&hnsw, &ds.data, "ef")?.to_bytes()?));
+
+    // Churned dynamic index: segments + write buffer + tombstones all
+    // present in the container.
+    let mut dynamic = DynamicIvf::build(
+        &ds.data[..200 * ds.dim],
+        ds.dim,
+        &DynamicBuildParams {
+            ivf: IvfBuildParams { k: 6, id_codec: "roc".into(), threads: 2, ..Default::default() },
+            policy: CompactionPolicy { flush_rows: 50, auto: true, ..Default::default() },
+        },
+    )?;
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    for id in rng.sample_distinct(200, 30) {
+        dynamic.delete(id as u32)?;
+    }
+    dynamic.add(&ds.data[200 * ds.dim..])?;
+    out.push(("dynamic/roc".into(), dynamic.to_bytes()?));
+
+    Ok(out)
+}
+
+/// Open a container and answer a fixed seeded probe workload; the
+/// returned signature is bit-exact ((distance bits, id) per rank), so
+/// any observable behavior change against the clean baseline shows up.
+fn probe(bytes: Vec<u8>) -> Result<Vec<(u32, u32)>> {
+    let idx = persist::open_bytes(bytes)?;
+    let dim = idx.dim();
+    let p = QueryParams { k: 5, nprobe: 4, ef: 16 };
+    let mut rng = Rng::new(123);
+    let mut scratch = AnnScratch::default();
+    let mut out = Vec::new();
+    let mut sig = Vec::new();
+    for _ in 0..4 {
+        let q: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+        idx.search_into(&q, &p, &mut scratch, &mut out);
+        sig.extend(out.iter().map(|&(d, id)| (d.to_bits(), id)));
+    }
+    Ok(sig)
+}
+
+/// One seeded corruption of `base`; returns the mutant + a description.
+fn mutate(rng: &mut Rng, base: &[u8]) -> (Vec<u8>, String) {
+    let len = base.len();
+    let mut bytes = base.to_vec();
+    match rng.below(10) {
+        // Bit flips dominate: the classic single-event upset.
+        0..=5 => {
+            let pos = rng.below(len as u64) as usize;
+            let mask = 1u8 << rng.below(8);
+            bytes[pos] ^= mask;
+            (bytes, format!("flip byte {pos} mask {mask:#04x}"))
+        }
+        // Truncation: torn write / short read.
+        6..=7 => {
+            let cut = rng.below(len as u64) as usize;
+            bytes.truncate(cut);
+            (bytes, format!("truncate to {cut} of {len}"))
+        }
+        // Word swap: misplaced 4-byte field (section tags, lengths,
+        // CRCs, ids all live in little-endian words).
+        8 if len >= 16 => {
+            let a = rng.below((len - 4) as u64) as usize;
+            let b = rng.below((len - 4) as u64) as usize;
+            for i in 0..4 {
+                bytes.swap(a + i, b + i);
+            }
+            (bytes, format!("swap words at {a} and {b}"))
+        }
+        // Block swap: transposed pages.
+        _ if len >= 96 => {
+            let a = rng.below((len - 32) as u64) as usize;
+            let b = rng.below((len - 32) as u64) as usize;
+            for i in 0..32 {
+                bytes.swap(a + i, b + i);
+            }
+            (bytes, format!("swap 32-byte blocks at {a} and {b}"))
+        }
+        _ => {
+            let pos = rng.below(len as u64) as usize;
+            bytes[pos] ^= 0xff;
+            (bytes, format!("invert byte {pos}"))
+        }
+    }
+}
+
+/// Open + probe one mutant on a watchdog thread: a panic is `Crash`, a
+/// structured error is `Detected`, exceeding `timeout` is `Hang` (the
+/// stuck thread is abandoned — this is a test harness, not a server).
+fn run_guarded(bytes: Vec<u8>, baseline: &[(u32, u32)], timeout: Duration) -> Outcome {
+    let (tx, rx) = mpsc::channel();
+    let base = baseline.to_vec();
+    std::thread::spawn(move || {
+        let outcome = match catch_unwind(AssertUnwindSafe(|| probe(bytes))) {
+            Err(_) => Outcome::Crash,
+            Ok(Err(_)) => Outcome::Detected,
+            Ok(Ok(sig)) => {
+                if sig == base {
+                    Outcome::Harmless
+                } else {
+                    Outcome::SilentWrong
+                }
+            }
+        };
+        let _ = tx.send(outcome);
+    });
+    rx.recv_timeout(timeout).unwrap_or(Outcome::Hang)
+}
+
+/// Run the full sweep: every target container, `mutations_per_target`
+/// seeded corruptions each. Panics inside mutants are caught and print
+/// their payload to stderr (rust's default hook) — a clean run is quiet
+/// because a clean run has no panics.
+pub fn run_chaos_sweep(cfg: &ChaosConfig) -> Result<FaultReport> {
+    let targets = build_targets(cfg.seed)?;
+    let mut report = FaultReport { targets: targets.len(), ..Default::default() };
+    for (ti, (name, bytes)) in targets.iter().enumerate() {
+        let baseline = probe(bytes.clone())
+            .with_context(|| format!("{name}: clean container failed its own probe"))?;
+        ensure!(!bytes.is_empty(), "{name}: empty container");
+        let mut rng = Rng::new(cfg.seed.wrapping_mul(0x9e37_79b9).wrapping_add(ti as u64));
+        for _ in 0..cfg.mutations_per_target {
+            let (mutant, desc) = mutate(&mut rng, bytes);
+            let outcome = run_guarded(mutant, &baseline, cfg.timeout);
+            report.count(name, &desc, outcome);
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_detects_everything_without_crashing() {
+        // Small per-target count to keep the test quick; the CLI gate
+        // runs the full default sweep.
+        let cfg = ChaosConfig { seed: 11, mutations_per_target: 6, ..Default::default() };
+        let rep = run_chaos_sweep(&cfg).unwrap();
+        assert!(rep.targets >= 13, "expected the full codec × backend zoo, got {}", rep.targets);
+        assert_eq!(rep.mutations, rep.targets * 6);
+        assert!(
+            rep.passed(),
+            "chaos sweep failed: {}\n{}",
+            rep.summary(),
+            rep.failures.join("\n")
+        );
+        assert_eq!(rep.detected + rep.harmless, rep.mutations);
+        // Corruption of checksummed containers is overwhelmingly caught,
+        // not silently benign.
+        assert!(rep.detected > rep.harmless, "{}", rep.summary());
+        assert!(rep.summary().contains("verdict=PASS"));
+    }
+
+    #[test]
+    fn mutants_actually_differ_from_base() {
+        let base: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        let mut rng = Rng::new(3);
+        let mut changed = 0;
+        for _ in 0..50 {
+            let (m, _) = mutate(&mut rng, &base);
+            if m != base {
+                changed += 1;
+            }
+        }
+        // Word/block swaps of identical content can no-op; flips and
+        // truncations cannot, and they dominate the mix.
+        assert!(changed >= 40, "only {changed}/50 mutants differed");
+    }
+}

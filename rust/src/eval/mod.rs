@@ -6,6 +6,7 @@
 
 pub mod experiments;
 pub mod bench_entries;
+pub mod faults;
 pub mod recall;
 
 /// Minimal fixed-width table printer for bench output.

@@ -132,6 +132,36 @@ impl GraphStore {
     pub fn bits_per_edge(&self) -> f64 {
         self.id_bits() as f64 / self.num_edges() as f64
     }
+
+    /// Decode every friend list once through the fallible codec path, so
+    /// structural corruption surfaces as an open-time error instead of a
+    /// panic mid-query. Called when a legacy (unchecksummed) container is
+    /// opened — checksummed containers already verified their bytes.
+    pub fn validate_decode(&self) -> anyhow::Result<()> {
+        use anyhow::Context as _;
+        match self {
+            GraphStore::Raw(adj) => {
+                let n = adj.len() as u64;
+                for (i, l) in adj.iter().enumerate() {
+                    if let Some(&bad) = l.iter().find(|&&t| t as u64 >= n) {
+                        anyhow::bail!("node {i}: neighbor {bad} out of range (n={n})");
+                    }
+                }
+                Ok(())
+            }
+            GraphStore::Compressed { codec, blobs, lens, universe, .. } => {
+                let mut scratch = crate::codecs::DecodeScratch::default();
+                let mut out = Vec::new();
+                for (i, &len) in lens.iter().enumerate() {
+                    out.clear();
+                    codec
+                        .try_decode_into(blobs.get(i), *universe, len as usize, &mut out, &mut scratch)
+                        .with_context(|| format!("friend list of node {i} failed to decode"))?;
+                }
+                Ok(())
+            }
+        }
+    }
 }
 
 /// Greedy best-first beam search over any [`GraphStore`] — the shared

@@ -147,6 +147,9 @@ pub struct IvfIndex {
     /// Canonical id-codec spec (distinguishes wt from wt1; persisted in
     /// the container header so `open` reconstructs the exact codec).
     spec: CodecSpec,
+    /// False only when opened from a legacy v1 container (no per-section
+    /// CRCs on disk); surfaced through `IndexStats::checksummed`.
+    checksummed: bool,
 }
 
 impl IvfIndex {
@@ -273,6 +276,7 @@ impl IvfIndex {
             ids,
             store,
             spec,
+            checksummed: true,
         }
     }
 
@@ -514,6 +518,45 @@ impl IvfIndex {
     pub fn id_codec_name(&self) -> &str {
         self.spec.name()
     }
+
+    /// Whether the index came from a checksummed (v2) container or was
+    /// built in-process; false only for legacy v1 opens.
+    pub(crate) fn checksummed(&self) -> bool {
+        self.checksummed
+    }
+
+    /// Decode every per-list id stream (and, for PqCompressed stores,
+    /// every cluster's code columns) once through the fallible paths —
+    /// the corruption check applied when a legacy (unchecksummed)
+    /// container is opened, so bad bytes surface as an open-time error
+    /// instead of a panic mid-query.
+    fn validate_decode(&self) -> Result<()> {
+        let mut scratch = DecodeScratch::default();
+        if let IdStore::PerList { codec, blobs, .. } = &self.ids {
+            let mut out = Vec::new();
+            for c in 0..self.k {
+                out.clear();
+                codec
+                    .try_decode_into(blobs.get(c), self.n as u32, self.list_len(c), &mut out, &mut scratch)
+                    .with_context(|| format!("id list of cluster {c} failed to decode"))?;
+            }
+        }
+        if let CodeStore::PqCompressed { pq, codec, columns, .. } = &self.store {
+            let m = pq.m;
+            let mut codes = Vec::new();
+            for c in 0..self.k {
+                codec
+                    .try_decode_columns_into(
+                        (0..m).map(|j| columns.get(c * m + j)),
+                        self.list_len(c),
+                        &mut codes,
+                        &mut scratch,
+                    )
+                    .with_context(|| format!("code columns of cluster {c} failed to decode"))?;
+            }
+        }
+        Ok(())
+    }
 }
 
 /// The raw building blocks of a Flat, per-list-codec IVF index —
@@ -723,7 +766,24 @@ impl IvfIndex {
         };
 
         let centroid_norms = coarse::centroid_norms(&centroids, dim);
-        Ok(IvfIndex { dim, n, k, centroids, centroid_norms, offsets, ids, store, spec })
+        let idx = IvfIndex {
+            dim,
+            n,
+            k,
+            centroids,
+            centroid_norms,
+            offsets,
+            ids,
+            store,
+            spec,
+            checksummed: c.checksummed(),
+        };
+        if !c.checksummed() {
+            // Legacy v1 file: no per-section CRC protected the payload
+            // streams, so decode everything once now.
+            idx.validate_decode().context("v1 IVF container failed decode validation")?;
+        }
+        Ok(idx)
     }
 }
 

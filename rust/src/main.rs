@@ -30,6 +30,11 @@
 //!                         verifying responses against direct search
 //!   serve-demo          — build an index in memory and serve a batch
 //!                         (PJRT coarse path if artifacts exist)
+//!   inject-faults       — chaos gate: build every codec × backend
+//!                         container, apply seeded corruptions, and
+//!                         prove each one is detected (no panic, hang,
+//!                         or silently wrong answer); exits non-zero
+//!                         on any escape
 //!   sizes               — bits/id summary for one dataset/index
 //!
 //! Common flags: --n --nq --dim --k --seed --threads --dataset
@@ -73,6 +78,7 @@ fn main() {
         "info" => info_cmd(&args),
         "serve" => serve_cmd(&args),
         "serve-demo" => serve_demo(&args),
+        "inject-faults" => inject_faults_cmd(&args),
         _ => {
             eprintln!(
                 "usage: zann <bench-table1|bench-table2|bench-table3|bench-table4|\n\
@@ -80,8 +86,10 @@ fn main() {
                  bench-recall|sizes|\n\
                  build --out PATH [--backend ivf|nsg|hnsw|dynamic]|\n\
                  add PATH --add-n N|delete PATH --frac F|--ids A,B|compact PATH|\n\
-                 check-parity PATH|info PATH|serve PATH|\n\
-                 serve-demo> [--n N] [--dataset sift|deep|ssnpp] [--codec NAME] ..."
+                 check-parity PATH|info PATH|\n\
+                 serve PATH [--deadline-ms MS] [--queue-depth N]|\n\
+                 serve-demo|inject-faults [--seed S] [--mutations M] [--timeout-ms MS]>\n\
+                 [--n N] [--dataset sift|deep|ssnpp] [--codec NAME] ..."
             );
         }
     }
@@ -109,7 +117,7 @@ fn print_stats(s: &IndexStats, file_bytes: Option<u64>) {
     let mut line = format!(
         "zann-index kind={} codec={} n={} dim={} edges={} id_bits={} code_bits={} link_bits={} \
          bits_per_id={:.3} payload_bytes={} live={} deleted={} buffer_rows={} segments={} \
-         aux_bits={}",
+         aux_bits={} checksummed={}",
         s.kind.name(),
         s.codec,
         s.n,
@@ -125,6 +133,7 @@ fn print_stats(s: &IndexStats, file_bytes: Option<u64>) {
         s.buffer_rows,
         s.segments.len(),
         s.aux_bits,
+        s.checksummed,
     );
     if !s.segments.is_empty() {
         let per: Vec<String> =
@@ -492,7 +501,7 @@ fn serve_cmd(args: &Args) {
         None => {
             eprintln!(
                 "usage: zann serve PATH [--nq N] [--nprobe P] [--ef E] [--topk K] \
-                 [--dump-results FILE]"
+                 [--deadline-ms MS] [--queue-depth N] [--dump-results FILE]"
             );
             std::process::exit(2);
         }
@@ -531,21 +540,30 @@ fn serve_cmd(args: &Args) {
     let mut rng = zann::util::Rng::new(args.u64("seed", 42));
     let queries: Vec<Vec<f32>> =
         (0..nq).map(|_| (0..dim).map(|_| rng.normal()).collect()).collect();
+    let deadline_ms = args.usize("deadline-ms", 0);
     let coord = Coordinator::start(
         index.clone(),
         engine,
         ServeConfig {
             batch_size: args.usize("batch", 64),
             search: sp.clone(),
+            // The whole batch is enqueued before any reply is read, so
+            // the default admission queue must cover it; an explicit
+            // --queue-depth exercises the Overloaded path instead.
+            queue_depth: args.usize("queue-depth", nq.max(1024)),
+            deadline: (deadline_ms > 0)
+                .then(|| std::time::Duration::from_millis(deadline_ms as u64)),
             ..Default::default()
         },
     );
     let t0 = std::time::Instant::now();
     let responses = coord.client.search_many(queries.clone()).unwrap();
     let wall = t0.elapsed().as_secs_f64();
-    // Every rust-path response must match a direct search on the
+    // Every rust-path `Ok` response must match a direct search on the
     // reopened index — the end-to-end proof that open did not disturb
-    // the stores. Batches scored by a PJRT executable are excluded from
+    // the stores. Degraded responses (Timeout/Overloaded/Failed) are
+    // counted separately: they are structured refusals, not answers.
+    // Batches scored by a PJRT executable are excluded from
     // the bit-exact check: only the pure-rust coarse kernel is
     // documented bit-identical to the direct path (XLA may differ in
     // the last ulp, legitimately reordering exact ties).
@@ -553,7 +571,12 @@ fn serve_cmd(args: &Args) {
     let mut want = Vec::new();
     let mut ok = 0usize;
     let mut via_pjrt = 0usize;
+    let mut degraded = 0usize;
     for (qi, resp) in responses.iter().enumerate() {
+        if !resp.is_ok() {
+            degraded += 1;
+            continue;
+        }
         if resp.via_pjrt {
             via_pjrt += 1;
             continue;
@@ -580,12 +603,14 @@ fn serve_cmd(args: &Args) {
         }
         println!("dumped {} result lines to {dump}", s.lines().count());
     }
-    let checked = responses.len() - via_pjrt;
-    let note = if via_pjrt > 0 {
-        format!(" ({via_pjrt} PJRT-scored responses skipped: not bit-comparable)")
-    } else {
-        String::new()
-    };
+    let checked = responses.len() - via_pjrt - degraded;
+    let mut note = String::new();
+    if via_pjrt > 0 {
+        note.push_str(&format!(" ({via_pjrt} PJRT-scored responses skipped: not bit-comparable)"));
+    }
+    if degraded > 0 {
+        note.push_str(&format!(" ({degraded} degraded responses: timeout/overload/failure)"));
+    }
     println!("serve: verified {ok}/{checked} responses identical to direct search{note}");
     println!(
         "served {} queries in {:.3}s ({:.0} qps); {}",
@@ -655,4 +680,35 @@ fn serve_demo(args: &Args) {
         coord.metrics.summary()
     );
     coord.stop();
+}
+
+/// Chaos gate: seeded corruption sweep over every codec × backend
+/// container. Exits non-zero if any mutant panics, hangs, or answers
+/// wrongly without being detected.
+fn inject_faults_cmd(args: &Args) {
+    let cfg = zann::eval::faults::ChaosConfig {
+        seed: args.u64("seed", 7),
+        mutations_per_target: args.usize("mutations", 40),
+        timeout: std::time::Duration::from_millis(args.u64("timeout-ms", 5000)),
+    };
+    println!(
+        "inject-faults: seed={} mutations/target={} timeout={}ms",
+        cfg.seed,
+        cfg.mutations_per_target,
+        cfg.timeout.as_millis()
+    );
+    let report = match zann::eval::faults::run_chaos_sweep(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("inject-faults: sweep could not run: {e:?}");
+            std::process::exit(1);
+        }
+    };
+    println!("{}", report.summary());
+    if !report.passed() {
+        for f in &report.failures {
+            eprintln!("inject-faults: ESCAPE {f}");
+        }
+        std::process::exit(1);
+    }
 }

@@ -9,6 +9,7 @@
 pub mod prng;
 pub mod bits;
 pub mod bytes;
+pub mod crc32c;
 pub mod serialize;
 pub mod cli;
 pub mod pool;

@@ -26,6 +26,7 @@ fn serve_matches_direct_beam_search(gi: Arc<GraphIndex>, ds: &Dataset, k: usize,
                 max_wait: Duration::from_millis(1),
                 search: QueryParams { k, ef, nprobe: 0 },
                 scan_threads: 2,
+                ..Default::default()
             },
         );
         let responses = coord.client.search_many(queries.clone()).unwrap();

@@ -1,0 +1,126 @@
+//! Corrupt-stream property tests for every per-list codec: seeded bit
+//! flips, truncations, length-field lies and pure garbage fed to
+//! `try_decode_into` must produce a structured `Err` or a well-formed
+//! `Ok` — never a panic, an abort, or a hang. Each case runs on a
+//! watchdog thread with a time guard, so an accidental unbounded decode
+//! loop fails the test instead of wedging the suite.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::time::Duration;
+use zann::codecs::{CodecSpec, DecodeScratch, PER_LIST_CODECS};
+use zann::util::Rng;
+
+const TIME_GUARD: Duration = Duration::from_secs(10);
+
+/// Strictly ascending distinct id list + its encoded stream.
+fn encoded_list(codec_name: &str, universe: u32, n: usize, seed: u64) -> (Vec<u32>, Vec<u8>) {
+    let mut rng = Rng::new(seed);
+    let mut ids: Vec<u32> =
+        rng.sample_distinct(universe as u64, n).into_iter().map(|v| v as u32).collect();
+    ids.sort_unstable();
+    let codec = CodecSpec::parse(codec_name).unwrap().id_codec().unwrap();
+    let enc = codec.encode(&ids, universe);
+    (ids, enc.bytes)
+}
+
+/// Run one decode attempt under catch_unwind on a watchdog thread.
+/// Passes iff the decode returns: `Err` with `out` untouched, or `Ok`
+/// with exactly `n` in-universe ids. Panics and hangs fail the case.
+fn check_decode(codec_name: &'static str, bytes: Vec<u8>, universe: u32, n: usize, desc: String) {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        let verdict = catch_unwind(AssertUnwindSafe(|| {
+            let codec = CodecSpec::parse(codec_name).unwrap().id_codec().unwrap();
+            let mut out = Vec::new();
+            let mut scratch = DecodeScratch::default();
+            match codec.try_decode_into(&bytes, universe, n, &mut out, &mut scratch) {
+                Ok(()) => {
+                    assert_eq!(out.len(), n, "Ok but wrong output length");
+                    assert!(out.iter().all(|&v| v < universe), "Ok but out-of-universe id");
+                }
+                Err(_) => {
+                    assert!(out.is_empty(), "Err but output not restored");
+                }
+            }
+        }));
+        let _ = tx.send(verdict.is_ok());
+    });
+    match rx.recv_timeout(TIME_GUARD) {
+        Ok(true) => {}
+        Ok(false) => panic!("{codec_name}: {desc}: decode panicked or broke its contract"),
+        Err(_) => panic!("{codec_name}: {desc}: decode exceeded the {TIME_GUARD:?} guard"),
+    }
+}
+
+#[test]
+fn bit_flips_and_truncations_never_panic_or_hang() {
+    let (universe, n) = (500u32, 80usize);
+    for &codec in &PER_LIST_CODECS {
+        let (_, bytes) = encoded_list(codec, universe, n, 0xC0FFEE);
+        let mut rng = Rng::new(0xF00D);
+        for case in 0..40 {
+            let mut mutant = bytes.clone();
+            if mutant.is_empty() {
+                break;
+            }
+            let pos = rng.below(mutant.len() as u64) as usize;
+            let mask = 1u8 << rng.below(8);
+            mutant[pos] ^= mask;
+            check_decode(codec, mutant, universe, n, format!("flip #{case} at byte {pos}"));
+        }
+        for case in 0..20 {
+            let cut = rng.below(bytes.len() as u64 + 1) as usize;
+            let mutant = bytes[..cut].to_vec();
+            check_decode(codec, mutant, universe, n, format!("truncation #{case} to {cut}"));
+        }
+    }
+}
+
+#[test]
+fn length_field_lies_are_rejected_or_safe() {
+    let (universe, n) = (300u32, 50usize);
+    for &codec in &PER_LIST_CODECS {
+        let (_, bytes) = encoded_list(codec, universe, n, 0xBEEF);
+        // Lie about the list length in both directions, including a
+        // count the universe cannot even hold.
+        for lie_n in [0usize, 1, n - 1, n + 1, 2 * n + 3, universe as usize + 5] {
+            check_decode(
+                codec,
+                bytes.clone(),
+                universe,
+                lie_n,
+                format!("declared n={lie_n} for a stream of {n}"),
+            );
+        }
+        // Lie about the universe: shrink it below the ids actually
+        // stored, and grow it past them.
+        for lie_u in [1u32, universe / 2, universe - 1, universe + 1, u32::MAX] {
+            check_decode(
+                codec,
+                bytes.clone(),
+                lie_u,
+                n,
+                format!("declared universe={lie_u} for streams over {universe}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn garbage_blobs_never_panic_or_hang() {
+    let universe = 1000u32;
+    for &codec in &PER_LIST_CODECS {
+        let mut rng = Rng::new(0xDEAD_2BAD);
+        for case in 0..30 {
+            let len = rng.below(257) as usize;
+            let blob: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            let n = rng.below(64) as usize;
+            check_decode(codec, blob, universe, n, format!("garbage #{case} ({len} bytes, n={n})"));
+        }
+        // The canonical degenerate shapes.
+        check_decode(codec, Vec::new(), universe, 0, "empty blob, n=0".into());
+        check_decode(codec, Vec::new(), universe, 5, "empty blob, n=5".into());
+        check_decode(codec, vec![0u8; 1024], 8, 9, "n exceeds universe".into());
+    }
+}
