@@ -29,8 +29,10 @@ import json, sys
 with open(sys.argv[1]) as f:
     d = json.load(f)
 assert d["bench"] == "search_qps", d.get("bench")
-for key in ("dataset", "n", "nq", "dim", "k", "seed", "results"):
+for key in ("dataset", "n", "nq", "dim", "k", "seed", "env", "results"):
     assert key in d, f"missing top-level key {key}"
+for key in ("rustc", "simd_level", "threads"):
+    assert key in d["env"], f"missing env key {key}"
 assert d["results"], "no result rows"
 for row in d["results"]:
     for key in ("backend", "codec", "nprobe", "threads", "qps", "mean_ms", "p50_ms", "p95_ms"):
@@ -313,6 +315,129 @@ if cargo bench --bench bench_recall -- --n 1000 --nq 0 --out "$DEGEN_RECALL" \
   echo "bench_recall: zero-query run should have exited non-zero"; exit 1
 fi
 test ! -f "$DEGEN_RECALL" || { echo "degenerate run wrote $DEGEN_RECALL"; exit 1; }
+
+echo "== bench_serve smoke (sharded node JSON contract) =="
+# Tiny-scale mixed read/write run over a 4-shard mutable node; validate
+# the documented BENCH_serve.json schema (docs/REPRODUCING.md): workload
+# params, env manifest, shard balance, aggregate + per-tenant stats, the
+# post-overload liveness bit and the snapshot/restore parity stamp.
+SERVE_JSON="BENCH_serve.json"
+cargo bench --bench bench_serve -- \
+  --n 3000 --nq 100 --dim 16 --requests 400 --shards 4 --router kmeans \
+  --codec roc --tenants 3 --theta 0.99 --write-frac 0.1 --clients 2 \
+  --runs 1 --out "$SERVE_JSON"
+python3 - "$SERVE_JSON" <<'EOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    d = json.load(f)
+assert d["bench"] == "serve", d.get("bench")
+for key in ("dataset", "n", "nq", "dim", "seed", "shards", "router", "codec",
+            "tenants", "theta", "write_frac", "requests", "env", "shard_rows",
+            "shard_imbalance", "queue_hwm", "total", "post_ok", "snapshot",
+            "tenants_rows"):
+    assert key in d, f"missing top-level key {key}"
+for key in ("rustc", "simd_level", "threads"):
+    assert key in d["env"], f"missing env key {key}"
+assert d["shards"] == 4 and len(d["shard_rows"]) == 4, d["shard_rows"]
+assert all(r > 0 for r in d["shard_rows"]), f"empty shard: {d['shard_rows']}"
+assert d["shard_imbalance"] >= 1.0, d["shard_imbalance"]
+for row in [d["total"]] + d["tenants_rows"]:
+    for key in ("requests", "ok", "rejected", "timeouts", "failed",
+                "qps", "p50_ms", "p95_ms", "p99_ms"):
+        assert key in row, f"missing stats key {key} in {row}"
+assert d["total"]["ok"] > 0 and d["total"]["qps"] > 0, d["total"]
+assert len(d["tenants_rows"]) == d["tenants"] == 3, d["tenants_rows"]
+assert sum(r["requests"] for r in d["tenants_rows"]) == d["total"]["requests"]
+assert d["post_ok"] is True, "node dead after the measured run"
+assert d["snapshot"]["verified"] is True and d["snapshot"]["queries"] > 0, d["snapshot"]
+print(f"serve JSON ok: {d['total']['ok']} served over {d['shards']} shards, "
+      f"imbalance {d['shard_imbalance']:.2f}, p99 {d['total']['p99_ms']:.3f} ms")
+EOF
+# A zero-request run must exit non-zero before building anything and
+# leave no JSON behind.
+DEGEN_SERVE="$(mktemp -u /tmp/zann_serve_degen.XXXXXX.json)"
+if cargo bench --bench bench_serve -- --n 1000 --requests 0 --out "$DEGEN_SERVE" \
+    >/dev/null 2>&1; then
+  echo "bench_serve: zero-request run should have exited non-zero"; exit 1
+fi
+test ! -f "$DEGEN_SERVE" || { echo "degenerate run wrote $DEGEN_SERVE"; exit 1; }
+
+echo "== admission gate-fires proof (greedy tenant shed, quiet tenant served) =="
+# Zipf-skewed tenants against a fixed per-tenant budget (rate 0 => the
+# token bucket admits exactly --tenant-burst reads per tenant, so the
+# shed counts are deterministic): the greedy head tenant must see
+# nonzero rejections, a well-behaved tail tenant must see none, and the
+# node must still answer afterwards (post_ok).
+OVER_JSON="$(mktemp /tmp/zann_serve_over.XXXXXX.json)"
+cargo bench --bench bench_serve -- \
+  --n 3000 --nq 100 --dim 16 --requests 300 --shards 2 --router hash \
+  --codec roc --tenants 4 --theta 1.3 --write-frac 0.0 --clients 2 \
+  --runs 1 --tenant-burst 60 --tenant-rate 0 --out "$OVER_JSON"
+python3 - "$OVER_JSON" <<'EOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    d = json.load(f)
+rows = {r["tenant"]: r for r in d["tenants_rows"]}
+greedy = rows["t0"]
+assert greedy["rejected"] > 0, f"admission gate never fired: {greedy}"
+assert greedy["ok"] == 60, f"rate=0 budget must admit exactly burst: {greedy}"
+quiet = min(rows.values(), key=lambda r: r["requests"])
+assert quiet["requests"] > 0, rows
+assert quiet["rejected"] == 0, f"well-behaved tenant was shed: {quiet}"
+assert quiet["ok"] == quiet["requests"], quiet
+assert d["total"]["rejected"] == sum(r["rejected"] for r in rows.values())
+assert d["post_ok"] is True, "node dead after overload"
+print(f"admission gate ok: t0 shed {greedy['rejected']}, "
+      f"{quiet['tenant']} fully served ({quiet['ok']}/{quiet['requests']})")
+EOF
+rm -f "$OVER_JSON"
+
+echo "== sharded scatter-gather == single index (build -> info -> serve cmp) =="
+# The tentpole end-to-end identity: a 1-shard and a 4-shard container
+# built from the same vectors must serve byte-identical
+# (query, rank, distance-bits, id) dumps — scatter-gather with the
+# (distance, id)-pinned merge is indistinguishable from one big index.
+SHARD_DIR="$(mktemp -d /tmp/zann_shard.XXXXXX)"
+cargo run --release --bin zann -- build --out "$SHARD_DIR/s1.zann" \
+  --backend sharded --shards 1 --router hash --codec roc --n 2000 --dim 16 --k 32
+cargo run --release --bin zann -- build --out "$SHARD_DIR/s4.zann" \
+  --backend sharded --shards 4 --router kmeans --codec roc --n 2000 --dim 16 --k 32
+cargo run --release --bin zann -- info "$SHARD_DIR/s4.zann" | tee "$SHARD_DIR/info_s4.txt"
+grep -q "kind=sharded" "$SHARD_DIR/info_s4.txt"
+grep -q "router=kmeans shards=4" "$SHARD_DIR/info_s4.txt"
+test "$(grep -c '^shard [0-9]*: zann-index' "$SHARD_DIR/info_s4.txt")" -eq 4 \
+  || { echo "info did not print one line per shard"; exit 1; }
+for IDX in s1 s4; do
+  cargo run --release --bin zann -- serve "$SHARD_DIR/$IDX.zann" \
+    --nq 64 --nprobe 8 --dump-results "$SHARD_DIR/$IDX.txt" \
+    --metrics-json "$SHARD_DIR/$IDX.metrics.json" | tee "$SHARD_DIR/$IDX.log"
+  grep -q "verified 64/64" "$SHARD_DIR/$IDX.log"
+done
+cmp "$SHARD_DIR/s1.txt" "$SHARD_DIR/s4.txt" \
+  || { echo "sharded scatter-gather diverged from the single index"; exit 1; }
+test -s "$SHARD_DIR/s1.txt" || { echo "empty sharded result dump"; exit 1; }
+echo "1-shard vs 4-shard result dumps identical"
+# serve --metrics-json: machine-readable coordinator counters including
+# the queue-depth high-water mark.
+python3 - "$SHARD_DIR/s4.metrics.json" <<'EOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    m = json.load(f)
+for key in ("queries", "batches", "p50_us", "p99_us", "timeouts", "rejections",
+            "worker_panics", "queue_hwm"):
+    assert key in m, f"missing metrics key {key}"
+assert m["queries"] >= 64, m
+assert m["queue_hwm"] > 0, m
+print(f"serve metrics ok: {m['queries']} queries, queue_hwm={m['queue_hwm']}")
+EOF
+# info over a *directory* of shard containers: aggregate + per-shard.
+mkdir "$SHARD_DIR/fleet"
+cp "$SHARD_DIR/s1.zann" "$SHARD_DIR/fleet/a.zann"
+cp "$SHARD_DIR/s4.zann" "$SHARD_DIR/fleet/b.zann"
+cargo run --release --bin zann -- info "$SHARD_DIR/fleet" | tee "$SHARD_DIR/info_dir.txt"
+grep -q "2 shard containers" "$SHARD_DIR/info_dir.txt"
+grep -q "n=4000" "$SHARD_DIR/info_dir.txt"
+rm -rf "$SHARD_DIR"
 
 echo "== rustfmt =="
 cargo fmt --all -- --check

@@ -1,0 +1,24 @@
+//! Sharded-serving bench: a mutable serve node under mixed read/write
+//! traffic with zipf-skewed tenants and write placement, measured with the
+//! same workload/timing module as `bench_search_qps` (warm-up pass,
+//! best-of-`--runs`, seeded RNG) and written to `BENCH_serve.json`.
+//!
+//! `cargo bench --bench bench_serve -- [--full] [--n N] [--nq Q]
+//!  [--requests R] [--shards S] [--router hash|kmeans] [--codec C]
+//!  [--tenants T] [--theta Z] [--write-frac F] [--clients C]
+//!  [--tenant-burst B] [--tenant-rate R] [--queue-depth D]
+//!  [--deadline-ms MS] [--runs R] [--out PATH]`
+//!
+//! Bare invocations run at a tiny smoke scale (see `smoke.rs`); pass
+//! `--n`/`--full` for comparable runs (docs/REPRODUCING.md).
+
+#[path = "smoke.rs"]
+mod smoke;
+
+fn main() {
+    let args = zann::util::cli::Args::parse(smoke::args_with_tiny_default(
+        &["--full", "--n", "--nq"],
+        &["--n", "4000", "--nq", "100", "--requests", "400", "--runs", "1"],
+    ));
+    zann::eval::bench_entries::serve(&args);
+}

@@ -30,6 +30,9 @@ pub enum IndexKind {
     Hnsw,
     /// Mutable multi-segment IVF ([`crate::dynamic::DynamicIvf`]).
     DynamicIvf,
+    /// Multi-shard container served by [`crate::serve::ShardedIndex`]:
+    /// N embedded shard containers behind one router + merge.
+    Sharded,
 }
 
 impl IndexKind {
@@ -39,6 +42,7 @@ impl IndexKind {
             IndexKind::Nsg => "nsg",
             IndexKind::Hnsw => "hnsw",
             IndexKind::DynamicIvf => "dynamic-ivf",
+            IndexKind::Sharded => "sharded",
         }
     }
 }
@@ -127,7 +131,7 @@ impl IndexStats {
             IndexKind::Nsg | IndexKind::Hnsw => {
                 self.link_bits as f64 / (self.edges.max(1)) as f64
             }
-            IndexKind::Ivf | IndexKind::DynamicIvf => {
+            IndexKind::Ivf | IndexKind::DynamicIvf | IndexKind::Sharded => {
                 self.id_bits as f64 / (self.n.max(1)) as f64
             }
         }

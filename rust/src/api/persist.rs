@@ -4,7 +4,7 @@
 //! ```text
 //! byte 0..4   magic  b"ZANN"
 //! byte 4..6   format version (u16 LE, currently 2)
-//! byte 6      index kind (1 = IVF, 2 = graph, 3 = dynamic IVF)
+//! byte 6      index kind (1 = IVF, 2 = graph, 3 = dynamic IVF, 4 = sharded)
 //! byte 7      reserved (0)
 //! then until EOF, sections:
 //!   v1: [tag: 4 ascii bytes] [payload length: u64 LE] [payload]
@@ -56,6 +56,12 @@ pub const KIND_GRAPH: u8 = 2;
 /// pre-existing single-segment `KIND_IVF` containers are unaffected and
 /// keep opening byte-for-byte.
 pub const KIND_DYNAMIC: u8 = 3;
+/// Kind tag: sharded multi-index container — a routing table plus N
+/// embedded shard containers, each stored verbatim (see
+/// [`crate::serve::persist`]). The embedded containers keep their own
+/// per-section CRCs, so shard payloads are covered twice: once inside
+/// the embedded container and once by the enclosing section CRC.
+pub const KIND_SHARDED: u8 = 4;
 
 /// Start a container file: magic + version + kind + reserved byte.
 pub fn file_header(kind: u8) -> Vec<u8> {
@@ -229,8 +235,28 @@ pub fn open_bytes(buf: Vec<u8>) -> Result<Box<dyn AnnIndex>> {
         KIND_IVF => Ok(Box::new(IvfIndex::from_container(&c)?)),
         KIND_GRAPH => Ok(Box::new(GraphIndex::from_container(&c)?)),
         KIND_DYNAMIC => Ok(Box::new(crate::dynamic::persist::from_container(&c)?)),
+        KIND_SHARDED => Ok(Box::new(crate::serve::persist::from_container(&c)?)),
         other => bail!("unknown index kind tag {other}"),
     }
+}
+
+/// Typed open for sharded multi-index containers (`zann info`, the serve
+/// node and tests need the concrete shard list back).
+pub fn open_sharded_bytes(buf: Vec<u8>) -> Result<crate::serve::ShardedIndex> {
+    let region = Bytes::from_vec(buf);
+    let c = Container::parse(&region)?;
+    ensure!(
+        c.kind == KIND_SHARDED,
+        "container holds kind {} (expected a sharded index)",
+        c.kind
+    );
+    crate::serve::persist::from_container(&c)
+}
+
+/// Open a saved sharded index from `path`.
+pub fn open_sharded(path: &Path) -> Result<crate::serve::ShardedIndex> {
+    let buf = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    open_sharded_bytes(buf).with_context(|| format!("opening {}", path.display()))
 }
 
 /// Typed open for IVF containers (tests, tooling that needs the concrete

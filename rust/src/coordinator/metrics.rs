@@ -1,4 +1,8 @@
-//! Serving metrics: query/batch counters and a latency histogram.
+//! Serving metrics: query/batch counters, a latency histogram and the
+//! admission-queue depth high-water mark — exposed both as the
+//! human-readable [`Metrics::summary`] line and machine-readable JSON
+//! ([`Metrics::metrics_json`]) so benches and CI gates parse a contract,
+//! not a log format.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -13,6 +17,11 @@ pub struct Metrics {
     timeouts: AtomicU64,
     rejections: AtomicU64,
     worker_panics: AtomicU64,
+    /// Requests currently sitting in the admission queue (enqueued, not
+    /// yet pulled by the batcher).
+    queue_depth: AtomicU64,
+    /// High-water mark of `queue_depth` over the coordinator's lifetime.
+    queue_hwm: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -48,6 +57,22 @@ impl Metrics {
         self.worker_panics.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A request was accepted into the admission queue. Updates the
+    /// queue-depth high-water mark.
+    pub fn record_enqueue(&self) {
+        let depth = self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.queue_hwm.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// The batcher pulled a request off the admission queue.
+    pub fn record_dequeue(&self) {
+        // Saturating: a respawned batcher may drain requests enqueued
+        // before a mid-batch panic reset its view of the world.
+        let _ = self.queue_depth.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+            Some(d.saturating_sub(1))
+        });
+    }
+
     pub fn queries(&self) -> u64 {
         self.queries.load(Ordering::Relaxed)
     }
@@ -66,6 +91,11 @@ impl Metrics {
 
     pub fn worker_panics(&self) -> u64 {
         self.worker_panics.load(Ordering::Relaxed)
+    }
+
+    /// Deepest the admission queue ever got (0 when nothing ever waited).
+    pub fn queue_depth_hwm(&self) -> u64 {
+        self.queue_hwm.load(Ordering::Relaxed)
     }
 
     pub fn pjrt_fraction(&self) -> f64 {
@@ -92,7 +122,7 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "queries={} batches={} mean_fill={:.1} pjrt={:.0}% p50={}us p95={}us p99={}us \
-             timeouts={} rejections={} worker_panics={}",
+             timeouts={} rejections={} worker_panics={} queue_hwm={}",
             self.queries(),
             self.batches(),
             self.mean_batch_fill(),
@@ -103,6 +133,29 @@ impl Metrics {
             self.timeouts(),
             self.rejections(),
             self.worker_panics(),
+            self.queue_depth_hwm(),
+        )
+    }
+
+    /// Machine-readable view of [`Metrics::summary`] — the same counters
+    /// as one JSON object, so `zann serve --metrics-json` and the serve
+    /// bench emit a contract instead of making CI scrape the summary line.
+    pub fn metrics_json(&self) -> String {
+        format!(
+            "{{\"queries\": {}, \"batches\": {}, \"mean_batch_fill\": {:.3}, \
+             \"pjrt_fraction\": {:.6}, \"p50_us\": {}, \"p95_us\": {}, \"p99_us\": {}, \
+             \"timeouts\": {}, \"rejections\": {}, \"worker_panics\": {}, \"queue_hwm\": {}}}",
+            self.queries(),
+            self.batches(),
+            self.mean_batch_fill(),
+            self.pjrt_fraction(),
+            self.latency_percentile_us(50.0),
+            self.latency_percentile_us(95.0),
+            self.latency_percentile_us(99.0),
+            self.timeouts(),
+            self.rejections(),
+            self.worker_panics(),
+            self.queue_depth_hwm(),
         )
     }
 }
@@ -148,5 +201,55 @@ mod tests {
         let m = Metrics::default();
         assert_eq!(m.latency_percentile_us(99.0), 0);
         assert_eq!(m.pjrt_fraction(), 0.0);
+        assert_eq!(m.queue_depth_hwm(), 0);
+    }
+
+    #[test]
+    fn queue_hwm_tracks_peak_not_current_depth() {
+        let m = Metrics::default();
+        m.record_enqueue();
+        m.record_enqueue();
+        m.record_enqueue();
+        m.record_dequeue();
+        m.record_dequeue();
+        assert_eq!(m.queue_depth_hwm(), 3, "hwm is the peak, not the current depth");
+        m.record_enqueue();
+        assert_eq!(m.queue_depth_hwm(), 3, "re-filling below the peak leaves the hwm");
+        // Saturation: extra dequeues (batcher respawn) never underflow.
+        for _ in 0..10 {
+            m.record_dequeue();
+        }
+        m.record_enqueue();
+        assert_eq!(m.queue_depth_hwm(), 3);
+        assert!(m.summary().contains("queue_hwm=3"));
+    }
+
+    #[test]
+    fn metrics_json_is_wellformed_and_complete() {
+        let m = Metrics::default();
+        m.record_query(Duration::from_micros(120), false);
+        m.record_batch(1);
+        m.record_timeout();
+        m.record_rejection();
+        m.record_enqueue();
+        let j = m.metrics_json();
+        for key in [
+            "\"queries\"",
+            "\"batches\"",
+            "\"mean_batch_fill\"",
+            "\"pjrt_fraction\"",
+            "\"p50_us\"",
+            "\"p95_us\"",
+            "\"p99_us\"",
+            "\"timeouts\"",
+            "\"rejections\"",
+            "\"worker_panics\"",
+            "\"queue_hwm\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in {j}");
+        }
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert!(j.contains("\"rejections\": 1") && j.contains("\"queue_hwm\": 1"), "{j}");
     }
 }

@@ -121,18 +121,48 @@ pub struct CoordinatorClient {
     metrics: Arc<Metrics>,
 }
 
+/// Outcome of a non-blocking [`CoordinatorClient::submit`]: either the
+/// request was queued (await the receiver) or it was answered on the
+/// spot (a full admission queue ⇒ `Overloaded`). The scatter-gather
+/// serve node submits to every shard first, then collects — no shard
+/// blocks another's submission.
+pub enum Submitted {
+    Queued(mpsc::Receiver<Response>),
+    Done(Response),
+}
+
+impl Submitted {
+    /// Block until the response is available. A queued request whose
+    /// coordinator died resolves to an error, never a hang.
+    pub fn wait(self) -> Result<Response> {
+        match self {
+            Submitted::Queued(rx) => {
+                rx.recv().map_err(|_| anyhow::anyhow!("coordinator dropped reply"))
+            }
+            Submitted::Done(r) => Ok(r),
+        }
+    }
+}
+
 impl CoordinatorClient {
-    /// Blocking search round-trip. A full admission queue is a normal
+    /// Non-blocking submission: enqueue the request and return without
+    /// waiting for the answer. A full admission queue is a normal
     /// (`Overloaded`) response, not an error — errors mean the
     /// coordinator is gone.
-    pub fn search(&self, query: Vec<f32>) -> Result<Response> {
+    pub fn submit(&self, query: Vec<f32>) -> Result<Submitted> {
         let submitted = Instant::now();
         let (reply, rx) = mpsc::channel();
         match self.tx.try_send(Request { query, reply, submitted }) {
-            Ok(()) => rx.recv().map_err(|_| anyhow::anyhow!("coordinator dropped reply")),
+            Ok(()) => {
+                self.metrics.record_enqueue();
+                Ok(Submitted::Queued(rx))
+            }
             Err(mpsc::TrySendError::Full(_)) => {
                 self.metrics.record_rejection();
-                Ok(Response::degraded(ResponseStatus::Overloaded, submitted.elapsed()))
+                Ok(Submitted::Done(Response::degraded(
+                    ResponseStatus::Overloaded,
+                    submitted.elapsed(),
+                )))
             }
             Err(mpsc::TrySendError::Disconnected(_)) => {
                 Err(anyhow::anyhow!("coordinator stopped"))
@@ -140,41 +170,18 @@ impl CoordinatorClient {
         }
     }
 
+    /// Blocking search round-trip ([`CoordinatorClient::submit`] + wait).
+    pub fn search(&self, query: Vec<f32>) -> Result<Response> {
+        self.submit(query)?.wait()
+    }
+
     /// Fire-and-collect a whole batch (examples / benches). Requests that
     /// bounce off the full queue come back `Overloaded` in their slot, so
     /// the output stays index-aligned with `queries`.
     pub fn search_many(&self, queries: Vec<Vec<f32>>) -> Result<Vec<Response>> {
-        enum Pending {
-            Waiting(mpsc::Receiver<Response>),
-            Done(Response),
-        }
-        let mut pending = Vec::with_capacity(queries.len());
-        for q in queries {
-            let submitted = Instant::now();
-            let (reply, rx) = mpsc::channel();
-            match self.tx.try_send(Request { query: q, reply, submitted }) {
-                Ok(()) => pending.push(Pending::Waiting(rx)),
-                Err(mpsc::TrySendError::Full(_)) => {
-                    self.metrics.record_rejection();
-                    pending.push(Pending::Done(Response::degraded(
-                        ResponseStatus::Overloaded,
-                        submitted.elapsed(),
-                    )));
-                }
-                Err(mpsc::TrySendError::Disconnected(_)) => {
-                    return Err(anyhow::anyhow!("coordinator stopped"))
-                }
-            }
-        }
-        pending
-            .into_iter()
-            .map(|p| match p {
-                Pending::Waiting(rx) => {
-                    rx.recv().map_err(|_| anyhow::anyhow!("reply dropped"))
-                }
-                Pending::Done(r) => Ok(r),
-            })
-            .collect()
+        let pending: Result<Vec<Submitted>> =
+            queries.into_iter().map(|q| self.submit(q)).collect();
+        pending?.into_iter().map(Submitted::wait).collect()
     }
 }
 
@@ -277,7 +284,10 @@ fn batcher_loop(
         }
         // Block for the first request (with timeout so `stop` is seen).
         match rx.recv_timeout(Duration::from_millis(50)) {
-            Ok(r) => batch.push(r),
+            Ok(r) => {
+                metrics.record_dequeue();
+                batch.push(r);
+            }
             Err(mpsc::RecvTimeoutError::Timeout) => continue,
             Err(mpsc::RecvTimeoutError::Disconnected) => return,
         }
@@ -289,7 +299,10 @@ fn batcher_loop(
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
+                Ok(r) => {
+                    metrics.record_dequeue();
+                    batch.push(r);
+                }
                 Err(_) => break,
             }
         }
@@ -634,6 +647,7 @@ mod tests {
         assert!(served >= 1, "the queue admits at least the first request");
         assert!(rejected >= 5, "a burst of 8 into depth-1 must mostly bounce, got {rejected}");
         assert!(coord.metrics.rejections() >= rejected as u64);
+        assert!(coord.metrics.queue_depth_hwm() >= 1, "something waited in the queue");
         coord.stop();
     }
 

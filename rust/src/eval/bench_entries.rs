@@ -274,13 +274,29 @@ fn default_bench_json_path() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_search.json")
 }
 
+/// One `"env": {...}` line shared by the bench JSON emitters, so every
+/// report carries the same environment-manifest schema.
+fn env_json_line(env: &recall::EnvManifest) -> String {
+    format!(
+        "  \"env\": {{\"rustc\": \"{}\", \"pkg_version\": \"{}\", \"target_arch\": \"{}\", \
+         \"simd_level\": \"{}\", \"simd_override\": \"{}\", \"threads\": {}}},\n",
+        jesc(env.rustc),
+        jesc(env.pkg_version),
+        env.target_arch,
+        env.simd_level,
+        jesc(&env.simd_override),
+        env.threads
+    )
+}
+
 /// Serialize QPS rows to the `BENCH_search.json` schema (see
-/// docs/REPRODUCING.md): top-level run parameters plus one object per
-/// (backend, codec, nprobe, threads) cell.
+/// docs/REPRODUCING.md): top-level run parameters, environment manifest,
+/// plus one object per (backend, codec, nprobe, threads) cell.
 fn qps_json(
     scale: &experiments::Scale,
     dataset: &str,
     k: usize,
+    env: &recall::EnvManifest,
     rows: &[experiments::QpsRow],
 ) -> String {
     let mut s = String::new();
@@ -290,6 +306,7 @@ fn qps_json(
          \"nq\": {},\n  \"dim\": {},\n  \"k\": {},\n  \"seed\": {},\n",
         scale.n, scale.nq, scale.dim, k, scale.seed
     ));
+    s.push_str(&env_json_line(env));
     s.push_str("  \"results\": [\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
@@ -401,7 +418,7 @@ pub fn search_qps(args: &Args) {
         );
         std::process::exit(1);
     }
-    let json = qps_json(&scale, kind.name(), k, &rows);
+    let json = qps_json(&scale, kind.name(), k, &recall::EnvManifest::capture(scale.threads), &rows);
     match std::fs::write(&out_path, &json) {
         Ok(()) => println!("wrote {}", out_path.display()),
         Err(e) => eprintln!("failed to write {}: {e}", out_path.display()),
@@ -719,16 +736,7 @@ fn recall_json(rep: &recall::RecallReport) -> String {
         rep.dataset, rep.n, rep.nq, rep.dim, rep.seed, rep.clusters, rep.topk,
         rep.churn_frac, rep.corrupt_ids
     ));
-    s.push_str(&format!(
-        "  \"env\": {{\"rustc\": \"{}\", \"pkg_version\": \"{}\", \"target_arch\": \"{}\", \
-         \"simd_level\": \"{}\", \"simd_override\": \"{}\", \"threads\": {}}},\n",
-        jesc(rep.env.rustc),
-        jesc(rep.env.pkg_version),
-        rep.env.target_arch,
-        rep.env.simd_level,
-        jesc(&rep.env.simd_override),
-        rep.env.threads
-    ));
+    s.push_str(&env_json_line(&rep.env));
     s.push_str("  \"results\": [\n");
     for (i, p) in rep.points.iter().enumerate() {
         s.push_str(&format!(
@@ -943,6 +951,354 @@ pub fn recall(args: &Args) {
     }
 }
 
+fn default_serve_json_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("BENCH_serve.json")
+}
+
+/// Everything `BENCH_serve.json` records about one serve-bench run.
+struct ServeReport {
+    dataset: String,
+    n: usize,
+    nq: usize,
+    dim: usize,
+    seed: u64,
+    shards: usize,
+    router: String,
+    codec: String,
+    tenants: usize,
+    theta: f64,
+    write_frac: f64,
+    requests: usize,
+    k: usize,
+    nprobe: usize,
+    runs: usize,
+    clients: usize,
+    tenant_burst: Option<u64>,
+    tenant_rate: f64,
+    queue_depth: usize,
+    deadline_ms: Option<u64>,
+    env: recall::EnvManifest,
+    shard_rows: Vec<usize>,
+    queue_hwm: u64,
+    total: crate::eval::workload::ServeStats,
+    post_ok: bool,
+    snapshot_queries: usize,
+    per_tenant: Vec<(String, crate::eval::workload::ServeStats)>,
+}
+
+impl ServeReport {
+    /// Hottest shard's rows over the mean — 1.0 is perfectly balanced.
+    fn shard_imbalance(&self) -> f64 {
+        let max = self.shard_rows.iter().copied().max().unwrap_or(0) as f64;
+        let mean = self.shard_rows.iter().sum::<usize>() as f64
+            / self.shard_rows.len().max(1) as f64;
+        max / mean.max(1e-12)
+    }
+}
+
+fn serve_stats_json(s: &crate::eval::workload::ServeStats) -> String {
+    format!(
+        "{{\"requests\": {}, \"ok\": {}, \"rejected\": {}, \"timeouts\": {}, \"failed\": {}, \
+         \"qps\": {:.3}, \"p50_ms\": {:.6}, \"p95_ms\": {:.6}, \"p99_ms\": {:.6}}}",
+        s.requests, s.ok, s.rejected, s.timeouts, s.failed, s.qps, s.p50_ms, s.p95_ms, s.p99_ms
+    )
+}
+
+/// Serialize a serve report to the `BENCH_serve.json` schema
+/// (docs/REPRODUCING.md): run/workload parameters, environment manifest,
+/// shard balance, aggregate and per-tenant outcome rows, plus the
+/// post-overload liveness and snapshot/restore verification bits.
+fn serve_json(rep: &ServeReport) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!(
+        "  \"bench\": \"serve\",\n  \"dataset\": \"{}\",\n  \"n\": {},\n  \"nq\": {},\n  \
+         \"dim\": {},\n  \"seed\": {},\n  \"shards\": {},\n  \"router\": \"{}\",\n  \
+         \"codec\": \"{}\",\n  \"tenants\": {},\n  \"theta\": {:.4},\n  \
+         \"write_frac\": {:.4},\n  \"requests\": {},\n  \"k\": {},\n  \"nprobe\": {},\n  \
+         \"runs\": {},\n  \"clients\": {},\n",
+        rep.dataset,
+        rep.n,
+        rep.nq,
+        rep.dim,
+        rep.seed,
+        rep.shards,
+        jesc(&rep.router),
+        jesc(&rep.codec),
+        rep.tenants,
+        rep.theta,
+        rep.write_frac,
+        rep.requests,
+        rep.k,
+        rep.nprobe,
+        rep.runs,
+        rep.clients
+    ));
+    s.push_str(&format!(
+        "  \"tenant_burst\": {},\n  \"tenant_rate\": {:.4},\n  \"queue_depth\": {},\n  \
+         \"deadline_ms\": {},\n",
+        rep.tenant_burst.map_or("null".into(), |b| b.to_string()),
+        rep.tenant_rate,
+        rep.queue_depth,
+        rep.deadline_ms.map_or("null".into(), |d| d.to_string()),
+    ));
+    s.push_str(&env_json_line(&rep.env));
+    s.push_str(&format!(
+        "  \"shard_rows\": [{}],\n  \"shard_imbalance\": {:.4},\n  \"queue_hwm\": {},\n",
+        rep.shard_rows.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(", "),
+        rep.shard_imbalance(),
+        rep.queue_hwm
+    ));
+    s.push_str(&format!("  \"total\": {},\n", serve_stats_json(&rep.total)));
+    s.push_str(&format!(
+        "  \"post_ok\": {},\n  \"snapshot\": {{\"shard\": 0, \"verified\": true, \
+         \"queries\": {}}},\n",
+        rep.post_ok, rep.snapshot_queries
+    ));
+    s.push_str("  \"tenants_rows\": [\n");
+    for (i, (tenant, st)) in rep.per_tenant.iter().enumerate() {
+        let obj = serve_stats_json(st);
+        s.push_str(&format!(
+            "    {{\"tenant\": \"{}\", {}{}\n",
+            jesc(tenant),
+            &obj[1..], // splice the tenant key into the stats object
+            if i + 1 == rep.per_tenant.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Why a serve run would produce a degenerate `BENCH_serve.json` (`None`
+/// when the report is sound). Called before the node is built (`total:
+/// None` — a zero-request run must exit before any clustering) and after
+/// the measured pass.
+fn degenerate_serve_reason(
+    requests: usize,
+    total: Option<&crate::eval::workload::ServeStats>,
+) -> Option<String> {
+    if requests == 0 {
+        return Some("zero requests scheduled (--requests 0)".into());
+    }
+    let total = total?;
+    if total.ok == 0 {
+        return Some(format!(
+            "no request was served (ok=0 of {}; all shed or failed)",
+            total.requests
+        ));
+    }
+    if total.qps <= 0.0 || total.qps.is_nan() {
+        return Some(format!("qps={} means no query actually ran", total.qps));
+    }
+    None
+}
+
+/// Sharded-serving bench: a mutable [`crate::serve::ServeNode`] under
+/// mixed read/write traffic with zipf-skewed tenants and write placement,
+/// measured with the shared workload module (warm pass + best-of-`runs`,
+/// admission refilled between passes). Writes `BENCH_serve.json`
+/// (override with `--out`): per-tenant QPS and latency percentiles, shed
+/// counts, shard imbalance, queue high-water mark, a post-overload
+/// liveness probe and a snapshot/restore parity verification of shard 0.
+/// Refuses to write on degenerate runs (zero requests, nothing served).
+pub fn serve(args: &Args) {
+    let scale = scale_from(args);
+    let requests = args.usize("requests", 2000);
+    let out_path = match args.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => default_serve_json_path(),
+    };
+    if let Some(reason) = degenerate_serve_reason(requests, None) {
+        eprintln!("bench-serve: refusing to write {}: {reason}", out_path.display());
+        std::process::exit(1);
+    }
+    let kind = datasets_from(args)[0];
+    let shards = args.usize("shards", 4).max(1);
+    let router = match crate::serve::RouterKind::parse(args.get_or("router", "kmeans")) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("bench-serve: {e}");
+            std::process::exit(2);
+        }
+    };
+    let codec = args.get_or("codec", "roc").to_string();
+    match CodecSpec::parse(&codec) {
+        Ok(spec) if spec.is_per_list() => {}
+        Ok(spec) => {
+            eprintln!(
+                "bench-serve: --codec {:?} is not a per-list codec (need one of: {})",
+                spec.name(),
+                crate::codecs::PER_LIST_CODECS.join(", ")
+            );
+            std::process::exit(2);
+        }
+        Err(e) => {
+            eprintln!("bench-serve: {e}");
+            std::process::exit(2);
+        }
+    }
+    let clusters = args.usize("k", 1024.min((scale.n / 16).max(4)));
+    let tenants = args.usize("tenants", 4).max(1);
+    let theta = args.f64("theta", 0.99);
+    let write_frac = args.f64("write-frac", 0.1).clamp(0.0, 1.0);
+    let k = args.usize("topk", 10);
+    let nprobe = args.usize("nprobe", 16);
+    let runs = args.usize("runs", 3);
+    let clients = args.usize("clients", 4).max(1);
+    let tenant_burst: Option<u64> = args.get("tenant-burst").map(|v| {
+        v.parse().unwrap_or_else(|_| {
+            eprintln!("bench-serve: bad --tenant-burst {v:?}");
+            std::process::exit(2);
+        })
+    });
+    let tenant_rate = args.f64("tenant-rate", 0.0);
+    let queue_depth = args.usize("queue-depth", 1024);
+    let deadline_ms: Option<u64> = args.get("deadline-ms").map(|v| {
+        v.parse().unwrap_or_else(|_| {
+            eprintln!("bench-serve: bad --deadline-ms {v:?}");
+            std::process::exit(2);
+        })
+    });
+    println!(
+        "== serve: N={}, {} shards ({} router, codec {codec}), {requests} requests, \
+         {tenants} tenants (theta={theta}), write_frac={write_frac}, clients={clients}, \
+         runs={runs} ==",
+        scale.n,
+        shards,
+        args.get_or("router", "kmeans"),
+    );
+    let ds = crate::datasets::generate(kind, scale.n, scale.nq, scale.dim, scale.seed);
+    let params = crate::serve::ShardedBuildParams {
+        shards,
+        router,
+        ivf: crate::index::IvfBuildParams {
+            k: clusters,
+            seed: scale.seed,
+            threads: scale.threads,
+            id_codec: codec.clone(),
+            vectors: VectorMode::Flat,
+            ..Default::default()
+        },
+    };
+    let node_cfg = crate::serve::NodeConfig {
+        serve: crate::coordinator::ServeConfig {
+            search: crate::api::QueryParams { k, nprobe, ef: nprobe },
+            scan_threads: (scale.threads / shards).max(1),
+            queue_depth,
+            deadline: deadline_ms.map(std::time::Duration::from_millis),
+            ..Default::default()
+        },
+        tenants: tenant_burst.map(|burst| crate::serve::TenantPolicy { burst, rate: tenant_rate }),
+        ..Default::default()
+    };
+    let node = match crate::serve::ServeNode::start_mutable(
+        &ds.data,
+        ds.dim,
+        &params,
+        crate::dynamic::CompactionPolicy::default(),
+        node_cfg,
+    ) {
+        Ok(n) => n,
+        Err(e) => {
+            eprintln!("bench-serve: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let schedule = crate::eval::workload::serve_schedule(
+        requests, tenants, theta, write_frac, &ds.queries, ds.dim, scale.seed,
+    );
+    let (outcomes, wall) = crate::eval::workload::run_serve(&node, &schedule, clients, runs);
+    let total = crate::eval::workload::aggregate_serve(&outcomes, None, wall);
+    let per_tenant: Vec<(String, crate::eval::workload::ServeStats)> = (0..tenants)
+        .map(|t| {
+            (format!("t{t}"), crate::eval::workload::aggregate_serve(&outcomes, Some(t), wall))
+        })
+        .collect();
+    // The node must still answer after any shedding the workload caused.
+    let post_ok = node.search_raw(&ds.queries[..ds.dim]).map(|r| r.is_ok()).unwrap_or(false);
+    // Snapshot/restore of shard 0 with search-parity verification — the
+    // replication path exercised on every bench run, not just in tests.
+    let parity_n = ds.nq.min(16);
+    let snapshot_queries = match node
+        .snapshot_shard(0)
+        .and_then(|snap| node.restore_shard(0, &snap, &ds.queries[..parity_n * ds.dim]))
+    {
+        Ok(nq) => nq,
+        Err(e) => {
+            eprintln!("bench-serve: snapshot/restore verification failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    let shard_rows = node.shard_rows();
+    let queue_hwm = node.queue_hwm();
+    println!("{}", node.metrics_summary());
+    node.stop();
+
+    let mut t = Table::new(&[
+        "tenant", "requests", "ok", "rejected", "timeouts", "failed", "QPS", "p50 ms",
+        "p95 ms", "p99 ms",
+    ]);
+    for (name, st) in
+        std::iter::once(&("all".to_string(), total.clone())).chain(per_tenant.iter())
+    {
+        t.row(vec![
+            name.clone(),
+            st.requests.to_string(),
+            st.ok.to_string(),
+            st.rejected.to_string(),
+            st.timeouts.to_string(),
+            st.failed.to_string(),
+            fmt3(st.qps),
+            fmt3(st.p50_ms),
+            fmt3(st.p95_ms),
+            fmt3(st.p99_ms),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "shard rows: {shard_rows:?} (imbalance max/mean), queue_hwm={queue_hwm}, \
+         post_ok={post_ok}, snapshot parity queries={snapshot_queries}"
+    );
+    if let Some(reason) = degenerate_serve_reason(requests, Some(&total)) {
+        eprintln!("bench-serve: refusing to write {}: {reason}", out_path.display());
+        std::process::exit(1);
+    }
+    let rep = ServeReport {
+        dataset: kind.name().to_string(),
+        n: scale.n,
+        nq: scale.nq,
+        dim: scale.dim,
+        seed: scale.seed,
+        shards,
+        router: args.get_or("router", "kmeans").to_string(),
+        codec,
+        tenants,
+        theta,
+        write_frac,
+        requests,
+        k,
+        nprobe,
+        runs,
+        clients,
+        tenant_burst,
+        tenant_rate,
+        queue_depth,
+        deadline_ms,
+        env: recall::EnvManifest::capture(scale.threads),
+        shard_rows,
+        queue_hwm,
+        total,
+        post_ok,
+        snapshot_queries,
+        per_tenant,
+    };
+    let json = serve_json(&rep);
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {}", out_path.display()),
+        Err(e) => eprintln!("failed to write {}: {e}", out_path.display()),
+    }
+}
+
 pub fn fig3(args: &Args) {
     let scale = scale_from(args);
     println!("== Figure 3: cluster-conditioned PQ code compression (8 bits uncompressed) ==");
@@ -990,11 +1346,12 @@ mod tests {
                 p95_ms: 2.9,
             },
         ];
-        let s = qps_json(&scale, "deep-like", 16, &rows);
+        let s = qps_json(&scale, "deep-like", 16, &recall::EnvManifest::capture(2), &rows);
         for key in [
             "\"bench\"", "\"search_qps\"", "\"dataset\"", "\"n\"", "\"nq\"", "\"dim\"",
             "\"k\"", "\"results\"", "\"backend\"", "\"codec\"", "\"nprobe\"", "\"threads\"",
-            "\"qps\"", "\"mean_ms\"", "\"p50_ms\"", "\"p95_ms\"",
+            "\"qps\"", "\"mean_ms\"", "\"p50_ms\"", "\"p95_ms\"", "\"env\"", "\"rustc\"",
+            "\"simd_level\"",
         ] {
             assert!(s.contains(key), "missing {key} in\n{s}");
         }
@@ -1032,6 +1389,95 @@ mod tests {
         let msg = degenerate_qps_reason(100, &[qps_row(12.5), qps_row(0.0)]).expect("qps=0");
         assert!(msg.contains("qps=0"), "{msg}");
         assert!(degenerate_qps_reason(100, &[qps_row(f64::NAN)]).is_some());
+    }
+
+    fn serve_stats(ok: u64, rejected: u64, qps: f64) -> crate::eval::workload::ServeStats {
+        crate::eval::workload::ServeStats {
+            requests: ok + rejected,
+            ok,
+            rejected,
+            timeouts: 0,
+            failed: 0,
+            qps,
+            p50_ms: 0.4,
+            p95_ms: 0.9,
+            p99_ms: 1.2,
+        }
+    }
+
+    #[test]
+    fn serve_json_contract() {
+        let rep = ServeReport {
+            dataset: "deep-like".into(),
+            n: 4000,
+            nq: 100,
+            dim: 16,
+            seed: 42,
+            shards: 4,
+            router: "kmeans".into(),
+            codec: "roc".into(),
+            tenants: 3,
+            theta: 1.2,
+            write_frac: 0.1,
+            requests: 200,
+            k: 10,
+            nprobe: 8,
+            runs: 2,
+            clients: 2,
+            tenant_burst: Some(50),
+            tenant_rate: 0.0,
+            queue_depth: 1024,
+            deadline_ms: None,
+            env: recall::EnvManifest::capture(2),
+            shard_rows: vec![1100, 900, 1000, 1000],
+            queue_hwm: 7,
+            total: serve_stats(180, 20, 950.0),
+            post_ok: true,
+            snapshot_queries: 16,
+            per_tenant: vec![
+                ("t0".into(), serve_stats(90, 20, 500.0)),
+                ("t1".into(), serve_stats(60, 0, 300.0)),
+                ("t2".into(), serve_stats(30, 0, 150.0)),
+            ],
+        };
+        let s = serve_json(&rep);
+        for key in [
+            "\"bench\"", "\"serve\"", "\"shards\"", "\"router\"", "\"codec\"",
+            "\"tenants\"", "\"theta\"", "\"write_frac\"", "\"tenant_burst\"",
+            "\"tenant_rate\"", "\"queue_depth\"", "\"deadline_ms\"", "\"env\"",
+            "\"rustc\"", "\"shard_rows\"", "\"shard_imbalance\"", "\"queue_hwm\"",
+            "\"total\"", "\"qps\"", "\"p50_ms\"", "\"p95_ms\"", "\"p99_ms\"",
+            "\"rejected\"", "\"timeouts\"", "\"failed\"", "\"post_ok\"",
+            "\"snapshot\"", "\"verified\"", "\"tenants_rows\"", "\"tenant\"",
+        ] {
+            assert!(s.contains(key), "missing {key} in\n{s}");
+        }
+        assert!(s.contains("\"tenant_burst\": 50"), "{s}");
+        assert!(s.contains("\"deadline_ms\": null"), "{s}");
+        assert!(s.contains("\"t2\""), "last tenant row present:\n{s}");
+        // max 1100 over mean 1000 → 1.1
+        assert!(s.contains("\"shard_imbalance\": 1.1000"), "{s}");
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+        assert!(!s.contains(",\n  ]"), "trailing comma:\n{s}");
+        assert!(!s.contains(",\n    ]"), "trailing comma:\n{s}");
+    }
+
+    #[test]
+    fn degenerate_serve_runs_are_refused() {
+        // A zero-request run is refused before anything is built.
+        let msg = degenerate_serve_reason(0, None).expect("requests=0");
+        assert!(msg.contains("zero requests"), "{msg}");
+        // Pre-flight pass with requests > 0 and no stats yet: no objection.
+        assert_eq!(degenerate_serve_reason(200, None), None);
+        // Healthy post-run report: no objection.
+        assert_eq!(degenerate_serve_reason(200, Some(&serve_stats(180, 20, 950.0))), None);
+        // Every request shed or failed → refuse.
+        let msg = degenerate_serve_reason(200, Some(&serve_stats(0, 200, 0.0))).expect("ok=0");
+        assert!(msg.contains("no request was served"), "{msg}");
+        // NaN/zero QPS means the clock never ran → refuse.
+        let all_ok = serve_stats(200, 0, f64::NAN);
+        assert!(degenerate_serve_reason(200, Some(&all_ok)).is_some());
     }
 
     fn decode_report(rows: Vec<experiments::DecodeRow>) -> experiments::DecodeReport {

@@ -470,9 +470,8 @@ pub const QPS_GRAPH_N_CAP: usize = 20_000;
 /// IVF specs share one coarse clustering; graph specs build over a capped
 /// prefix of the same data. Every backend is driven through the
 /// [`AnnIndex`] trait — the same generic path the coordinator serves —
-/// with per-query latencies measured inside the workers (reusable
-/// scratch + result buffer); QPS is the whole-batch wall rate, best of
-/// `runs`.
+/// using the shared [`crate::eval::workload::measure`] discipline
+/// (per-worker scratch reuse, warm pass, best-of-`runs` wall clock).
 pub fn search_qps(
     scale: &Scale,
     kind: Kind,
@@ -482,7 +481,7 @@ pub fn search_qps(
     thread_counts: &[usize],
     runs: usize,
 ) -> anyhow::Result<Vec<QpsRow>> {
-    use crate::api::{AnnIndex, AnnScratch, GraphIndex, QueryParams};
+    use crate::api::{AnnIndex, GraphIndex, QueryParams};
     let ds = generate(kind, scale.n, scale.nq, scale.dim, scale.seed);
     // Shared coarse clustering, trained on first IVF spec.
     let mut shared: Option<(Vec<f32>, usize, Vec<u32>)> = None;
@@ -559,67 +558,18 @@ pub fn search_qps(
                 // must hold k results), so rows below ef=k coincide —
                 // the standard ef ≥ k rule, documented in REPRODUCING.
                 let sp = QueryParams { k: 10, nprobe, ef: nprobe };
-                // One scratch (+ result buffer) per worker, shared across
-                // the warm pass and every timed run, so the timed passes
-                // measure the steady-state allocation-free path rather
-                // than first-touch scratch growth.
-                let threads_eff = threads.max(1);
-                let scratches: Vec<std::sync::Mutex<(AnnScratch, Vec<(f32, u32)>)>> = (0
-                    ..threads_eff)
-                    .map(|_| std::sync::Mutex::new((AnnScratch::default(), Vec::new())))
-                    .collect();
-                let lat_cells: Vec<std::sync::atomic::AtomicU64> =
-                    (0..ds.nq).map(|_| std::sync::atomic::AtomicU64::new(0)).collect();
-                let index_ref = &*index;
-                let run_pass = |record: bool| {
-                    crate::util::pool::parallel_chunks(ds.nq, threads_eff, |w, range| {
-                        let mut guard = scratches[w % scratches.len()].lock().unwrap();
-                        let (scratch, results) = &mut *guard;
-                        for qi in range {
-                            let q0 = Instant::now();
-                            index_ref.search_into(ds.query(qi), &sp, scratch, results);
-                            if record {
-                                lat_cells[qi].store(
-                                    q0.elapsed().as_secs_f64().to_bits(),
-                                    std::sync::atomic::Ordering::Relaxed,
-                                );
-                            }
-                        }
-                    });
-                };
-                run_pass(false); // warm every worker's scratch
-                let mut best_wall = f64::INFINITY;
-                let mut lat: Vec<f64> = Vec::new();
-                for _ in 0..runs.max(1) {
-                    let t0 = Instant::now();
-                    run_pass(true);
-                    let wall = t0.elapsed().as_secs_f64();
-                    if wall < best_wall {
-                        best_wall = wall;
-                        lat = lat_cells
-                            .iter()
-                            .map(|c| f64::from_bits(c.load(std::sync::atomic::Ordering::Relaxed)))
-                            .collect();
-                    }
-                }
-                lat.sort_by(|a, b| a.total_cmp(b));
-                let pct = |p: f64| -> f64 {
-                    if lat.is_empty() {
-                        0.0
-                    } else {
-                        lat[((lat.len() - 1) as f64 * p).round() as usize]
-                    }
-                };
-                let mean = lat.iter().sum::<f64>() / (lat.len().max(1) as f64);
+                let m = crate::eval::workload::measure(
+                    &*index, &ds.queries, ds.dim, ds.nq, &sp, threads, runs,
+                );
                 out.push(QpsRow {
                     backend: backend.to_string(),
                     codec: spec.to_string(),
                     nprobe,
                     threads,
-                    qps: ds.nq as f64 / best_wall.max(1e-12),
-                    mean_ms: mean * 1e3,
-                    p50_ms: pct(0.5) * 1e3,
-                    p95_ms: pct(0.95) * 1e3,
+                    qps: m.qps,
+                    mean_ms: m.mean_ms,
+                    p50_ms: m.p50_ms,
+                    p95_ms: m.p95_ms,
                 });
             }
         }

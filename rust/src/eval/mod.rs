@@ -8,6 +8,7 @@ pub mod experiments;
 pub mod bench_entries;
 pub mod faults;
 pub mod recall;
+pub mod workload;
 
 /// Minimal fixed-width table printer for bench output.
 pub struct Table {

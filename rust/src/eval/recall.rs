@@ -17,18 +17,17 @@
 //! results bit-identical to the first codec's at the same knob, or the
 //! sweep errors out (and the bench exits non-zero before writing JSON).
 
-use crate::api::{AnnIndex, AnnScratch, GraphIndex, QueryParams};
+use crate::api::{AnnIndex, GraphIndex, QueryParams};
 use crate::datasets::{generate, groundtruth, Kind};
 use crate::dynamic::{CompactionPolicy, DynamicBuildParams, DynamicIvf};
 use crate::eval::experiments::{Scale, QPS_GRAPH_N_CAP};
+use crate::eval::workload::measure;
 use crate::graph::hnsw::{Hnsw, HnswParams};
 use crate::graph::nsg::{Nsg, NsgParams};
 use crate::index::{IvfBuildParams, IvfIndex, VectorMode};
 use crate::quant::kmeans;
 use anyhow::{ensure, Result};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::Arc;
 
 /// Where a `BENCH_recall.json` run came from: toolchain, SIMD dispatch
 /// tier and thread count. Recall rows are only comparable across runs
@@ -145,78 +144,6 @@ struct BackendRun {
     index: Box<dyn AnnIndex>,
     gt: Arc<Vec<u32>>,
     check_invariance: bool,
-}
-
-struct Measured {
-    results: Vec<Vec<(f32, u32)>>,
-    qps: f64,
-    mean_ms: f64,
-    p50_ms: f64,
-    p95_ms: f64,
-}
-
-/// Measure one (index, knob) cell: a warm pass collects the (
-/// deterministic) result lists, then `runs` timed passes take the best
-/// wall-clock — the same per-worker-scratch discipline as the QPS bench,
-/// so latencies reflect the steady-state allocation-free path.
-fn measure(
-    index: &dyn AnnIndex,
-    queries: &[f32],
-    dim: usize,
-    nq: usize,
-    sp: &QueryParams,
-    threads: usize,
-    runs: usize,
-) -> Measured {
-    let threads = threads.max(1);
-    let scratches: Vec<Mutex<(AnnScratch, Vec<(f32, u32)>)>> =
-        (0..threads).map(|_| Mutex::new((AnnScratch::default(), Vec::new()))).collect();
-    let collected: Vec<Mutex<Vec<(f32, u32)>>> = (0..nq).map(|_| Mutex::new(Vec::new())).collect();
-    let lat_cells: Vec<AtomicU64> = (0..nq).map(|_| AtomicU64::new(0)).collect();
-    let run_pass = |record: bool, collect: bool| {
-        crate::util::pool::parallel_chunks(nq, threads, |w, range| {
-            let mut guard = scratches[w % scratches.len()].lock().unwrap();
-            let (scratch, results) = &mut *guard;
-            for qi in range {
-                let q0 = Instant::now();
-                index.search_into(&queries[qi * dim..(qi + 1) * dim], sp, scratch, results);
-                if record {
-                    lat_cells[qi].store(q0.elapsed().as_secs_f64().to_bits(), Ordering::Relaxed);
-                }
-                if collect {
-                    collected[qi].lock().unwrap().clone_from(results);
-                }
-            }
-        });
-    };
-    run_pass(false, true); // warm every scratch + collect result lists
-    let mut best_wall = f64::INFINITY;
-    let mut lat: Vec<f64> = Vec::new();
-    for _ in 0..runs.max(1) {
-        let t0 = Instant::now();
-        run_pass(true, false);
-        let wall = t0.elapsed().as_secs_f64();
-        if wall < best_wall {
-            best_wall = wall;
-            lat = lat_cells.iter().map(|c| f64::from_bits(c.load(Ordering::Relaxed))).collect();
-        }
-    }
-    lat.sort_by(|a, b| a.total_cmp(b));
-    let pct = |p: f64| -> f64 {
-        if lat.is_empty() {
-            0.0
-        } else {
-            lat[((lat.len() - 1) as f64 * p).round() as usize]
-        }
-    };
-    let mean = lat.iter().sum::<f64>() / (lat.len().max(1) as f64);
-    Measured {
-        results: collected.into_iter().map(|m| m.into_inner().unwrap()).collect(),
-        qps: nq as f64 / best_wall.max(1e-12),
-        mean_ms: mean * 1e3,
-        p50_ms: pct(0.5) * 1e3,
-        p95_ms: pct(0.95) * 1e3,
-    }
 }
 
 /// Build every configured backend and measure each at every knob.

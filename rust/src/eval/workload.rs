@@ -1,0 +1,365 @@
+//! Shared workload/timing discipline for the throughput benches
+//! (`bench-search-qps`, `bench-recall`, `bench-serve`): per-worker scratch
+//! reuse, a warm pass that also collects the (deterministic) result
+//! lists, `runs` timed passes keeping the best wall-clock, and latency
+//! percentiles over the best pass. Centralized here so every bench
+//! measures the same steady-state allocation-free path and none of them
+//! re-implements the loop with subtle drift.
+
+use crate::api::{AnnIndex, AnnScratch, QueryParams};
+use crate::coordinator::ResponseStatus;
+use crate::serve::ServeNode;
+use crate::util::{Rng, Zipf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One measured (index, knob) cell: the deterministic result lists from
+/// the warm pass plus best-of-runs throughput and latency percentiles.
+pub struct Measured {
+    pub results: Vec<Vec<(f32, u32)>>,
+    pub qps: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// Percentile over an **ascending-sorted** latency slice, `p` in [0, 1]
+/// (nearest-rank on the closed index range, matching every bench's
+/// historical convention). Returns 0.0 on an empty slice.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        0.0
+    } else {
+        sorted[((sorted.len() - 1) as f64 * p).round() as usize]
+    }
+}
+
+/// Measure one (index, params) cell: a warm pass collects the
+/// (deterministic) result lists and primes every per-worker scratch,
+/// then `runs` timed passes take the best wall-clock, so latencies
+/// reflect the steady-state allocation-free path.
+pub fn measure(
+    index: &dyn AnnIndex,
+    queries: &[f32],
+    dim: usize,
+    nq: usize,
+    sp: &QueryParams,
+    threads: usize,
+    runs: usize,
+) -> Measured {
+    let threads = threads.max(1);
+    let scratches: Vec<Mutex<(AnnScratch, Vec<(f32, u32)>)>> =
+        (0..threads).map(|_| Mutex::new((AnnScratch::default(), Vec::new()))).collect();
+    let collected: Vec<Mutex<Vec<(f32, u32)>>> = (0..nq).map(|_| Mutex::new(Vec::new())).collect();
+    let lat_cells: Vec<AtomicU64> = (0..nq).map(|_| AtomicU64::new(0)).collect();
+    let run_pass = |record: bool, collect: bool| {
+        crate::util::pool::parallel_chunks(nq, threads, |w, range| {
+            let mut guard = scratches[w % scratches.len()].lock().unwrap();
+            let (scratch, results) = &mut *guard;
+            for qi in range {
+                let q0 = Instant::now();
+                index.search_into(&queries[qi * dim..(qi + 1) * dim], sp, scratch, results);
+                if record {
+                    lat_cells[qi].store(q0.elapsed().as_secs_f64().to_bits(), Ordering::Relaxed);
+                }
+                if collect {
+                    collected[qi].lock().unwrap().clone_from(results);
+                }
+            }
+        });
+    };
+    run_pass(false, true); // warm every scratch + collect result lists
+    let mut best_wall = f64::INFINITY;
+    let mut lat: Vec<f64> = Vec::new();
+    for _ in 0..runs.max(1) {
+        let t0 = Instant::now();
+        run_pass(true, false);
+        let wall = t0.elapsed().as_secs_f64();
+        if wall < best_wall {
+            best_wall = wall;
+            lat = lat_cells.iter().map(|c| f64::from_bits(c.load(Ordering::Relaxed))).collect();
+        }
+    }
+    lat.sort_by(|a, b| a.total_cmp(b));
+    let mean = lat.iter().sum::<f64>() / (lat.len().max(1) as f64);
+    Measured {
+        results: collected.into_iter().map(|m| m.into_inner().unwrap()).collect(),
+        qps: nq as f64 / best_wall.max(1e-12),
+        mean_ms: mean * 1e3,
+        p50_ms: percentile(&lat, 0.5) * 1e3,
+        p95_ms: percentile(&lat, 0.95) * 1e3,
+        p99_ms: percentile(&lat, 0.99) * 1e3,
+    }
+}
+
+/// One request in a serve workload: a tenant plus either a search query
+/// or a row to ingest.
+pub struct ServeOp {
+    pub tenant: usize,
+    pub write: bool,
+    pub payload: Vec<f32>,
+}
+
+/// Precompute a deterministic mixed read/write schedule: tenants are
+/// zipf-distributed (rank 0 is the greedy tenant), writes are sampled
+/// near zipf-skewed base rows (so a kmeans router piles them onto hot
+/// shards — the imbalance the serve bench reports) with small gaussian
+/// noise. Rebuilding with the same arguments yields the same schedule,
+/// so per-tenant request counts — and with a fixed admission budget,
+/// rejection counts — are exactly reproducible.
+pub fn serve_schedule(
+    nops: usize,
+    tenants: usize,
+    theta: f64,
+    write_frac: f64,
+    queries: &[f32],
+    dim: usize,
+    seed: u64,
+) -> Vec<ServeOp> {
+    let nq = queries.len() / dim;
+    assert!(nq > 0, "serve schedule needs a non-empty query pool");
+    let mut rng = Rng::new(seed ^ 0x5e7e_5e7e);
+    let zt = Zipf::new(tenants.max(1), theta);
+    let zq = Zipf::new(nq, theta);
+    (0..nops)
+        .map(|_| {
+            let tenant = zt.sample(&mut rng);
+            if rng.f64() < write_frac {
+                let base = zq.sample(&mut rng);
+                let payload = queries[base * dim..(base + 1) * dim]
+                    .iter()
+                    .map(|&v| v + 0.01 * rng.normal())
+                    .collect();
+                ServeOp { tenant, write: true, payload }
+            } else {
+                let qi = rng.below(nq as u64) as usize;
+                ServeOp {
+                    tenant,
+                    write: false,
+                    payload: queries[qi * dim..(qi + 1) * dim].to_vec(),
+                }
+            }
+        })
+        .collect()
+}
+
+/// Outcome of one scheduled request in the best measured pass.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOutcome {
+    pub tenant: usize,
+    pub write: bool,
+    pub status: ResponseStatus,
+    pub latency_s: f64,
+}
+
+/// Drive `schedule` against a serve node with `clients` concurrent
+/// client threads, `runs` times (admission is refilled before each pass
+/// so every pass starts from the same budget), keeping the pass with the
+/// best wall-clock. Returns per-request outcomes of that pass plus its
+/// wall time. Writes bypass admission (they are ingest, not queries) and
+/// report `Ok`/`Failed`.
+pub fn run_serve(
+    node: &ServeNode,
+    schedule: &[ServeOp],
+    clients: usize,
+    runs: usize,
+) -> (Vec<ServeOutcome>, f64) {
+    let clients = clients.max(1);
+    let mut best_wall = f64::INFINITY;
+    let mut best: Vec<ServeOutcome> = Vec::new();
+    for _ in 0..runs.max(1) {
+        node.reset_admission();
+        let cells: Vec<Mutex<Option<ServeOutcome>>> =
+            (0..schedule.len()).map(|_| Mutex::new(None)).collect();
+        let t0 = Instant::now();
+        crate::util::pool::parallel_chunks(schedule.len(), clients, |_, range| {
+            for i in range {
+                let op = &schedule[i];
+                let tenant = format!("t{}", op.tenant);
+                let q0 = Instant::now();
+                let (status, latency_s) = if op.write {
+                    match node.add(&op.payload) {
+                        Ok(_) => (ResponseStatus::Ok, q0.elapsed().as_secs_f64()),
+                        Err(_) => (ResponseStatus::Failed, q0.elapsed().as_secs_f64()),
+                    }
+                } else {
+                    match node.search(&tenant, &op.payload) {
+                        Ok(r) => (r.status, r.latency.as_secs_f64()),
+                        Err(_) => (ResponseStatus::Failed, q0.elapsed().as_secs_f64()),
+                    }
+                };
+                *cells[i].lock().unwrap() = Some(ServeOutcome {
+                    tenant: op.tenant,
+                    write: op.write,
+                    status,
+                    latency_s,
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        if wall < best_wall {
+            best_wall = wall;
+            best = cells
+                .into_iter()
+                .map(|c| c.into_inner().unwrap().expect("every scheduled op ran"))
+                .collect();
+        }
+    }
+    (best, best_wall)
+}
+
+/// Aggregated counters + latency percentiles over a set of outcomes
+/// (`tenant = None` aggregates everything). `qps` counts served (`Ok`)
+/// requests against the pass wall-clock; percentiles are over served
+/// requests only (a rejection answered in nanoseconds is not a latency
+/// datapoint).
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub ok: u64,
+    pub rejected: u64,
+    pub timeouts: u64,
+    pub failed: u64,
+    pub qps: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+pub fn aggregate_serve(outcomes: &[ServeOutcome], tenant: Option<usize>, wall_s: f64) -> ServeStats {
+    let mut s = ServeStats {
+        requests: 0,
+        ok: 0,
+        rejected: 0,
+        timeouts: 0,
+        failed: 0,
+        qps: 0.0,
+        p50_ms: 0.0,
+        p95_ms: 0.0,
+        p99_ms: 0.0,
+    };
+    let mut lat: Vec<f64> = Vec::new();
+    for o in outcomes {
+        if tenant.is_some_and(|t| t != o.tenant) {
+            continue;
+        }
+        s.requests += 1;
+        match o.status {
+            ResponseStatus::Ok => {
+                s.ok += 1;
+                lat.push(o.latency_s);
+            }
+            ResponseStatus::Overloaded => s.rejected += 1,
+            ResponseStatus::Timeout => s.timeouts += 1,
+            ResponseStatus::Failed => s.failed += 1,
+        }
+    }
+    lat.sort_by(|a, b| a.total_cmp(b));
+    s.qps = s.ok as f64 / wall_s.max(1e-12);
+    s.p50_ms = percentile(&lat, 0.5) * 1e3;
+    s.p95_ms = percentile(&lat, 0.95) * 1e3;
+    s.p99_ms = percentile(&lat, 0.99) * 1e3;
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{generate, Kind};
+    use crate::index::{IvfBuildParams, IvfIndex};
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let lat = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&lat, 0.0), 1.0);
+        assert_eq!(percentile(&lat, 0.5), 3.0); // round(1.5) = 2
+        assert_eq!(percentile(&lat, 1.0), 4.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn measure_results_are_deterministic_and_latencies_sane() {
+        let ds = generate(Kind::DeepLike, 2000, 16, 8, 7);
+        let idx = IvfIndex::build(
+            &ds.data,
+            ds.dim,
+            &IvfBuildParams { k: 16, id_codec: "roc".into(), threads: 2, ..Default::default() },
+        );
+        let sp = QueryParams { k: 5, nprobe: 4, ..Default::default() };
+        let a = measure(&idx, &ds.queries, ds.dim, ds.nq, &sp, 2, 2);
+        let b = measure(&idx, &ds.queries, ds.dim, ds.nq, &sp, 1, 1);
+        assert_eq!(a.results, b.results, "thread count must not change results");
+        assert_eq!(a.results.len(), ds.nq);
+        assert!(a.results.iter().all(|r| r.len() == 5));
+        assert!(a.qps > 0.0 && a.mean_ms >= 0.0);
+        assert!(a.p50_ms <= a.p95_ms && a.p95_ms <= a.p99_ms);
+    }
+
+    #[test]
+    fn serve_schedule_is_deterministic_and_zipf_skewed() {
+        let ds = generate(Kind::DeepLike, 200, 32, 8, 11);
+        let a = serve_schedule(500, 4, 1.2, 0.2, &ds.queries, ds.dim, 9);
+        let b = serve_schedule(500, 4, 1.2, 0.2, &ds.queries, ds.dim, 9);
+        assert_eq!(a.len(), 500);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tenant, y.tenant);
+            assert_eq!(x.write, y.write);
+            assert_eq!(x.payload, y.payload);
+        }
+        let t0 = a.iter().filter(|o| o.tenant == 0).count();
+        let t3 = a.iter().filter(|o| o.tenant == 3).count();
+        assert!(t0 > 2 * t3, "theta=1.2 must skew hard toward tenant 0 ({t0} vs {t3})");
+        let writes = a.iter().filter(|o| o.write).count();
+        assert!((50..200).contains(&writes), "write_frac=0.2 of 500, got {writes}");
+        assert!(a.iter().all(|o| o.payload.len() == ds.dim));
+    }
+
+    #[test]
+    fn run_serve_answers_every_op_and_admission_counts_are_deterministic() {
+        use crate::dynamic::CompactionPolicy;
+        use crate::serve::{NodeConfig, RouterKind, ServeNode, ShardedBuildParams, TenantPolicy};
+        let ds = generate(Kind::DeepLike, 1200, 16, 8, 12);
+        let params = ShardedBuildParams {
+            shards: 2,
+            router: RouterKind::Hash,
+            ivf: IvfBuildParams { k: 8, threads: 2, id_codec: "roc".into(), ..Default::default() },
+        };
+        let cfg = NodeConfig {
+            serve: crate::coordinator::ServeConfig {
+                search: QueryParams { k: 5, nprobe: 4, ef: 32 },
+                scan_threads: 2,
+                ..Default::default()
+            },
+            tenants: Some(TenantPolicy { burst: 50, rate: 0.0 }),
+            ..Default::default()
+        };
+        let node =
+            ServeNode::start_mutable(&ds.data, ds.dim, &params, CompactionPolicy::default(), cfg)
+                .unwrap();
+        let schedule = serve_schedule(200, 3, 1.2, 0.1, &ds.queries, ds.dim, 13);
+        let (outcomes, wall) = run_serve(&node, &schedule, 2, 2);
+        assert_eq!(outcomes.len(), 200);
+        assert!(wall > 0.0);
+        let total = aggregate_serve(&outcomes, None, wall);
+        assert_eq!(total.requests, 200);
+        assert_eq!(total.ok + total.rejected + total.timeouts + total.failed, 200);
+        // Fixed budget (rate=0): each tenant's rejections are exactly its
+        // reads minus the burst, independent of client interleaving.
+        for t in 0..3 {
+            let reads =
+                schedule.iter().filter(|o| o.tenant == t && !o.write).count() as u64;
+            let st = aggregate_serve(&outcomes, Some(t), wall);
+            assert_eq!(st.rejected, reads.saturating_sub(50), "tenant {t}");
+        }
+        // The greedy tenant was shed; the tail tenant was not.
+        let greedy = aggregate_serve(&outcomes, Some(0), wall);
+        let tail = aggregate_serve(&outcomes, Some(2), wall);
+        assert!(greedy.rejected > 0, "greedy tenant must hit its budget");
+        assert_eq!(tail.rejected, 0, "tail tenant stays within budget");
+        // Post-overload liveness: the node still answers.
+        assert!(node.search_raw(&ds.queries[..ds.dim]).unwrap().is_ok());
+        node.stop();
+    }
+}

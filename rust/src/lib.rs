@@ -112,4 +112,5 @@ pub mod graph;
 pub mod runtime;
 pub mod api;
 pub mod coordinator;
+pub mod serve;
 pub mod eval;

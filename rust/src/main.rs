@@ -17,14 +17,21 @@
 //!                         codec × backend × search knob, with QPS and
 //!                         bits/id per point (writes BENCH_recall.json;
 //!                         gated in CI against a committed baseline)
-//!   build               — build an index (--backend ivf|nsg|hnsw|dynamic)
-//!                         and save it to the zann container (--out PATH)
+//!   bench-serve         — sharded serving node under mixed read/write
+//!                         traffic with zipf-skewed tenants: per-tenant
+//!                         QPS + latency percentiles, shed counts, shard
+//!                         imbalance (writes BENCH_serve.json)
+//!   build               — build an index (--backend
+//!                         ivf|nsg|hnsw|dynamic|sharded) and save it to
+//!                         the zann container (--out PATH)
 //!   add                 — insert vectors into a saved dynamic index
 //!   delete              — tombstone ids in a saved dynamic index
 //!   compact             — merge + re-encode a saved dynamic index
 //!   check-parity        — audit a dynamic index against a from-scratch
 //!                         static build over the same live set
-//!   info                — print the stats header of a saved index
+//!   info                — print the stats header of a saved index; for
+//!                         a sharded container (or a directory of shard
+//!                         containers) also one line per shard
 //!   serve               — reopen a saved index (zero transcode) and
 //!                         serve a query batch through the coordinator,
 //!                         verifying responses against direct search
@@ -69,6 +76,7 @@ fn main() {
         "bench-decode" => bench_entries::decode(&args),
         "bench-churn" => bench_entries::churn(&args),
         "bench-recall" => bench_entries::recall(&args),
+        "bench-serve" => bench_entries::serve(&args),
         "sizes" => sizes(&args),
         "build" => build_cmd(&args),
         "add" => add_cmd(&args),
@@ -83,11 +91,12 @@ fn main() {
             eprintln!(
                 "usage: zann <bench-table1|bench-table2|bench-table3|bench-table4|\n\
                  bench-fig2|bench-fig3|bench-search-qps|bench-decode|bench-churn|\n\
-                 bench-recall|sizes|\n\
-                 build --out PATH [--backend ivf|nsg|hnsw|dynamic]|\n\
+                 bench-recall|bench-serve|sizes|\n\
+                 build --out PATH [--backend ivf|nsg|hnsw|dynamic|sharded]\n\
+                 \u{20}\u{20}[--shards S] [--router hash|kmeans]|\n\
                  add PATH --add-n N|delete PATH --frac F|--ids A,B|compact PATH|\n\
-                 check-parity PATH|info PATH|\n\
-                 serve PATH [--deadline-ms MS] [--queue-depth N]|\n\
+                 check-parity PATH|info PATH_OR_DIR|\n\
+                 serve PATH [--deadline-ms MS] [--queue-depth N] [--metrics-json PATH]|\n\
                  serve-demo|inject-faults [--seed S] [--mutations M] [--timeout-ms MS]>\n\
                  [--n N] [--dataset sift|deep|ssnpp] [--codec NAME] ..."
             );
@@ -258,8 +267,36 @@ fn build_cmd(args: &Args) {
                 }
             }
         }
+        "sharded" => {
+            let router = match zann::serve::RouterKind::parse(args.get_or("router", "hash")) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("build: {e}");
+                    std::process::exit(2);
+                }
+            };
+            let params = zann::serve::ShardedBuildParams {
+                shards: args.usize("shards", 4),
+                router,
+                ivf: IvfBuildParams {
+                    k: args.usize("k", 1024.min((scale.n / 16).max(4))),
+                    id_codec: codec.clone(),
+                    vectors: VectorMode::Flat,
+                    threads: scale.threads,
+                    seed: scale.seed,
+                    ..Default::default()
+                },
+            };
+            match zann::serve::ShardedIndex::build(&ds.data, ds.dim, &params) {
+                Ok(idx) => Box::new(idx),
+                Err(e) => {
+                    eprintln!("build: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
         other => {
-            eprintln!("build: unknown --backend {other:?} (ivf|nsg|hnsw|dynamic)");
+            eprintln!("build: unknown --backend {other:?} (ivf|nsg|hnsw|dynamic|sharded)");
             std::process::exit(2);
         }
     };
@@ -473,24 +510,124 @@ fn check_parity_cmd(args: &Args) {
 }
 
 /// Print the stats of a saved index (reopens it, so the line reflects
-/// what a server would actually load).
+/// what a server would actually load). A sharded container additionally
+/// gets one per-shard line; a *directory* is treated as a set of shard
+/// containers (every regular file, sorted by name) and reported the
+/// same way with a synthesized aggregate.
 fn info_cmd(args: &Args) {
     let path = match args.positional.get(1) {
         Some(p) => p.clone(),
         None => {
-            eprintln!("usage: zann info PATH");
+            eprintln!("usage: zann info PATH_OR_DIR");
             std::process::exit(2);
         }
     };
-    let index = match persist::open(Path::new(&path)) {
+    if Path::new(&path).is_dir() {
+        return info_dir(Path::new(&path));
+    }
+    let file_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    let buf = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("info: reading {path}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let sharded = buf.len() > 6 && buf[6] == persist::KIND_SHARDED;
+    if sharded {
+        let idx = match persist::open_sharded_bytes(buf) {
+            Ok(i) => i,
+            Err(e) => {
+                eprintln!("info: {e:?}");
+                std::process::exit(1);
+            }
+        };
+        print_stats(&AnnIndex::stats(&idx), Some(file_bytes));
+        println!("router={} shards={}", idx.router().kind_name(), idx.num_shards());
+        for (s, st) in idx.shard_stats().iter().enumerate() {
+            print!("shard {s}: ");
+            print_stats(st, None);
+        }
+        return;
+    }
+    let index = match persist::open_bytes(buf) {
         Ok(i) => i,
         Err(e) => {
             eprintln!("info: {e:?}");
             std::process::exit(1);
         }
     };
-    let file_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
     print_stats(&index.stats(), Some(file_bytes));
+}
+
+/// `zann info DIR`: every regular file in `DIR` (sorted by name) is
+/// opened as one shard container; prints a synthesized aggregate line
+/// followed by one line per shard.
+fn info_dir(dir: &Path) {
+    let mut files: Vec<std::path::PathBuf> = match std::fs::read_dir(dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.is_file())
+            .collect(),
+        Err(e) => {
+            eprintln!("info: reading directory {}: {e}", dir.display());
+            std::process::exit(1);
+        }
+    };
+    files.sort();
+    if files.is_empty() {
+        eprintln!("info: {} contains no shard containers", dir.display());
+        std::process::exit(1);
+    }
+    let mut shards = Vec::new();
+    let mut total_bytes = 0u64;
+    for p in &files {
+        total_bytes += std::fs::metadata(p).map(|m| m.len()).unwrap_or(0);
+        match persist::open(p) {
+            Ok(i) => shards.push((p.clone(), i.stats())),
+            Err(e) => {
+                eprintln!("info: {}: {e:?}", p.display());
+                std::process::exit(1);
+            }
+        }
+    }
+    // Synthesized aggregate over the directory's shards, mirroring what
+    // ShardedIndex::stats reports for a single multi-shard container.
+    let codecs: Vec<&str> = {
+        let mut c: Vec<&str> = shards.iter().map(|(_, s)| s.codec.as_str()).collect();
+        c.sort();
+        c.dedup();
+        c
+    };
+    let agg = IndexStats {
+        kind: zann::api::IndexKind::Sharded,
+        n: shards.iter().map(|(_, s)| s.n).sum(),
+        dim: shards[0].1.dim,
+        edges: shards.iter().map(|(_, s)| s.edges).sum(),
+        codec: codecs.join("+"),
+        id_bits: shards.iter().map(|(_, s)| s.id_bits).sum(),
+        code_bits: shards.iter().map(|(_, s)| s.code_bits).sum(),
+        link_bits: shards.iter().map(|(_, s)| s.link_bits).sum(),
+        live: shards.iter().map(|(_, s)| s.live).sum(),
+        deleted: shards.iter().map(|(_, s)| s.deleted).sum(),
+        buffer_rows: shards.iter().map(|(_, s)| s.buffer_rows).sum(),
+        aux_bits: shards.iter().map(|(_, s)| s.aux_bits).sum(),
+        checksummed: shards.iter().all(|(_, s)| s.checksummed),
+        segments: shards
+            .iter()
+            .map(|(_, s)| zann::api::SegmentStats {
+                rows: s.n,
+                id_bits: s.id_bits,
+                map_bits: 0,
+            })
+            .collect(),
+    };
+    print_stats(&agg, Some(total_bytes));
+    println!("directory {}: {} shard containers", dir.display(), shards.len());
+    for (s, (p, st)) in shards.iter().enumerate() {
+        print!("shard {s} ({}): ", p.file_name().unwrap_or_default().to_string_lossy());
+        print_stats(st, std::fs::metadata(p).map(|m| m.len()).ok());
+    }
 }
 
 /// Reopen a saved index and serve a seeded random query batch through
@@ -501,7 +638,8 @@ fn serve_cmd(args: &Args) {
         None => {
             eprintln!(
                 "usage: zann serve PATH [--nq N] [--nprobe P] [--ef E] [--topk K] \
-                 [--deadline-ms MS] [--queue-depth N] [--dump-results FILE]"
+                 [--deadline-ms MS] [--queue-depth N] [--dump-results FILE] \
+                 [--metrics-json FILE]"
             );
             std::process::exit(2);
         }
@@ -619,6 +757,17 @@ fn serve_cmd(args: &Args) {
         responses.len() as f64 / wall,
         coord.metrics.summary()
     );
+    // Machine-readable counters (including the queue-depth high-water
+    // mark) for dashboards / CI assertions, written after the batch so
+    // the numbers cover the whole run.
+    if let Some(mpath) = args.get("metrics-json") {
+        let json = coord.metrics.metrics_json();
+        if let Err(e) = std::fs::write(mpath, &json) {
+            eprintln!("serve: failed to write --metrics-json {mpath}: {e}");
+            std::process::exit(1);
+        }
+        println!("wrote metrics to {mpath}");
+    }
     coord.stop();
     if ok != checked {
         eprintln!("serve: {} responses diverged from direct search", checked - ok);

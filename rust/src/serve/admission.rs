@@ -1,0 +1,164 @@
+//! Per-tenant admission control: token buckets in front of the shard
+//! queues.
+//!
+//! The coordinator's bounded queue (PR 7) protects the *node* — it sheds
+//! load when the whole box is behind. The token buckets here protect
+//! *tenants from each other*: a greedy tenant that floods the node burns
+//! through its own budget and starts seeing `Overloaded` while
+//! well-behaved tenants keep their full rate. Buckets refill
+//! continuously at `rate` tokens/second up to a cap of `burst`; a
+//! request is admitted iff its tenant has ≥ 1 token. `rate = 0` makes a
+//! bucket a fixed budget of `burst` admits (what the CI gate uses — it
+//! needs a deterministic rejection count, not a wall-clock race).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Budget applied to every tenant (per-tenant overrides are not needed
+/// yet — the bench and CI exercise symmetric policies with asymmetric
+/// traffic).
+#[derive(Clone, Copy, Debug)]
+pub struct TenantPolicy {
+    /// Bucket capacity: how many requests a tenant may burst back-to-back.
+    pub burst: u64,
+    /// Refill rate in tokens per second. 0 = never refills (fixed budget).
+    pub rate: f64,
+}
+
+impl Default for TenantPolicy {
+    fn default() -> Self {
+        TenantPolicy { burst: 256, rate: 512.0 }
+    }
+}
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Per-tenant request counters, surfaced by the node and the serve bench.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TenantCounters {
+    pub admitted: u64,
+    pub rejected: u64,
+}
+
+pub struct Admission {
+    policy: TenantPolicy,
+    tenants: Mutex<HashMap<String, (Bucket, TenantCounters)>>,
+}
+
+impl Admission {
+    pub fn new(policy: TenantPolicy) -> Admission {
+        Admission { policy, tenants: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn policy(&self) -> TenantPolicy {
+        self.policy
+    }
+
+    /// Try to admit one request for `tenant`. Debits a token on success;
+    /// counts a rejection otherwise.
+    pub fn try_admit(&self, tenant: &str) -> bool {
+        let now = Instant::now();
+        let mut map = self.tenants.lock().unwrap_or_else(|e| e.into_inner());
+        let (bucket, counters) = map.entry(tenant.to_string()).or_insert_with(|| {
+            (Bucket { tokens: self.policy.burst as f64, last: now }, TenantCounters::default())
+        });
+        let dt = now.saturating_duration_since(bucket.last).as_secs_f64();
+        bucket.last = now;
+        bucket.tokens = (bucket.tokens + dt * self.policy.rate).min(self.policy.burst as f64);
+        if bucket.tokens >= 1.0 {
+            bucket.tokens -= 1.0;
+            counters.admitted += 1;
+            true
+        } else {
+            counters.rejected += 1;
+            false
+        }
+    }
+
+    /// Counters for one tenant (zeros if it never sent a request).
+    pub fn counters(&self, tenant: &str) -> TenantCounters {
+        let map = self.tenants.lock().unwrap_or_else(|e| e.into_inner());
+        map.get(tenant).map(|(_, c)| *c).unwrap_or_default()
+    }
+
+    /// All tenants with their counters, sorted by tenant name so output
+    /// is deterministic.
+    pub fn all_counters(&self) -> Vec<(String, TenantCounters)> {
+        let map = self.tenants.lock().unwrap_or_else(|e| e.into_inner());
+        let mut v: Vec<(String, TenantCounters)> =
+            map.iter().map(|(t, (_, c))| (t.clone(), *c)).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Refill every bucket to `burst` and clear counters — the serve
+    /// bench calls this between measured passes so each pass sees the
+    /// same admission state.
+    pub fn reset(&self) {
+        let mut map = self.tenants.lock().unwrap_or_else(|e| e.into_inner());
+        map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_budget_admits_exactly_burst() {
+        let a = Admission::new(TenantPolicy { burst: 5, rate: 0.0 });
+        let admitted = (0..20).filter(|_| a.try_admit("t0")).count();
+        assert_eq!(admitted, 5, "rate=0 bucket is a fixed budget");
+        let c = a.counters("t0");
+        assert_eq!(c.admitted, 5);
+        assert_eq!(c.rejected, 15);
+    }
+
+    #[test]
+    fn tenants_have_independent_budgets() {
+        let a = Admission::new(TenantPolicy { burst: 3, rate: 0.0 });
+        for _ in 0..10 {
+            a.try_admit("greedy");
+        }
+        // The greedy tenant exhausted its own bucket, not anyone else's.
+        assert!(a.try_admit("quiet"));
+        assert_eq!(a.counters("greedy").rejected, 7);
+        assert_eq!(a.counters("quiet").rejected, 0);
+        let all = a.all_counters();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].0, "greedy", "counters are sorted by tenant");
+    }
+
+    #[test]
+    fn reset_restores_full_budgets() {
+        let a = Admission::new(TenantPolicy { burst: 2, rate: 0.0 });
+        assert!(a.try_admit("t"));
+        assert!(a.try_admit("t"));
+        assert!(!a.try_admit("t"));
+        a.reset();
+        assert!(a.try_admit("t"));
+        assert_eq!(a.counters("t").rejected, 0, "reset clears counters");
+    }
+
+    #[test]
+    fn refill_restores_tokens_over_time() {
+        let a = Admission::new(TenantPolicy { burst: 1, rate: 1000.0 });
+        assert!(a.try_admit("t"));
+        // Bucket is empty now; at 1000 tokens/s a few ms restores it.
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(a.try_admit("t"), "bucket must refill at the configured rate");
+        assert_eq!(a.counters("t").admitted, 2);
+    }
+
+    #[test]
+    fn unknown_tenant_reads_as_zero() {
+        let a = Admission::new(TenantPolicy::default());
+        let c = a.counters("nobody");
+        assert_eq!(c.admitted, 0);
+        assert_eq!(c.rejected, 0);
+    }
+}

@@ -1,0 +1,30 @@
+//! L4 sharded serving: one endpoint over N shards.
+//!
+//! The compression layers below keep each shard's posting lists small;
+//! this layer is about operating *many* of them as one index:
+//!
+//! - [`sharded`] — the passive [`ShardedIndex`]: ingest routers
+//!   (hash-by-id, kmeans-by-vector), a build that shares one global
+//!   coarse quantizer across shards, and an exact scatter-gather top-k
+//!   merge whose tie order is pinned to `(distance, ext_id)`. Searching
+//!   a sharded index is bit-identical to searching a single index built
+//!   over the union of its rows.
+//! - [`persist`] — the kind-4 multi-shard container: a routing-table
+//!   section plus each shard's own container embedded verbatim, every
+//!   payload CRC-covered at the outer framing *and* inside the embedded
+//!   container.
+//! - [`admission`] — per-tenant token buckets so one greedy tenant
+//!   sheds its own traffic (`Overloaded`) instead of starving everyone.
+//! - [`node`] — the live [`ServeNode`]: a coordinator (bounded queue +
+//!   worker pool) per shard, RCU epoch handles for live shard swap,
+//!   partitioned ingest through dynamic shards, and snapshot/restore
+//!   with CRC + search-parity verification before the swap.
+
+pub mod admission;
+pub mod node;
+pub mod persist;
+pub mod sharded;
+
+pub use admission::{Admission, TenantCounters, TenantPolicy};
+pub use node::{DegradePolicy, NodeConfig, NodeResponse, ServeNode};
+pub use sharded::{Router, RouterKind, ShardedBuildParams, ShardedIndex};

@@ -1,0 +1,787 @@
+//! The sharded serving node: per-shard worker pools, scatter-gather
+//! top-k, per-tenant admission, live shard swap and snapshot/restore.
+//!
+//! ```text
+//!             ┌────────────── ServeNode ──────────────┐
+//!  tenant ──▶ │ admission │ router │  scatter-gather  │
+//!             └─────┬─────────┬──────────┬────────────┘
+//!                   ▼         ▼          ▼
+//!              [Coordinator] [Coordinator] [Coordinator]   one bounded
+//!                 shard 0       shard 1       shard 2      queue + pool
+//!                   │             │             │          per shard
+//!              EpochShard    EpochShard    EpochShard      (RCU swap)
+//! ```
+//!
+//! Each shard sits behind its own [`Coordinator`] — its own bounded
+//! admission queue and scan-worker pool — so a hot shard saturates only
+//! its own pool and the other shards keep answering (the pool itself
+//! steals work internally via the oversplit chunking in
+//! [`crate::util::pool::parallel_chunks`]). A query is *submitted* to
+//! every shard before any reply is awaited, so the slowest shard bounds
+//! latency but never serializes the scatter.
+//!
+//! Degradation composes across layers: a shard's own queue may answer
+//! `Overloaded`, its deadline check `Timeout`, a caught panic `Failed` —
+//! the node takes the worst status across shards and, per
+//! [`DegradePolicy`], either fails the query or returns the merged
+//! results from the healthy shards.
+
+use crate::api::{AnnIndex, AnnScratch, IndexKind, IndexStats, QueryParams};
+use crate::coordinator::{Coordinator, ResponseStatus, ServeConfig};
+use crate::dynamic::{CompactionPolicy, DynamicHandle, DynamicIvf};
+use crate::serve::admission::{Admission, TenantCounters, TenantPolicy};
+use crate::serve::sharded::{Router, ShardedBuildParams, ShardedIndex};
+use anyhow::{bail, ensure, Result};
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// What a query returns when at least one shard degrades.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DegradePolicy {
+    /// Propagate the worst shard status with empty results — all or
+    /// nothing.
+    Fail,
+    /// Return the merged top-k from the shards that answered `Ok`,
+    /// still carrying the worst status so callers can see the response
+    /// is partial.
+    Partial,
+}
+
+/// Node configuration: the per-shard coordinator config plus node-level
+/// policies.
+pub struct NodeConfig {
+    /// Applied to every shard's coordinator (queue depth, deadline,
+    /// batch size, scan threads, search params — `search.k` is also the
+    /// merge k).
+    pub serve: ServeConfig,
+    pub policy: DegradePolicy,
+    /// Per-tenant token buckets; `None` admits everything.
+    pub tenants: Option<TenantPolicy>,
+}
+
+impl Default for NodeConfig {
+    fn default() -> Self {
+        NodeConfig { serve: ServeConfig::default(), policy: DegradePolicy::Partial, tenants: None }
+    }
+}
+
+/// One scatter-gather answer. `results` hold *global* external ids.
+#[derive(Clone, Debug)]
+pub struct NodeResponse {
+    pub results: Vec<(f32, u32)>,
+    pub status: ResponseStatus,
+    pub latency: Duration,
+}
+
+impl NodeResponse {
+    pub fn is_ok(&self) -> bool {
+        self.status == ResponseStatus::Ok
+    }
+}
+
+/// Worst-of ordering across shard statuses: a `Failed` shard outranks an
+/// `Overloaded` one outranks a `Timeout` outranks `Ok`.
+fn severity(s: ResponseStatus) -> u8 {
+    match s {
+        ResponseStatus::Ok => 0,
+        ResponseStatus::Timeout => 1,
+        ResponseStatus::Overloaded => 2,
+        ResponseStatus::Failed => 3,
+    }
+}
+
+/// RCU slot for one shard's index: queries clone the current `Arc` and
+/// search it lock-free for the rest of the query; a swap replaces the
+/// `Arc` and in-flight queries finish on the epoch they started with.
+struct EpochShard {
+    current: Mutex<Arc<dyn AnnIndex>>,
+    dim: usize,
+}
+
+impl EpochShard {
+    fn load(&self) -> Arc<dyn AnnIndex> {
+        self.current.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    fn store(&self, new: Arc<dyn AnnIndex>) {
+        *self.current.lock().unwrap_or_else(|e| e.into_inner()) = new;
+    }
+}
+
+impl AnnIndex for EpochShard {
+    fn kind(&self) -> IndexKind {
+        self.load().kind()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.load().len()
+    }
+
+    fn stats(&self) -> IndexStats {
+        self.load().stats()
+    }
+
+    // No coarse stage: the epoch under this slot can change between
+    // batches, so the coordinator must not cache centroids across the
+    // swap. Every query takes the direct per-query path and reads the
+    // epoch current at its own start.
+    fn coarse_info(&self) -> Option<crate::api::CoarseInfo<'_>> {
+        None
+    }
+
+    fn search_into(
+        &self,
+        query: &[f32],
+        params: &QueryParams,
+        scratch: &mut AnnScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        self.load().search_into(query, params, scratch, out)
+    }
+
+    fn to_bytes(&self) -> Result<Vec<u8>> {
+        self.load().to_bytes()
+    }
+}
+
+struct ShardSlot {
+    epoch: Arc<EpochShard>,
+    coord: Coordinator,
+    /// Shard-local row id → global external id. Extended on ingest,
+    /// replaced wholesale on swap.
+    id_map: RwLock<Vec<u32>>,
+    /// Typed write handle for mutable (dynamic) shards; `None` for
+    /// read-only shards (static builds, restored snapshots without a
+    /// fresh writer).
+    writer: RwLock<Option<Arc<DynamicHandle>>>,
+}
+
+pub struct ServeNode {
+    dim: usize,
+    router: Router,
+    slots: Vec<ShardSlot>,
+    policy: DegradePolicy,
+    admission: Option<Admission>,
+    /// Next global external id handed to ingest.
+    next_id: AtomicU32,
+    search: QueryParams,
+}
+
+impl ServeNode {
+    /// Serve an already-built (read-only) sharded index: each shard goes
+    /// behind its own coordinator; `add` is rejected.
+    pub fn start_static(index: ShardedIndex, cfg: NodeConfig) -> Result<ServeNode> {
+        let (router, shards, id_maps, dim) = index.into_parts();
+        let next = id_maps.iter().flat_map(|m| m.iter().copied()).max().map_or(0, |m| m + 1);
+        Self::assemble(router, shards, id_maps, Vec::new(), dim, next, cfg)
+    }
+
+    /// Build a mutable node over `data`: shards are partitioned with the
+    /// shared global clustering, then each is wrapped in a
+    /// [`DynamicIvf`] behind a [`DynamicHandle`] so ingest and compaction
+    /// run per shard without pausing reads.
+    pub fn start_mutable(
+        data: &[f32],
+        dim: usize,
+        params: &ShardedBuildParams,
+        policy: CompactionPolicy,
+        cfg: NodeConfig,
+    ) -> Result<ServeNode> {
+        let (router, static_shards, id_maps) = ShardedIndex::build_parts(data, dim, params)?;
+        let n = (data.len() / dim) as u32;
+        let mut shards: Vec<Arc<dyn AnnIndex>> = Vec::with_capacity(static_shards.len());
+        let mut writers: Vec<Arc<DynamicHandle>> = Vec::with_capacity(static_shards.len());
+        for s in static_shards {
+            let dynamic = DynamicIvf::from_static(s, policy, params.ivf.threads)?;
+            let handle = Arc::new(DynamicHandle::new(dynamic));
+            shards.push(handle.clone());
+            writers.push(handle);
+        }
+        Self::assemble(router, shards, id_maps, writers, dim, n, cfg)
+    }
+
+    fn assemble(
+        router: Router,
+        shards: Vec<Arc<dyn AnnIndex>>,
+        id_maps: Vec<Vec<u32>>,
+        writers: Vec<Arc<DynamicHandle>>,
+        dim: usize,
+        next_id: u32,
+        cfg: NodeConfig,
+    ) -> Result<ServeNode> {
+        ensure!(!shards.is_empty(), "a serve node needs at least one shard");
+        ensure!(shards.len() == id_maps.len(), "shard/id-map count mismatch");
+        ensure!(
+            writers.is_empty() || writers.len() == shards.len(),
+            "writer handles must cover every shard or none"
+        );
+        let mut writers: Vec<Option<Arc<DynamicHandle>>> = if writers.is_empty() {
+            (0..shards.len()).map(|_| None).collect()
+        } else {
+            writers.into_iter().map(Some).collect()
+        };
+        let slots: Vec<ShardSlot> = shards
+            .into_iter()
+            .zip(id_maps)
+            .enumerate()
+            .map(|(s, (shard, map))| {
+                let epoch = Arc::new(EpochShard { current: Mutex::new(shard), dim });
+                let coord = Coordinator::start(
+                    epoch.clone() as Arc<dyn AnnIndex>,
+                    None,
+                    clone_serve_config(&cfg.serve),
+                );
+                ShardSlot {
+                    epoch,
+                    coord,
+                    id_map: RwLock::new(map),
+                    writer: RwLock::new(writers[s].take()),
+                }
+            })
+            .collect();
+        Ok(ServeNode {
+            dim,
+            router,
+            slots,
+            policy: cfg.policy,
+            admission: cfg.tenants.map(Admission::new),
+            next_id: AtomicU32::new(next_id),
+            search: cfg.serve.search,
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Live row count per shard (the imbalance metric in the bench).
+    pub fn shard_rows(&self) -> Vec<usize> {
+        self.slots.iter().map(|s| AnnIndex::len(&*s.epoch)).collect()
+    }
+
+    /// Tenant-facing search: admission first (a debited or empty bucket
+    /// answers `Overloaded` without touching any shard queue), then
+    /// scatter-gather.
+    pub fn search(&self, tenant: &str, query: &[f32]) -> Result<NodeResponse> {
+        if let Some(adm) = &self.admission {
+            if !adm.try_admit(tenant) {
+                return Ok(NodeResponse {
+                    results: Vec::new(),
+                    status: ResponseStatus::Overloaded,
+                    latency: Duration::ZERO,
+                });
+            }
+        }
+        self.search_raw(query)
+    }
+
+    /// Scatter-gather without admission accounting — warmup, parity
+    /// checks and the post-overload liveness probe use this.
+    pub fn search_raw(&self, query: &[f32]) -> Result<NodeResponse> {
+        ensure!(query.len() == self.dim, "query dim {} != index dim {}", query.len(), self.dim);
+        let start = Instant::now();
+        // Submit to every shard before awaiting any reply.
+        let mut pending = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            pending.push(slot.coord.client.submit(query.to_vec())?);
+        }
+        let mut worst = ResponseStatus::Ok;
+        let mut translated: Vec<(f32, u32)> = Vec::with_capacity(self.search.k * 2);
+        for (s, p) in pending.into_iter().enumerate() {
+            match p.wait() {
+                Ok(resp) => {
+                    if severity(resp.status) > severity(worst) {
+                        worst = resp.status;
+                    }
+                    if resp.status == ResponseStatus::Ok {
+                        let map = self.slots[s].id_map.read().unwrap_or_else(|e| e.into_inner());
+                        for &(d, local) in &resp.results {
+                            translated.push((d, map[local as usize]));
+                        }
+                    }
+                }
+                // A dead shard coordinator (reply channel dropped
+                // mid-panic) is a failed shard, not a node error.
+                Err(_) => worst = ResponseStatus::Failed,
+            }
+        }
+        let results = if worst == ResponseStatus::Ok || self.policy == DegradePolicy::Partial {
+            ShardedIndex::merge_topk(translated, self.search.k)
+        } else {
+            Vec::new()
+        };
+        Ok(NodeResponse { results, status: worst, latency: start.elapsed() })
+    }
+
+    /// Ingest rows: each is assigned the next global id, routed to its
+    /// shard and appended through that shard's write handle. Returns the
+    /// global id range. Requires a mutable node (every target shard must
+    /// have a writer).
+    pub fn add(&self, rows: &[f32]) -> Result<std::ops::Range<u32>> {
+        ensure!(!rows.is_empty() && rows.len() % self.dim == 0, "rows are not n × {}", self.dim);
+        let n = rows.len() / self.dim;
+        let base = self.next_id.fetch_add(n as u32, Ordering::SeqCst);
+        // Group by target shard, preserving ascending global-id order
+        // within each group (keeps every id map monotone).
+        let mut groups: Vec<(Vec<f32>, Vec<u32>)> =
+            (0..self.slots.len()).map(|_| (Vec::new(), Vec::new())).collect();
+        for i in 0..n {
+            let gid = base + i as u32;
+            let row = &rows[i * self.dim..(i + 1) * self.dim];
+            let s = self.router.route(gid, row, self.slots.len());
+            groups[s].0.extend_from_slice(row);
+            groups[s].1.push(gid);
+        }
+        for (s, (flat, gids)) in groups.into_iter().enumerate() {
+            if gids.is_empty() {
+                continue;
+            }
+            let writer = {
+                let w = self.slots[s].writer.read().unwrap_or_else(|e| e.into_inner());
+                w.clone()
+            };
+            let Some(writer) = writer else {
+                bail!("shard {s} is read-only (static build or restored snapshot)");
+            };
+            let local = writer.add(&flat)?;
+            let mut map = self.slots[s].id_map.write().unwrap_or_else(|e| e.into_inner());
+            ensure!(
+                local.start as usize == map.len(),
+                "shard {s} local ids ({}..) diverged from its id map ({} entries)",
+                local.start,
+                map.len()
+            );
+            map.extend_from_slice(&gids);
+        }
+        Ok(base..base + n as u32)
+    }
+
+    /// Swap a shard's index live (RCU): queries in flight finish on the
+    /// old epoch; new queries see `new`. `writer` supplies the write
+    /// handle for the new epoch (`None` leaves the shard read-only).
+    pub fn swap_shard(
+        &self,
+        s: usize,
+        new: Arc<dyn AnnIndex>,
+        id_map: Vec<u32>,
+        writer: Option<Arc<DynamicHandle>>,
+    ) -> Result<()> {
+        ensure!(s < self.slots.len(), "no shard {s} (node has {})", self.slots.len());
+        ensure!(new.dim() == self.dim, "swap dim {} != node dim {}", new.dim(), self.dim);
+        ensure!(
+            id_map.len() >= new.len(),
+            "swap id map covers {} ids but the shard stores {} rows",
+            id_map.len(),
+            new.len()
+        );
+        let slot = &self.slots[s];
+        // Order: map first, then epoch. A query racing the swap reads
+        // the new (longer or equal) map with the old epoch's local ids —
+        // prefixes agree, so every translation stays in bounds.
+        *slot.id_map.write().unwrap_or_else(|e| e.into_inner()) = id_map;
+        *slot.writer.write().unwrap_or_else(|e| e.into_inner()) = writer;
+        slot.epoch.store(new);
+        Ok(())
+    }
+
+    /// Snapshot one shard as a complete 1-shard sharded container
+    /// (compact first when mutable, so the replica receives a single
+    /// clean segment). The container's per-section CRCs are the
+    /// transport integrity check.
+    pub fn snapshot_shard(&self, s: usize) -> Result<Vec<u8>> {
+        ensure!(s < self.slots.len(), "no shard {s} (node has {})", self.slots.len());
+        let slot = &self.slots[s];
+        let writer = slot.writer.read().unwrap_or_else(|e| e.into_inner()).clone();
+        if let Some(w) = writer {
+            w.compact()?;
+        }
+        let index = slot.epoch.load();
+        let id_map = slot.id_map.read().unwrap_or_else(|e| e.into_inner()).clone();
+        let single = ShardedIndex::from_parts(
+            // The embedded router is irrelevant for a 1-shard snapshot;
+            // hash keeps the header tiny.
+            Router::Hash { seed: 0 },
+            vec![index],
+            vec![id_map],
+            self.dim,
+            true,
+        )?;
+        single.to_bytes()
+    }
+
+    /// Restore a snapshot into shard `s`: parse (every section CRC is
+    /// verified), check search parity query-by-query against the
+    /// currently-serving shard, then swap. A parity mismatch leaves the
+    /// current shard serving. Returns the number of parity queries run.
+    pub fn restore_shard(&self, s: usize, snapshot: &[u8], parity_queries: &[f32]) -> Result<usize> {
+        ensure!(s < self.slots.len(), "no shard {s} (node has {})", self.slots.len());
+        let restored = crate::api::persist::open_sharded_bytes(snapshot.to_vec())?;
+        ensure!(
+            restored.num_shards() == 1,
+            "shard snapshot holds {} shards (expected 1)",
+            restored.num_shards()
+        );
+        let (_, mut shards, mut maps, rdim) = restored.into_parts();
+        ensure!(rdim == self.dim, "snapshot dim {rdim} != node dim {}", self.dim);
+        let new = shards.pop().expect("1-shard snapshot");
+        let new_map = maps.pop().expect("1-shard snapshot");
+
+        let slot = &self.slots[s];
+        let current = slot.epoch.load();
+        let cur_map = slot.id_map.read().unwrap_or_else(|e| e.into_inner()).clone();
+        let mut scratch = AnnScratch::default();
+        let mut got = Vec::new();
+        let mut want = Vec::new();
+        let nq = parity_queries.len() / self.dim;
+        for (qi, q) in parity_queries.chunks_exact(self.dim).enumerate() {
+            current.search_into(q, &self.search, &mut scratch, &mut want);
+            new.search_into(q, &self.search, &mut scratch, &mut got);
+            let a: Vec<(u32, u32)> =
+                want.iter().map(|&(d, l)| (d.to_bits(), cur_map[l as usize])).collect();
+            let b: Vec<(u32, u32)> =
+                got.iter().map(|&(d, l)| (d.to_bits(), new_map[l as usize])).collect();
+            ensure!(
+                a == b,
+                "restore parity mismatch on query {qi}/{nq} for shard {s}: \
+                 snapshot disagrees with the serving index"
+            );
+        }
+        self.swap_shard(s, new, new_map, None)?;
+        Ok(nq)
+    }
+
+    /// Refill every tenant bucket (bench passes start from a clean slate).
+    pub fn reset_admission(&self) {
+        if let Some(a) = &self.admission {
+            a.reset();
+        }
+    }
+
+    /// Per-tenant admission counters, sorted by tenant.
+    pub fn tenant_counters(&self) -> Vec<(String, TenantCounters)> {
+        self.admission.as_ref().map(|a| a.all_counters()).unwrap_or_default()
+    }
+
+    /// Deepest any shard's admission queue ever got.
+    pub fn queue_hwm(&self) -> u64 {
+        self.slots.iter().map(|s| s.coord.metrics.queue_depth_hwm()).max().unwrap_or(0)
+    }
+
+    /// One human-readable metrics line per shard.
+    pub fn metrics_summary(&self) -> String {
+        self.slots
+            .iter()
+            .enumerate()
+            .map(|(s, slot)| format!("shard {s}: {}", slot.coord.metrics.summary()))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// All shard coordinators' metrics as one JSON object
+    /// (`{"shards": [...]}`), same per-shard schema as
+    /// [`crate::coordinator::metrics::Metrics::metrics_json`].
+    pub fn metrics_json(&self) -> String {
+        let shards: Vec<String> =
+            self.slots.iter().map(|s| s.coord.metrics.metrics_json()).collect();
+        format!("{{\"shards\": [{}]}}", shards.join(", "))
+    }
+
+    /// Stop every shard coordinator (drains and joins the batchers).
+    pub fn stop(self) {
+        for slot in self.slots {
+            slot.coord.stop();
+        }
+    }
+}
+
+fn clone_serve_config(c: &ServeConfig) -> ServeConfig {
+    ServeConfig {
+        batch_size: c.batch_size,
+        max_wait: c.max_wait,
+        search: c.search.clone(),
+        scan_threads: c.scan_threads,
+        queue_depth: c.queue_depth,
+        deadline: c.deadline,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{generate, Kind};
+    use crate::index::IvfBuildParams;
+    use crate::serve::sharded::RouterKind;
+
+    fn build_params(shards: usize, router: RouterKind) -> ShardedBuildParams {
+        ShardedBuildParams {
+            shards,
+            router,
+            ivf: IvfBuildParams { k: 16, threads: 2, id_codec: "roc".into(), ..Default::default() },
+        }
+    }
+
+    fn node_cfg(k: usize, nprobe: usize) -> NodeConfig {
+        NodeConfig {
+            serve: ServeConfig {
+                batch_size: 8,
+                max_wait: Duration::from_millis(1),
+                search: QueryParams { k, nprobe, ef: 32 },
+                scan_threads: 2,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn static_node_matches_passive_sharded_index_bit_for_bit() {
+        let ds = generate(Kind::DeepLike, 2000, 16, 8, 41);
+        let params = build_params(3, RouterKind::Hash);
+        let passive = ShardedIndex::build(&ds.data, ds.dim, &params).unwrap();
+        let node = ServeNode::start_static(
+            ShardedIndex::build(&ds.data, ds.dim, &params).unwrap(),
+            node_cfg(10, 8),
+        )
+        .unwrap();
+        let sp = QueryParams { k: 10, nprobe: 8, ef: 32 };
+        let mut scratch = AnnScratch::default();
+        let mut want = Vec::new();
+        for (qi, q) in ds.queries.chunks_exact(ds.dim).enumerate() {
+            passive.search_into(q, &sp, &mut scratch, &mut want);
+            let got = node.search("t0", q).unwrap();
+            assert_eq!(got.status, ResponseStatus::Ok);
+            assert_eq!(got.results, want, "query {qi}");
+        }
+        node.stop();
+    }
+
+    #[test]
+    fn admission_sheds_greedy_tenant_but_not_quiet_one() {
+        let ds = generate(Kind::DeepLike, 1200, 4, 8, 42);
+        let params = build_params(2, RouterKind::Hash);
+        let mut cfg = node_cfg(5, 4);
+        cfg.tenants = Some(TenantPolicy { burst: 10, rate: 0.0 });
+        let node = ServeNode::start_static(
+            ShardedIndex::build(&ds.data, ds.dim, &params).unwrap(),
+            cfg,
+        )
+        .unwrap();
+        let q = &ds.queries[..ds.dim];
+        let mut shed = 0;
+        for _ in 0..30 {
+            let r = node.search("greedy", q).unwrap();
+            if r.status == ResponseStatus::Overloaded {
+                shed += 1;
+                assert!(r.results.is_empty());
+            }
+        }
+        assert_eq!(shed, 20, "rate=0 bucket admits exactly burst");
+        // The quiet tenant's bucket is untouched.
+        assert_eq!(node.search("quiet", q).unwrap().status, ResponseStatus::Ok);
+        let counters = node.tenant_counters();
+        let greedy = counters.iter().find(|(t, _)| t == "greedy").unwrap().1;
+        assert_eq!(greedy.rejected, 20);
+        assert_eq!(counters.iter().find(|(t, _)| t == "quiet").unwrap().1.rejected, 0);
+        // Post-overload liveness: the serving loop still answers.
+        assert_eq!(node.search_raw(q).unwrap().status, ResponseStatus::Ok);
+        node.stop();
+    }
+
+    #[test]
+    fn mutable_node_ingests_and_finds_new_rows() {
+        let ds = generate(Kind::DeepLike, 1500, 4, 8, 43);
+        for router in [RouterKind::Hash, RouterKind::Kmeans] {
+            let node = ServeNode::start_mutable(
+                &ds.data,
+                ds.dim,
+                &build_params(3, router),
+                CompactionPolicy::default(),
+                node_cfg(5, 16),
+            )
+            .unwrap();
+            let row: Vec<f32> = (0..ds.dim).map(|j| 40.0 + j as f32).collect();
+            let ids = node.add(&row).unwrap();
+            assert_eq!(ids, 1500..1501);
+            let got = node.search("t", &row).unwrap();
+            assert_eq!(got.status, ResponseStatus::Ok);
+            assert_eq!(got.results[0].1, 1500, "the planted row is its own nearest neighbor");
+            assert_eq!(got.results[0].0, 0.0);
+            assert_eq!(node.shard_rows().iter().sum::<usize>(), 1501);
+            node.stop();
+        }
+    }
+
+    #[test]
+    fn static_node_rejects_ingest() {
+        let ds = generate(Kind::DeepLike, 600, 2, 8, 44);
+        let node = ServeNode::start_static(
+            ShardedIndex::build(&ds.data, ds.dim, &build_params(2, RouterKind::Hash)).unwrap(),
+            node_cfg(5, 4),
+        )
+        .unwrap();
+        assert!(node.add(&vec![0.5; ds.dim]).is_err());
+        node.stop();
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip_verifies_parity_and_swaps() {
+        let ds = generate(Kind::DeepLike, 1500, 8, 8, 45);
+        let node = ServeNode::start_mutable(
+            &ds.data,
+            ds.dim,
+            &build_params(2, RouterKind::Hash),
+            CompactionPolicy::default(),
+            node_cfg(10, 8),
+        )
+        .unwrap();
+        let before: Vec<NodeResponse> = ds
+            .queries
+            .chunks_exact(ds.dim)
+            .map(|q| node.search_raw(q).unwrap())
+            .collect();
+        let snap = node.snapshot_shard(0).unwrap();
+        let nq = node.restore_shard(0, &snap, &ds.queries).unwrap();
+        assert_eq!(nq, 8);
+        // The restored epoch serves bit-identical answers.
+        for (q, b) in ds.queries.chunks_exact(ds.dim).zip(&before) {
+            let after = node.search_raw(q).unwrap();
+            assert_eq!(after.results, b.results);
+        }
+        // The restored shard is read-only now; the other still writes.
+        assert!(node.snapshot_shard(0).is_ok());
+        node.stop();
+    }
+
+    #[test]
+    fn restore_rejects_corrupt_and_mismatched_snapshots() {
+        let ds = generate(Kind::DeepLike, 1000, 4, 8, 46);
+        let node = ServeNode::start_mutable(
+            &ds.data,
+            ds.dim,
+            &build_params(2, RouterKind::Hash),
+            CompactionPolicy::default(),
+            node_cfg(5, 8),
+        )
+        .unwrap();
+        let snap = node.snapshot_shard(0).unwrap();
+        // Bit rot in transit: CRC catches it, shard keeps serving.
+        let mut bad = snap.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x10;
+        assert!(node.restore_shard(0, &bad, &ds.queries).is_err());
+        // Wrong shard's snapshot: parity check refuses the swap.
+        let other = node.snapshot_shard(1).unwrap();
+        let err = node.restore_shard(0, &other, &ds.queries).unwrap_err();
+        assert!(format!("{err:#}").contains("parity"), "{err:#}");
+        // Either way the node still answers.
+        assert_eq!(node.search_raw(&ds.queries[..ds.dim]).unwrap().status, ResponseStatus::Ok);
+        node.stop();
+    }
+
+    /// Chaos shard: panics whenever the query's first component is NaN.
+    struct PanickyShard {
+        dim: usize,
+    }
+
+    impl AnnIndex for PanickyShard {
+        fn kind(&self) -> IndexKind {
+            IndexKind::Ivf
+        }
+
+        fn dim(&self) -> usize {
+            self.dim
+        }
+
+        fn len(&self) -> usize {
+            1
+        }
+
+        fn stats(&self) -> IndexStats {
+            IndexStats {
+                kind: IndexKind::Ivf,
+                n: 1,
+                dim: self.dim,
+                edges: 0,
+                codec: "chaos".into(),
+                id_bits: 0,
+                code_bits: 0,
+                link_bits: 0,
+                live: 1,
+                deleted: 0,
+                buffer_rows: 0,
+                aux_bits: 0,
+                checksummed: false,
+                segments: Vec::new(),
+            }
+        }
+
+        fn search_into(
+            &self,
+            query: &[f32],
+            _params: &QueryParams,
+            _scratch: &mut AnnScratch,
+            out: &mut Vec<(f32, u32)>,
+        ) {
+            if query[0].is_nan() {
+                panic!("injected shard panic");
+            }
+            out.clear();
+            out.push((1e30, 0));
+        }
+
+        fn to_bytes(&self) -> Result<Vec<u8>> {
+            bail!("not serializable")
+        }
+    }
+
+    #[test]
+    fn shard_panic_degrades_per_policy_without_hanging() {
+        let ds = generate(Kind::DeepLike, 1000, 4, 8, 47);
+        for (policy, expect_results) in [(DegradePolicy::Partial, true), (DegradePolicy::Fail, false)]
+        {
+            let mut cfg = node_cfg(5, 8);
+            cfg.policy = policy;
+            let node = ServeNode::start_static(
+                ShardedIndex::build(&ds.data, ds.dim, &build_params(2, RouterKind::Hash))
+                    .unwrap(),
+                cfg,
+            )
+            .unwrap();
+            // Swap a chaos index into shard 1, live.
+            node.swap_shard(1, Arc::new(PanickyShard { dim: ds.dim }), vec![0], None).unwrap();
+            let mut bad = ds.queries[..ds.dim].to_vec();
+            bad[0] = f32::NAN;
+            let r = node.search_raw(&bad).unwrap();
+            assert_eq!(r.status, ResponseStatus::Failed, "policy {policy:?}");
+            // NaN distances still come back from the healthy shard (NaN
+            // query ⇒ NaN distances are pushed but TopK's total_cmp
+            // handles them); what matters is the policy split on whether
+            // any results surface at all.
+            if !expect_results {
+                assert!(r.results.is_empty(), "Fail policy returns nothing");
+            }
+            // The panicked shard's pool survived: clean queries are Ok on
+            // the healthy shard and the node answers — no hang.
+            let clean = node.search_raw(&ds.queries[..ds.dim]).unwrap();
+            assert!(
+                matches!(clean.status, ResponseStatus::Ok),
+                "node must keep serving after a shard panic, got {:?}",
+                clean.status
+            );
+            node.stop();
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Multi-shard container (kind 4): one routing-table section plus each
+//! shard's own container embedded verbatim.
+//!
+//! Layout after the 8-byte file header:
+//!
+//! ```text
+//! [SHRD] layout:u32  dim:u32  nshards:u32  router:u8
+//!        router=0 (hash)   → seed:u64
+//!        router=1 (kmeans) → centroids:f32s (nshards × dim)
+//! [XC\xss\xss] shard s's complete container bytes, verbatim
+//! [XM\xss\xss] shard s's id map (local row id → global ext id), u32s
+//! ```
+//!
+//! Embedding each shard's container unchanged means a shard can be
+//! carved out of (or swapped into) a node without re-encoding, and the
+//! outer section CRCs cover every embedded payload *in addition to* the
+//! inner container's own per-section CRCs — corruption is caught at the
+//! outer parse before any shard decoder runs.
+
+use crate::api::persist::{file_header, push_section, Container, KIND_SHARDED};
+use crate::api::AnnIndex;
+use crate::serve::sharded::{Router, ShardedIndex};
+use crate::util::serialize::{ReadBuf, WriteBuf};
+use anyhow::{bail, ensure, Result};
+use std::sync::Arc;
+
+/// Bumped only on incompatible changes to the SHRD section layout.
+const LAYOUT_VERSION: u32 = 1;
+
+/// Shard section tags encode the part (`C` container, `M` id map) and
+/// the shard ordinal big-endian in the last two bytes.
+fn shard_tag(part: u8, s: usize) -> [u8; 4] {
+    debug_assert!(s <= u16::MAX as usize);
+    [b'X', part, (s >> 8) as u8, (s & 0xff) as u8]
+}
+
+/// Serialize a sharded index: routing table, then each shard's container
+/// bytes and id map.
+pub fn to_bytes(idx: &ShardedIndex) -> Result<Vec<u8>> {
+    ensure!(
+        idx.num_shards() <= u16::MAX as usize + 1,
+        "cannot persist {} shards (tag encoding holds 65536)",
+        idx.num_shards()
+    );
+    let mut out = file_header(KIND_SHARDED);
+    let mut hdr = WriteBuf::new();
+    hdr.put_u32(LAYOUT_VERSION);
+    hdr.put_u32(idx.dim() as u32);
+    hdr.put_u32(idx.num_shards() as u32);
+    match idx.router() {
+        Router::Hash { seed } => {
+            hdr.put_u8(0);
+            hdr.put_u64(*seed);
+        }
+        Router::Kmeans { centroids, .. } => {
+            hdr.put_u8(1);
+            hdr.put_f32s(centroids);
+        }
+    }
+    push_section(&mut out, b"SHRD", &hdr.bytes);
+    for s in 0..idx.num_shards() {
+        let shard_bytes = idx.shard(s).to_bytes()?;
+        push_section(&mut out, &shard_tag(b'C', s), &shard_bytes);
+        let mut map = WriteBuf::new();
+        map.put_u32s(idx.id_map(s));
+        push_section(&mut out, &shard_tag(b'M', s), &map.bytes);
+    }
+    Ok(out)
+}
+
+/// Reassemble a [`ShardedIndex`] from a parsed kind-4 container. Every
+/// embedded shard container goes back through the regular kind dispatch,
+/// so a sharded file may mix static IVF, graph and dynamic shards.
+pub fn from_container(c: &Container) -> Result<ShardedIndex> {
+    ensure!(
+        c.kind == KIND_SHARDED,
+        "container holds kind {} (expected a sharded index)",
+        c.kind
+    );
+    let hdr = c.section(b"SHRD")?;
+    let mut rb = ReadBuf::new(hdr.as_slice());
+    let layout = rb.get_u32()?;
+    ensure!(
+        layout == LAYOUT_VERSION,
+        "unsupported sharded layout version {layout} (this build reads {LAYOUT_VERSION})"
+    );
+    let dim = rb.get_u32()? as usize;
+    let nshards = rb.get_u32()? as usize;
+    ensure!(dim > 0, "sharded header declares dim 0");
+    ensure!(
+        (1..=u16::MAX as usize + 1).contains(&nshards),
+        "sharded header declares {nshards} shards"
+    );
+    let router = match rb.get_u8()? {
+        0 => Router::Hash { seed: rb.get_u64()? },
+        1 => {
+            let centroids = rb.get_f32s()?;
+            Router::Kmeans { centroids, dim }
+        }
+        other => bail!("unknown router kind byte {other} in sharded header"),
+    };
+    ensure!(rb.remaining() == 0, "trailing bytes after the sharded header");
+
+    let mut shards: Vec<Arc<dyn AnnIndex>> = Vec::with_capacity(nshards);
+    let mut id_maps: Vec<Vec<u32>> = Vec::with_capacity(nshards);
+    for s in 0..nshards {
+        let cbytes = c.section(&shard_tag(b'C', s))?;
+        let raw = cbytes.as_slice();
+        ensure!(
+            raw.len() < 7 || raw[6] != KIND_SHARDED,
+            "shard {s} embeds another sharded container (nesting is not supported)"
+        );
+        let shard = crate::api::persist::open_bytes(raw.to_vec())
+            .map_err(|e| e.context(format!("opening embedded container for shard {s}")))?;
+        let mbytes = c.section(&shard_tag(b'M', s))?;
+        let mut mb = ReadBuf::new(mbytes.as_slice());
+        let map = mb.get_u32s()?;
+        ensure!(mb.remaining() == 0, "trailing bytes after shard {s}'s id map");
+        shards.push(Arc::from(shard));
+        id_maps.push(map);
+    }
+    ShardedIndex::from_parts(router, shards, id_maps, dim, c.checksummed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{AnnScratch, QueryParams};
+    use crate::datasets::{generate, Kind};
+    use crate::index::IvfBuildParams;
+    use crate::serve::sharded::{RouterKind, ShardedBuildParams};
+
+    fn build(router: RouterKind) -> (ShardedIndex, Vec<f32>, usize) {
+        let ds = generate(Kind::DeepLike, 2000, 8, 8, 77);
+        let params = ShardedBuildParams {
+            shards: 3,
+            router,
+            ivf: IvfBuildParams { k: 16, threads: 2, id_codec: "roc".into(), ..Default::default() },
+        };
+        let idx = ShardedIndex::build(&ds.data, ds.dim, &params).unwrap();
+        (idx, ds.queries, ds.dim)
+    }
+
+    fn search_all(idx: &dyn AnnIndex, queries: &[f32], dim: usize) -> Vec<Vec<(f32, u32)>> {
+        let sp = QueryParams { k: 10, nprobe: 8, ef: 32 };
+        let mut scratch = AnnScratch::default();
+        let mut out = Vec::new();
+        queries
+            .chunks_exact(dim)
+            .map(|q| {
+                idx.search_into(q, &sp, &mut scratch, &mut out);
+                out.clone()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_preserves_search_results_exactly() {
+        for router in [RouterKind::Hash, RouterKind::Kmeans] {
+            let (idx, queries, dim) = build(router);
+            let before = search_all(&idx, &queries, dim);
+            let bytes = idx.to_bytes().unwrap();
+            let back = crate::api::persist::open_sharded_bytes(bytes.clone()).unwrap();
+            assert_eq!(back.num_shards(), 3);
+            assert_eq!(AnnIndex::len(&back), AnnIndex::len(&idx));
+            assert_eq!(search_all(&back, &queries, dim), before, "router {router:?}");
+            // The generic open dispatches on the kind byte too.
+            let generic = crate::api::persist::open_bytes(bytes).unwrap();
+            assert_eq!(generic.kind(), crate::api::IndexKind::Sharded);
+            assert_eq!(search_all(&*generic, &queries, dim), before);
+        }
+    }
+
+    #[test]
+    fn stats_survive_roundtrip() {
+        let (idx, _, _) = build(RouterKind::Hash);
+        let bytes = idx.to_bytes().unwrap();
+        let back = crate::api::persist::open_sharded_bytes(bytes).unwrap();
+        let a = AnnIndex::stats(&idx);
+        let b = AnnIndex::stats(&back);
+        assert_eq!(a.n, b.n);
+        assert_eq!(a.codec, b.codec);
+        assert_eq!(a.segments.len(), b.segments.len());
+        assert!(b.checksummed, "v2 sharded container must report checksummed stats");
+    }
+
+    #[test]
+    fn every_flipped_byte_is_rejected() {
+        let (idx, _, _) = build(RouterKind::Hash);
+        let bytes = idx.to_bytes().unwrap();
+        // Flip one byte at a stride across the whole file; the outer CRCs
+        // must reject every corruption (the header bytes fail the magic /
+        // version / kind checks instead).
+        for pos in (0..bytes.len()).step_by(37) {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x40;
+            assert!(
+                crate::api::persist::open_sharded_bytes(bad).is_err(),
+                "flip at byte {pos} of {} was not detected",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_is_rejected() {
+        let (idx, _, _) = build(RouterKind::Kmeans);
+        let bytes = idx.to_bytes().unwrap();
+        for cut in [1usize, 7, 12, bytes.len() / 2, bytes.len() - 1] {
+            let bad = bytes[..cut].to_vec();
+            assert!(crate::api::persist::open_sharded_bytes(bad).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn nested_sharded_containers_are_refused() {
+        let (idx, _, dim) = build(RouterKind::Hash);
+        let inner = idx.to_bytes().unwrap();
+        // Hand-roll a kind-4 container whose shard 0 is itself kind 4.
+        let mut out = file_header(KIND_SHARDED);
+        let mut hdr = WriteBuf::new();
+        hdr.put_u32(LAYOUT_VERSION);
+        hdr.put_u32(dim as u32);
+        hdr.put_u32(1);
+        hdr.put_u8(0);
+        hdr.put_u64(7);
+        push_section(&mut out, b"SHRD", &hdr.bytes);
+        push_section(&mut out, &shard_tag(b'C', 0), &inner);
+        let mut map = WriteBuf::new();
+        map.put_u32s(&(0..AnnIndex::len(&idx) as u32).collect::<Vec<u32>>());
+        push_section(&mut out, &shard_tag(b'M', 0), &map.bytes);
+        let err = crate::api::persist::open_sharded_bytes(out).unwrap_err();
+        assert!(format!("{err:#}").contains("nesting"), "{err:#}");
+    }
+}

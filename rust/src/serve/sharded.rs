@@ -1,0 +1,488 @@
+//! Passive sharded index: N shards behind one [`AnnIndex`] endpoint with
+//! an exact scatter-gather top-k merge.
+//!
+//! The bit-identity contract — a sharded search returns exactly what a
+//! single index built over the union would — rests on three invariants:
+//!
+//! 1. **One global coarse quantizer.** [`ShardedIndex::build`] trains
+//!    k-means over the *whole* dataset with the same configuration as
+//!    [`IvfIndex::build`], then hands every shard the full centroid set
+//!    via [`IvfIndex::build_preassigned`] (a shard's absent clusters are
+//!    just empty lists, skipped by the scan). Probe selection is
+//!    therefore identical in every shard, so the union of per-shard
+//!    candidates equals the single-index candidate set at any `nprobe`.
+//! 2. **Monotone id maps.** Rows are appended to their shard in
+//!    ascending global-id order, so shard-local id order equals global id
+//!    order and per-shard tie handling agrees with the single index.
+//! 3. **Exact k-way merge.** Per-shard top-k results are merged through
+//!    [`TopK`], whose ordering is `(distance, payload)` — with global
+//!    external ids as payloads the final tie order is pinned to
+//!    `(distance, ext_id)` regardless of shard count or merge order.
+
+use crate::api::{AnnIndex, AnnScratch, IndexKind, IndexStats, QueryParams, SegmentStats};
+use crate::index::{IvfBuildParams, IvfIndex};
+use crate::quant::{kmeans, l2_sq, TopK};
+use anyhow::{bail, ensure, Result};
+use std::sync::Arc;
+
+/// How ingest assigns a row to a shard.
+#[derive(Clone, Debug)]
+pub enum Router {
+    /// Hash of the global external id (splitmix64 finalizer, seeded) —
+    /// uniform placement, vector-independent.
+    Hash { seed: u64 },
+    /// Nearest router centroid of the row vector — locality-preserving
+    /// placement. The `shards × dim` centroid matrix is its own tiny
+    /// clustering, separate from the shared coarse quantizer.
+    Kmeans { centroids: Vec<f32>, dim: usize },
+}
+
+fn splitmix64_fin(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Router {
+    /// Number of shards this router addresses.
+    pub fn num_shards(&self, configured: usize) -> usize {
+        match self {
+            Router::Hash { .. } => configured,
+            Router::Kmeans { centroids, dim } => centroids.len() / (*dim).max(1),
+        }
+    }
+
+    /// Shard for a row, given its global external id and vector. Hash
+    /// routers read the id, k-means routers read the vector.
+    pub fn route(&self, ext_id: u32, vector: &[f32], nshards: usize) -> usize {
+        match self {
+            Router::Hash { seed } => {
+                (splitmix64_fin(ext_id as u64 ^ seed) % nshards.max(1) as u64) as usize
+            }
+            Router::Kmeans { centroids, dim } => {
+                let mut best = 0usize;
+                let mut best_d = f32::INFINITY;
+                for (s, c) in centroids.chunks_exact(*dim).enumerate() {
+                    let d = l2_sq(vector, c);
+                    if d < best_d {
+                        best_d = d;
+                        best = s;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Router::Hash { .. } => "hash",
+            Router::Kmeans { .. } => "kmeans",
+        }
+    }
+}
+
+/// Which [`Router`] family [`ShardedIndex::build`] should construct.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouterKind {
+    Hash,
+    Kmeans,
+}
+
+impl RouterKind {
+    pub fn parse(s: &str) -> Result<RouterKind> {
+        match s {
+            "hash" => Ok(RouterKind::Hash),
+            "kmeans" => Ok(RouterKind::Kmeans),
+            other => bail!("unknown router {other:?} (valid: hash, kmeans)"),
+        }
+    }
+}
+
+/// Build configuration: shard count, router family and the per-shard IVF
+/// parameters. `ivf.k` is the *global* coarse cluster count (every shard
+/// carries the full centroid set).
+#[derive(Clone)]
+pub struct ShardedBuildParams {
+    pub shards: usize,
+    pub router: RouterKind,
+    pub ivf: IvfBuildParams,
+}
+
+impl Default for ShardedBuildParams {
+    fn default() -> Self {
+        ShardedBuildParams { shards: 4, router: RouterKind::Hash, ivf: IvfBuildParams::default() }
+    }
+}
+
+/// N shards behind one [`AnnIndex`] endpoint. Searches scatter to every
+/// shard and merge exactly; shard-local result ids are translated to
+/// global external ids through per-shard monotone id maps.
+pub struct ShardedIndex {
+    dim: usize,
+    router: Router,
+    shards: Vec<Arc<dyn AnnIndex>>,
+    /// Shard-local row id → global external id (ascending at build time).
+    id_maps: Vec<Vec<u32>>,
+    /// Whether the enclosing container carried per-section CRCs (true
+    /// for in-memory builds).
+    pub(crate) checksummed: bool,
+}
+
+impl ShardedIndex {
+    /// Partition `data` and build one [`IvfIndex`] per shard over the
+    /// shared global clustering. Returns the concrete parts so callers
+    /// that need mutable shards (the serve node wraps each in a
+    /// [`crate::dynamic::DynamicIvf`]) can reuse the same partitioning.
+    pub fn build_parts(
+        data: &[f32],
+        dim: usize,
+        params: &ShardedBuildParams,
+    ) -> Result<(Router, Vec<IvfIndex>, Vec<Vec<u32>>)> {
+        ensure!(dim > 0 && data.len() % dim == 0, "data is not row-major n × {dim}");
+        let n = data.len() / dim;
+        ensure!(params.shards >= 1, "need at least one shard");
+        ensure!(
+            n >= params.shards,
+            "cannot split {n} rows across {} shards",
+            params.shards
+        );
+        // The shared coarse quantizer — the exact same training call as
+        // `IvfIndex::build`, so a 1-shard build (or the union reference in
+        // tests) produces bit-identical centroids and assignments.
+        let cfg = kmeans::KmeansConfig {
+            k: params.ivf.k,
+            iters: params.ivf.train_iters,
+            seed: params.ivf.seed,
+            threads: params.ivf.threads,
+            ..Default::default()
+        };
+        let centroids = kmeans::train(data, dim, &cfg);
+        let kk = centroids.len() / dim;
+        let assign = kmeans::assign(data, dim, &centroids, params.ivf.threads);
+
+        let router = match params.router {
+            RouterKind::Hash => Router::Hash { seed: params.ivf.seed },
+            RouterKind::Kmeans => {
+                let rc = kmeans::train(
+                    data,
+                    dim,
+                    &kmeans::KmeansConfig {
+                        k: params.shards,
+                        iters: params.ivf.train_iters,
+                        // Decorrelated from the coarse quantizer's seed.
+                        seed: params.ivf.seed ^ 0x51a2_9d1e,
+                        threads: params.ivf.threads,
+                        ..Default::default()
+                    },
+                );
+                Router::Kmeans { centroids: rc, dim }
+            }
+        };
+
+        // Partition rows in ascending global-id order so each shard's
+        // local id order is a monotone restriction of the global order.
+        let nshards = params.shards;
+        let mut shard_data: Vec<Vec<f32>> = vec![Vec::new(); nshards];
+        let mut shard_assign: Vec<Vec<u32>> = vec![Vec::new(); nshards];
+        let mut id_maps: Vec<Vec<u32>> = vec![Vec::new(); nshards];
+        for i in 0..n {
+            let row = &data[i * dim..(i + 1) * dim];
+            let s = router.route(i as u32, row, nshards);
+            shard_data[s].extend_from_slice(row);
+            shard_assign[s].push(assign[i]);
+            id_maps[s].push(i as u32);
+        }
+        for (s, m) in id_maps.iter().enumerate() {
+            ensure!(
+                !m.is_empty(),
+                "shard {s} received no rows (n={n}, shards={nshards}); use fewer shards"
+            );
+        }
+        let shards: Vec<IvfIndex> = (0..nshards)
+            .map(|s| {
+                IvfIndex::build_preassigned(
+                    &shard_data[s],
+                    dim,
+                    &centroids,
+                    &shard_assign[s],
+                    &params.ivf,
+                    kk,
+                )
+            })
+            .collect();
+        Ok((router, shards, id_maps))
+    }
+
+    /// Build a static sharded index over `data`.
+    pub fn build(data: &[f32], dim: usize, params: &ShardedBuildParams) -> Result<ShardedIndex> {
+        let (router, shards, id_maps) = Self::build_parts(data, dim, params)?;
+        Self::from_parts(
+            router,
+            shards.into_iter().map(|i| Arc::new(i) as Arc<dyn AnnIndex>).collect(),
+            id_maps,
+            dim,
+            true,
+        )
+    }
+
+    /// Assemble from already-built shards (container open, serve node,
+    /// tests). Validates shapes; `checksummed` records whether the source
+    /// container carried CRCs.
+    pub fn from_parts(
+        router: Router,
+        shards: Vec<Arc<dyn AnnIndex>>,
+        id_maps: Vec<Vec<u32>>,
+        dim: usize,
+        checksummed: bool,
+    ) -> Result<ShardedIndex> {
+        ensure!(!shards.is_empty(), "a sharded index needs at least one shard");
+        ensure!(shards.len() == id_maps.len(), "shard/id-map count mismatch");
+        for (s, (shard, map)) in shards.iter().zip(&id_maps).enumerate() {
+            ensure!(
+                shard.dim() == dim,
+                "shard {s} has dim {} (container says {dim})",
+                shard.dim()
+            );
+            // Static shards map every stored row; mutable shards may have
+            // assigned more local ids than live rows, never fewer.
+            ensure!(
+                map.len() >= shard.len(),
+                "shard {s} id map covers {} local ids but the shard stores {} rows",
+                map.len(),
+                shard.len()
+            );
+        }
+        if let Router::Kmeans { centroids, dim: rdim } = &router {
+            ensure!(
+                *rdim == dim && centroids.len() == shards.len() * dim,
+                "router centroid matrix is {}×{rdim}, expected {}×{dim}",
+                centroids.len() / (*rdim).max(1),
+                shards.len()
+            );
+        }
+        Ok(ShardedIndex { dim, router, shards, id_maps, checksummed })
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    pub fn shard(&self, s: usize) -> &Arc<dyn AnnIndex> {
+        &self.shards[s]
+    }
+
+    pub fn id_map(&self, s: usize) -> &[u32] {
+        &self.id_maps[s]
+    }
+
+    /// Per-shard stats, in shard order (`zann info` prints one line per
+    /// shard from this).
+    pub fn shard_stats(&self) -> Vec<IndexStats> {
+        self.shards.iter().map(|s| s.stats()).collect()
+    }
+
+    /// Decompose into (router, shards, id maps, dim) — the serve node
+    /// takes ownership of the slots this way.
+    pub fn into_parts(self) -> (Router, Vec<Arc<dyn AnnIndex>>, Vec<Vec<u32>>, usize) {
+        (self.router, self.shards, self.id_maps, self.dim)
+    }
+
+    /// Merge pre-translated `(distance, global_id)` candidates from many
+    /// shards into the final top-k, tie order pinned to
+    /// `(distance, ext_id)`. Shared by the passive index and the serve
+    /// node's scatter-gather path so both merge identically.
+    pub fn merge_topk(
+        per_shard: impl IntoIterator<Item = (f32, u32)>,
+        k: usize,
+    ) -> Vec<(f32, u32)> {
+        let mut merged = TopK::new(k);
+        for (d, gid) in per_shard {
+            merged.push(d, gid as u64);
+        }
+        merged.into_sorted()
+    }
+}
+
+impl AnnIndex for ShardedIndex {
+    fn kind(&self) -> IndexKind {
+        IndexKind::Sharded
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    fn stats(&self) -> IndexStats {
+        let per: Vec<IndexStats> = self.shard_stats();
+        let mut codecs: Vec<String> = Vec::new();
+        for s in &per {
+            if !codecs.contains(&s.codec) {
+                codecs.push(s.codec.clone());
+            }
+        }
+        IndexStats {
+            kind: IndexKind::Sharded,
+            n: per.iter().map(|s| s.n).sum(),
+            dim: self.dim,
+            edges: per.iter().map(|s| s.edges).sum(),
+            codec: codecs.join("+"),
+            id_bits: per.iter().map(|s| s.id_bits).sum(),
+            code_bits: per.iter().map(|s| s.code_bits).sum(),
+            link_bits: per.iter().map(|s| s.link_bits).sum(),
+            live: per.iter().map(|s| s.live).sum(),
+            deleted: per.iter().map(|s| s.deleted).sum(),
+            buffer_rows: per.iter().map(|s| s.buffer_rows).sum(),
+            aux_bits: per.iter().map(|s| s.aux_bits).sum(),
+            checksummed: self.checksummed && per.iter().all(|s| s.checksummed),
+            segments: per
+                .iter()
+                .zip(&self.id_maps)
+                .map(|(s, m)| SegmentStats {
+                    rows: s.n,
+                    id_bits: s.id_bits,
+                    map_bits: 32 * m.len() as u64,
+                })
+                .collect(),
+        }
+    }
+
+    /// Serial scatter-gather: each shard searches with the shared
+    /// scratch, results are translated to global ids and merged exactly.
+    /// (The serve node runs the same merge over per-shard worker pools;
+    /// this path is the single-threaded reference and what `zann serve`
+    /// verification compares against.)
+    fn search_into(
+        &self,
+        query: &[f32],
+        params: &QueryParams,
+        scratch: &mut AnnScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        let mut merged = TopK::new(params.k);
+        let mut tmp: Vec<(f32, u32)> = Vec::with_capacity(params.k);
+        for (s, shard) in self.shards.iter().enumerate() {
+            shard.search_into(query, params, scratch, &mut tmp);
+            let map = &self.id_maps[s];
+            for &(d, local) in &tmp {
+                merged.push(d, map[local as usize] as u64);
+            }
+        }
+        *out = merged.into_sorted();
+    }
+
+    // No `coarse_info`: shards run their own coarse stage inside the
+    // scatter, so the sharded endpoint is served query-at-a-time (like
+    // graphs) when put behind a single coordinator.
+
+    fn to_bytes(&self) -> Result<Vec<u8>> {
+        super::persist::to_bytes(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{generate, Kind};
+
+    fn params(codec: &str, shards: usize, router: RouterKind) -> ShardedBuildParams {
+        ShardedBuildParams {
+            shards,
+            router,
+            ivf: IvfBuildParams {
+                k: 16,
+                id_codec: codec.into(),
+                threads: 2,
+                seed: 0x5eed,
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn hash_router_spreads_and_is_deterministic() {
+        let r = Router::Hash { seed: 7 };
+        let mut counts = [0usize; 4];
+        for id in 0..4000u32 {
+            let s = r.route(id, &[], 4);
+            assert_eq!(s, r.route(id, &[], 4));
+            counts[s] += 1;
+        }
+        for &c in &counts {
+            assert!((700..1300).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn kmeans_router_routes_to_nearest_centroid() {
+        let r = Router::Kmeans {
+            centroids: vec![0.0, 0.0, 10.0, 10.0, -10.0, 10.0],
+            dim: 2,
+        };
+        assert_eq!(r.route(0, &[0.1, -0.2], 3), 0);
+        assert_eq!(r.route(1, &[9.0, 11.0], 3), 1);
+        assert_eq!(r.route(2, &[-11.0, 9.5], 3), 2);
+    }
+
+    #[test]
+    fn sharded_build_partitions_every_row_once() {
+        let ds = generate(Kind::DeepLike, 3000, 4, 8, 31);
+        for router in [RouterKind::Hash, RouterKind::Kmeans] {
+            let idx = ShardedIndex::build(&ds.data, ds.dim, &params("roc", 4, router)).unwrap();
+            assert_eq!(idx.num_shards(), 4);
+            assert_eq!(AnnIndex::len(&idx), 3000);
+            let mut seen = vec![false; 3000];
+            for s in 0..4 {
+                let map = idx.id_map(s);
+                assert_eq!(map.len(), idx.shard(s).len());
+                assert!(map.windows(2).all(|w| w[0] < w[1]), "id map must be monotone");
+                for &g in map {
+                    assert!(!seen[g as usize], "row {g} in two shards");
+                    seen[g as usize] = true;
+                }
+            }
+            assert!(seen.iter().all(|&b| b), "router {router:?} dropped rows");
+            let st = AnnIndex::stats(&idx);
+            assert_eq!(st.kind, IndexKind::Sharded);
+            assert_eq!(st.n, 3000);
+            assert_eq!(st.segments.len(), 4);
+            assert!(st.checksummed);
+            assert!(st.bits_per_id() > 0.0);
+        }
+    }
+
+    #[test]
+    fn merge_topk_pins_ties_to_distance_then_id() {
+        // Three shards emit overlapping tie groups; the merge must keep
+        // the k smallest (distance, id) pairs regardless of input order.
+        let cands = vec![
+            (2.0, 9u32),
+            (1.0, 7),
+            (1.0, 3),
+            (3.0, 1),
+            (1.0, 5),
+            (2.0, 2),
+        ];
+        let got = ShardedIndex::merge_topk(cands, 4);
+        assert_eq!(got, vec![(1.0, 3), (1.0, 5), (1.0, 7), (2.0, 2)]);
+    }
+
+    #[test]
+    fn empty_shard_is_rejected_at_build() {
+        let ds = generate(Kind::DeepLike, 64, 1, 4, 9);
+        // 64 rows into 64 hash shards will leave some shard empty with
+        // near certainty; the build must say so instead of producing a
+        // shard whose codecs choke on an empty universe.
+        let err = ShardedIndex::build(&ds.data, ds.dim, &params("roc", 64, RouterKind::Hash));
+        assert!(err.is_err());
+    }
+}

@@ -17,7 +17,7 @@ pub mod timer;
 
 pub use bits::{BitReader, BitWriter};
 pub use bytes::{Blobs, BlobsBuilder, Bytes};
-pub use prng::Rng;
+pub use prng::{Rng, Zipf};
 pub use serialize::{ReadBuf, WriteBuf};
 
 /// `ceil(log2(n))` for n >= 1; number of bits needed to address `[0, n)`.

@@ -1,8 +1,9 @@
 //! Small, fast, reproducible PRNG (splitmix64-seeded xoshiro256**).
 //!
 //! All randomness in the library — dataset synthesis, k-means init,
-//! property tests — flows through [`Rng`] so every experiment is exactly
-//! reproducible from a seed.
+//! property tests, the zipf-skewed serve workload ([`Zipf`]) — flows
+//! through [`Rng`] so every experiment is exactly reproducible from a
+//! seed.
 
 /// xoshiro256** generator.
 #[derive(Clone, Debug)]
@@ -107,6 +108,40 @@ impl Rng {
     }
 }
 
+/// Zipf(θ) sampler over `[0, n)` via a precomputed normalized CDF and
+/// binary search — rank 0 is the hottest item. θ = 0 degenerates to the
+/// uniform distribution; θ ≈ 1 is the classic web-workload skew used by
+/// the serve bench for tenant/shard traffic.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, theta: f64) -> Zipf {
+        assert!(n > 0, "zipf over an empty domain");
+        assert!(theta >= 0.0 && theta.is_finite(), "zipf theta must be finite and >= 0");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for i in 0..n {
+            acc += 1.0 / ((i + 1) as f64).powf(theta);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Draw one rank in `[0, n)`; rank 0 is the most frequent.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64();
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,6 +197,38 @@ mod tests {
             let set: std::collections::HashSet<_> = s.iter().collect();
             assert_eq!(set.len(), k, "duplicates in sample");
             assert!(s.iter().all(|&v| v < n));
+        }
+    }
+
+    #[test]
+    fn zipf_is_deterministic_skewed_and_in_range() {
+        let z = Zipf::new(16, 0.99);
+        let mut rng = Rng::new(11);
+        let mut counts = [0usize; 16];
+        for _ in 0..50_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 50_000);
+        // Rank 0 dominates and the tail is monotonically lighter (with
+        // slack for sampling noise on the tail ranks).
+        assert!(counts[0] > counts[1] && counts[1] > counts[4] && counts[0] > 4 * counts[15]);
+        // Same seed ⇒ same stream.
+        let (mut a, mut b) = (Rng::new(5), Rng::new(5));
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut a), z.sample(&mut b));
+        }
+    }
+
+    #[test]
+    fn zipf_theta_zero_is_uniform() {
+        let z = Zipf::new(8, 0.0);
+        let mut rng = Rng::new(3);
+        let mut counts = [0usize; 8];
+        for _ in 0..80_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "{counts:?}");
         }
     }
 

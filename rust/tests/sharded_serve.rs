@@ -1,0 +1,228 @@
+//! Sharded-serving acceptance: scatter-gather over N shards must be
+//! *bit-identical* to searching one index built over the union of the
+//! rows — for every per-list codec, both ingest routers, and planted
+//! exact-distance ties — and the live node must degrade (not hang or
+//! poison its siblings) when a shard worker panics mid-query.
+//!
+//! Bit-identity holds by construction (one global coarse quantizer shared
+//! across shards + the `(distance, ext_id)` merge in
+//! `zann::serve::sharded`); these tests are the end-to-end proof.
+
+use std::sync::Arc;
+use zann::api::{persist, AnnIndex, AnnScratch, QueryParams};
+use zann::codecs::PER_LIST_CODECS;
+use zann::datasets::{generate, Kind};
+use zann::index::{IvfBuildParams, IvfIndex};
+use zann::serve::{DegradePolicy, NodeConfig, RouterKind, ServeNode, ShardedBuildParams, ShardedIndex};
+
+/// Deep-like rows with planted exact-distance tie groups: the rows in
+/// each group are bytewise identical, so any query is equidistant from
+/// all of them and only the `(distance, id)` pin can order the results.
+fn tied_dataset(n: usize, dim: usize, seed: u64) -> (Vec<f32>, Vec<Vec<u32>>) {
+    let ds = generate(Kind::DeepLike, n, 1, dim, seed);
+    let mut data = ds.data;
+    // Two groups, members spread across the id space so every router
+    // splits at least one group over multiple shards.
+    let groups: Vec<Vec<u32>> = vec![
+        vec![17, 411, 902, 1673],
+        vec![230, 1111, 1999],
+    ];
+    for group in &groups {
+        let src = group[0] as usize * dim;
+        let proto: Vec<f32> = data[src..src + dim].to_vec();
+        for &id in &group[1..] {
+            data[id as usize * dim..(id as usize + 1) * dim].copy_from_slice(&proto);
+        }
+    }
+    (data, groups)
+}
+
+fn ivf_params(codec: &str) -> IvfBuildParams {
+    IvfBuildParams { k: 16, id_codec: codec.into(), threads: 2, seed: 7, ..Default::default() }
+}
+
+fn search(idx: &dyn AnnIndex, q: &[f32], p: &QueryParams) -> Vec<(f32, u32)> {
+    let mut scratch = AnnScratch::default();
+    let mut out = Vec::new();
+    idx.search_into(q, p, &mut scratch, &mut out);
+    out
+}
+
+/// The tentpole acceptance property: for every per-list codec and both
+/// routers, a 4-shard index answers every query — including the planted
+/// tie queries — with exactly the single-index result vector (same
+/// distances to the bit, same ids, same order).
+#[test]
+fn sharded_search_is_bit_identical_to_single_index_for_every_codec() {
+    let (n, dim) = (2000usize, 8usize);
+    let (data, groups) = tied_dataset(n, dim, 901);
+    let qs = generate(Kind::DeepLike, 8, 8, dim, 77).queries;
+    let p = QueryParams { k: 10, nprobe: 4, ef: 0 };
+    for codec in PER_LIST_CODECS {
+        let single = IvfIndex::build(&data, dim, &ivf_params(codec));
+        for router in [RouterKind::Hash, RouterKind::Kmeans] {
+            let sharded = ShardedIndex::build(
+                &data,
+                dim,
+                &ShardedBuildParams { shards: 4, router, ivf: ivf_params(codec) },
+            )
+            .unwrap();
+            assert_eq!(sharded.num_shards(), 4);
+            for qi in 0..8 {
+                let q = &qs[qi * dim..(qi + 1) * dim];
+                let got = search(&sharded, q, &p);
+                let want = search(&single, q, &p);
+                assert_eq!(got.len(), p.k);
+                assert!(
+                    got.iter().zip(&want).all(|(a, b)| a.0.to_bits() == b.0.to_bits() && a.1 == b.1),
+                    "{codec}/{router:?} query {qi}: sharded != single\n got {got:?}\nwant {want:?}"
+                );
+            }
+            // Tie queries: querying a duplicated row makes its whole
+            // group exact-distance-tied at 0; the merge must return the
+            // group in ascending global id, identically on both paths.
+            for group in &groups {
+                let q = &data[group[0] as usize * dim..(group[0] as usize + 1) * dim];
+                let got = search(&sharded, q, &p);
+                let want = search(&single, q, &p);
+                assert_eq!(
+                    got.iter().map(|r| (r.0.to_bits(), r.1)).collect::<Vec<_>>(),
+                    want.iter().map(|r| (r.0.to_bits(), r.1)).collect::<Vec<_>>(),
+                    "{codec}/{router:?}: tie group diverged"
+                );
+                let tied: Vec<u32> =
+                    got.iter().filter(|r| r.0 == got[0].0).map(|r| r.1).collect();
+                for id in group {
+                    assert!(tied.contains(id), "{codec}/{router:?}: {id} missing from tie group");
+                }
+                let mut sorted = tied.clone();
+                sorted.sort_unstable();
+                assert_eq!(tied, sorted, "{codec}/{router:?}: ties not in ascending id order");
+            }
+        }
+    }
+}
+
+/// Same property through the file format: a sharded container saved to
+/// disk and reopened generically serves bit-identical results.
+#[test]
+fn saved_sharded_container_reopens_bit_identically() {
+    let ds = generate(Kind::DeepLike, 1500, 6, 8, 31);
+    let sharded = ShardedIndex::build(
+        &ds.data,
+        ds.dim,
+        &ShardedBuildParams { shards: 3, router: RouterKind::Kmeans, ivf: ivf_params("roc") },
+    )
+    .unwrap();
+    let dir = std::env::temp_dir().join(format!("zann-sharded-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("sharded.zann");
+    sharded.save(&path).unwrap();
+    let generic = persist::open(&path).unwrap();
+    let typed = persist::open_sharded(&path).unwrap();
+    assert_eq!(typed.num_shards(), 3);
+    let p = QueryParams { k: 5, nprobe: 4, ef: 0 };
+    for qi in 0..ds.nq {
+        let q = ds.query(qi);
+        let want = search(&sharded, q, &p);
+        assert_eq!(search(&*generic, q, &p), want, "generic reopen diverged at query {qi}");
+        assert_eq!(search(&typed, q, &p), want, "typed reopen diverged at query {qi}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A shard whose search panics on a poisoned query (NaN lead) — stands
+/// in for any mid-query worker fault.
+struct PanickyShard {
+    dim: usize,
+}
+
+impl AnnIndex for PanickyShard {
+    fn kind(&self) -> zann::api::IndexKind {
+        zann::api::IndexKind::Ivf
+    }
+    fn dim(&self) -> usize {
+        self.dim
+    }
+    fn len(&self) -> usize {
+        1
+    }
+    fn stats(&self) -> zann::api::IndexStats {
+        zann::api::IndexStats {
+            kind: zann::api::IndexKind::Ivf,
+            n: 1,
+            dim: self.dim,
+            edges: 0,
+            codec: "chaos".into(),
+            id_bits: 0,
+            code_bits: 0,
+            link_bits: 0,
+            live: 1,
+            deleted: 0,
+            buffer_rows: 0,
+            aux_bits: 0,
+            checksummed: false,
+            segments: Vec::new(),
+        }
+    }
+    fn search_into(
+        &self,
+        query: &[f32],
+        params: &QueryParams,
+        _scratch: &mut AnnScratch,
+        out: &mut Vec<(f32, u32)>,
+    ) {
+        if query[0].is_nan() {
+            panic!("chaos shard: poisoned query");
+        }
+        out.clear();
+        out.push((f32::MAX, 0));
+        let _ = params;
+    }
+    fn to_bytes(&self) -> anyhow::Result<Vec<u8>> {
+        anyhow::bail!("chaos shard is not serializable")
+    }
+}
+
+/// End-to-end chaos: swap a panicking shard into a live node, hit it
+/// mid-query, and require (a) a structured `Failed` response — never a
+/// hang — with the degrade policy deciding whether sibling results
+/// still flow, and (b) full recovery on the next clean query.
+#[test]
+fn shard_worker_panic_degrades_per_policy_and_node_recovers() {
+    let ds = generate(Kind::DeepLike, 1200, 4, 8, 53);
+    for policy in [DegradePolicy::Partial, DegradePolicy::Fail] {
+        let sharded = ShardedIndex::build(
+            &ds.data,
+            ds.dim,
+            &ShardedBuildParams { shards: 3, router: RouterKind::Hash, ivf: ivf_params("ef") },
+        )
+        .unwrap();
+        let cfg = NodeConfig { policy, ..Default::default() };
+        let node = ServeNode::start_static(sharded, cfg).unwrap();
+        let clean = ds.query(0).to_vec();
+        let before = node.search_raw(&clean).unwrap();
+        assert!(before.is_ok(), "baseline query must serve");
+
+        node.swap_shard(1, Arc::new(PanickyShard { dim: ds.dim }), vec![0], None).unwrap();
+        let mut poisoned = clean.clone();
+        poisoned[0] = f32::NAN;
+        let resp = node.search_raw(&poisoned).unwrap();
+        assert_eq!(
+            resp.status,
+            zann::coordinator::ResponseStatus::Failed,
+            "{policy:?}: panicked shard must surface as Failed"
+        );
+        match policy {
+            DegradePolicy::Fail => assert!(resp.results.is_empty(), "Fail policy returns nothing"),
+            DegradePolicy::Partial => {
+                // NaN distances from healthy shards are legitimate here;
+                // the point is the merge still produced an answer.
+            }
+        }
+        // The panicked worker was respawned: the same node keeps serving.
+        let after = node.search_raw(&clean).unwrap();
+        assert!(after.is_ok(), "{policy:?}: node must recover after a shard panic");
+        node.stop();
+    }
+}
