@@ -1207,6 +1207,9 @@ pub fn serve(args: &Args) {
     let schedule = crate::eval::workload::serve_schedule(
         requests, tenants, theta, write_frac, &ds.queries, ds.dim, scale.seed,
     );
+    // Write schedules run a single measured pass (repeated passes would
+    // re-ingest the same rows); report the pass count actually used.
+    let runs = crate::eval::workload::effective_runs(&schedule, runs);
     let (outcomes, wall) = crate::eval::workload::run_serve(&node, &schedule, clients, runs);
     let total = crate::eval::workload::aggregate_serve(&outcomes, None, wall);
     let per_tenant: Vec<(String, crate::eval::workload::ServeStats)> = (0..tenants)

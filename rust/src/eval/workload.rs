@@ -145,6 +145,19 @@ pub fn serve_schedule(
         .collect()
 }
 
+/// Number of measured passes [`run_serve`] will actually execute: the
+/// requested `runs` for a read-only schedule, 1 as soon as the schedule
+/// contains a write (each pass would ingest the same rows again, so
+/// repeated passes measure ever-larger indexes). Exposed so the bench
+/// can report the pass count that was really used.
+pub fn effective_runs(schedule: &[ServeOp], runs: usize) -> usize {
+    if schedule.iter().any(|o| o.write) {
+        1
+    } else {
+        runs.max(1)
+    }
+}
+
 /// Outcome of one scheduled request in the best measured pass.
 #[derive(Clone, Copy, Debug)]
 pub struct ServeOutcome {
@@ -160,6 +173,13 @@ pub struct ServeOutcome {
 /// best wall-clock. Returns per-request outcomes of that pass plus its
 /// wall time. Writes bypass admission (they are ingest, not queries) and
 /// report `Ok`/`Failed`.
+///
+/// Best-of-runs is a *read-only* discipline: a schedule containing
+/// writes mutates the node, so a second pass would replay the same
+/// ingests over an already-grown index — passes would not be comparable
+/// and `shard_rows` would double-count rows. Mixed schedules therefore
+/// run exactly one measured pass regardless of `runs` (see
+/// [`effective_runs`]).
 pub fn run_serve(
     node: &ServeNode,
     schedule: &[ServeOp],
@@ -167,9 +187,10 @@ pub fn run_serve(
     runs: usize,
 ) -> (Vec<ServeOutcome>, f64) {
     let clients = clients.max(1);
+    let runs = effective_runs(schedule, runs);
     let mut best_wall = f64::INFINITY;
     let mut best: Vec<ServeOutcome> = Vec::new();
-    for _ in 0..runs.max(1) {
+    for _ in 0..runs {
         node.reset_admission();
         let cells: Vec<Mutex<Option<ServeOutcome>>> =
             (0..schedule.len()).map(|_| Mutex::new(None)).collect();
@@ -298,6 +319,17 @@ mod tests {
     }
 
     #[test]
+    fn effective_runs_clamps_only_write_schedules() {
+        let read = ServeOp { tenant: 0, write: false, payload: vec![0.0] };
+        let write = ServeOp { tenant: 0, write: true, payload: vec![0.0] };
+        let reads: Vec<ServeOp> =
+            (0..4).map(|_| ServeOp { tenant: 0, write: false, payload: vec![0.0] }).collect();
+        assert_eq!(effective_runs(&reads, 3), 3);
+        assert_eq!(effective_runs(&reads, 0), 1);
+        assert_eq!(effective_runs(&[read, write], 3), 1);
+    }
+
+    #[test]
     fn serve_schedule_is_deterministic_and_zipf_skewed() {
         let ds = generate(Kind::DeepLike, 200, 32, 8, 11);
         let a = serve_schedule(500, 4, 1.2, 0.2, &ds.queries, ds.dim, 9);
@@ -339,9 +371,19 @@ mod tests {
             ServeNode::start_mutable(&ds.data, ds.dim, &params, CompactionPolicy::default(), cfg)
                 .unwrap();
         let schedule = serve_schedule(200, 3, 1.2, 0.1, &ds.queries, ds.dim, 13);
+        let writes = schedule.iter().filter(|o| o.write).count();
+        assert!(writes > 0, "seed 13 at write_frac=0.1 must produce writes");
+        assert_eq!(effective_runs(&schedule, 2), 1, "write schedules run a single pass");
         let (outcomes, wall) = run_serve(&node, &schedule, 2, 2);
         assert_eq!(outcomes.len(), 200);
         assert!(wall > 0.0);
+        // The single measured pass ingested each scheduled write exactly
+        // once — no duplicated rows from warm or repeated passes.
+        assert_eq!(
+            node.shard_rows().iter().sum::<usize>(),
+            1200 + writes,
+            "rows must grow by exactly the scheduled writes"
+        );
         let total = aggregate_serve(&outcomes, None, wall);
         assert_eq!(total.requests, 200);
         assert_eq!(total.ok + total.rejected + total.timeouts + total.failed, 200);

@@ -37,6 +37,15 @@ struct Bucket {
     last: Instant,
 }
 
+/// Upper bound on distinct tenant buckets held at once. A long-lived
+/// node fed ever-new tenant names (an attack or a naming bug) would
+/// otherwise grow the map without bound. At the cap, buckets that have
+/// refilled back to full burst (idle long enough) are swept first; if
+/// every bucket is mid-budget the least-recently-used one is evicted.
+/// Eviction forgets that tenant's counters and restores its budget on
+/// return — the accepted trade for bounded memory.
+const MAX_TENANTS: usize = 4096;
+
 /// Per-tenant request counters, surfaced by the node and the serve bench.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TenantCounters {
@@ -63,6 +72,20 @@ impl Admission {
     pub fn try_admit(&self, tenant: &str) -> bool {
         let now = Instant::now();
         let mut map = self.tenants.lock().unwrap_or_else(|e| e.into_inner());
+        if map.len() >= MAX_TENANTS && !map.contains_key(tenant) {
+            let burst = self.policy.burst as f64;
+            let rate = self.policy.rate;
+            map.retain(|_, (b, _)| {
+                b.tokens + now.saturating_duration_since(b.last).as_secs_f64() * rate < burst
+            });
+            if map.len() >= MAX_TENANTS {
+                if let Some(lru) =
+                    map.iter().min_by_key(|(_, (b, _))| b.last).map(|(t, _)| t.clone())
+                {
+                    map.remove(&lru);
+                }
+            }
+        }
         let (bucket, counters) = map.entry(tenant.to_string()).or_insert_with(|| {
             (Bucket { tokens: self.policy.burst as f64, last: now }, TenantCounters::default())
         });
@@ -152,6 +175,31 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(10));
         assert!(a.try_admit("t"), "bucket must refill at the configured rate");
         assert_eq!(a.counters("t").admitted, 2);
+    }
+
+    #[test]
+    fn tenant_map_is_bounded_under_unique_names() {
+        // rate = 0 buckets never refill to full burst, so the idle sweep
+        // keeps everything and the LRU fallback must do the bounding.
+        let a = Admission::new(TenantPolicy { burst: 2, rate: 0.0 });
+        for i in 0..(MAX_TENANTS + 50) {
+            a.try_admit(&format!("t{i}"));
+        }
+        assert!(a.all_counters().len() <= MAX_TENANTS);
+        // An evicted tenant that returns is re-admitted at full budget.
+        assert!(a.try_admit("t0"));
+    }
+
+    #[test]
+    fn idle_refilled_buckets_are_swept_at_cap() {
+        // With a huge refill rate every bucket is back at full burst by
+        // the time the cap is hit, so the sweep (not the LRU fallback)
+        // reclaims them; either way the map stays bounded.
+        let a = Admission::new(TenantPolicy { burst: 1, rate: 1e12 });
+        for i in 0..(MAX_TENANTS + 10) {
+            assert!(a.try_admit(&format!("u{i}")), "fresh bucket admits");
+        }
+        assert!(a.all_counters().len() <= MAX_TENANTS);
     }
 
     #[test]

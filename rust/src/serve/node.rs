@@ -309,7 +309,15 @@ impl ServeNode {
                     if resp.status == ResponseStatus::Ok {
                         let map = self.slots[s].id_map.read().unwrap_or_else(|e| e.into_inner());
                         for &(d, local) in &resp.results {
-                            translated.push((d, map[local as usize]));
+                            // A query racing a live swap can carry locals
+                            // from the epoch it started on, which the
+                            // freshly-installed (possibly shorter) map no
+                            // longer covers. Drop those rows instead of
+                            // indexing out of bounds — the next query
+                            // runs entirely on the new epoch.
+                            if let Some(&ext) = map.get(local as usize) {
+                                translated.push((d, ext));
+                            }
                         }
                     }
                 }
@@ -349,15 +357,20 @@ impl ServeNode {
             if gids.is_empty() {
                 continue;
             }
-            let writer = {
-                let w = self.slots[s].writer.read().unwrap_or_else(|e| e.into_inner());
-                w.clone()
-            };
+            // Hold the slot's id-map write lock across the whole ingest:
+            // DynamicHandle::add publishes the new epoch (rows become
+            // searchable) before it returns, so a reader translating
+            // those locals blocks on this lock until the map covers
+            // them, and concurrent adds to the same shard are serialized
+            // so `local.start == map.len()` is an invariant rather than
+            // a race that could strand published rows unmapped.
+            let slot = &self.slots[s];
+            let mut map = slot.id_map.write().unwrap_or_else(|e| e.into_inner());
+            let writer = slot.writer.read().unwrap_or_else(|e| e.into_inner()).clone();
             let Some(writer) = writer else {
                 bail!("shard {s} is read-only (static build or restored snapshot)");
             };
             let local = writer.add(&flat)?;
-            let mut map = self.slots[s].id_map.write().unwrap_or_else(|e| e.into_inner());
             ensure!(
                 local.start as usize == map.len(),
                 "shard {s} local ids ({}..) diverged from its id map ({} entries)",
@@ -388,11 +401,16 @@ impl ServeNode {
             new.len()
         );
         let slot = &self.slots[s];
-        // Order: map first, then epoch. A query racing the swap reads
-        // the new (longer or equal) map with the old epoch's local ids —
-        // prefixes agree, so every translation stays in bounds.
-        *slot.id_map.write().unwrap_or_else(|e| e.into_inner()) = id_map;
+        // Hold the id-map write lock across the whole swap so it cannot
+        // interleave with an in-flight `add` on this slot (which holds
+        // the same lock across its ingest): writer, map and epoch change
+        // as one unit. A query racing the swap may still finish on the
+        // old epoch and translate through the new map — search_raw
+        // bounds-checks that lookup, so a shorter map drops those rows
+        // instead of panicking.
+        let mut map = slot.id_map.write().unwrap_or_else(|e| e.into_inner());
         *slot.writer.write().unwrap_or_else(|e| e.into_inner()) = writer;
+        *map = id_map;
         slot.epoch.store(new);
         Ok(())
     }
@@ -438,10 +456,33 @@ impl ServeNode {
         ensure!(rdim == self.dim, "snapshot dim {rdim} != node dim {}", self.dim);
         let new = shards.pop().expect("1-shard snapshot");
         let new_map = maps.pop().expect("1-shard snapshot");
+        ensure!(
+            new_map.len() >= new.len(),
+            "snapshot id map covers {} ids but its shard stores {} rows",
+            new_map.len(),
+            new.len()
+        );
 
         let slot = &self.slots[s];
         let current = slot.epoch.load();
         let cur_map = slot.id_map.read().unwrap_or_else(|e| e.into_inner()).clone();
+        // Local → global translation that refuses to read past the map:
+        // a mutable shard can grow between the epoch load and the map
+        // clone above (the handle is the epoch), so a parity query may
+        // surface a row the snapshot of the map does not cover yet.
+        let translate = |pairs: &[(f32, u32)], map: &[u32]| -> Result<Vec<(u32, u32)>> {
+            pairs
+                .iter()
+                .map(|&(d, l)| match map.get(l as usize) {
+                    Some(&ext) => Ok((d.to_bits(), ext)),
+                    None => bail!(
+                        "parity hit local id {l} past the id map ({} entries) — \
+                         concurrent ingest on shard {s}? retry the restore",
+                        map.len()
+                    ),
+                })
+                .collect()
+        };
         let mut scratch = AnnScratch::default();
         let mut got = Vec::new();
         let mut want = Vec::new();
@@ -449,10 +490,8 @@ impl ServeNode {
         for (qi, q) in parity_queries.chunks_exact(self.dim).enumerate() {
             current.search_into(q, &self.search, &mut scratch, &mut want);
             new.search_into(q, &self.search, &mut scratch, &mut got);
-            let a: Vec<(u32, u32)> =
-                want.iter().map(|&(d, l)| (d.to_bits(), cur_map[l as usize])).collect();
-            let b: Vec<(u32, u32)> =
-                got.iter().map(|&(d, l)| (d.to_bits(), new_map[l as usize])).collect();
+            let a = translate(&want, &cur_map)?;
+            let b = translate(&got, &new_map)?;
             ensure!(
                 a == b,
                 "restore parity mismatch on query {qi}/{nq} for shard {s}: \
@@ -689,6 +728,97 @@ mod tests {
         // Either way the node still answers.
         assert_eq!(node.search_raw(&ds.queries[..ds.dim]).unwrap().status, ResponseStatus::Ok);
         node.stop();
+    }
+
+    #[test]
+    fn concurrent_ingest_and_search_never_hits_an_unmapped_row() {
+        // Regression for the add/search race: DynamicHandle::add
+        // publishes rows before the id map used to be extended, so a
+        // concurrent search could translate a fresh local id out of
+        // bounds and panic. With the map lock held across the ingest,
+        // every published row is mapped by the time a reader looks.
+        let ds = generate(Kind::DeepLike, 800, 4, 8, 48);
+        let node = Arc::new(
+            ServeNode::start_mutable(
+                &ds.data,
+                ds.dim,
+                &build_params(2, RouterKind::Hash),
+                CompactionPolicy::default(),
+                node_cfg(5, 8),
+            )
+            .unwrap(),
+        );
+        let writer = {
+            let node = node.clone();
+            let dim = ds.dim;
+            std::thread::spawn(move || {
+                for i in 0..500u32 {
+                    let row: Vec<f32> = (0..dim).map(|j| (i as f32) * 0.01 + j as f32).collect();
+                    node.add(&row).unwrap();
+                }
+            })
+        };
+        while !writer.is_finished() {
+            for q in ds.queries.chunks_exact(ds.dim) {
+                let r = node.search_raw(q).unwrap();
+                assert_ne!(r.status, ResponseStatus::Failed, "no panic may escape a shard");
+            }
+        }
+        writer.join().unwrap();
+        assert_eq!(node.shard_rows().iter().sum::<usize>(), 800 + 500);
+        assert!(node.search_raw(&ds.queries[..ds.dim]).unwrap().is_ok());
+        if let Ok(n) = Arc::try_unwrap(node) {
+            n.stop();
+        }
+    }
+
+    #[test]
+    fn concurrent_swap_and_search_stays_in_bounds() {
+        // Regression for the swap/search race: a query in flight on the
+        // old (large) epoch can translate its locals through a freshly
+        // installed 1-entry map. The bounds-checked translation drops
+        // those rows instead of panicking.
+        let ds = generate(Kind::DeepLike, 1200, 4, 8, 49);
+        let params = build_params(2, RouterKind::Hash);
+        let node = Arc::new(
+            ServeNode::start_static(
+                ShardedIndex::build(&ds.data, ds.dim, &params).unwrap(),
+                node_cfg(5, 8),
+            )
+            .unwrap(),
+        );
+        let (_, shards, maps, _) =
+            ShardedIndex::build(&ds.data, ds.dim, &params).unwrap().into_parts();
+        let big = shards[0].clone();
+        let big_map = maps[0].clone();
+        let swapper = {
+            let node = node.clone();
+            let dim = ds.dim;
+            std::thread::spawn(move || {
+                for i in 0..300 {
+                    if i % 2 == 0 {
+                        let tiny: Arc<dyn AnnIndex> = Arc::new(PanickyShard { dim });
+                        node.swap_shard(0, tiny, vec![0], None).unwrap();
+                    } else {
+                        node.swap_shard(0, big.clone(), big_map.clone(), None).unwrap();
+                    }
+                    // Keep the swapper alive long enough for searches to
+                    // interleave with the swaps.
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+            })
+        };
+        while !swapper.is_finished() {
+            for q in ds.queries.chunks_exact(ds.dim) {
+                let r = node.search_raw(q).unwrap();
+                assert_ne!(r.status, ResponseStatus::Failed);
+            }
+        }
+        swapper.join().unwrap();
+        assert!(node.search_raw(&ds.queries[..ds.dim]).unwrap().is_ok());
+        if let Ok(n) = Arc::try_unwrap(node) {
+            n.stop();
+        }
     }
 
     /// Chaos shard: panics whenever the query's first component is NaN.
