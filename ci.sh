@@ -369,10 +369,12 @@ echo "== admission gate-fires proof (greedy tenant shed, quiet tenant served) ==
 # nonzero rejections, a well-behaved tail tenant must see none, and the
 # node must still answer afterwards (post_ok).
 OVER_JSON="$(mktemp /tmp/zann_serve_over.XXXXXX.json)"
+OVER_PROM="$(mktemp /tmp/zann_serve_over.XXXXXX.prom)"
 cargo bench --bench bench_serve -- \
   --n 3000 --nq 100 --dim 16 --requests 300 --shards 2 --router hash \
   --codec roc --tenants 4 --theta 1.3 --write-frac 0.0 --clients 2 \
-  --runs 1 --tenant-burst 60 --tenant-rate 0 --out "$OVER_JSON"
+  --runs 1 --tenant-burst 60 --tenant-rate 0 --out "$OVER_JSON" \
+  --metrics-prom "$OVER_PROM"
 python3 - "$OVER_JSON" <<'EOF'
 import json, sys
 with open(sys.argv[1]) as f:
@@ -390,7 +392,25 @@ assert d["post_ok"] is True, "node dead after overload"
 print(f"admission gate ok: t0 shed {greedy['rejected']}, "
       f"{quiet['tenant']} fully served ({quiet['ok']}/{quiet['requests']})")
 EOF
-rm -f "$OVER_JSON"
+# The same run populates the observability registry's per-shard and
+# per-tenant series — the only CLI workload that exercises both — so the
+# exposition must carry them (docs/OBSERVABILITY.md catalog).
+python3 - "$OVER_PROM" <<'EOF'
+import sys
+text = open(sys.argv[1]).read()
+for needle in ('zann_shard_queries_total{shard="0"}',
+               'zann_shard_queries_total{shard="1"}',
+               'zann_tenant_admitted_total{tenant="t0"}',
+               'zann_tenant_rejected_total{tenant="t0"}'):
+    assert needle in text, f"missing per-shard/per-tenant series {needle}"
+# The greedy tenant's registry totals must agree with the bench report:
+# exactly burst=60 admitted reads per measured pass.
+line = next(l for l in text.splitlines()
+            if l.startswith('zann_tenant_admitted_total{tenant="t0"}'))
+assert int(line.split()[-1]) >= 60, line
+print("per-shard/per-tenant exposition ok")
+EOF
+rm -f "$OVER_JSON" "$OVER_PROM"
 
 echo "== sharded scatter-gather == single index (build -> info -> serve cmp) =="
 # The tentpole end-to-end identity: a 1-shard and a 4-shard container
@@ -437,7 +457,213 @@ cp "$SHARD_DIR/s4.zann" "$SHARD_DIR/fleet/b.zann"
 cargo run --release --bin zann -- info "$SHARD_DIR/fleet" | tee "$SHARD_DIR/info_dir.txt"
 grep -q "2 shard containers" "$SHARD_DIR/info_dir.txt"
 grep -q "n=4000" "$SHARD_DIR/info_dir.txt"
+# info --json: machine-readable per-section bits for a sharded container
+# and for a directory of containers; both must parse with a real JSON
+# parser and agree with the grep-able stats line.
+cargo run --release --bin zann -- info "$SHARD_DIR/s4.zann" --json \
+  > "$SHARD_DIR/info_s4.json"
+cargo run --release --bin zann -- info "$SHARD_DIR/fleet" --json \
+  > "$SHARD_DIR/info_dir.json"
+python3 - "$SHARD_DIR/info_s4.json" "$SHARD_DIR/info_dir.json" <<'EOF'
+import json, sys
+with open(sys.argv[1]) as f:
+    s4 = json.load(f)
+assert s4["router"] == "kmeans" and s4["num_shards"] == 4, s4
+for section in [s4["aggregate"]] + s4["shards"]:
+    for key in ("kind", "codec", "n", "dim", "id_bits", "code_bits", "link_bits",
+                "aux_bits", "bits_per_id", "bits_per_link", "checksummed",
+                "segments", "seg_bits_per_id"):
+        assert key in section, f"missing info key {key} in {section}"
+assert s4["aggregate"]["kind"] == "sharded", s4["aggregate"]
+assert s4["aggregate"]["n"] == 2000 and len(s4["shards"]) == 4, s4
+assert s4["aggregate"]["checksummed"] is True, s4["aggregate"]
+assert s4["aggregate"]["n"] == sum(sh["n"] for sh in s4["shards"]), s4
+assert 0 < s4["aggregate"]["bits_per_id"] < 64, s4["aggregate"]
+assert s4["aggregate"]["file_bytes"] > 0, s4["aggregate"]
+with open(sys.argv[2]) as f:
+    fleet = json.load(f)
+assert fleet["num_shards"] == 2 and fleet["aggregate"]["n"] == 4000, fleet
+print(f"info --json ok: sharded bits/id {s4['aggregate']['bits_per_id']:.3f}, "
+      f"fleet n={fleet['aggregate']['n']}")
+EOF
 rm -rf "$SHARD_DIR"
+
+echo "== observability: exposition contracts, tracer fires, obs-off identity =="
+OBS_DIR="$(mktemp -d /tmp/zann_obs.XXXXXX)"
+cargo run --release --bin zann -- build --out "$OBS_DIR/idx.zann" \
+  --backend ivf --codec roc --n 2000 --dim 16 --k 32
+# (a) Fully-sampled serve run: Prometheus text format, superset metrics
+# JSON, and the span dump all come out of one run.
+ZANN_TRACE_SAMPLE=1/1 cargo run --release --bin zann -- serve "$OBS_DIR/idx.zann" \
+  --nq 64 --nprobe 8 --dump-results "$OBS_DIR/on.txt" \
+  --metrics-json "$OBS_DIR/metrics.json" --metrics-prom "$OBS_DIR/metrics.prom" \
+  --trace-dump "$OBS_DIR/spans.json" | tee "$OBS_DIR/on.log"
+grep -q "verified 64/64" "$OBS_DIR/on.log"
+# The text format must survive a real parser: TYPE before samples, every
+# sample line well-formed, histogram buckets cumulative up to an
+# explicit +Inf that equals _count, and the catalog's per-codec /
+# per-coordinator / SIMD-tier series present.
+python3 - "$OBS_DIR/metrics.prom" <<'EOF'
+import re, sys
+from collections import defaultdict
+typed, series = {}, []
+sample_re = re.compile(
+    r'^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^{}]*\})? (-?[0-9]+(?:\.[0-9]+)?(?:[eE][+-]?[0-9]+)?)$')
+label_re = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+for ln, line in enumerate(open(sys.argv[1]), 1):
+    line = line.rstrip("\n")
+    if not line:
+        continue
+    if line.startswith("# TYPE "):
+        _, _, name, kind = line.split(" ")
+        assert kind in ("counter", "gauge", "histogram"), line
+        typed[name] = kind
+        continue
+    assert not line.startswith("#"), f"unexpected comment: {line}"
+    m = sample_re.match(line)
+    assert m, f"line {ln} is not a valid prometheus sample: {line!r}"
+    name, labels = m.group(1), m.group(2) or ""
+    base = re.sub(r'_(bucket|sum|count)$', '', name)
+    assert name in typed or base in typed, f"sample before its TYPE line: {line}"
+    series.append((name, labels, float(m.group(3))))
+joined = "\n".join(f"{n}{l} {v}" for n, l, v in series)
+for needle in ('zann_ids_decoded_total{codec="roc"}',
+               'zann_lists_probed_total{codec="roc"}',
+               'zann_id_bits_decoded_total{codec="roc"}',
+               'zann_simd_dispatch_total{level=',
+               'zann_queries_total{coord=',
+               'zann_queue_hwm{coord='):
+    assert needle in joined, f"missing catalog series {needle}"
+hist, counts = defaultdict(list), {}
+for n, l, v in series:
+    labels = label_re.findall(l)
+    if n.endswith("_bucket"):
+        le = dict(labels)["le"]
+        rest = tuple(sorted(kv for kv in labels if kv[0] != "le"))
+        hist[(n[:-7], rest)].append((le, v))
+    elif n.endswith("_count") and re.sub(r'_count$', '', n) in typed \
+            and typed[re.sub(r'_count$', '', n)] == "histogram":
+        counts[(n[:-6], tuple(sorted(labels)))] = v
+assert hist, "no histogram buckets exposed"
+for key, bs in hist.items():
+    vals = [v for _, v in bs]
+    assert vals == sorted(vals), f"non-cumulative buckets for {key}: {bs}"
+    assert bs[-1][0] == "+Inf", f"missing +Inf bucket for {key}"
+    assert bs[-1][1] == counts.get(key), f"+Inf != _count for {key}"
+assert any(k[0] == "zann_query_latency_us" for k in hist), sorted(hist)
+assert any(k[0] == "zann_stage_us" for k in hist), "tracer stage histograms missing"
+print(f"prom exposition ok: {len(series)} samples, {len(typed)} TYPE decls, "
+      f"{len(hist)} histogram series")
+EOF
+# Tracer-fires proof: a 1/1-sampled run must dump spans, and each span's
+# stage timeline must account for its end-to-end latency within 10%.
+python3 - "$OBS_DIR/spans.json" <<'EOF'
+import json, sys
+spans = json.load(open(sys.argv[1]))
+assert isinstance(spans, list) and len(spans) >= 1, "sampled run recorded no spans"
+for s in spans:
+    assert s["total_ns"] > 0, s
+    assert abs(s["stage_sum_ns"] - s["total_ns"]) <= 0.1 * s["total_ns"], s
+    assert s["stages"], s
+stages = set().union(*(s["stages"] for s in spans))
+assert "queue_wait" in stages and "reply" in stages, stages
+print(f"tracer ok: {len(spans)} spans, stage-sum within 10% of e2e, stages {sorted(stages)}")
+EOF
+# The metrics JSON stays a superset: historical flat keys unchanged,
+# whole registry under "registry".
+python3 - "$OBS_DIR/metrics.json" <<'EOF'
+import json, sys
+m = json.load(open(sys.argv[1]))
+for key in ("queries", "batches", "mean_batch_fill", "pjrt_fraction", "p50_us",
+            "p95_us", "p99_us", "timeouts", "rejections", "worker_panics",
+            "queue_hwm", "registry"):
+    assert key in m, f"missing metrics key {key}"
+names = {s["name"] for s in m["registry"]["series"]}
+assert "zann_queries_total" in names and "zann_query_latency_us" in names, sorted(names)
+print(f"metrics superset ok: {len(names)} registry names alongside the flat keys")
+EOF
+# (b) Observation must not perturb: the sampled dump, the unsampled
+# (sampling 0) dump, and the obs-feature-compiled-out dump must be
+# byte-identical.
+cargo run --release --bin zann -- serve "$OBS_DIR/idx.zann" \
+  --nq 64 --nprobe 8 --dump-results "$OBS_DIR/unsampled.txt" >/dev/null
+cmp "$OBS_DIR/on.txt" "$OBS_DIR/unsampled.txt" \
+  || { echo "sampling changed search results"; exit 1; }
+cargo run --release --no-default-features --bin zann -- serve "$OBS_DIR/idx.zann" \
+  --nq 64 --nprobe 8 --dump-results "$OBS_DIR/obsoff.txt" \
+  --metrics-prom "$OBS_DIR/obsoff.prom" --trace-dump "$OBS_DIR/obsoff_spans.json" \
+  >/dev/null
+cmp "$OBS_DIR/on.txt" "$OBS_DIR/obsoff.txt" \
+  || { echo "obs feature changed search results"; exit 1; }
+test -s "$OBS_DIR/on.txt" || { echo "empty obs result dump"; exit 1; }
+# The obs-off build must compile (it just did) and emit nothing: no
+# zann_ series in the exposition, no spans even under full sampling.
+if grep -q "zann_" "$OBS_DIR/obsoff.prom"; then
+  echo "obs-off build exported series"; exit 1
+fi
+ZANN_TRACE_SAMPLE=1/1 cargo run --release --no-default-features --bin zann -- \
+  serve "$OBS_DIR/idx.zann" --nq 64 --nprobe 8 \
+  --trace-dump "$OBS_DIR/obsoff_sampled.json" >/dev/null
+python3 - "$OBS_DIR/obsoff_sampled.json" <<'EOF'
+import json, sys
+assert json.load(open(sys.argv[1])) == [], "obs-off build recorded spans"
+print("obs-off identity ok: bit-identical results, zero series, zero spans")
+EOF
+# (c) `zann metrics` smoke: both renderings of a self-contained workload.
+cargo run --release --bin zann -- metrics --n 2000 --nq 32 > "$OBS_DIR/cmd.prom"
+grep -q "# TYPE zann_queries_total counter" "$OBS_DIR/cmd.prom"
+grep -q "zann_ids_decoded_total" "$OBS_DIR/cmd.prom"
+cargo run --release --bin zann -- metrics --n 2000 --nq 32 --json > "$OBS_DIR/cmd.json"
+python3 - "$OBS_DIR/cmd.json" <<'EOF'
+import json, sys
+d = json.load(open(sys.argv[1]))
+assert d["series"], "zann metrics --json produced no series"
+assert {"name", "type"} <= set(d["series"][0]), d["series"][0]
+print(f"zann metrics ok: {len(d['series'])} series in both renderings")
+EOF
+# (d) info --json on a plain (non-sharded) container.
+cargo run --release --bin zann -- info "$OBS_DIR/idx.zann" --json \
+  > "$OBS_DIR/info.json"
+python3 - "$OBS_DIR/info.json" <<'EOF'
+import json, sys
+d = json.load(open(sys.argv[1]))
+for key in ("kind", "codec", "n", "dim", "id_bits", "code_bits", "link_bits",
+            "aux_bits", "bits_per_id", "bits_per_link", "checksummed",
+            "file_bytes"):
+    assert key in d, f"missing info key {key}"
+assert d["kind"] == "ivf" and d["codec"] == "roc" and d["n"] == 2000, d
+assert d["checksummed"] is True and 0 < d["bits_per_id"] < 64, d
+print(f"info --json ok: {d['bits_per_id']:.3f} bits/id, {d['file_bytes']} bytes")
+EOF
+rm -rf "$OBS_DIR"
+
+echo "== bench_obs: instrumentation self-measurement (overhead gate) =="
+# The observability layer measures its own cost: the same serve workload
+# with tracing off vs tracing every query. Refreshes BENCH_obs.json in
+# place; full tracing must stay within 5% overhead and the sampled stage
+# timelines must account for end-to-end latency within 10%
+# (docs/REPRODUCING.md, docs/OBSERVABILITY.md).
+cargo bench --bench bench_obs -- \
+  --n 4000 --nq 512 --dim 16 --k 64 --nprobe 8 --runs 3 --out BENCH_obs.json
+python3 - BENCH_obs.json <<'EOF'
+import json, sys
+d = json.load(open(sys.argv[1]))
+assert d["bench"] == "obs", d.get("bench")
+for key in ("dataset", "n", "nq", "dim", "seed", "k", "nprobe", "runs", "env",
+            "wall_off_s", "wall_on_s", "overhead_frac", "sampled_spans",
+            "span_sum_ratio", "registry_series", "stages"):
+    assert key in d, f"missing top-level key {key}"
+assert d["wall_off_s"] > 0 and d["wall_on_s"] > 0, d
+assert d["sampled_spans"] >= 1, "self-measurement sampled no spans"
+assert d["overhead_frac"] <= 0.05, \
+    f"full tracing costs {d['overhead_frac']:.2%} (> 5% budget)"
+assert abs(d["span_sum_ratio"] - 1.0) <= 0.1, d["span_sum_ratio"]
+assert d["registry_series"] > 0, d
+assert len(d["stages"]) == 9, [s["stage"] for s in d["stages"]]
+assert all(s["mean_us"] >= 0 for s in d["stages"]), d["stages"]
+print(f"obs bench ok: overhead {d['overhead_frac']:+.2%}, "
+      f"{d['sampled_spans']} spans, stage-sum ratio {d['span_sum_ratio']:.4f}")
+EOF
 
 echo "== rustfmt =="
 cargo fmt --all -- --check

@@ -1,0 +1,21 @@
+//! Observability self-measurement: the serve workload through a
+//! coordinator with stage-trace sampling off and then on, recording the
+//! instrumentation overhead delta, per-stage mean timelines, and span
+//! accounting to `BENCH_obs.json`.
+//!
+//! `cargo bench --bench bench_obs -- [--full] [--n N] [--nq Q] [--k K]
+//!  [--nprobe P] [--topk K] [--codec C] [--runs R] [--out PATH]`
+//!
+//! Bare invocations run at a tiny smoke scale (see `smoke.rs`); pass
+//! `--n`/`--full` for comparable runs (docs/REPRODUCING.md).
+
+#[path = "smoke.rs"]
+mod smoke;
+
+fn main() {
+    let args = zann::util::cli::Args::parse(smoke::args_with_tiny_default(
+        &["--full", "--n", "--nq"],
+        &["--n", "4000", "--nq", "256", "--runs", "2"],
+    ));
+    zann::eval::bench_entries::obs(&args);
+}

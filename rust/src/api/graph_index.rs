@@ -32,6 +32,14 @@ impl GraphFamily {
         }
     }
 
+    /// Metric-label name for the family.
+    pub fn name(self) -> &'static str {
+        match self {
+            GraphFamily::Nsg => "nsg",
+            GraphFamily::Hnsw => "hnsw",
+        }
+    }
+
     fn from_tag(t: u8) -> Result<GraphFamily> {
         match t {
             0 => Ok(GraphFamily::Nsg),
@@ -246,6 +254,10 @@ impl AnnIndex for GraphIndex {
         scratch: &mut AnnScratch,
         out: &mut Vec<(f32, u32)>,
     ) {
+        if crate::obs::enabled() {
+            scratch.graph_obs.get("zann_beam_searches_total", "family", self.family.name()).inc();
+        }
+        let span = crate::obs::trace::span(crate::obs::trace::Stage::BeamSearch);
         let res = beam_search(
             &self.store,
             &self.data,
@@ -257,6 +269,7 @@ impl AnnIndex for GraphIndex {
             &mut scratch.visited,
             &mut scratch.neighbors,
         );
+        drop(span);
         out.clear();
         out.extend(res);
     }

@@ -174,6 +174,8 @@ pub struct AnnScratch {
     pub ivf: SearchScratch,
     pub visited: VisitedSet,
     pub neighbors: Vec<u32>,
+    /// Cached `zann_beam_searches_total{family}` handle (graph backends).
+    pub(crate) graph_obs: crate::obs::LabeledCounter,
 }
 
 /// Coarse-stage description a backend exposes to batched engines: the

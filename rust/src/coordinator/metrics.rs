@@ -3,120 +3,144 @@
 //! human-readable [`Metrics::summary`] line and machine-readable JSON
 //! ([`Metrics::metrics_json`]) so benches and CI gates parse a contract,
 //! not a log format.
+//!
+//! `Metrics` is a thin view over cells in the global [`crate::obs`]
+//! registry: every counter here is also a `zann_*` series (labelled
+//! `coord="<n>"` so concurrently-live coordinators never alias) that
+//! `Registry::render_prometheus()` / `render_json()` expose. The latency
+//! store is the lock-free log₂ [`crate::obs::Histogram`] — the old
+//! `Mutex<Vec<u64>>` could be poisoned by a caught worker panic, and its
+//! unbounded growth made every percentile call clone-and-sort the full
+//! history. Percentiles are now nearest-rank over the histogram and
+//! report the selected bucket's upper bound (a ≤2× overestimate with
+//! power-of-two buckets; the summary/JSON key names are unchanged).
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::Arc;
 use std::time::Duration;
 
-#[derive(Default)]
+use crate::obs::{self, Counter, Gauge, Histogram};
+
+/// Distinguishes coordinator instances on the shared global registry.
+static COORD_SEQ: AtomicU64 = AtomicU64::new(0);
+
 pub struct Metrics {
-    queries: AtomicU64,
-    batches: AtomicU64,
-    pjrt_queries: AtomicU64,
-    batch_fill: AtomicU64,
-    timeouts: AtomicU64,
-    rejections: AtomicU64,
-    worker_panics: AtomicU64,
+    queries: Arc<Counter>,
+    batches: Arc<Counter>,
+    pjrt_queries: Arc<Counter>,
+    batch_fill: Arc<Counter>,
+    timeouts: Arc<Counter>,
+    rejections: Arc<Counter>,
+    worker_panics: Arc<Counter>,
     /// Requests currently sitting in the admission queue (enqueued, not
     /// yet pulled by the batcher).
-    queue_depth: AtomicU64,
+    queue_depth: Arc<Gauge>,
     /// High-water mark of `queue_depth` over the coordinator's lifetime.
-    queue_hwm: AtomicU64,
-    latencies_us: Mutex<Vec<u64>>,
+    queue_hwm: Arc<Gauge>,
+    latency_us: Arc<Histogram>,
 }
 
 impl Metrics {
+    pub fn new() -> Self {
+        let seq = COORD_SEQ.fetch_add(1, Ordering::Relaxed).to_string();
+        let l: [(&'static str, &str); 1] = [("coord", &seq)];
+        Metrics {
+            queries: obs::counter("zann_queries_total", &l),
+            batches: obs::counter("zann_batches_total", &l),
+            pjrt_queries: obs::counter("zann_pjrt_queries_total", &l),
+            batch_fill: obs::counter("zann_batch_fill_total", &l),
+            timeouts: obs::counter("zann_timeouts_total", &l),
+            rejections: obs::counter("zann_rejections_total", &l),
+            worker_panics: obs::counter("zann_worker_panics_total", &l),
+            queue_depth: obs::gauge("zann_queue_depth", &l),
+            queue_hwm: obs::gauge("zann_queue_hwm", &l),
+            latency_us: obs::histogram("zann_query_latency_us", &l),
+        }
+    }
+
     pub fn record_batch(&self, fill: usize) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batch_fill.fetch_add(fill as u64, Ordering::Relaxed);
+        self.batches.inc();
+        self.batch_fill.add(fill as u64);
     }
 
     pub fn record_query(&self, latency: Duration, via_pjrt: bool) {
-        self.queries.fetch_add(1, Ordering::Relaxed);
+        self.queries.inc();
         if via_pjrt {
-            self.pjrt_queries.fetch_add(1, Ordering::Relaxed);
+            self.pjrt_queries.inc();
         }
-        // A caught worker panic may have poisoned the histogram lock;
-        // the Vec underneath is still fine (push is all-or-nothing).
-        self.latencies_us.lock().unwrap_or_else(|e| e.into_inner()).push(latency.as_micros() as u64);
+        self.latency_us.observe(latency.as_micros() as u64);
     }
 
     /// A request aged past its deadline before a worker reached it.
     pub fn record_timeout(&self) {
-        self.timeouts.fetch_add(1, Ordering::Relaxed);
+        self.timeouts.inc();
     }
 
     /// A request bounced off the full admission queue.
     pub fn record_rejection(&self) {
-        self.rejections.fetch_add(1, Ordering::Relaxed);
+        self.rejections.inc();
     }
 
     /// A panic was caught while serving one request (or the batcher
     /// itself was respawned after one).
     pub fn record_worker_panic(&self) {
-        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+        self.worker_panics.inc();
     }
 
     /// A request was accepted into the admission queue. Updates the
     /// queue-depth high-water mark.
     pub fn record_enqueue(&self) {
-        let depth = self.queue_depth.fetch_add(1, Ordering::Relaxed) + 1;
-        self.queue_hwm.fetch_max(depth, Ordering::Relaxed);
+        let depth = self.queue_depth.add(1);
+        self.queue_hwm.max_of(depth);
     }
 
     /// The batcher pulled a request off the admission queue.
     pub fn record_dequeue(&self) {
-        // Saturating: a respawned batcher may drain requests enqueued
-        // before a mid-batch panic reset its view of the world.
-        let _ = self.queue_depth.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
-            Some(d.saturating_sub(1))
-        });
+        // Floored at zero: a respawned batcher may drain requests
+        // enqueued before a mid-batch panic reset its view of the world.
+        self.queue_depth.sub_floor0(1);
     }
 
     pub fn queries(&self) -> u64 {
-        self.queries.load(Ordering::Relaxed)
+        self.queries.get()
     }
 
     pub fn batches(&self) -> u64 {
-        self.batches.load(Ordering::Relaxed)
+        self.batches.get()
     }
 
     pub fn timeouts(&self) -> u64 {
-        self.timeouts.load(Ordering::Relaxed)
+        self.timeouts.get()
     }
 
     pub fn rejections(&self) -> u64 {
-        self.rejections.load(Ordering::Relaxed)
+        self.rejections.get()
     }
 
     pub fn worker_panics(&self) -> u64 {
-        self.worker_panics.load(Ordering::Relaxed)
+        self.worker_panics.get()
     }
 
     /// Deepest the admission queue ever got (0 when nothing ever waited).
     pub fn queue_depth_hwm(&self) -> u64 {
-        self.queue_hwm.load(Ordering::Relaxed)
+        self.queue_hwm.get().max(0) as u64
     }
 
     pub fn pjrt_fraction(&self) -> f64 {
         let q = self.queries().max(1);
-        self.pjrt_queries.load(Ordering::Relaxed) as f64 / q as f64
+        self.pjrt_queries.get() as f64 / q as f64
     }
 
     pub fn mean_batch_fill(&self) -> f64 {
         let b = self.batches().max(1);
-        self.batch_fill.load(Ordering::Relaxed) as f64 / b as f64
+        self.batch_fill.get() as f64 / b as f64
     }
 
-    /// Latency percentile in microseconds (p in [0, 100]).
+    /// Latency percentile in microseconds (p in [0, 100]). Nearest-rank
+    /// over the log₂ histogram; the value is the upper bound of the
+    /// selected bucket (`2^i − 1` µs).
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        let mut v = self.latencies_us.lock().unwrap_or_else(|e| e.into_inner()).clone();
-        if v.is_empty() {
-            return 0;
-        }
-        v.sort_unstable();
-        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        v[idx.min(v.len() - 1)]
+        self.latency_us.quantile(p / 100.0)
     }
 
     pub fn summary(&self) -> String {
@@ -160,6 +184,12 @@ impl Metrics {
     }
 }
 
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,9 +205,12 @@ mod tests {
         assert_eq!(m.batches(), 1);
         assert!((m.pjrt_fraction() - 0.5).abs() < 1e-9);
         assert_eq!(m.mean_batch_fill(), 10.0);
-        let p50 = m.latency_percentile_us(50.0);
-        assert!((49..=51).contains(&p50), "p50={p50}");
-        assert_eq!(m.latency_percentile_us(100.0), 100);
+        // Log₂-bucket percentiles report the bucket's upper bound. For
+        // 1..=100µs the cumulative bucket counts are 1, 3, 7, 15, 31,
+        // 63, 100, so rank 50 (the median) lands in the 32..=63 bucket
+        // → 63, and the max lands in 64..=127 → 127.
+        assert_eq!(m.latency_percentile_us(50.0), 63);
+        assert_eq!(m.latency_percentile_us(100.0), 127);
         assert!(m.summary().contains("queries=100"));
     }
 
@@ -202,6 +235,35 @@ mod tests {
         assert_eq!(m.latency_percentile_us(99.0), 0);
         assert_eq!(m.pjrt_fraction(), 0.0);
         assert_eq!(m.queue_depth_hwm(), 0);
+    }
+
+    #[test]
+    fn instances_do_not_share_counters() {
+        // Both live on the same global registry, so the coord label must
+        // keep them apart.
+        let a = Metrics::default();
+        let b = Metrics::default();
+        a.record_timeout();
+        assert_eq!(a.timeouts(), 1);
+        assert_eq!(b.timeouts(), 0);
+    }
+
+    #[test]
+    fn cross_thread_recording_survives_a_panicking_recorder() {
+        // The old Mutex<Vec> histogram could be poisoned by a panic
+        // between lock() and push(); the lock-free histogram has no such
+        // failure mode. Simulate the worst case: a thread panics while
+        // holding nothing, mid-record, and percentiles keep working.
+        let m = Arc::new(Metrics::default());
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            m2.record_query(Duration::from_micros(10), false);
+            panic!("worker dies after recording");
+        })
+        .join();
+        m.record_query(Duration::from_micros(10), false);
+        assert_eq!(m.queries(), 2);
+        assert_eq!(m.latency_percentile_us(50.0), 15, "10µs sits in the 8..=15 bucket");
     }
 
     #[test]
@@ -248,8 +310,19 @@ mod tests {
         ] {
             assert!(j.contains(key), "missing {key} in {j}");
         }
+        crate::obs::expo::check_json_shape(&j).expect("metrics_json must be well-formed");
         assert!(j.starts_with('{') && j.ends_with('}'));
-        assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert!(j.contains("\"rejections\": 1") && j.contains("\"queue_hwm\": 1"), "{j}");
+    }
+
+    #[test]
+    fn metrics_are_visible_on_the_global_registry_when_obs_is_on() {
+        let m = Metrics::default();
+        m.record_query(Duration::from_micros(7), false);
+        if crate::obs::enabled() {
+            let text = crate::obs::global().render_prometheus();
+            assert!(text.contains("zann_queries_total"), "registry must carry coordinator series");
+            assert!(text.contains("zann_query_latency_us_count"), "{}", &text[..text.len().min(400)]);
+        }
     }
 }

@@ -32,6 +32,7 @@
 pub mod metrics;
 
 use crate::api::{AnnIndex, AnnScratch, QueryParams};
+use crate::obs::trace::{self, Stage};
 use crate::runtime::EngineHandle;
 use crate::util::pool::default_threads;
 use anyhow::Result;
@@ -307,6 +308,8 @@ fn batcher_loop(
             }
         }
         metrics.record_batch(batch.len());
+        // Tracer anchor: everything before this instant is queue wait.
+        let batch_ready = Instant::now();
 
         // Coarse scoring for the whole batch, padded to batch_size so the
         // fixed-shape PJRT executable applies. `flat` is filled in place
@@ -346,6 +349,12 @@ fn batcher_loop(
             }
         };
 
+        // The batch-wide coarse stage is amortised; sampled queries get
+        // their per-query share (batch cost / batch size).
+        let coarse_done = Instant::now();
+        let coarse_share_ns = coarse_done.saturating_duration_since(batch_ready).as_nanos() as u64
+            / batch.len().max(1) as u64;
+
         // Fan out scans to the worker pool.
         let nb = batch.len();
         let reqs: Vec<Request> = batch.drain(..).collect();
@@ -372,6 +381,24 @@ fn batcher_loop(
                         continue;
                     }
                 }
+                // Sampled queries build their whole stage timeline on
+                // this worker thread: wait-to-batch + wait-for-worker is
+                // QueueWait, the amortised batch coarse stage is
+                // CoarseQuantize, and the backend attributes decode/
+                // scan/merge inside search. When unsampled (or obs off)
+                // all of this short-circuits to nothing.
+                let sampled = trace::begin_query();
+                let mut search_start = None;
+                let mut pre_ns = 0;
+                if sampled {
+                    let wait_ns = batch_ready.saturating_duration_since(r.submitted).as_nanos()
+                        as u64
+                        + coarse_done.elapsed().as_nanos() as u64;
+                    trace::add_ns(Stage::QueueWait, wait_ns);
+                    trace::add_ns(Stage::CoarseQuantize, coarse_share_ns);
+                    pre_ns = trace::thread_ns();
+                    search_start = Some(Instant::now());
+                }
                 let mut results = Vec::with_capacity(sp.k);
                 let searched = catch_unwind(AssertUnwindSafe(|| match coarse {
                     Some(c) => index_ref.search_with_coarse_into(
@@ -385,6 +412,7 @@ fn batcher_loop(
                 }));
                 let latency = r.submitted.elapsed();
                 if searched.is_err() {
+                    trace::discard();
                     // The scratch may hold arbitrary mid-search state;
                     // replace it before the next request reuses it.
                     *scratch = AnnScratch::default();
@@ -392,13 +420,25 @@ fn batcher_loop(
                     let _ = r.reply.send(Response::degraded(ResponseStatus::Failed, latency));
                     continue;
                 }
+                if let Some(start) = search_start {
+                    // Attribute search time the backend did not claim for
+                    // a named stage to `Other`, so stage sums track e2e.
+                    let inner = trace::thread_ns().saturating_sub(pre_ns);
+                    let search_ns = start.elapsed().as_nanos() as u64;
+                    trace::add_ns(Stage::Other, search_ns.saturating_sub(inner));
+                }
                 metrics_ref.record_query(latency, via_pjrt);
+                let reply_start = if sampled { Some(Instant::now()) } else { None };
                 let _ = r.reply.send(Response {
                     results,
                     latency,
                     via_pjrt,
                     status: ResponseStatus::Ok,
                 });
+                if let Some(start) = reply_start {
+                    trace::add_ns(Stage::Reply, start.elapsed().as_nanos() as u64);
+                    trace::end_query(r.submitted.elapsed());
+                }
             }
         });
     }

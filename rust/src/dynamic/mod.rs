@@ -40,6 +40,7 @@ use crate::api::{
 use crate::bitvec::RsBitVec;
 use crate::codecs::{CodecSpec, DecodeScratch, PER_LIST_CODECS};
 use crate::index::{IvfBuildParams, IvfIndex, SearchParams, SearchScratch, VectorMode};
+use crate::obs::trace::{self, Stage};
 use crate::quant::{coarse, kmeans, l2_sq};
 use anyhow::{ensure, Result};
 use std::sync::Arc;
@@ -583,11 +584,19 @@ impl DynamicIvf {
         // survivor order, identical results to the fused test-per-row
         // loop.
         let no_deletes = self.tombs.count() == 0;
+        // Label-free decode-path counters: statics self-register on the
+        // global registry at first use and are no-ops with obs off.
+        static BUFFER_SCANS: crate::obs::StaticCounter =
+            crate::obs::StaticCounter::new("zann_dynamic_buffer_scans_total");
+        static SEGMENT_SEARCHES: crate::obs::StaticCounter =
+            crate::obs::StaticCounter::new("zann_dynamic_segment_searches_total");
         for &c in probes.iter() {
             let c = c as usize;
             // Write buffer: uncompressed external ids.
             let bl = &self.buffer.lists[c];
             if !bl.is_empty() {
+                BUFFER_SCANS.inc();
+                let _span = trace::span(Stage::AdcScan);
                 let bv = &self.buffer.vecs[c];
                 if no_deletes {
                     for (o, &ext) in bl.iter().enumerate() {
@@ -615,7 +624,12 @@ impl DynamicIvf {
                 if len == 0 {
                     continue;
                 }
-                seg.decode_list_into(c, ids, decode);
+                SEGMENT_SEARCHES.inc();
+                {
+                    let _span = trace::span(Stage::ListDecode);
+                    seg.decode_list_into(c, ids, decode);
+                }
+                let _span = trace::span(Stage::AdcScan);
                 let rows = seg.cluster_rows(c);
                 if no_deletes {
                     for (o, &r) in ids.iter().enumerate() {
@@ -642,6 +656,7 @@ impl DynamicIvf {
                 }
             }
         }
+        let _span = trace::span(Stage::TopkMerge);
         topk.drain_sorted_into(winners);
         out.clear();
         out.extend(winners.iter().map(|&(d, pl)| (d, pl as u32)));

@@ -19,6 +19,7 @@
 
 use crate::codecs::wavelet::WaveletTree;
 use crate::codecs::{pcodes, CodecSpec, DecodeScratch, IdCodec};
+use crate::obs::trace::{self, Stage};
 use crate::quant::coarse;
 use crate::quant::kmeans::{self, KmeansConfig};
 use crate::quant::pq::Pq;
@@ -131,6 +132,79 @@ pub struct SearchScratch {
     pub(crate) topk: TopK,
     pub(crate) winners: Vec<(f32, u64)>,
     pub(crate) decode: DecodeScratch,
+    /// Cached registry handles for the decode-path counters (kept on the
+    /// scratch so the steady state never touches the registry lock).
+    pub(crate) obs: DecodeObs,
+}
+
+/// Registry handles for the IVF decode-path instrumentation, cached per
+/// scratch and re-resolved only when the codec label changes (a scratch
+/// normally serves one index, so never).
+#[derive(Default)]
+pub(crate) struct DecodeObs {
+    codec: String,
+    handles: Option<DecodeHandles>,
+    simd: Option<std::sync::Arc<crate::obs::Counter>>,
+}
+
+struct DecodeHandles {
+    lists: std::sync::Arc<crate::obs::Counter>,
+    ids: std::sync::Arc<crate::obs::Counter>,
+    bits: std::sync::Arc<crate::obs::Counter>,
+    reuse: std::sync::Arc<crate::obs::Counter>,
+    grow: std::sync::Arc<crate::obs::Counter>,
+}
+
+impl DecodeObs {
+    fn handles(&mut self, codec: &str) -> &DecodeHandles {
+        if self.handles.is_none() || self.codec != codec {
+            self.codec.clear();
+            self.codec.push_str(codec);
+            let l = [("codec", codec)];
+            self.handles = Some(DecodeHandles {
+                lists: crate::obs::counter("zann_lists_probed_total", &l),
+                ids: crate::obs::counter("zann_ids_decoded_total", &l),
+                bits: crate::obs::counter("zann_id_bits_decoded_total", &l),
+                reuse: crate::obs::counter("zann_scratch_reuse_total", &l),
+                grow: crate::obs::counter("zann_scratch_grow_total", &l),
+            });
+        }
+        self.handles.as_ref().unwrap()
+    }
+
+    fn simd(&mut self) -> &crate::obs::Counter {
+        if self.simd.is_none() {
+            self.simd = Some(crate::obs::counter(
+                "zann_simd_dispatch_total",
+                &[("level", crate::simd::level().name())],
+            ));
+        }
+        self.simd.as_deref().unwrap()
+    }
+
+    /// Flush one query's worth of decode-path observations.
+    pub(crate) fn record_query(
+        &mut self,
+        codec: &str,
+        lists: u64,
+        ids: u64,
+        bits: u64,
+        scratch_grew: bool,
+    ) {
+        if !crate::obs::enabled() {
+            return;
+        }
+        let h = self.handles(codec);
+        h.lists.add(lists);
+        h.ids.add(ids);
+        h.bits.add(bits);
+        if scratch_grew {
+            h.grow.inc();
+        } else {
+            h.reuse.inc();
+        }
+        self.simd().inc();
+    }
 }
 
 pub struct IvfIndex {
@@ -380,8 +454,12 @@ impl IvfIndex {
     ) {
         let nprobe = p.nprobe.min(self.k);
         let SearchScratch {
-            coarse, probe_order, lut, ids, codes, dists, topk, winners, decode, ..
+            coarse, probe_order, lut, ids, codes, dists, topk, winners, decode, obs, ..
         } = scratch;
+        // Decode-path observations, accumulated locally and flushed once
+        // per query (one handle-cache hit, five relaxed adds).
+        let cap_before = ids.capacity() + codes.capacity() + dists.capacity();
+        let (mut obs_lists, mut obs_ids, mut obs_bits) = (0u64, 0u64, 0u64);
         // Select the nprobe nearest centroids, then order that prefix
         // best-first: visiting the closest cluster first tightens the
         // top-k threshold early, so later clusters prune more rows.
@@ -414,17 +492,22 @@ impl IvfIndex {
             if start == end {
                 continue;
             }
+            obs_lists += 1;
             // For non-random-access codecs (ROC) the whole list is decoded
             // now — the online-setting cost the paper measures — through
             // the reusable decode scratch.
             if !defer_ids {
                 if let IdStore::PerList { codec, blobs, .. } = &self.ids {
+                    let _span = trace::span(Stage::ListDecode);
                     ids.clear();
                     codec.decode_into(blobs.get(c), self.n as u32, end - start, ids, decode);
+                    obs_ids += (end - start) as u64;
+                    obs_bits += blobs.get(c).len() as u64 * 8;
                 }
             }
             match &self.store {
                 CodeStore::Flat(v) => {
+                    let _span = trace::span(Stage::AdcScan);
                     for (o, row) in v[start * self.dim..end * self.dim]
                         .chunks_exact(self.dim)
                         .enumerate()
@@ -439,6 +522,7 @@ impl IvfIndex {
                     // Two-phase blocked scan: the SIMD kernel fills one
                     // distance per row (bit-identical to per-row adc),
                     // then a dense pass feeds the top-k.
+                    let _span = trace::span(Stage::AdcScan);
                     pq.adc_scan_into(lut, &stored[start * pq.m..end * pq.m], dists);
                     for (o, &d) in dists.iter().enumerate() {
                         if d < topk.threshold() {
@@ -448,12 +532,16 @@ impl IvfIndex {
                 }
                 CodeStore::PqCompressed { pq, codec, columns, .. } => {
                     let m = pq.m;
-                    codec.decode_columns_into(
-                        (0..m).map(|j| columns.get(c * m + j)),
-                        end - start,
-                        codes,
-                        decode,
-                    );
+                    {
+                        let _span = trace::span(Stage::ListDecode);
+                        codec.decode_columns_into(
+                            (0..m).map(|j| columns.get(c * m + j)),
+                            end - start,
+                            codes,
+                            decode,
+                        );
+                    }
+                    let _span = trace::span(Stage::AdcScan);
                     pq.adc_scan_into(lut, codes, dists);
                     for (o, &d) in dists.iter().enumerate() {
                         if d < topk.threshold() {
@@ -465,6 +553,7 @@ impl IvfIndex {
         }
 
         // Resolve payloads to ids.
+        let merge_span = trace::span(Stage::TopkMerge);
         topk.drain_sorted_into(winners);
         out.clear();
         out.reserve(winners.len());
@@ -476,6 +565,21 @@ impl IvfIndex {
             } else {
                 out.push((d, pl as u32));
             }
+        }
+        drop(merge_span);
+        if defer_ids {
+            // Random-access stores decode exactly the winners.
+            obs_ids += winners.len() as u64;
+        }
+        if crate::obs::enabled() {
+            let cap_after = ids.capacity() + codes.capacity() + dists.capacity();
+            obs.record_query(
+                self.spec.name(),
+                obs_lists,
+                obs_ids,
+                obs_bits,
+                cap_after > cap_before,
+            );
         }
     }
 

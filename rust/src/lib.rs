@@ -99,6 +99,7 @@
 //! ```
 
 pub mod util;
+pub mod obs;
 pub mod bitvec;
 pub mod ans;
 pub mod fenwick;

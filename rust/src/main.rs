@@ -31,7 +31,8 @@
 //!                         static build over the same live set
 //!   info                — print the stats header of a saved index; for
 //!                         a sharded container (or a directory of shard
-//!                         containers) also one line per shard
+//!                         containers) also one line per shard; --json
+//!                         emits the same stats machine-readably
 //!   serve               — reopen a saved index (zero transcode) and
 //!                         serve a query batch through the coordinator,
 //!                         verifying responses against direct search
@@ -42,6 +43,13 @@
 //!                         prove each one is detected (no panic, hang,
 //!                         or silently wrong answer); exits non-zero
 //!                         on any escape
+//!   metrics             — run a small self-contained serving workload
+//!                         and print the observability registry
+//!                         (Prometheus text format, or JSON with --json)
+//!   bench-obs           — self-measurement: the same serve workload
+//!                         with stage-trace sampling off vs. on, and the
+//!                         instrumentation overhead delta
+//!                         (writes BENCH_obs.json)
 //!   sizes               — bits/id summary for one dataset/index
 //!
 //! Common flags: --n --nq --dim --k --seed --threads --dataset
@@ -87,17 +95,21 @@ fn main() {
         "serve" => serve_cmd(&args),
         "serve-demo" => serve_demo(&args),
         "inject-faults" => inject_faults_cmd(&args),
+        "metrics" => metrics_cmd(&args),
+        "bench-obs" => bench_entries::obs(&args),
         _ => {
             eprintln!(
                 "usage: zann <bench-table1|bench-table2|bench-table3|bench-table4|\n\
                  bench-fig2|bench-fig3|bench-search-qps|bench-decode|bench-churn|\n\
-                 bench-recall|bench-serve|sizes|\n\
+                 bench-recall|bench-serve|bench-obs|sizes|\n\
                  build --out PATH [--backend ivf|nsg|hnsw|dynamic|sharded]\n\
                  \u{20}\u{20}[--shards S] [--router hash|kmeans]|\n\
                  add PATH --add-n N|delete PATH --frac F|--ids A,B|compact PATH|\n\
-                 check-parity PATH|info PATH_OR_DIR|\n\
-                 serve PATH [--deadline-ms MS] [--queue-depth N] [--metrics-json PATH]|\n\
-                 serve-demo|inject-faults [--seed S] [--mutations M] [--timeout-ms MS]>\n\
+                 check-parity PATH|info PATH_OR_DIR [--json]|\n\
+                 serve PATH [--deadline-ms MS] [--queue-depth N] [--metrics-json PATH]\n\
+                 \u{20}\u{20}[--metrics-prom PATH] [--trace-dump PATH]|\n\
+                 serve-demo|metrics [--json] [--out PATH]|\n\
+                 inject-faults [--seed S] [--mutations M] [--timeout-ms MS]>\n\
                  [--n N] [--dataset sift|deep|ssnpp] [--codec NAME] ..."
             );
         }
@@ -153,6 +165,46 @@ fn print_stats(s: &IndexStats, file_bytes: Option<u64>) {
         line.push_str(&format!(" file_bytes={b}"));
     }
     println!("{line}");
+}
+
+/// Machine-readable counterpart of `print_stats` (the `info --json`
+/// path). Hand-rolled like the bench emitters; ci.sh round-trips the
+/// output through a real JSON parser.
+fn stats_json(s: &IndexStats, file_bytes: Option<u64>) -> String {
+    let bits_per_link = if s.edges > 0 { s.link_bits as f64 / s.edges as f64 } else { 0.0 };
+    let mut j = format!(
+        "{{\"kind\": \"{}\", \"codec\": \"{}\", \"n\": {}, \"dim\": {}, \"edges\": {}, \
+         \"id_bits\": {}, \"code_bits\": {}, \"link_bits\": {}, \"aux_bits\": {}, \
+         \"bits_per_id\": {:.3}, \"bits_per_link\": {:.3}, \"payload_bytes\": {}, \
+         \"live\": {}, \"deleted\": {}, \"buffer_rows\": {}, \"checksummed\": {}",
+        s.kind.name(),
+        zann::obs::expo::escape_json(&s.codec),
+        s.n,
+        s.dim,
+        s.edges,
+        s.id_bits,
+        s.code_bits,
+        s.link_bits,
+        s.aux_bits,
+        s.bits_per_id(),
+        bits_per_link,
+        s.payload_bytes(),
+        s.live,
+        s.deleted,
+        s.buffer_rows,
+        s.checksummed,
+    );
+    let per: Vec<String> = s.segments.iter().map(|g| format!("{:.3}", g.bits_per_id())).collect();
+    j.push_str(&format!(
+        ", \"segments\": {}, \"seg_bits_per_id\": [{}]",
+        s.segments.len(),
+        per.join(", ")
+    ));
+    if let Some(b) = file_bytes {
+        j.push_str(&format!(", \"file_bytes\": {b}"));
+    }
+    j.push('}');
+    j
 }
 
 /// Bits/id summary for one configuration.
@@ -518,12 +570,13 @@ fn info_cmd(args: &Args) {
     let path = match args.positional.get(1) {
         Some(p) => p.clone(),
         None => {
-            eprintln!("usage: zann info PATH_OR_DIR");
+            eprintln!("usage: zann info PATH_OR_DIR [--json]");
             std::process::exit(2);
         }
     };
+    let json = args.bool("json");
     if Path::new(&path).is_dir() {
-        return info_dir(Path::new(&path));
+        return info_dir(Path::new(&path), json);
     }
     let file_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
     let buf = match std::fs::read(&path) {
@@ -542,6 +595,18 @@ fn info_cmd(args: &Args) {
                 std::process::exit(1);
             }
         };
+        if json {
+            let shards: Vec<String> =
+                idx.shard_stats().iter().map(|st| stats_json(st, None)).collect();
+            println!(
+                "{{\"router\": \"{}\", \"num_shards\": {}, \"aggregate\": {}, \"shards\": [{}]}}",
+                idx.router().kind_name(),
+                idx.num_shards(),
+                stats_json(&AnnIndex::stats(&idx), Some(file_bytes)),
+                shards.join(", "),
+            );
+            return;
+        }
         print_stats(&AnnIndex::stats(&idx), Some(file_bytes));
         println!("router={} shards={}", idx.router().kind_name(), idx.num_shards());
         for (s, st) in idx.shard_stats().iter().enumerate() {
@@ -557,13 +622,17 @@ fn info_cmd(args: &Args) {
             std::process::exit(1);
         }
     };
-    print_stats(&index.stats(), Some(file_bytes));
+    if json {
+        println!("{}", stats_json(&index.stats(), Some(file_bytes)));
+    } else {
+        print_stats(&index.stats(), Some(file_bytes));
+    }
 }
 
 /// `zann info DIR`: every regular file in `DIR` (sorted by name) is
 /// opened as one shard container; prints a synthesized aggregate line
-/// followed by one line per shard.
-fn info_dir(dir: &Path) {
+/// followed by one line per shard (or one JSON object with `--json`).
+fn info_dir(dir: &Path, json: bool) {
     let mut files: Vec<std::path::PathBuf> = match std::fs::read_dir(dir) {
         Ok(rd) => rd
             .filter_map(|e| e.ok().map(|e| e.path()))
@@ -622,6 +691,20 @@ fn info_dir(dir: &Path) {
             })
             .collect(),
     };
+    if json {
+        let per: Vec<String> = shards
+            .iter()
+            .map(|(p, st)| stats_json(st, std::fs::metadata(p).map(|m| m.len()).ok()))
+            .collect();
+        println!(
+            "{{\"directory\": \"{}\", \"num_shards\": {}, \"aggregate\": {}, \"shards\": [{}]}}",
+            zann::obs::expo::escape_json(&dir.display().to_string()),
+            shards.len(),
+            stats_json(&agg, Some(total_bytes)),
+            per.join(", "),
+        );
+        return;
+    }
     print_stats(&agg, Some(total_bytes));
     println!("directory {}: {} shard containers", dir.display(), shards.len());
     for (s, (p, st)) in shards.iter().enumerate() {
@@ -639,7 +722,7 @@ fn serve_cmd(args: &Args) {
             eprintln!(
                 "usage: zann serve PATH [--nq N] [--nprobe P] [--ef E] [--topk K] \
                  [--deadline-ms MS] [--queue-depth N] [--dump-results FILE] \
-                 [--metrics-json FILE]"
+                 [--metrics-json FILE] [--metrics-prom FILE] [--trace-dump FILE]"
             );
             std::process::exit(2);
         }
@@ -761,14 +844,43 @@ fn serve_cmd(args: &Args) {
     // mark) for dashboards / CI assertions, written after the batch so
     // the numbers cover the whole run.
     if let Some(mpath) = args.get("metrics-json") {
-        let json = coord.metrics.metrics_json();
+        // Superset of the historical flat object: the coordinator's own
+        // counters keep their keys, and the whole observability registry
+        // rides along under "registry" when the obs feature is on.
+        let mut json = coord.metrics.metrics_json();
+        if zann::obs::enabled() {
+            json.truncate(json.rfind('}').unwrap_or(json.len()));
+            json.push_str(&format!(", \"registry\": {}}}", zann::obs::global().render_json()));
+        }
         if let Err(e) = std::fs::write(mpath, &json) {
             eprintln!("serve: failed to write --metrics-json {mpath}: {e}");
             std::process::exit(1);
         }
         println!("wrote metrics to {mpath}");
     }
+    // Prometheus text rendering of the global registry — everything the
+    // run touched: per-codec decode counters, per-coordinator latency
+    // histograms, stage timings, SIMD dispatch tiers.
+    if let Some(ppath) = args.get("metrics-prom") {
+        let text = zann::obs::global().render_prometheus();
+        if let Err(e) = std::fs::write(ppath, &text) {
+            eprintln!("serve: failed to write --metrics-prom {ppath}: {e}");
+            std::process::exit(1);
+        }
+        println!("wrote {} exposition lines to {ppath}", text.lines().count());
+    }
     coord.stop();
+    // Sampled per-query stage timelines (enable with ZANN_TRACE_SAMPLE).
+    // After stop(): the workers have joined, so every sampled query's
+    // completed timeline is in the ring — the dump is the whole run.
+    if let Some(tpath) = args.get("trace-dump") {
+        let spans = zann::obs::trace::take_spans();
+        if let Err(e) = std::fs::write(tpath, zann::obs::trace::spans_json(&spans)) {
+            eprintln!("serve: failed to write --trace-dump {tpath}: {e}");
+            std::process::exit(1);
+        }
+        println!("dumped {} sampled query spans to {tpath}", spans.len());
+    }
     if ok != checked {
         eprintln!("serve: {} responses diverged from direct search", checked - ok);
         std::process::exit(1);
@@ -829,6 +941,58 @@ fn serve_demo(args: &Args) {
         coord.metrics.summary()
     );
     coord.stop();
+}
+
+/// Exercise a tiny self-contained serving workload, then print the
+/// global observability registry — a smoke/debug view of the exposition
+/// layer without needing a saved index. `--json` switches from the
+/// Prometheus text format to the JSON rendering; `--out FILE` writes
+/// instead of printing. Status chatter goes to stderr so stdout is pure
+/// exposition.
+fn metrics_cmd(args: &Args) {
+    if !zann::obs::enabled() {
+        eprintln!("metrics: built without the `obs` feature; registry will be empty");
+    }
+    let kind = bench_entries::datasets_from(args)[0];
+    let n = args.usize("n", 4_096);
+    let nq = args.usize("nq", 64);
+    let dim = args.usize("dim", 32);
+    let seed = args.u64("seed", 42);
+    let codec = codec_or_exit(args, "roc");
+    let ds = generate(kind, n, nq, dim, seed);
+    let idx = Arc::new(IvfIndex::build(
+        &ds.data,
+        ds.dim,
+        &IvfBuildParams { k: args.usize("k", 64), id_codec: codec, seed, ..Default::default() },
+    ));
+    let coord = Coordinator::start(
+        idx,
+        None,
+        ServeConfig {
+            batch_size: 16,
+            search: QueryParams { nprobe: 4, k: 10, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let queries: Vec<Vec<f32>> = (0..nq).map(|qi| ds.query(qi).to_vec()).collect();
+    let responses = coord.client.search_many(queries).unwrap();
+    coord.stop();
+    eprintln!("metrics: served {} queries to populate the registry", responses.len());
+    let out = if args.bool("json") {
+        zann::obs::global().render_json()
+    } else {
+        zann::obs::global().render_prometheus()
+    };
+    match args.get("out") {
+        Some(path) => {
+            if let Err(e) = std::fs::write(path, &out) {
+                eprintln!("metrics: failed to write --out {path}: {e}");
+                std::process::exit(1);
+            }
+            eprintln!("metrics: wrote {} bytes to {path}", out.len());
+        }
+        None => print!("{out}"),
+    }
 }
 
 /// Chaos gate: seeded corruption sweep over every codec × backend

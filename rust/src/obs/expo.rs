@@ -1,0 +1,356 @@
+//! Exposition: Prometheus text format and JSON rendering for the
+//! registry, plus the serde-free JSON shape check shared with the bench
+//! emitters.
+
+use super::hist::{Histogram, BUCKETS};
+use super::registry::{Metric, Registry};
+
+/// Escape a label value for the Prometheus text format: backslash,
+/// double quote and newline must be escaped, nothing else.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape a string for embedding in a JSON string literal.
+pub fn escape_json(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+fn prom_labels(labels: &[(&'static str, String)], extra: Option<(&str, &str)>) -> String {
+    if labels.is_empty() && extra.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{}=\"{}\"", k, escape_label(v))).collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{}=\"{}\"", k, escape_label(v)));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+/// Flattened snapshot of one series, decoupled from the registry lock.
+enum Snap {
+    Counter(u64),
+    Gauge(i64),
+    Histogram { buckets: [u64; BUCKETS], count: u64, sum: u64 },
+}
+
+impl Snap {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Snap::Counter(_) => "counter",
+            Snap::Gauge(_) => "gauge",
+            Snap::Histogram { .. } => "histogram",
+        }
+    }
+}
+
+fn snapshot(reg: &Registry) -> Vec<(&'static str, Vec<(&'static str, String)>, Snap)> {
+    let entries = reg.entries();
+    let mut out: Vec<(&'static str, Vec<(&'static str, String)>, Snap)> = entries
+        .iter()
+        .map(|e| {
+            let snap = match &e.metric {
+                Metric::Counter(c) => Snap::Counter(c.get()),
+                Metric::CounterRef(c) => Snap::Counter(c.get()),
+                Metric::Gauge(g) => Snap::Gauge(g.get()),
+                Metric::Histogram(h) => {
+                    Snap::Histogram { buckets: h.snapshot(), count: h.count(), sum: h.sum() }
+                }
+            };
+            (e.name, e.labels.clone(), snap)
+        })
+        .collect();
+    drop(entries);
+    // Deterministic output: sort by name then label values; registration
+    // order is load-dependent.
+    out.sort_by(|a, b| a.0.cmp(b.0).then_with(|| a.1.cmp(&b.1)));
+    out
+}
+
+impl Registry {
+    /// Render every registered series in the Prometheus text exposition
+    /// format: one `# TYPE` line per metric name, then its samples.
+    /// Histograms emit cumulative `_bucket{le=...}` samples for occupied
+    /// buckets plus `le="+Inf"`, `_sum`, and `_count`.
+    pub fn render_prometheus(&self) -> String {
+        let snaps = snapshot(self);
+        let mut out = String::new();
+        let mut last_name = "";
+        for (name, labels, snap) in &snaps {
+            if *name != last_name {
+                out.push_str(&format!("# TYPE {} {}\n", name, snap.type_name()));
+                last_name = name;
+            }
+            match snap {
+                Snap::Counter(v) => {
+                    out.push_str(&format!("{}{} {}\n", name, prom_labels(labels, None), v));
+                }
+                Snap::Gauge(v) => {
+                    out.push_str(&format!("{}{} {}\n", name, prom_labels(labels, None), v));
+                }
+                Snap::Histogram { buckets, count, sum } => {
+                    let mut cum = 0u64;
+                    for (i, &b) in buckets.iter().enumerate() {
+                        cum += b;
+                        // The catch-all bucket is covered by the
+                        // explicit `+Inf` sample below.
+                        if b == 0 || i == BUCKETS - 1 {
+                            continue;
+                        }
+                        let le = Histogram::bucket_upper_bound(i).to_string();
+                        out.push_str(&format!(
+                            "{}_bucket{} {}\n",
+                            name,
+                            prom_labels(labels, Some(("le", &le))),
+                            cum
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{}_bucket{} {}\n",
+                        name,
+                        prom_labels(labels, Some(("le", "+Inf"))),
+                        count
+                    ));
+                    out.push_str(&format!("{}_sum{} {}\n", name, prom_labels(labels, None), sum));
+                    out.push_str(&format!("{}_count{} {}\n", name, prom_labels(labels, None), count));
+                }
+            }
+        }
+        out
+    }
+
+    /// Render every registered series as a JSON object:
+    /// `{"series": [{"name": ..., "labels": {...}, "type": ...,
+    /// "value"|"count"/"sum"/"p50"/"p95"/"p99": ...}, ...]}`.
+    pub fn render_json(&self) -> String {
+        let snaps = snapshot(self);
+        let mut out = String::from("{\"series\": [");
+        for (i, (name, labels, snap)) in snaps.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("{{\"name\": \"{}\"", escape_json(name)));
+            if !labels.is_empty() {
+                out.push_str(", \"labels\": {");
+                for (j, (k, v)) in labels.iter().enumerate() {
+                    if j > 0 {
+                        out.push_str(", ");
+                    }
+                    out.push_str(&format!("\"{}\": \"{}\"", escape_json(k), escape_json(v)));
+                }
+                out.push('}');
+            }
+            out.push_str(&format!(", \"type\": \"{}\"", snap.type_name()));
+            match snap {
+                Snap::Counter(v) => out.push_str(&format!(", \"value\": {}", v)),
+                Snap::Gauge(v) => out.push_str(&format!(", \"value\": {}", v)),
+                Snap::Histogram { buckets, count, sum } => {
+                    let q = |qv: f64| quantile_of(buckets, qv);
+                    out.push_str(&format!(
+                        ", \"count\": {}, \"sum\": {}, \"p50\": {}, \"p95\": {}, \"p99\": {}",
+                        count,
+                        sum,
+                        q(0.50),
+                        q(0.95),
+                        q(0.99)
+                    ));
+                }
+            }
+            out.push('}');
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Nearest-rank quantile over a raw bucket snapshot (upper-bound
+/// convention, matching [`Histogram::quantile`]).
+fn quantile_of(buckets: &[u64; BUCKETS], q: f64) -> u64 {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 {
+        return 0;
+    }
+    let rank = super::quantile::nearest_rank_index(total as usize, q) as u64;
+    let mut seen = 0u64;
+    for (i, &c) in buckets.iter().enumerate() {
+        seen += c;
+        if c > 0 && rank < seen {
+            return Histogram::bucket_upper_bound(i);
+        }
+    }
+    Histogram::bucket_upper_bound(BUCKETS - 1)
+}
+
+/// Serde-free JSON well-formedness check: balanced braces/brackets
+/// outside string literals, valid string escapes tracked, and no
+/// trailing commas before a closer. Shared by the bench emitters' tests
+/// and the exposition tests — it catches the classes of bug hand-rolled
+/// JSON writers actually have, without needing a parser dependency.
+pub fn check_json_shape(s: &str) -> Result<(), String> {
+    let mut stack: Vec<char> = Vec::new();
+    let mut in_string = false;
+    let mut escaped = false;
+    let mut last_significant = ' ';
+    for (i, c) in s.char_indices() {
+        if in_string {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_string = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_string = true,
+            '{' => stack.push('}'),
+            '[' => stack.push(']'),
+            '}' | ']' => {
+                if last_significant == ',' {
+                    return Err(format!("trailing comma before `{}` at byte {}", c, i));
+                }
+                match stack.pop() {
+                    Some(want) if want == c => {}
+                    Some(want) => return Err(format!("expected `{}` but found `{}` at byte {}", want, c, i)),
+                    None => return Err(format!("unmatched `{}` at byte {}", c, i)),
+                }
+            }
+            _ => {}
+        }
+        if !c.is_whitespace() {
+            last_significant = c;
+        }
+    }
+    if in_string {
+        return Err("unterminated string".to_string());
+    }
+    if !stack.is_empty() {
+        return Err(format!("{} unclosed bracket(s)", stack.len()));
+    }
+    if s.trim().is_empty() {
+        return Err("empty document".to_string());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prometheus_type_line_precedes_samples_and_labels_escape() {
+        let r = Registry::new();
+        r.counter("t_requests_total", &[("tenant", "a\"b\\c\nd")]).add(5);
+        r.gauge("t_depth", &[]).set(-2);
+        let text = r.render_prometheus();
+        let lines: Vec<&str> = text.lines().collect();
+        let type_idx = lines
+            .iter()
+            .position(|l| *l == "# TYPE t_requests_total counter")
+            .expect("TYPE line present");
+        let sample_idx = lines
+            .iter()
+            .position(|l| l.starts_with("t_requests_total{"))
+            .expect("sample line present");
+        assert!(type_idx < sample_idx, "# TYPE must precede its samples");
+        assert!(
+            text.contains("t_requests_total{tenant=\"a\\\"b\\\\c\\nd\"} 5"),
+            "label escaping: got {text}"
+        );
+        assert!(text.contains("# TYPE t_depth gauge"));
+        assert!(text.contains("t_depth -2"));
+    }
+
+    #[test]
+    fn prometheus_histogram_buckets_are_cumulative_with_inf() {
+        let r = Registry::new();
+        let h = r.histogram("t_lat_us", &[("shard", "0")]);
+        for v in [1u64, 2, 3, 100] {
+            h.observe(v);
+        }
+        let text = r.render_prometheus();
+        // buckets: b1 (v=1) cum 1; b2 (2,3) cum 3; b7 (100) cum 4.
+        assert!(text.contains("t_lat_us_bucket{shard=\"0\",le=\"1\"} 1"), "{text}");
+        assert!(text.contains("t_lat_us_bucket{shard=\"0\",le=\"3\"} 3"), "{text}");
+        assert!(text.contains("t_lat_us_bucket{shard=\"0\",le=\"127\"} 4"), "{text}");
+        assert!(text.contains("t_lat_us_bucket{shard=\"0\",le=\"+Inf\"} 4"), "{text}");
+        assert!(text.contains("t_lat_us_sum{shard=\"0\"} 106"), "{text}");
+        assert!(text.contains("t_lat_us_count{shard=\"0\"} 4"), "{text}");
+        // Cumulative counts must be monotone in emission order.
+        let mut prev = 0u64;
+        for l in text.lines().filter(|l| l.starts_with("t_lat_us_bucket")) {
+            let v: u64 = l.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "bucket counts must be cumulative: {l}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn render_json_is_wellformed_and_quantiles_match_live() {
+        let r = Registry::new();
+        r.counter("j_total", &[("codec", "elias-fano")]).add(7);
+        let h = r.histogram("j_us", &[]);
+        for v in 1..=100u64 {
+            h.observe(v);
+        }
+        let js = r.render_json();
+        check_json_shape(&js).expect("render_json must be well-formed");
+        assert!(js.contains("\"name\": \"j_total\""));
+        assert!(js.contains("\"labels\": {\"codec\": \"elias-fano\"}"));
+        assert!(js.contains("\"value\": 7"));
+        assert!(js.contains("\"p50\": 63"), "JSON quantiles must match Histogram::quantile: {js}");
+        assert!(js.contains("\"p95\": 127"));
+        assert!(js.contains("\"count\": 100"));
+        assert_eq!(h.quantile(0.5), 63);
+    }
+
+    #[test]
+    fn empty_registry_renders_empty_exposition() {
+        let r = Registry::new();
+        assert_eq!(r.render_prometheus(), "");
+        let js = r.render_json();
+        check_json_shape(&js).unwrap();
+        assert_eq!(js, "{\"series\": []}");
+    }
+
+    #[test]
+    fn json_shape_checker_accepts_good_and_rejects_bad() {
+        check_json_shape("{\"a\": [1, 2, {\"b\": \"}]\"}]}").expect("braces in strings are fine");
+        check_json_shape("{\"esc\": \"a\\\"b\"}").expect("escaped quotes are fine");
+        assert!(check_json_shape("{\"a\": 1,}").is_err(), "trailing comma");
+        assert!(check_json_shape("[1, 2,\n]").is_err(), "trailing comma before newline-]");
+        assert!(check_json_shape("{\"a\": [1}").is_err(), "mismatched closer");
+        assert!(check_json_shape("{\"a\": 1").is_err(), "unclosed");
+        assert!(check_json_shape("{\"a\": \"oops").is_err(), "unterminated string");
+        assert!(check_json_shape("   ").is_err(), "empty document");
+    }
+
+    #[test]
+    fn escape_json_handles_control_chars() {
+        assert_eq!(escape_json("a\tb\nc\"d\\e"), "a\\tb\\nc\\\"d\\\\e");
+        assert_eq!(escape_json("\u{1}"), "\\u0001");
+    }
+}

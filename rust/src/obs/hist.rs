@@ -1,0 +1,214 @@
+//! Fixed-bucket log₂ latency histogram.
+//!
+//! Values land in power-of-two buckets: bucket 0 holds exactly `0`,
+//! bucket `i ≥ 1` holds `2^(i-1) ..= 2^i - 1` (i.e. values whose bit
+//! length is `i`). 42 buckets cover `0 ..= 2^40 - 1` with the last
+//! bucket absorbing everything larger — at microsecond resolution that
+//! is ~12.7 days, far beyond any latency we record. Observing is two
+//! relaxed `fetch_add`s and a `leading_zeros`; there is no lock to
+//! poison, which is the point (a caught worker panic used to poison the
+//! coordinator's `Mutex<Vec<u64>>` and silently zero its percentiles).
+//!
+//! Quantiles are nearest-rank (see [`crate::obs::quantile`]) over the
+//! cumulative bucket counts and return the *upper bound* of the selected
+//! bucket (`2^i − 1`), a conservative ≤2× overestimate. Tests pin the
+//! exact values so the contract can't drift silently.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use super::quantile::nearest_rank_index;
+
+/// Number of buckets: one for zero plus one per bit length 1..=40, plus
+/// a final catch-all for values ≥ 2^40.
+pub const BUCKETS: usize = 42;
+
+/// Lock-free log₂ histogram. Const-constructible so it can back both
+/// `static` registries and `Arc`-shared handles.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new() -> Self {
+        // [const-init; BUCKETS] requires the element expression be const.
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            buckets: [ZERO; BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index for a value: 0 for 0, else its bit length, clamped
+    /// to the catch-all bucket.
+    #[inline]
+    pub fn bucket_index(v: u64) -> usize {
+        let bits = (64 - v.leading_zeros()) as usize;
+        bits.min(BUCKETS - 1)
+    }
+
+    /// Inclusive upper bound of bucket `i` (`2^i − 1`); `u64::MAX` for
+    /// the catch-all.
+    pub fn bucket_upper_bound(i: usize) -> u64 {
+        if i >= BUCKETS - 1 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum.fetch_add(v, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Relaxed)
+    }
+
+    /// Snapshot of the raw bucket counts.
+    pub fn snapshot(&self) -> [u64; BUCKETS] {
+        let mut out = [0u64; BUCKETS];
+        for (o, b) in out.iter_mut().zip(self.buckets.iter()) {
+            *o = b.load(Relaxed);
+        }
+        out
+    }
+
+    /// Nearest-rank quantile, reported as the upper bound of the bucket
+    /// holding the selected sample. 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let snap = self.snapshot();
+        let total: u64 = snap.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = nearest_rank_index(total as usize, q) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in snap.iter().enumerate() {
+            seen += c;
+            // rank is a 0-based index; bucket i covers indices
+            // [seen-c, seen).
+            if c > 0 && rank < seen {
+                return Self::bucket_upper_bound(i);
+            }
+        }
+        Self::bucket_upper_bound(BUCKETS - 1)
+    }
+
+    /// Reset all cells to zero (tests and bench warmup only; not atomic
+    /// as a whole).
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Relaxed);
+        }
+        self.count.store(0, Relaxed);
+        self.sum.store(0, Relaxed);
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_exact_powers_of_two() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 1);
+        assert_eq!(Histogram::bucket_index(2), 2);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 3);
+        assert_eq!(Histogram::bucket_index(7), 3);
+        assert_eq!(Histogram::bucket_index(8), 4);
+        assert_eq!(Histogram::bucket_index(100), 7); // 64..=127
+        assert_eq!(Histogram::bucket_index(1 << 40), BUCKETS - 1);
+        assert_eq!(Histogram::bucket_index(u64::MAX), BUCKETS - 1);
+        // Every bucket's upper bound maps back into that bucket.
+        for i in 1..BUCKETS - 1 {
+            assert_eq!(Histogram::bucket_index(Histogram::bucket_upper_bound(i)), i);
+            assert_eq!(Histogram::bucket_index(Histogram::bucket_upper_bound(i) + 1), i + 1);
+        }
+    }
+
+    #[test]
+    fn quantiles_return_bucket_upper_bounds() {
+        let h = Histogram::new();
+        for v in 1..=100u64 {
+            h.observe(v);
+        }
+        // Cumulative counts: b1=1, b2=3, b3=7, b4=15, b5=31, b6=63, b7=100.
+        // rank(q=0.5) = round(0.5*99) = 50 → bucket 6 → upper bound 63.
+        assert_eq!(h.quantile(0.5), 63);
+        // rank(0.95) = round(94.05) = 94 → bucket 7 → 127.
+        assert_eq!(h.quantile(0.95), 127);
+        assert_eq!(h.quantile(1.0), 127);
+        // rank(0.0) = 0 → bucket 1 → 1.
+        assert_eq!(h.quantile(0.0), 1);
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.sum(), 5050);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.quantile(1.0), 0);
+    }
+
+    #[test]
+    fn zero_values_land_in_bucket_zero() {
+        let h = Histogram::new();
+        h.observe(0);
+        h.observe(0);
+        assert_eq!(h.snapshot()[0], 2);
+        assert_eq!(h.quantile(0.5), 0);
+    }
+
+    #[test]
+    fn concurrent_observes_are_all_counted() {
+        use std::sync::Arc;
+        let h = Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..10_000u64 {
+                        h.observe(t * 10_000 + i);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 40_000);
+        assert_eq!(h.snapshot().iter().sum::<u64>(), 40_000);
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let h = Histogram::new();
+        h.observe(42);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0);
+        assert_eq!(h.snapshot().iter().sum::<u64>(), 0);
+    }
+}

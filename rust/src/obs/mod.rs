@@ -1,0 +1,120 @@
+//! Observability: a lock-free metrics registry, a sampled pipeline-stage
+//! tracer, and a Prometheus/JSON exposition layer.
+//!
+//! The paper's headline claims are quantitative ("no impact on accuracy
+//! or search runtime"), so the serving stack must be able to say *where*
+//! a query's time goes — coarse quantize vs. per-list decode vs. ADC
+//! scan vs. top-k merge — and which codec/shard/tenant is responsible
+//! for a regression, without perturbing the numbers it reports. Three
+//! pieces, all cheap enough for the hot path:
+//!
+//! * [`registry`] — a process-global [`Registry`] of relaxed-atomic
+//!   [`Counter`]s, [`Gauge`]s and log₂-bucket [`Histogram`]s, registered
+//!   by static name with labels (`codec`, `shard`, `tenant`, ...).
+//!   Recording is a single relaxed atomic op; registration (rare) takes
+//!   a mutex. Hot paths cache their handles per thread/struct so the
+//!   steady state never touches the registry lock.
+//! * [`trace`] — per-query pipeline-stage spans (queue wait → coarse
+//!   quantize → list decode → ADC scan / beam search → top-k merge →
+//!   reply) recorded into a bounded ring buffer for a sampled subset of
+//!   queries (`ZANN_TRACE_SAMPLE=1/N`), dumpable as per-stage JSON
+//!   timelines. Unsampled queries pay one atomic load.
+//! * [`expo`] — `Registry::render_prometheus()` / `render_json()`
+//!   text exposition, plus the serde-free JSON shape check shared with
+//!   the bench emitters.
+//!
+//! [`quantile`] holds the one nearest-rank percentile implementation the
+//! coordinator metrics, the workload aggregator and the histogram
+//! quantiles all share.
+//!
+//! With the `obs` cargo feature off (`--no-default-features`), nothing
+//! registers on the global registry and the tracer never samples, so the
+//! exposition renders empty, span dumps are never produced, and the
+//! instrumentation sites compile down to no-ops (they gate on the const
+//! [`enabled`]). Search results are bit-identical either way — the
+//! instrumentation only *reads* timing and counts, never the data path.
+
+pub mod expo;
+pub mod hist;
+pub mod quantile;
+pub mod registry;
+pub mod trace;
+
+pub use hist::Histogram;
+pub use registry::{Counter, Gauge, LabeledCounter, Registry, StaticCounter};
+
+use std::sync::Arc;
+
+/// True when the `obs` cargo feature is compiled in. A `const fn`, so
+/// `if obs::enabled() { ... }` blocks fold away entirely in `obs`-off
+/// builds — the promised "compiled to no-ops".
+pub const fn enabled() -> bool {
+    cfg!(feature = "obs")
+}
+
+/// The process-global registry behind [`counter`]/[`gauge`]/[`histogram`]
+/// and the `zann metrics` / `zann serve` exposition.
+pub fn global() -> &'static Registry {
+    static GLOBAL: Registry = Registry::new();
+    &GLOBAL
+}
+
+/// Get-or-register a counter on the global registry. With the `obs`
+/// feature off this returns a functional but *unregistered* handle, so
+/// callers that depend on their counters for correctness (coordinator
+/// metrics) keep working while the exposition stays empty.
+pub fn counter(name: &'static str, labels: &[(&'static str, &str)]) -> Arc<Counter> {
+    if enabled() {
+        global().counter(name, labels)
+    } else {
+        Arc::new(Counter::new())
+    }
+}
+
+/// Get-or-register a gauge on the global registry (orphan when `obs` is
+/// off, like [`counter`]).
+pub fn gauge(name: &'static str, labels: &[(&'static str, &str)]) -> Arc<Gauge> {
+    if enabled() {
+        global().gauge(name, labels)
+    } else {
+        Arc::new(Gauge::new())
+    }
+}
+
+/// Get-or-register a histogram on the global registry (orphan when `obs`
+/// is off, like [`counter`]).
+pub fn histogram(name: &'static str, labels: &[(&'static str, &str)]) -> Arc<Histogram> {
+    if enabled() {
+        global().histogram(name, labels)
+    } else {
+        Arc::new(Histogram::new())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_helpers_return_shared_handles_when_enabled() {
+        let a = counter("zann_obs_mod_test_total", &[("case", "shared")]);
+        let b = counter("zann_obs_mod_test_total", &[("case", "shared")]);
+        a.add(3);
+        b.add(4);
+        if enabled() {
+            assert_eq!(a.get(), b.get(), "same (name, labels) must share one cell");
+            assert_eq!(a.get(), 7);
+        } else {
+            assert_eq!(a.get(), 3);
+            assert_eq!(b.get(), 4);
+        }
+    }
+
+    #[test]
+    fn distinct_labels_are_distinct_series() {
+        let a = counter("zann_obs_mod_test_total", &[("case", "x")]);
+        let b = counter("zann_obs_mod_test_total", &[("case", "y")]);
+        a.inc();
+        assert_eq!(b.get(), 0, "different label values must not alias");
+    }
+}

@@ -1,0 +1,126 @@
+//! Nearest-rank quantiles — the single shared implementation.
+//!
+//! Three copies of "percentile of a sorted slice" grew up independently
+//! (coordinator latency percentiles, the workload aggregator, histogram
+//! quantiles) with subtly different index formulas. This module pins one
+//! convention and everything routes through it:
+//!
+//! > the quantile `q ∈ [0, 1]` of `n` sorted samples is the element at
+//! > index `round(q · (n − 1))`, with `round` half-away-from-zero
+//! > (Rust's `f64::round`).
+//!
+//! So `q=0.5` over `[1, 2, 3, 4]` is index `round(1.5) = 2` → `3`, and
+//! `q=1.0` is always the max. This matches the historical behaviour of
+//! `eval/workload.rs::percentile` and `Metrics::latency_percentile_us`,
+//! which tests in both modules pin.
+
+/// Index of the nearest-rank quantile `q` in a sorted collection of
+/// `len` elements. Returns 0 for empty input; `q` is clamped to [0, 1].
+pub fn nearest_rank_index(len: usize, q: f64) -> usize {
+    if len == 0 {
+        return 0;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let idx = ((len - 1) as f64 * q).round() as usize;
+    idx.min(len - 1)
+}
+
+/// Nearest-rank quantile of an **ascending-sorted** f64 slice.
+/// Returns 0.0 for an empty slice.
+pub fn quantile_sorted_f64(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        0.0
+    } else {
+        sorted[nearest_rank_index(sorted.len(), q)]
+    }
+}
+
+/// Nearest-rank quantile of an **ascending-sorted** u64 slice.
+/// Returns 0 for an empty slice.
+pub fn quantile_sorted_u64(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        0
+    } else {
+        sorted[nearest_rank_index(sorted.len(), q)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_input_is_zero() {
+        assert_eq!(nearest_rank_index(0, 0.5), 0);
+        assert_eq!(quantile_sorted_f64(&[], 0.5), 0.0);
+        assert_eq!(quantile_sorted_u64(&[], 0.99), 0);
+    }
+
+    #[test]
+    fn single_element_is_every_quantile() {
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(quantile_sorted_u64(&[7], q), 7);
+        }
+    }
+
+    #[test]
+    fn matches_workload_percentile_convention() {
+        // Pinned from eval/workload.rs: percentile(&[1,2,3,4], 50) == 3.0
+        // because round(0.5 * 3) = round(1.5) = 2 (half away from zero).
+        assert_eq!(quantile_sorted_f64(&[1.0, 2.0, 3.0, 4.0], 0.5), 3.0);
+        assert_eq!(quantile_sorted_u64(&[1, 2, 3, 4], 0.5), 3);
+    }
+
+    #[test]
+    fn extremes_are_min_and_max() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(quantile_sorted_u64(&v, 0.0), 1);
+        assert_eq!(quantile_sorted_u64(&v, 1.0), 100);
+        // Out-of-range q clamps rather than panicking.
+        assert_eq!(quantile_sorted_u64(&v, -3.0), 1);
+        assert_eq!(quantile_sorted_u64(&v, 2.0), 100);
+    }
+
+    #[test]
+    fn property_monotone_in_q() {
+        // Quantiles must be non-decreasing in q for any sorted input.
+        let mut v: Vec<u64> = (0..257).map(|i| (i * i * 31 + i) % 1009).collect();
+        v.sort_unstable();
+        let mut prev = quantile_sorted_u64(&v, 0.0);
+        let mut q = 0.0;
+        while q <= 1.0 {
+            let cur = quantile_sorted_u64(&v, q);
+            assert!(cur >= prev, "quantile decreased at q={q}: {cur} < {prev}");
+            prev = cur;
+            q += 0.01;
+        }
+    }
+
+    #[test]
+    fn property_result_is_always_a_sample() {
+        let mut v: Vec<u64> = (0..53).map(|i| (i * 7919) % 997).collect();
+        v.sort_unstable();
+        for i in 0..=20 {
+            let q = i as f64 / 20.0;
+            let r = quantile_sorted_u64(&v, q);
+            assert!(v.contains(&r), "quantile {q} returned non-sample {r}");
+        }
+    }
+
+    #[test]
+    fn property_rank_error_is_at_most_half_step() {
+        // For n samples, the chosen index must be the closest integer to
+        // q*(n-1): |idx - q*(n-1)| <= 0.5.
+        for n in [1usize, 2, 3, 10, 101] {
+            for i in 0..=40 {
+                let q = i as f64 / 40.0;
+                let idx = nearest_rank_index(n, q);
+                let exact = q * (n - 1) as f64;
+                assert!(
+                    (idx as f64 - exact).abs() <= 0.5 + 1e-9,
+                    "n={n} q={q}: idx={idx} exact={exact}"
+                );
+            }
+        }
+    }
+}

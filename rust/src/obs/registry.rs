@@ -1,0 +1,400 @@
+//! The lock-free metrics registry.
+//!
+//! Recording sites hold `Arc` handles (or `&'static` cells) and touch a
+//! single relaxed atomic — the registry's mutex guards only the *series
+//! table* used at registration and exposition time, both rare. Series
+//! are keyed by `(name, labels)`; `name` is always a `&'static str`
+//! (metric names are part of the code contract, not data), label values
+//! are owned strings (tenant names, shard indices).
+//!
+//! Cardinality is capped per name ([`MAX_SERIES_PER_NAME`]): once a name
+//! has that many label combinations, further registrations return
+//! functional *orphan* handles that count but are never exposed, so an
+//! attacker spraying unique tenant names cannot grow the registry
+//! without bound (mirroring the bounded tenant map in serve/admission).
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use super::hist::Histogram;
+
+/// Per-name label-combination cap; beyond it, handles become orphans.
+pub const MAX_SERIES_PER_NAME: usize = 4096;
+
+/// Monotone counter: one relaxed `fetch_add` per record.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Signed gauge (queue depths, high-water marks, build info).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge(AtomicI64::new(0))
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Relaxed);
+    }
+
+    /// Add `delta` and return the post-update value.
+    #[inline]
+    pub fn add(&self, delta: i64) -> i64 {
+        self.0.fetch_add(delta, Relaxed) + delta
+    }
+
+    /// Subtract with a floor of zero (for depth gauges where a stray
+    /// extra decrement must not wrap negative).
+    #[inline]
+    pub fn sub_floor0(&self, delta: i64) {
+        let _ = self.0.fetch_update(Relaxed, Relaxed, |v| Some((v - delta).max(0)));
+    }
+
+    /// Raise to `v` if larger (high-water marks).
+    #[inline]
+    pub fn max_of(&self, v: i64) {
+        self.0.fetch_max(v, Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// A label-free counter that can live in a `static` and registers itself
+/// on the global registry at first use. The steady-state cost is one
+/// relaxed flag load plus the `fetch_add`; with the `obs` feature off it
+/// is a pure no-op and never registers.
+#[derive(Debug)]
+pub struct StaticCounter {
+    name: &'static str,
+    cell: Counter,
+    registered: AtomicBool,
+}
+
+impl StaticCounter {
+    pub const fn new(name: &'static str) -> Self {
+        StaticCounter { name, cell: Counter::new(), registered: AtomicBool::new(false) }
+    }
+
+    #[inline]
+    pub fn add(&'static self, n: u64) {
+        if !super::enabled() {
+            return;
+        }
+        if !self.registered.load(Relaxed) {
+            super::global().register_static(self);
+            self.registered.store(true, Relaxed);
+        }
+        self.cell.add(n);
+    }
+
+    #[inline]
+    pub fn inc(&'static self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.cell.get()
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// One registered series: a metric cell plus its identity.
+pub(crate) struct Entry {
+    pub(crate) name: &'static str,
+    pub(crate) labels: Vec<(&'static str, String)>,
+    pub(crate) metric: Metric,
+}
+
+pub(crate) enum Metric {
+    Counter(Arc<Counter>),
+    CounterRef(&'static StaticCounter),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// Const-constructible series table. All mutation goes through
+/// [`Registry::entries`], which recovers from poisoning — a panicking
+/// exposition caller must not be able to wedge every recording site.
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl Registry {
+    pub const fn new() -> Self {
+        Registry { entries: Mutex::new(Vec::new()) }
+    }
+
+    pub(crate) fn entries(&self) -> MutexGuard<'_, Vec<Entry>> {
+        self.entries.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn labels_match(have: &[(&'static str, String)], want: &[(&'static str, &str)]) -> bool {
+        have.len() == want.len()
+            && have.iter().zip(want.iter()).all(|((hk, hv), (wk, wv))| hk == wk && hv == wv)
+    }
+
+    fn series_count(entries: &[Entry], name: &str) -> usize {
+        entries.iter().filter(|e| e.name == name).count()
+    }
+
+    /// Get-or-register the counter `(name, labels)`. Returns an orphan
+    /// (unregistered but functional) handle if the name is over its
+    /// cardinality cap or already registered with a different type.
+    pub fn counter(&self, name: &'static str, labels: &[(&'static str, &str)]) -> Arc<Counter> {
+        let mut entries = self.entries();
+        for e in entries.iter() {
+            if e.name == name && Self::labels_match(&e.labels, labels) {
+                if let Metric::Counter(c) = &e.metric {
+                    return Arc::clone(c);
+                }
+                return Arc::new(Counter::new()); // type clash: orphan
+            }
+        }
+        let c = Arc::new(Counter::new());
+        if Self::series_count(&entries, name) < MAX_SERIES_PER_NAME {
+            entries.push(Entry {
+                name,
+                labels: labels.iter().map(|(k, v)| (*k, v.to_string())).collect(),
+                metric: Metric::Counter(Arc::clone(&c)),
+            });
+        }
+        c
+    }
+
+    /// Get-or-register the gauge `(name, labels)` (orphan rules as
+    /// [`Registry::counter`]).
+    pub fn gauge(&self, name: &'static str, labels: &[(&'static str, &str)]) -> Arc<Gauge> {
+        let mut entries = self.entries();
+        for e in entries.iter() {
+            if e.name == name && Self::labels_match(&e.labels, labels) {
+                if let Metric::Gauge(g) = &e.metric {
+                    return Arc::clone(g);
+                }
+                return Arc::new(Gauge::new());
+            }
+        }
+        let g = Arc::new(Gauge::new());
+        if Self::series_count(&entries, name) < MAX_SERIES_PER_NAME {
+            entries.push(Entry {
+                name,
+                labels: labels.iter().map(|(k, v)| (*k, v.to_string())).collect(),
+                metric: Metric::Gauge(Arc::clone(&g)),
+            });
+        }
+        g
+    }
+
+    /// Get-or-register the histogram `(name, labels)` (orphan rules as
+    /// [`Registry::counter`]).
+    pub fn histogram(&self, name: &'static str, labels: &[(&'static str, &str)]) -> Arc<Histogram> {
+        let mut entries = self.entries();
+        for e in entries.iter() {
+            if e.name == name && Self::labels_match(&e.labels, labels) {
+                if let Metric::Histogram(h) = &e.metric {
+                    return Arc::clone(h);
+                }
+                return Arc::new(Histogram::new());
+            }
+        }
+        let h = Arc::new(Histogram::new());
+        if Self::series_count(&entries, name) < MAX_SERIES_PER_NAME {
+            entries.push(Entry {
+                name,
+                labels: labels.iter().map(|(k, v)| (*k, v.to_string())).collect(),
+                metric: Metric::Histogram(Arc::clone(&h)),
+            });
+        }
+        h
+    }
+
+    /// Register a [`StaticCounter`] by reference (idempotent by pointer
+    /// identity — a benign first-use race registers it once).
+    pub fn register_static(&self, sc: &'static StaticCounter) {
+        let mut entries = self.entries();
+        let already = entries.iter().any(|e| match &e.metric {
+            Metric::CounterRef(r) => std::ptr::eq(*r, sc),
+            _ => false,
+        });
+        if !already && Self::series_count(&entries, sc.name()) < MAX_SERIES_PER_NAME {
+            entries.push(Entry { name: sc.name(), labels: Vec::new(), metric: Metric::CounterRef(sc) });
+        }
+    }
+
+    /// Number of registered series (tests / diagnostics).
+    pub fn series_len(&self) -> usize {
+        self.entries().len()
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A one-slot per-call-site cache for a labeled counter, for hot paths
+/// whose label value (codec name, graph family) is a `&str` that rarely
+/// changes. Stays on a scratch struct, so lookups hit the registry only
+/// when the label actually differs from the cached one.
+#[derive(Default)]
+pub struct LabeledCounter {
+    cached: Option<(String, Arc<Counter>)>,
+}
+
+impl LabeledCounter {
+    pub const fn new() -> Self {
+        LabeledCounter { cached: None }
+    }
+
+    /// Handle for `name{key=val}`, re-resolving only on label change.
+    #[inline]
+    pub fn get(&mut self, name: &'static str, key: &'static str, val: &str) -> &Counter {
+        let stale = match &self.cached {
+            Some((v, _)) => v != val,
+            None => true,
+        };
+        if stale {
+            self.cached = Some((val.to_string(), super::counter(name, &[(key, val)])));
+        }
+        &self.cached.as_ref().unwrap().1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_or_register_returns_same_cell() {
+        let r = Registry::new();
+        let a = r.counter("c_total", &[("k", "v")]);
+        let b = r.counter("c_total", &[("k", "v")]);
+        a.add(2);
+        b.inc();
+        assert_eq!(a.get(), 3);
+        assert_eq!(r.series_len(), 1);
+    }
+
+    #[test]
+    fn label_order_and_values_distinguish_series() {
+        let r = Registry::new();
+        let _ = r.counter("c_total", &[("a", "1"), ("b", "2")]);
+        let _ = r.counter("c_total", &[("a", "1"), ("b", "3")]);
+        let _ = r.counter("c_total", &[("a", "1")]);
+        assert_eq!(r.series_len(), 3);
+    }
+
+    #[test]
+    fn type_clash_yields_orphan_not_panic() {
+        let r = Registry::new();
+        let c = r.counter("mixed", &[]);
+        c.inc();
+        let g = r.gauge("mixed", &[]);
+        g.set(99);
+        // The counter keeps its value; the gauge is a detached orphan.
+        assert_eq!(c.get(), 1);
+        assert_eq!(r.series_len(), 1);
+    }
+
+    #[test]
+    fn cardinality_cap_stops_registration_but_not_counting() {
+        let r = Registry::new();
+        for i in 0..MAX_SERIES_PER_NAME + 10 {
+            let v = i.to_string();
+            let c = r.counter("spray_total", &[("tenant", &v)]);
+            c.inc();
+            assert_eq!(c.get(), 1, "orphan handles must still count");
+        }
+        assert_eq!(r.series_len(), MAX_SERIES_PER_NAME);
+    }
+
+    #[test]
+    fn concurrent_writers_lose_no_increments() {
+        let r = Registry::new();
+        let c = r.counter("hot_total", &[]);
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..25_000 {
+                        c.inc();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), 200_000);
+    }
+
+    #[test]
+    fn gauge_floor_and_max() {
+        let g = Gauge::new();
+        assert_eq!(g.add(3), 3);
+        g.sub_floor0(10);
+        assert_eq!(g.get(), 0, "depth gauges must not wrap negative");
+        g.max_of(7);
+        g.max_of(5);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn static_counter_registers_once() {
+        static SC: StaticCounter = StaticCounter::new("static_demo_total");
+        SC.inc();
+        SC.add(2);
+        if crate::obs::enabled() {
+            assert_eq!(SC.get(), 3);
+            // Registered exactly once on the global registry.
+            let n = crate::obs::global()
+                .entries()
+                .iter()
+                .filter(|e| e.name == "static_demo_total")
+                .count();
+            assert_eq!(n, 1);
+        } else {
+            assert_eq!(SC.get(), 0, "obs-off StaticCounter must be a no-op");
+        }
+    }
+
+    #[test]
+    fn labeled_counter_cache_follows_label_changes() {
+        let mut lc = LabeledCounter::new();
+        lc.get("cache_total", "codec", "bitpack").inc();
+        lc.get("cache_total", "codec", "bitpack").inc();
+        lc.get("cache_total", "codec", "elias-fano").inc();
+        if crate::obs::enabled() {
+            let a = crate::obs::counter("cache_total", &[("codec", "bitpack")]);
+            let b = crate::obs::counter("cache_total", &[("codec", "elias-fano")]);
+            assert_eq!(a.get(), 2);
+            assert_eq!(b.get(), 1);
+        }
+    }
+}

@@ -1,0 +1,448 @@
+//! Sampled per-query pipeline-stage tracing.
+//!
+//! A query's life is split into named stages (admission → queue wait →
+//! coarse quantize → per-list decode → ADC scan / beam search → top-k
+//! merge → reply). For a sampled subset of queries — every Nth, set by
+//! `ZANN_TRACE_SAMPLE=1/N` (or just `N`; unset/0 disables) — the worker
+//! thread accumulates per-stage nanoseconds in thread-local storage and,
+//! at reply time, publishes a [`QueryTrace`] into a bounded ring buffer
+//! and the `zann_stage_us{stage=...}` histograms. Unsampled queries pay
+//! one relaxed atomic load and one `fetch_add` on the sequence counter;
+//! with the `obs` feature off the tracer never activates at all.
+//!
+//! The whole trace is assembled on the worker thread that serves the
+//! query (the batcher hands each request to exactly one worker), so no
+//! cross-thread stitching is needed: queue wait is derived from the
+//! request's submit timestamp, and the residue between the end-to-end
+//! time and the instrumented stages is attributed to [`Stage::Other`] so
+//! the per-stage sum tracks the measured latency.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Pipeline stages, in pipeline order. `Other` absorbs un-attributed
+/// time inside the serve path so stage sums stay close to end-to-end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Admission,
+    QueueWait,
+    CoarseQuantize,
+    ListDecode,
+    AdcScan,
+    BeamSearch,
+    TopkMerge,
+    Other,
+    Reply,
+}
+
+impl Stage {
+    pub const COUNT: usize = 9;
+
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::Admission,
+        Stage::QueueWait,
+        Stage::CoarseQuantize,
+        Stage::ListDecode,
+        Stage::AdcScan,
+        Stage::BeamSearch,
+        Stage::TopkMerge,
+        Stage::Other,
+        Stage::Reply,
+    ];
+
+    #[inline]
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::QueueWait => "queue_wait",
+            Stage::CoarseQuantize => "coarse_quantize",
+            Stage::ListDecode => "list_decode",
+            Stage::AdcScan => "adc_scan",
+            Stage::BeamSearch => "beam_search",
+            Stage::TopkMerge => "topk_merge",
+            Stage::Other => "other",
+            Stage::Reply => "reply",
+        }
+    }
+}
+
+/// One sampled query's per-stage timeline.
+#[derive(Debug, Clone)]
+pub struct QueryTrace {
+    pub seq: u64,
+    pub stage_ns: [u64; Stage::COUNT],
+    pub total_ns: u64,
+}
+
+impl QueryTrace {
+    /// Sum of all attributed stage time (excludes [`Stage::Admission`],
+    /// which happens before the request's submit timestamp and so is
+    /// also excluded from `total_ns`).
+    pub fn stage_sum_ns(&self) -> u64 {
+        Stage::ALL
+            .iter()
+            .filter(|s| !matches!(s, Stage::Admission))
+            .map(|s| self.stage_ns[s.idx()])
+            .sum()
+    }
+}
+
+/// Sampling divisor. `u64::MAX` is the "env not read yet" sentinel; 0
+/// disables tracing; N means every Nth query is sampled.
+static SAMPLE: AtomicU64 = AtomicU64::new(u64::MAX);
+/// Global query sequence (advances for every query while sampling is on).
+static SEQ: AtomicU64 = AtomicU64::new(0);
+
+const RING_CAP: usize = 1024;
+
+struct RingInner {
+    buf: Vec<QueryTrace>,
+    next: usize,
+    recorded: u64,
+}
+
+static RING: Mutex<RingInner> = Mutex::new(RingInner { buf: Vec::new(), next: 0, recorded: 0 });
+
+thread_local! {
+    static ACTIVE: Cell<bool> = const { Cell::new(false) };
+    static CUR_SEQ: Cell<u64> = const { Cell::new(0) };
+    static STAGE_NS: RefCell<[u64; Stage::COUNT]> = const { RefCell::new([0; Stage::COUNT]) };
+}
+
+/// Parse a `ZANN_TRACE_SAMPLE` value: `1/N` or `N` → N; anything else
+/// (including 0 and malformed input) disables sampling.
+pub fn parse_sample(s: &str) -> u64 {
+    let s = s.trim();
+    let n = match s.split_once('/') {
+        Some((num, den)) => {
+            if num.trim() != "1" {
+                return 0;
+            }
+            den.trim().parse::<u64>().unwrap_or(0)
+        }
+        None => s.parse::<u64>().unwrap_or(0),
+    };
+    if n == u64::MAX {
+        0
+    } else {
+        n
+    }
+}
+
+fn sample_n() -> u64 {
+    let n = SAMPLE.load(Relaxed);
+    if n != u64::MAX {
+        return n;
+    }
+    let parsed = match std::env::var("ZANN_TRACE_SAMPLE") {
+        Ok(v) => parse_sample(&v),
+        Err(_) => 0,
+    };
+    SAMPLE.store(parsed, Relaxed);
+    parsed
+}
+
+/// Override the sampling divisor (0 disables). Takes precedence over the
+/// environment; used by the self-measurement bench and tests.
+pub fn set_sample(n: u64) {
+    SAMPLE.store(if n == u64::MAX { 0 } else { n }, Relaxed);
+}
+
+/// Current sampling divisor (after env resolution).
+pub fn sample() -> u64 {
+    if !super::enabled() {
+        return 0;
+    }
+    sample_n()
+}
+
+/// Begin a query on this thread. Returns true when the query is sampled;
+/// the caller must then finish with [`end_query`] or [`discard`].
+#[inline]
+pub fn begin_query() -> bool {
+    if !super::enabled() {
+        return false;
+    }
+    let n = sample_n();
+    if n == 0 {
+        return false;
+    }
+    let seq = SEQ.fetch_add(1, Relaxed);
+    if seq % n != 0 {
+        return false;
+    }
+    ACTIVE.with(|a| a.set(true));
+    CUR_SEQ.with(|c| c.set(seq));
+    STAGE_NS.with(|s| *s.borrow_mut() = [0; Stage::COUNT]);
+    true
+}
+
+/// True when the current thread is recording a sampled query.
+#[inline]
+pub fn active() -> bool {
+    super::enabled() && ACTIVE.with(|a| a.get())
+}
+
+/// Attribute `ns` nanoseconds to `stage` for the active query (no-op
+/// when not sampled).
+#[inline]
+pub fn add_ns(stage: Stage, ns: u64) {
+    if active() {
+        STAGE_NS.with(|s| s.borrow_mut()[stage.idx()] += ns);
+    }
+}
+
+/// RAII span: measures from construction to drop and attributes the
+/// elapsed time to its stage. Inert (no clock read) when not sampled.
+pub struct SpanGuard {
+    live: Option<(Stage, Instant)>,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((stage, start)) = self.live.take() {
+            add_ns(stage, start.elapsed().as_nanos() as u64);
+        }
+    }
+}
+
+/// Open a span for `stage` on the active query.
+#[inline]
+pub fn span(stage: Stage) -> SpanGuard {
+    if active() {
+        SpanGuard { live: Some((stage, Instant::now())) }
+    } else {
+        SpanGuard { live: None }
+    }
+}
+
+/// Total nanoseconds attributed so far on this thread's active query.
+pub fn thread_ns() -> u64 {
+    STAGE_NS.with(|s| s.borrow().iter().sum())
+}
+
+/// Abandon the active query without recording (panic/timeout paths).
+pub fn discard() {
+    ACTIVE.with(|a| a.set(false));
+}
+
+/// Finish the active query: attribute the unexplained remainder of
+/// `total` to [`Stage::Other`], publish the trace to the ring buffer and
+/// the per-stage histograms. No-op when this thread is not sampling.
+pub fn end_query(total: Duration) {
+    if !active() {
+        return;
+    }
+    ACTIVE.with(|a| a.set(false));
+    let total_ns = total.as_nanos() as u64;
+    let mut stage_ns = STAGE_NS.with(|s| *s.borrow());
+    let attributed: u64 =
+        Stage::ALL.iter().filter(|s| !matches!(s, Stage::Admission)).map(|s| stage_ns[s.idx()]).sum();
+    stage_ns[Stage::Other.idx()] += total_ns.saturating_sub(attributed);
+    let trace =
+        QueryTrace { seq: CUR_SEQ.with(|c| c.get()), stage_ns, total_ns: total_ns.max(attributed) };
+    for s in Stage::ALL {
+        let ns = trace.stage_ns[s.idx()];
+        if ns > 0 {
+            super::histogram("zann_stage_us", &[("stage", s.name())]).observe(ns / 1_000);
+        }
+    }
+    let mut ring = RING.lock().unwrap_or_else(|e| e.into_inner());
+    if ring.buf.len() < RING_CAP {
+        ring.buf.push(trace);
+    } else {
+        let at = ring.next;
+        ring.buf[at] = trace;
+    }
+    ring.next = (ring.next + 1) % RING_CAP;
+    ring.recorded += 1;
+}
+
+/// Total traces ever recorded (including ones evicted from the ring).
+pub fn recorded() -> u64 {
+    RING.lock().unwrap_or_else(|e| e.into_inner()).recorded
+}
+
+/// Drain the ring buffer, oldest trace first.
+pub fn take_spans() -> Vec<QueryTrace> {
+    let mut ring = RING.lock().unwrap_or_else(|e| e.into_inner());
+    let next = ring.next;
+    let full = ring.buf.len() == RING_CAP;
+    let mut buf = std::mem::take(&mut ring.buf);
+    ring.next = 0;
+    if full {
+        buf.rotate_left(next);
+    }
+    buf
+}
+
+/// Render traces as a JSON array of per-stage timelines (nanoseconds);
+/// zero-valued stages are omitted.
+pub fn spans_json(traces: &[QueryTrace]) -> String {
+    let mut out = String::from("[");
+    for (i, t) in traces.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!(
+            "{{\"seq\": {}, \"total_ns\": {}, \"stage_sum_ns\": {}, \"stages\": {{",
+            t.seq,
+            t.total_ns,
+            t.stage_sum_ns()
+        ));
+        let mut first = true;
+        for s in Stage::ALL {
+            let ns = t.stage_ns[s.idx()];
+            if ns > 0 {
+                if !first {
+                    out.push_str(", ");
+                }
+                out.push_str(&format!("\"{}\": {}", s.name(), ns));
+                first = false;
+            }
+        }
+        out.push_str("}}");
+    }
+    out.push(']');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The tracer is global state (sampling divisor, sequence, ring), and
+    // unit tests in this binary run concurrently — coordinator tests
+    // serve real queries that would be sampled too once the divisor is
+    // set. So: one combined test, marker values to recognise our own
+    // traces, and >= assertions where other tests may interleave.
+    #[test]
+    fn tracer_lifecycle_sampling_ring_and_json() {
+        // -- parse_sample contract --
+        assert_eq!(parse_sample("1/8"), 8);
+        assert_eq!(parse_sample("16"), 16);
+        assert_eq!(parse_sample(" 1 / 4 "), 4);
+        assert_eq!(parse_sample("0"), 0);
+        assert_eq!(parse_sample("1/0"), 0);
+        assert_eq!(parse_sample("2/4"), 0, "only 1/N numerators are accepted");
+        assert_eq!(parse_sample("banana"), 0);
+        assert_eq!(parse_sample(""), 0);
+
+        // -- disabled: begin_query must refuse --
+        set_sample(0);
+        assert!(!begin_query());
+        assert!(!active());
+        add_ns(Stage::AdcScan, 999); // must be a no-op
+        end_query(Duration::from_micros(5)); // must be a no-op
+
+        if !crate::obs::enabled() {
+            // obs-off: sampling can never activate, even at 1/1.
+            set_sample(1);
+            assert!(!begin_query());
+            assert_eq!(sample(), 0);
+            return;
+        }
+
+        // -- sample everything, record one marked trace --
+        set_sample(1);
+        assert_eq!(sample(), 1);
+        assert!(begin_query());
+        assert!(active());
+        const MARK: u64 = 123_456_789_321;
+        add_ns(Stage::CoarseQuantize, MARK);
+        {
+            let _g = span(Stage::AdcScan);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(thread_ns() >= MARK);
+        end_query(Duration::from_nanos(MARK + 10_000_000));
+        assert!(!active());
+
+        let spans = take_spans();
+        let mine = spans
+            .iter()
+            .find(|t| t.stage_ns[Stage::CoarseQuantize.idx()] == MARK)
+            .expect("sampled trace must reach the ring");
+        assert!(mine.stage_ns[Stage::AdcScan.idx()] > 0, "span guard must attribute time");
+        // `Other` absorbs the remainder, so the stage sum matches e2e.
+        assert_eq!(mine.stage_sum_ns(), mine.total_ns);
+        assert!(recorded() >= 1);
+
+        // -- discard drops the active query --
+        assert!(begin_query());
+        add_ns(Stage::CoarseQuantize, MARK);
+        discard();
+        end_query(Duration::from_micros(1)); // inert after discard
+        assert!(
+            !take_spans().iter().any(|t| t.stage_ns[Stage::CoarseQuantize.idx()] == MARK),
+            "discarded trace must not be recorded"
+        );
+
+        // -- 1/N sampling thins the stream --
+        set_sample(1_000_000_000);
+        let picked = (0..64).filter(|_| begin_query()).count();
+        for _ in 0..picked {
+            discard();
+        }
+        assert!(picked <= 1, "divisor 1e9 must sample at most one of 64");
+
+        // -- spans_json is well-formed and omits zero stages --
+        let t = QueryTrace {
+            seq: 7,
+            stage_ns: {
+                let mut a = [0u64; Stage::COUNT];
+                a[Stage::QueueWait.idx()] = 100;
+                a[Stage::AdcScan.idx()] = 250;
+                a
+            },
+            total_ns: 350,
+        };
+        let js = spans_json(&[t]);
+        assert!(js.contains("\"queue_wait\": 100"));
+        assert!(js.contains("\"adc_scan\": 250"));
+        assert!(!js.contains("beam_search"));
+        assert!(js.contains("\"stage_sum_ns\": 350"));
+        crate::obs::expo::check_json_shape(&js).expect("spans_json must be well-formed");
+        assert_eq!(spans_json(&[]), "[]");
+
+        // -- ring wraps at capacity, oldest evicted first --
+        for i in 0..(RING_CAP as u64 + 5) {
+            assert!(begin_query());
+            add_ns(Stage::Reply, MARK + i);
+            end_query(Duration::from_nanos(MARK + i));
+        }
+        let spans = take_spans();
+        assert!(spans.len() <= RING_CAP);
+        let ours: Vec<u64> = spans
+            .iter()
+            .map(|t| t.stage_ns[Stage::Reply.idx()])
+            .filter(|&v| v >= MARK)
+            .collect();
+        // Oldest-first order within our own traces, and the first five
+        // (evicted) markers are gone.
+        assert!(ours.windows(2).all(|w| w[0] < w[1]), "drain must be oldest-first");
+        assert!(*ours.first().unwrap() >= MARK + 5);
+
+        set_sample(0); // restore: don't perturb concurrently-running tests
+    }
+
+    #[test]
+    fn stage_names_are_unique_and_snake_case() {
+        let mut seen = std::collections::HashSet::new();
+        for s in Stage::ALL {
+            assert!(seen.insert(s.name()), "duplicate stage name {}", s.name());
+            assert!(
+                s.name().chars().all(|c| c.is_ascii_lowercase() || c == '_'),
+                "stage name {} must be snake_case",
+                s.name()
+            );
+            assert_eq!(Stage::ALL[s.idx()].name(), s.name(), "idx() must match ALL order");
+        }
+    }
+}

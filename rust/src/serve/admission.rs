@@ -12,8 +12,10 @@
 //! needs a deterministic rejection count, not a wall-clock race).
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+use crate::obs::{self, Counter};
 
 /// Budget applied to every tenant (per-tenant overrides are not needed
 /// yet — the bench and CI exercise symmetric policies with asymmetric
@@ -53,9 +55,21 @@ pub struct TenantCounters {
     pub rejected: u64,
 }
 
+struct TenantEntry {
+    bucket: Bucket,
+    counters: TenantCounters,
+    /// Registry series (`zann_tenant_{admitted,rejected}_total{tenant}`),
+    /// registered when the bucket is created. Survive bucket eviction on
+    /// the registry (monotone totals), while the bucket-local counters
+    /// reset with the bucket; the registry's own per-name cardinality cap
+    /// bounds growth under unique-name floods.
+    admitted_h: Arc<Counter>,
+    rejected_h: Arc<Counter>,
+}
+
 pub struct Admission {
     policy: TenantPolicy,
-    tenants: Mutex<HashMap<String, (Bucket, TenantCounters)>>,
+    tenants: Mutex<HashMap<String, TenantEntry>>,
 }
 
 impl Admission {
@@ -75,29 +89,37 @@ impl Admission {
         if map.len() >= MAX_TENANTS && !map.contains_key(tenant) {
             let burst = self.policy.burst as f64;
             let rate = self.policy.rate;
-            map.retain(|_, (b, _)| {
-                b.tokens + now.saturating_duration_since(b.last).as_secs_f64() * rate < burst
+            map.retain(|_, e| {
+                e.bucket.tokens
+                    + now.saturating_duration_since(e.bucket.last).as_secs_f64() * rate
+                    < burst
             });
             if map.len() >= MAX_TENANTS {
                 if let Some(lru) =
-                    map.iter().min_by_key(|(_, (b, _))| b.last).map(|(t, _)| t.clone())
+                    map.iter().min_by_key(|(_, e)| e.bucket.last).map(|(t, _)| t.clone())
                 {
                     map.remove(&lru);
                 }
             }
         }
-        let (bucket, counters) = map.entry(tenant.to_string()).or_insert_with(|| {
-            (Bucket { tokens: self.policy.burst as f64, last: now }, TenantCounters::default())
+        let entry = map.entry(tenant.to_string()).or_insert_with(|| TenantEntry {
+            bucket: Bucket { tokens: self.policy.burst as f64, last: now },
+            counters: TenantCounters::default(),
+            admitted_h: obs::counter("zann_tenant_admitted_total", &[("tenant", tenant)]),
+            rejected_h: obs::counter("zann_tenant_rejected_total", &[("tenant", tenant)]),
         });
+        let bucket = &mut entry.bucket;
         let dt = now.saturating_duration_since(bucket.last).as_secs_f64();
         bucket.last = now;
         bucket.tokens = (bucket.tokens + dt * self.policy.rate).min(self.policy.burst as f64);
         if bucket.tokens >= 1.0 {
             bucket.tokens -= 1.0;
-            counters.admitted += 1;
+            entry.counters.admitted += 1;
+            entry.admitted_h.inc();
             true
         } else {
-            counters.rejected += 1;
+            entry.counters.rejected += 1;
+            entry.rejected_h.inc();
             false
         }
     }
@@ -105,7 +127,7 @@ impl Admission {
     /// Counters for one tenant (zeros if it never sent a request).
     pub fn counters(&self, tenant: &str) -> TenantCounters {
         let map = self.tenants.lock().unwrap_or_else(|e| e.into_inner());
-        map.get(tenant).map(|(_, c)| *c).unwrap_or_default()
+        map.get(tenant).map(|e| e.counters).unwrap_or_default()
     }
 
     /// All tenants with their counters, sorted by tenant name so output
@@ -113,7 +135,7 @@ impl Admission {
     pub fn all_counters(&self) -> Vec<(String, TenantCounters)> {
         let map = self.tenants.lock().unwrap_or_else(|e| e.into_inner());
         let mut v: Vec<(String, TenantCounters)> =
-            map.iter().map(|(t, (_, c))| (t.clone(), *c)).collect();
+            map.iter().map(|(t, e)| (t.clone(), e.counters)).collect();
         v.sort_by(|a, b| a.0.cmp(&b.0));
         v
     }
@@ -200,6 +222,21 @@ mod tests {
             assert!(a.try_admit(&format!("u{i}")), "fresh bucket admits");
         }
         assert!(a.all_counters().len() <= MAX_TENANTS);
+    }
+
+    #[test]
+    fn tenant_counters_are_mirrored_on_the_registry() {
+        let a = Admission::new(TenantPolicy { burst: 1, rate: 0.0 });
+        assert!(a.try_admit("mirror-tenant"));
+        assert!(!a.try_admit("mirror-tenant"));
+        if crate::obs::enabled() {
+            let adm =
+                crate::obs::counter("zann_tenant_admitted_total", &[("tenant", "mirror-tenant")]);
+            let rej =
+                crate::obs::counter("zann_tenant_rejected_total", &[("tenant", "mirror-tenant")]);
+            assert!(adm.get() >= 1, "admitted must reach the registry");
+            assert!(rej.get() >= 1, "rejected must reach the registry");
+        }
     }
 
     #[test]

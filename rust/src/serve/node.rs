@@ -159,6 +159,10 @@ struct ShardSlot {
     /// read-only shards (static builds, restored snapshots without a
     /// fresh writer).
     writer: RwLock<Option<Arc<DynamicHandle>>>,
+    /// Registry series `zann_shard_queries_total{shard}` /
+    /// `zann_shard_swaps_total{shard}` (cached handles).
+    queries_h: Arc<crate::obs::Counter>,
+    swaps_h: Arc<crate::obs::Counter>,
 }
 
 pub struct ServeNode {
@@ -167,6 +171,10 @@ pub struct ServeNode {
     slots: Vec<ShardSlot>,
     policy: DegradePolicy,
     admission: Option<Admission>,
+    /// `zann_stage_us{stage="admission"}` — admission happens on the
+    /// client thread before submit, so it is recorded here as an
+    /// aggregate histogram rather than inside the per-query trace.
+    admission_us: Arc<crate::obs::Histogram>,
     /// Next global external id handed to ingest.
     next_id: AtomicU32,
     search: QueryParams,
@@ -236,11 +244,15 @@ impl ServeNode {
                     None,
                     clone_serve_config(&cfg.serve),
                 );
+                let shard_label = s.to_string();
+                let l: [(&'static str, &str); 1] = [("shard", &shard_label)];
                 ShardSlot {
                     epoch,
                     coord,
                     id_map: RwLock::new(map),
                     writer: RwLock::new(writers[s].take()),
+                    queries_h: crate::obs::counter("zann_shard_queries_total", &l),
+                    swaps_h: crate::obs::counter("zann_shard_swaps_total", &l),
                 }
             })
             .collect();
@@ -250,6 +262,7 @@ impl ServeNode {
             slots,
             policy: cfg.policy,
             admission: cfg.tenants.map(Admission::new),
+            admission_us: crate::obs::histogram("zann_stage_us", &[("stage", "admission")]),
             next_id: AtomicU32::new(next_id),
             search: cfg.serve.search,
         })
@@ -277,7 +290,12 @@ impl ServeNode {
     /// scatter-gather.
     pub fn search(&self, tenant: &str, query: &[f32]) -> Result<NodeResponse> {
         if let Some(adm) = &self.admission {
-            if !adm.try_admit(tenant) {
+            let t0 = Instant::now();
+            let admitted = adm.try_admit(tenant);
+            if crate::obs::enabled() {
+                self.admission_us.observe(t0.elapsed().as_micros() as u64);
+            }
+            if !admitted {
                 return Ok(NodeResponse {
                     results: Vec::new(),
                     status: ResponseStatus::Overloaded,
@@ -296,6 +314,9 @@ impl ServeNode {
         // Submit to every shard before awaiting any reply.
         let mut pending = Vec::with_capacity(self.slots.len());
         for slot in &self.slots {
+            if crate::obs::enabled() {
+                slot.queries_h.inc();
+            }
             pending.push(slot.coord.client.submit(query.to_vec())?);
         }
         let mut worst = ResponseStatus::Ok;
@@ -412,6 +433,9 @@ impl ServeNode {
         *slot.writer.write().unwrap_or_else(|e| e.into_inner()) = writer;
         *map = id_map;
         slot.epoch.store(new);
+        if crate::obs::enabled() {
+            slot.swaps_h.inc();
+        }
         Ok(())
     }
 

@@ -1,0 +1,170 @@
+//! Observability acceptance: the exposition layer's contracts exercised
+//! through the public API, and the pipeline-stage tracer driven by a
+//! real coordinator serving real queries.
+//!
+//! (Integration test on purpose: the tracer's sampling knob and ring
+//! buffer are process-globals. The lib tests exercise their lifecycle in
+//! one combined test; this binary is the only place that turns sampling
+//! on while a coordinator is live, so the two can never interleave.)
+
+use std::sync::Arc;
+use zann::api::QueryParams;
+use zann::coordinator::{Coordinator, ServeConfig};
+use zann::datasets::{generate, Kind};
+use zann::index::{IvfBuildParams, IvfIndex};
+use zann::obs::expo::check_json_shape;
+use zann::obs::trace;
+
+/// Serve a batch with sampling at 1/1 and require every reply to leave a
+/// complete stage timeline behind: spans recorded, each span's stage sum
+/// equal to its end-to-end total (the residual stage guarantees it), and
+/// the JSON dump well-formed.
+#[test]
+fn serving_under_full_sampling_records_complete_stage_timelines() {
+    let ds = generate(Kind::DeepLike, 2_000, 64, 16, 7);
+    let idx = Arc::new(IvfIndex::build(
+        &ds.data,
+        ds.dim,
+        &IvfBuildParams { k: 32, seed: 7, ..Default::default() },
+    ));
+    let coord = Coordinator::start(
+        idx,
+        None,
+        ServeConfig {
+            batch_size: 16,
+            search: QueryParams { k: 5, nprobe: 4, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    trace::set_sample(1);
+    let queries: Vec<Vec<f32>> = (0..ds.nq).map(|qi| ds.query(qi).to_vec()).collect();
+    let responses = coord.client.search_many(queries).unwrap();
+    trace::set_sample(0);
+    coord.stop();
+    assert_eq!(responses.len(), 64);
+    let spans = trace::take_spans();
+    if !zann::obs::enabled() {
+        assert!(spans.is_empty(), "obs off: the tracer must never fire");
+        return;
+    }
+    assert!(!spans.is_empty(), "sampling 1/1 over 64 queries must record spans");
+    for t in &spans {
+        assert!(t.total_ns > 0, "a served query takes nonzero time");
+        // The residual stage absorbs whatever the explicit spans missed,
+        // so the timeline always accounts for the full e2e latency
+        // (the acceptance bound is ±10%; construction gives equality).
+        assert_eq!(
+            t.stage_sum_ns(),
+            t.total_ns,
+            "stage timeline must account for the end-to-end total"
+        );
+    }
+    let json = trace::spans_json(&spans);
+    check_json_shape(&json).expect("span dump must be well-formed JSON");
+    assert!(json.contains("\"total_ns\""), "{json}");
+    // Serving through the coordinator also feeds the aggregate stage
+    // histograms used by the Prometheus view.
+    let prom = zann::obs::global().render_prometheus();
+    assert!(prom.contains("zann_stage_us"), "stage histograms must be exposed:\n{prom}");
+}
+
+/// Counter increments from many threads must all land in one series and
+/// read back exactly from both renderings — the lock-free registry's
+/// consistency contract at the exposition boundary.
+#[test]
+fn concurrent_writers_read_back_exactly_in_both_renderings() {
+    if !zann::obs::enabled() {
+        return;
+    }
+    let threads = 8;
+    let per = 10_000u64;
+    let hs: Vec<_> = (0..threads)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let c = zann::obs::counter("obs_expo_test_concurrent_total", &[]);
+                for _ in 0..per {
+                    c.inc();
+                }
+            })
+        })
+        .collect();
+    for h in hs {
+        h.join().unwrap();
+    }
+    let want = threads as u64 * per;
+    let prom = zann::obs::global().render_prometheus();
+    assert!(
+        prom.contains(&format!("obs_expo_test_concurrent_total {want}")),
+        "all {want} increments must be visible:\n{prom}"
+    );
+    let json = zann::obs::global().render_json();
+    check_json_shape(&json).expect("render_json must be well-formed");
+    assert!(json.contains(&format!("\"value\": {want}")), "{json}");
+}
+
+/// Histogram bucket boundaries as seen through the exposition: a value
+/// of 100 lands in the `le="127"` bucket, and the cumulative counts are
+/// monotone up to the explicit `+Inf`.
+#[test]
+fn histogram_buckets_expose_log2_boundaries() {
+    if !zann::obs::enabled() {
+        return;
+    }
+    let h = zann::obs::histogram("obs_expo_test_us", &[]);
+    for v in [0u64, 1, 100, 1 << 20] {
+        h.observe(v);
+    }
+    let prom = zann::obs::global().render_prometheus();
+    let lines: Vec<&str> =
+        prom.lines().filter(|l| l.starts_with("obs_expo_test_us_bucket")).collect();
+    assert!(
+        lines.iter().any(|l| l.contains("le=\"127\"")),
+        "100 must occupy the le=127 bucket:\n{prom}"
+    );
+    assert!(
+        lines.last().unwrap().contains("le=\"+Inf\"") && lines.last().unwrap().ends_with(" 4"),
+        "+Inf must close the series at the total count:\n{prom}"
+    );
+    let mut last = 0u64;
+    for l in &lines {
+        let v: u64 = l.rsplit(' ').next().unwrap().parse().unwrap();
+        assert!(v >= last, "cumulative buckets must be monotone:\n{prom}");
+        last = v;
+    }
+    assert!(prom.contains("obs_expo_test_us_count 4"), "{prom}");
+}
+
+/// Label values holding quotes, backslashes, and newlines must be
+/// escaped in the text format and survive the JSON rendering.
+#[test]
+fn hostile_label_values_are_escaped_in_both_renderings() {
+    if !zann::obs::enabled() {
+        return;
+    }
+    let c = zann::obs::counter("obs_expo_test_escaping_total", &[("tenant", "a\"b\\c\nd")]);
+    c.inc();
+    let prom = zann::obs::global().render_prometheus();
+    assert!(
+        prom.contains(r#"tenant="a\"b\\c\nd""#),
+        "text format must escape quote/backslash/newline:\n{prom}"
+    );
+    let json = zann::obs::global().render_json();
+    check_json_shape(&json).expect("hostile labels must not break the JSON rendering");
+}
+
+/// With the feature compiled out, the whole subsystem must vanish: no
+/// sampling, no spans, no series — and the helpers still hand back
+/// functional (orphan) handles so call sites need no cfg.
+#[cfg(not(feature = "obs"))]
+#[test]
+fn obs_off_is_inert_but_callable() {
+    assert!(!zann::obs::enabled());
+    trace::set_sample(1);
+    assert!(!trace::begin_query(), "sampling must never activate");
+    trace::set_sample(0);
+    let c = zann::obs::counter("obs_off_test_total", &[]);
+    c.inc();
+    assert_eq!(c.get(), 1, "orphan handles still count locally");
+    let prom = zann::obs::global().render_prometheus();
+    assert!(!prom.contains("obs_off_test_total"), "nothing registers when obs is off");
+}
