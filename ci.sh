@@ -183,6 +183,63 @@ grep -Eq "timeouts=[1-9]" "$CHAOS_DIR/deadline.log" \
   || { echo "tiny deadline produced no Timeout responses"; exit 1; }
 rm -rf "$CHAOS_DIR"
 
+echo "== durability: crash matrix + kill -9 mid-build proof + durable-dir info =="
+# (a) The crash-injection matrix (docs/DURABILITY.md): >=200 injections
+# across WAL ingest, checkpoints, node-dir shard swaps, torn WAL tails,
+# boundary-torn containers and real kill -9 child processes. Every
+# acknowledged write must recover bit-identically (lost_ack=0), no torn
+# container may open (torn_open=0), and every directory must reopen.
+CRASH_DIR="$(mktemp -d /tmp/zann_crash.XXXXXX)"
+cargo run --release --bin zann -- inject-crashes | tee "$CRASH_DIR/crash.log"
+grep -q "verdict=PASS" "$CRASH_DIR/crash.log"
+grep -Eq "injections=([2-9][0-9][0-9]|[0-9]{4,}) " "$CRASH_DIR/crash.log" \
+  || { echo "crash matrix ran fewer than 200 injections"; exit 1; }
+grep -q "lost_ack=0 " "$CRASH_DIR/crash.log"
+grep -q "torn_open=0 " "$CRASH_DIR/crash.log"
+grep -q "no_recover=0 " "$CRASH_DIR/crash.log"
+# (b) Shell-level atomic-commit proof: kill -9 a real `zann build` over
+# an existing index at random moments; the destination must keep opening
+# cleanly (complete old or complete new bytes, never torn). The binary is
+# spawned directly — killing a `cargo run` wrapper would orphan the child.
+ZANN_BIN=target/release/zann
+cargo run --release --bin zann -- build --out "$CRASH_DIR/victim.zann" \
+  --backend ivf --codec roc --n 1000 --dim 8 --k 8
+for DELAY in 0.02 0.05 0.09; do
+  "$ZANN_BIN" build --out "$CRASH_DIR/victim.zann" \
+    --backend ivf --codec roc --n 60000 --dim 16 --k 64 >/dev/null 2>&1 &
+  BUILD_PID=$!
+  sleep "$DELAY"
+  kill -9 "$BUILD_PID" 2>/dev/null || true
+  wait "$BUILD_PID" 2>/dev/null || true
+  "$ZANN_BIN" info "$CRASH_DIR/victim.zann" >/dev/null \
+    || { echo "kill -9 mid-build tore the destination container"; exit 1; }
+done
+echo "atomic commit survives kill -9 mid-build"
+# (c) `zann info` on a WAL-bearing durable directory reports the WAL and
+# the pending (unreplayed-into-a-checkpoint) rows through the manifest.
+# crash-victim seeds the directory, then ingests 24 acked batches of 8
+# rows with checkpoints disabled, so all 192 rows are pending in the WAL.
+"$ZANN_BIN" crash-victim "$CRASH_DIR/store" --seed 5 --rows 8 --batches 24 \
+  --checkpoint-every 0 > /dev/null
+"$ZANN_BIN" info "$CRASH_DIR/store" | tee "$CRASH_DIR/store_info.txt"
+grep -q "durable kind=dynamic generation=0" "$CRASH_DIR/store_info.txt"
+grep -Eq "wal_bytes=[1-9][0-9]*" "$CRASH_DIR/store_info.txt"
+grep -q "pending_records=24 pending_rows=192 pending_deletes=0 torn_bytes=0" \
+  "$CRASH_DIR/store_info.txt"
+"$ZANN_BIN" info "$CRASH_DIR/store" --json > "$CRASH_DIR/store_info.json"
+python3 - "$CRASH_DIR/store_info.json" <<'EOF'
+import json, sys
+d = json.load(open(sys.argv[1]))
+dur = d["durable"]
+assert dur["kind"] == "dynamic" and dur["generation"] == 0, dur
+assert dur["pending_records"] == 24 and dur["pending_rows"] == 192, dur
+assert dur["wal_bytes"] > 8 and dur["torn_bytes"] == 0, dur
+assert d["stats"]["kind"] == "dynamic-ivf", d["stats"]
+print(f"durable info ok: wal_bytes={dur['wal_bytes']}, "
+      f"{dur['pending_rows']} pending rows")
+EOF
+rm -rf "$CRASH_DIR"
+
 echo "== dynamic IVF smoke: build -> add -> delete -> compact -> parity =="
 # Drive the mutable index through the CLI and assert (a) search recall
 # parity: after churn + compaction, results are identical to a

@@ -157,6 +157,7 @@ impl GraphIndex {
         goff.put_u64s(blobs.offsets());
         persist::push_section(&mut file, b"GOFF", &goff.bytes);
         persist::push_section(&mut file, b"GBLB", blobs.payload());
+        persist::finish_container(&mut file);
         Ok(file)
     }
 

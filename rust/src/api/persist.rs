@@ -3,18 +3,24 @@
 //!
 //! ```text
 //! byte 0..4   magic  b"ZANN"
-//! byte 4..6   format version (u16 LE, currently 2)
+//! byte 4..6   format version (u16 LE, currently 3)
 //! byte 6      index kind (1 = IVF, 2 = graph, 3 = dynamic IVF, 4 = sharded)
 //! byte 7      reserved (0)
 //! then until EOF, sections:
 //!   v1: [tag: 4 ascii bytes] [payload length: u64 LE] [payload]
-//!   v2: [tag: 4 ascii bytes] [payload length: u64 LE] [payload] [CRC-32C: u32 LE]
+//!   v2+: [tag: 4 ascii bytes] [payload length: u64 LE] [payload] [CRC-32C: u32 LE]
+//! v3 only: the final section is the terminator ZEND, whose 8-byte payload
+//!   is the u64 LE length of everything before it (see [`finish_container`]).
 //! ```
 //!
 //! The v2 trailer is the CRC-32C of `tag ‖ payload`, verified during
 //! [`Container::parse`] — a bit flip anywhere in a section (including its
 //! tag, so swapping tags between two sections is also caught) fails the
 //! open with a structured checksum error instead of reaching a decoder.
+//! The v3 terminator closes the one hole section CRCs leave: a file
+//! truncated exactly at a section boundary. [`Container::parse`] checks the
+//! declared length against the physical length *before* slicing any section
+//! and reports a structured [`TruncatedContainer`] error on mismatch.
 //! Version-1 files (written before the checksum existed) still open; they
 //! carry no per-section CRC, are reported `checksummed=false` in
 //! [`crate::api::IndexStats`], and get a one-time deep decode validation
@@ -42,11 +48,20 @@ use std::path::Path;
 
 /// File magic.
 pub const MAGIC: [u8; 4] = *b"ZANN";
-/// Container format version this build writes (per-section CRC-32C).
-pub const VERSION: u16 = 2;
+/// Container format version this build writes (v2 added per-section
+/// CRC-32C; v3 added the mandatory `ZEND` length terminator).
+pub const VERSION: u16 = 3;
 /// Oldest container format version this build still reads (v1: no
-/// per-section checksums).
+/// per-section checksums, v2: no terminator).
 pub const MIN_VERSION: u16 = 1;
+/// Tag of the v3 terminator section. Its 8-byte payload is the u64 LE byte
+/// length of everything before the terminator, so a file truncated at a
+/// section boundary — which parses as perfectly valid v2 framing — is
+/// detected *before* any section is sliced.
+pub const TERMINATOR: [u8; 4] = *b"ZEND";
+/// Total on-disk size of the terminator section: tag (4) + length field (8)
+/// + payload (8) + CRC trailer (4).
+pub const TERMINATOR_BYTES: u64 = 24;
 /// Kind tag: IVF index.
 pub const KIND_IVF: u8 = 1;
 /// Kind tag: graph index (NSG/HNSW; family is in the HEAD section).
@@ -85,8 +100,59 @@ pub fn push_section(out: &mut Vec<u8>, tag: &[u8; 4], payload: &[u8]) {
     out.extend_from_slice(&h.finalize().to_le_bytes());
 }
 
+/// Finish a v3 container: append the `ZEND` terminator section recording
+/// the byte length of everything before it. Every writer must call this
+/// exactly once, after its last real section.
+pub fn finish_container(out: &mut Vec<u8>) {
+    let content_len = out.len() as u64;
+    push_section(out, &TERMINATOR, &content_len.to_le_bytes());
+}
+
 fn tag_str(tag: &[u8; 4]) -> String {
     String::from_utf8_lossy(tag).into_owned()
+}
+
+/// Structured error for a container whose physical file length disagrees
+/// with its declared length — the signature of a file truncated (or
+/// extended) at a section boundary, where per-section CRCs alone cannot
+/// tell. Raised by [`Container::parse`] for v3 files *before* any section
+/// is sliced.
+///
+/// Note: the vendored `anyhow` shim flattens error types into strings, so
+/// downstream code matches this via [`is_truncated`] rather than downcast.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TruncatedContainer {
+    /// Expected total file length, when the terminator was readable.
+    pub expected: Option<u64>,
+    /// Actual file length.
+    pub actual: u64,
+}
+
+impl std::fmt::Display for TruncatedContainer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.expected {
+            Some(e) => write!(
+                f,
+                "TruncatedContainer: file is {} bytes but the section table \
+                 declares {e} — truncated or torn at a section boundary",
+                self.actual
+            ),
+            None => write!(
+                f,
+                "TruncatedContainer: file is {} bytes and does not end in a \
+                 valid ZEND terminator",
+                self.actual
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TruncatedContainer {}
+
+/// Whether `err`'s chain reports a [`TruncatedContainer`] (string match —
+/// see the note on the struct).
+pub fn is_truncated(err: &anyhow::Error) -> bool {
+    err.chain().any(|c| c.contains("TruncatedContainer"))
 }
 
 /// A parsed container: kind byte + format version + tagged sections, each
@@ -125,6 +191,31 @@ impl Container {
              (this build reads versions {MIN_VERSION}..={VERSION})"
         );
         let trailer: u64 = if version >= 2 { 4 } else { 0 };
+        // v3: verify the terminator *before* slicing any section. A file cut
+        // exactly at a section boundary has flawless v2 framing (every CRC
+        // present passes), so physical length must be checked against the
+        // declared length first.
+        if version >= 3 {
+            let actual = s.len() as u64;
+            if actual < 8 + TERMINATOR_BYTES {
+                return Err(TruncatedContainer { expected: None, actual }.into());
+            }
+            let term_at = s.len() - TERMINATOR_BYTES as usize;
+            let tag: [u8; 4] = s[term_at..term_at + 4].try_into().unwrap();
+            let len = u64::from_le_bytes(s[term_at + 4..term_at + 12].try_into().unwrap());
+            if tag != TERMINATOR || len != 8 {
+                return Err(TruncatedContainer { expected: None, actual }.into());
+            }
+            let declared =
+                u64::from_le_bytes(s[term_at + 12..term_at + 20].try_into().unwrap());
+            if declared != term_at as u64 {
+                return Err(TruncatedContainer {
+                    expected: Some(declared + TERMINATOR_BYTES),
+                    actual,
+                }
+                .into());
+            }
+        }
         let kind = s[6];
         let mut sections = Vec::new();
         let mut pos = 8usize;
@@ -214,9 +305,14 @@ pub fn unpack_codes(bytes: &[u8], width: u32, count: usize) -> Result<Vec<u16>> 
 /// Serialize `index` and write it to `path`; returns bytes written.
 /// Generic over `?Sized` so the [`AnnIndex::save`] default method works
 /// for concrete backends and `dyn AnnIndex` alike.
+///
+/// The write is atomic (temp file → fsync → rename → fsync dir, via
+/// [`crate::durable::atomic::commit_bytes`]): a crash mid-save leaves the
+/// previous file intact, never a torn container.
 pub fn save<T: AnnIndex + ?Sized>(index: &T, path: &Path) -> Result<u64> {
     let bytes = index.to_bytes()?;
-    std::fs::write(path, &bytes).with_context(|| format!("writing {}", path.display()))?;
+    crate::durable::atomic::commit_bytes(path, &bytes)
+        .with_context(|| format!("writing {}", path.display()))?;
     Ok(bytes.len() as u64)
 }
 
@@ -305,6 +401,7 @@ mod tests {
         push_section(&mut f, b"AAAA", b"hello");
         push_section(&mut f, b"BBBB", b"");
         push_section(&mut f, b"CCCC", &[1, 2, 3]);
+        finish_container(&mut f);
         let c = Container::parse(&Bytes::from_vec(f)).unwrap();
         assert_eq!(c.kind, KIND_IVF);
         assert_eq!(c.section(b"AAAA").unwrap().as_slice(), b"hello");
@@ -318,6 +415,7 @@ mod tests {
     fn framing_corruption_is_an_error_not_a_panic() {
         let mut good = file_header(KIND_GRAPH);
         push_section(&mut good, b"HEAD", &[7; 40]);
+        finish_container(&mut good);
 
         // Bad magic.
         let mut bad = good.clone();
@@ -328,12 +426,15 @@ mod tests {
         bad[4] = 99;
         let err = Container::parse(&Bytes::from_vec(bad)).unwrap_err();
         assert!(format!("{err}").contains("version"), "{err}");
-        // Truncations at every prefix length must error (or parse to a
-        // container whose sections are intact prefixes — never panic).
+        // v3: truncation at *every* prefix length — including exact section
+        // boundaries, which v2 framing alone cannot see — must error.
         for cut in 0..good.len() {
-            let _ = Container::parse(&Bytes::from_vec(good[..cut].to_vec()));
+            assert!(
+                Container::parse(&Bytes::from_vec(good[..cut].to_vec())).is_err(),
+                "truncation at byte {cut} of {} went undetected",
+                good.len()
+            );
         }
-        assert!(Container::parse(&Bytes::from_vec(good[..good.len() - 1].to_vec())).is_err());
         // Section length pointing past EOF.
         let mut bad = good.clone();
         let len_at = 8 + 4;
@@ -361,6 +462,7 @@ mod tests {
         let mut f = file_header(KIND_IVF);
         push_section(&mut f, b"AAAA", &[0x11; 24]);
         push_section(&mut f, b"BBBB", &[0x22; 9]);
+        finish_container(&mut f);
         assert!(Container::parse(&Bytes::from_vec(f.clone())).is_ok());
         // Every byte past the 8-byte header participates in a section's
         // tag, length, payload or CRC — flipping any one must fail parse.
@@ -382,6 +484,7 @@ mod tests {
         let mut f = file_header(KIND_IVF);
         push_section(&mut f, b"AAAA", &[0x11; 16]);
         push_section(&mut f, b"BBBB", &[0x22; 16]);
+        finish_container(&mut f);
         let first_tag = 8;
         let second_tag = 8 + 12 + 16 + 4;
         let mut bad = f.clone();
@@ -402,6 +505,7 @@ mod tests {
         let c2 = {
             let mut f2 = file_header(KIND_IVF);
             push_section(&mut f2, b"AAAA", b"hello");
+            finish_container(&mut f2);
             Container::parse(&Bytes::from_vec(f2)).unwrap()
         };
         assert_eq!(c2.version, VERSION);
@@ -410,6 +514,39 @@ mod tests {
         let mut relabeled = f;
         relabeled[4] = 2;
         assert!(Container::parse(&Bytes::from_vec(relabeled)).is_err());
+    }
+
+    #[test]
+    fn boundary_truncation_yields_structured_truncated_error() {
+        let mut f = file_header(KIND_IVF);
+        push_section(&mut f, b"AAAA", &[0x11; 24]);
+        push_section(&mut f, b"BBBB", &[0x22; 16]);
+        finish_container(&mut f);
+        let full = f.len();
+
+        // Cut exactly at each section boundary: flawless v2 framing, but the
+        // terminator is gone (or mis-placed) — must be TruncatedContainer.
+        for boundary in [8, 8 + 12 + 24 + 4, 8 + 12 + 24 + 4 + 12 + 16 + 4] {
+            let err =
+                Container::parse(&Bytes::from_vec(f[..boundary].to_vec())).unwrap_err();
+            assert!(is_truncated(&err), "boundary cut at {boundary}: {err}");
+        }
+        // Cut inside the terminator's declared-length payload: readable tag,
+        // but short — still structured.
+        let err = Container::parse(&Bytes::from_vec(f[..full - 4].to_vec())).unwrap_err();
+        assert!(is_truncated(&err), "{err}");
+        // Appending trailing garbage shifts the terminator off EOF.
+        let mut longer = f.clone();
+        longer.extend_from_slice(&[0u8; 9]);
+        let err = Container::parse(&Bytes::from_vec(longer)).unwrap_err();
+        assert!(is_truncated(&err), "{err}");
+        // A checksum failure is NOT classified as truncation.
+        let mut flipped = f.clone();
+        flipped[20] ^= 0x40;
+        let err = Container::parse(&Bytes::from_vec(flipped)).unwrap_err();
+        assert!(!is_truncated(&err), "{err}");
+        // And the intact file still opens.
+        assert!(Container::parse(&Bytes::from_vec(f)).is_ok());
     }
 
     #[test]

@@ -1,0 +1,140 @@
+//! Atomic file commits: temp file → fsync → rename → fsync directory.
+//!
+//! [`commit_bytes`] is the single write primitive every container writer
+//! routes through (`persist::save`, CLI `build`, dynamic checkpoints, node
+//! shard swaps, manifest flips). The sequence guarantees that after a crash
+//! at *any* instruction the destination path holds either the complete old
+//! bytes or the complete new bytes:
+//!
+//! 1. write the payload to a sibling temp file (`.{name}.tmp-{pid}-{seq}`),
+//! 2. `fsync` the temp file so the payload is on disk before it is visible,
+//! 3. `rename` it over the destination (atomic on POSIX),
+//! 4. `fsync` the parent directory so the rename itself is durable.
+//!
+//! On error (including an injected crash) the temp file is deliberately left
+//! behind: cleaning it up would make the error path's on-disk state differ
+//! from a real kill at the same point, which is exactly what the crash
+//! harness verifies. Manifest-driven readers never look at temp names, and
+//! the next successful commit of the same path reuses a fresh temp name.
+
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+use super::crash;
+
+/// Monotonic suffix so concurrent commits to the same path never collide.
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// `fsync` a directory so a rename or create inside it is durable. On
+/// platforms where directories cannot be fsynced the error is surfaced —
+/// callers rely on this for their durability contract.
+pub fn fsync_dir(dir: &Path) -> Result<()> {
+    let d = File::open(dir).with_context(|| format!("open dir {} for fsync", dir.display()))?;
+    d.sync_all()
+        .with_context(|| format!("fsync dir {}", dir.display()))?;
+    Ok(())
+}
+
+/// Atomically replace `path` with `bytes` (see module docs for the exact
+/// syscall discipline). After `Ok(())` the new contents are durable; after
+/// `Err` the destination still holds its previous contents (or still does
+/// not exist), never a torn mix.
+pub fn commit_bytes(path: &Path, bytes: &[u8]) -> Result<()> {
+    let dir = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .context("commit_bytes: path has no utf-8 file name")?;
+    let seq = TEMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp = dir.join(format!(".{name}.tmp-{}-{seq}", std::process::id()));
+
+    let mut f =
+        File::create(&tmp).with_context(|| format!("create temp file {}", tmp.display()))?;
+    // Simulated torn write: persist a prefix of the payload, then "die".
+    // The destination is untouched, so recovery must still see old bytes.
+    if let Err(e) = crash::point("commit.write") {
+        let _ = f.write_all(&bytes[..bytes.len() / 3]);
+        let _ = f.sync_all();
+        return Err(e.into());
+    }
+    f.write_all(bytes)
+        .with_context(|| format!("write temp file {}", tmp.display()))?;
+    crash::point("commit.fsync_file")?;
+    f.sync_all()
+        .with_context(|| format!("fsync temp file {}", tmp.display()))?;
+    drop(f);
+
+    crash::point("commit.rename")?;
+    fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+    crash::point("commit.fsync_dir")?;
+    fsync_dir(&dir)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("zann-atomic-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn commit_replaces_contents_atomically() {
+        let d = tdir("basic");
+        let p = d.join("file.bin");
+        commit_bytes(&p, b"one").unwrap();
+        assert_eq!(fs::read(&p).unwrap(), b"one");
+        commit_bytes(&p, b"two-longer").unwrap();
+        assert_eq!(fs::read(&p).unwrap(), b"two-longer");
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn crash_at_every_point_leaves_old_bytes_intact() {
+        let d = tdir("crash");
+        let p = d.join("file.bin");
+        commit_bytes(&p, b"original contents").unwrap();
+
+        for nth in 0.. {
+            crash::arm(nth);
+            let res = commit_bytes(&p, b"replacement payload, longer than before");
+            let site = crash::disarm();
+            match site {
+                Some(site) => {
+                    assert!(res.is_err());
+                    // The destination must hold a *complete* generation: the
+                    // old bytes before the rename boundary, the new bytes
+                    // after it — never a torn mix.
+                    let now = fs::read(&p).unwrap();
+                    if site == "commit.fsync_dir" {
+                        assert_eq!(now, b"replacement payload, longer than before");
+                    } else {
+                        assert_eq!(
+                            now, b"original contents",
+                            "torn commit visible after crash at point #{nth} ({site})"
+                        );
+                    }
+                }
+                None => {
+                    // Countdown outlived the commit: it completed untouched.
+                    res.unwrap();
+                    assert_eq!(fs::read(&p).unwrap(), b"replacement payload, longer than before");
+                    break;
+                }
+            }
+        }
+        let _ = fs::remove_dir_all(&d);
+    }
+}

@@ -1,0 +1,115 @@
+//! Deterministic crash points for the injection harness.
+//!
+//! Durable I/O code calls [`point("site")`](point) at every boundary where a
+//! real crash could interleave with the filesystem (before a write, between
+//! write and fsync, between rename and directory fsync, ...). In production
+//! the call is a branch on a thread-local that is always `None` — effectively
+//! free. Under the harness, [`arm(n)`] schedules the n-th subsequent point on
+//! *this thread* to fail with [`InjectedCrash`]; the caller then abandons the
+//! store exactly as a killed process would, and the harness reopens the
+//! directory to check recovery.
+//!
+//! The countdown is thread-local (not global) so parallel `cargo test`
+//! threads cannot trip each other's injections. All durable I/O runs on the
+//! calling thread, so the thread-local scope is exactly the store's scope.
+
+use std::cell::Cell;
+use std::fmt;
+
+thread_local! {
+    /// Remaining points before the armed crash fires; `None` = disarmed.
+    static COUNTDOWN: Cell<Option<u64>> = const { Cell::new(None) };
+    /// Site label of the point that fired since the last `arm`/`disarm`.
+    static FIRED: Cell<Option<&'static str>> = const { Cell::new(None) };
+}
+
+/// Error returned by a crash point when its countdown expires. From the
+/// store's perspective this is indistinguishable from the process dying at
+/// that boundary: the operation reports failure and on-disk state is left
+/// exactly as the interrupted syscall sequence would leave it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedCrash {
+    /// Label of the crash point that fired.
+    pub site: &'static str,
+}
+
+impl fmt::Display for InjectedCrash {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "injected crash at {}", self.site)
+    }
+}
+
+impl std::error::Error for InjectedCrash {}
+
+/// Arm the thread-local countdown: the `nth` crash point reached after this
+/// call (0 = the very next one) fails with [`InjectedCrash`]. Clears any
+/// previously recorded fired site.
+pub fn arm(nth: u64) {
+    COUNTDOWN.with(|c| c.set(Some(nth)));
+    FIRED.with(|f| f.set(None));
+}
+
+/// Disarm the countdown and return the site that fired since the last
+/// [`arm`], if any. The harness uses the return value — not error identity —
+/// to distinguish an injected crash from a genuine failure, because the
+/// vendored `anyhow` shim flattens error types to strings.
+pub fn disarm() -> Option<&'static str> {
+    COUNTDOWN.with(|c| c.set(None));
+    FIRED.with(|f| f.take())
+}
+
+/// Site that fired since the last [`arm`], without disarming.
+pub fn fired() -> Option<&'static str> {
+    FIRED.with(|f| f.get())
+}
+
+/// A crash boundary. No-op unless armed on this thread; when the countdown
+/// reaches zero, records `site`, disarms, and returns `Err(InjectedCrash)`.
+/// Fires at most once per [`arm`] so recovery code running after the "crash"
+/// is not re-interrupted.
+pub fn point(site: &'static str) -> Result<(), InjectedCrash> {
+    COUNTDOWN.with(|c| match c.get() {
+        None => Ok(()),
+        Some(0) => {
+            c.set(None);
+            FIRED.with(|f| f.set(Some(site)));
+            Err(InjectedCrash { site })
+        }
+        Some(n) => {
+            c.set(Some(n - 1));
+            Ok(())
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_points_are_free_and_countdown_fires_once() {
+        assert!(point("a").is_ok());
+        assert_eq!(fired(), None);
+
+        arm(2);
+        assert!(point("a").is_ok());
+        assert!(point("b").is_ok());
+        let err = point("c").unwrap_err();
+        assert_eq!(err.site, "c");
+        assert_eq!(fired(), Some("c"));
+        // Fired once; later points pass even without re-arming.
+        assert!(point("d").is_ok());
+        assert_eq!(disarm(), Some("c"));
+        assert_eq!(disarm(), None);
+    }
+
+    #[test]
+    fn arm_zero_fires_immediately_and_disarm_cancels() {
+        arm(0);
+        assert_eq!(point("x").unwrap_err().site, "x");
+
+        arm(5);
+        assert_eq!(disarm(), None);
+        assert!(point("y").is_ok());
+    }
+}

@@ -1,0 +1,172 @@
+//! Versioned directory manifests.
+//!
+//! A durable directory (a dynamic store, a serving node) holds several files
+//! that must be seen as one consistent *generation*: a base container plus
+//! its WAL, or a router plus N shard containers. The manifest is the single
+//! small file that names the current generation's members; flipping it (via
+//! [`atomic::commit_bytes`]) is the commit point for any multi-file change.
+//! Readers resolve every file name through the manifest, so stale
+//! generations and commit temp files are simply invisible.
+//!
+//! Format (all LE, written with `WriteBuf`):
+//!
+//! ```text
+//! [b"ZMAN"][version: u32 = 1][generation: u64]
+//! [count: u32] count × ([key: str][file: str])     -- str = u64 len + utf-8
+//! [crc: u32 = CRC-32C of all prior bytes]
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::crc32c::Crc32c;
+use crate::util::{ReadBuf, WriteBuf};
+
+use super::atomic;
+
+/// File name of the manifest inside a durable directory.
+pub const MANIFEST_FILE: &str = "MANIFEST";
+/// Magic prefix of a manifest file.
+pub const MANIFEST_MAGIC: [u8; 4] = *b"ZMAN";
+/// Current manifest format version.
+pub const MANIFEST_VERSION: u32 = 1;
+
+/// The decoded manifest of a durable directory.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// Monotonic generation number; bumped on every flip.
+    pub generation: u64,
+    /// Ordered `key -> file name` entries (e.g. `"kind" -> "dynamic"`,
+    /// `"base" -> "base-3.zann"`). Keys are unique.
+    pub entries: Vec<(String, String)>,
+}
+
+impl Manifest {
+    /// Value for `key`, if present.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Serialize to bytes (including the CRC trailer).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = WriteBuf::new();
+        w.bytes.extend_from_slice(&MANIFEST_MAGIC);
+        w.put_u32(MANIFEST_VERSION);
+        w.put_u64(self.generation);
+        w.put_u32(self.entries.len() as u32);
+        for (k, v) in &self.entries {
+            w.put_str(k);
+            w.put_str(v);
+        }
+        let mut crc = Crc32c::new();
+        crc.update(&w.bytes);
+        let sum = crc.finalize();
+        w.put_u32(sum);
+        w.bytes
+    }
+
+    /// Parse manifest bytes, verifying magic, version, and CRC.
+    pub fn decode(bytes: &[u8]) -> Result<Manifest> {
+        ensure!(
+            bytes.len() >= 4 + 4 + 8 + 4 + 4 && bytes[..4] == MANIFEST_MAGIC,
+            "manifest: bad magic or short file ({} bytes)",
+            bytes.len()
+        );
+        let body = &bytes[..bytes.len() - 4];
+        let stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        let mut crc = Crc32c::new();
+        crc.update(body);
+        ensure!(
+            crc.finalize() == stored,
+            "manifest: CRC mismatch (file is corrupt or torn)"
+        );
+
+        let mut r = ReadBuf::new(&body[4..]);
+        let version = r.get_u32()?;
+        ensure!(
+            version == MANIFEST_VERSION,
+            "manifest: unsupported version {version}"
+        );
+        let generation = r.get_u64()?;
+        let count = r.get_u32()? as usize;
+        let mut entries = Vec::with_capacity(count.min(1024));
+        for _ in 0..count {
+            let k = r.get_str()?;
+            let v = r.get_str()?;
+            ensure!(
+                entries.iter().all(|(ek, _): &(String, String)| ek != &k),
+                "manifest: duplicate key {k:?}"
+            );
+            entries.push((k, v));
+        }
+        ensure!(r.remaining() == 0, "manifest: trailing bytes after entries");
+        Ok(Manifest { generation, entries })
+    }
+
+    /// Load and decode `dir/MANIFEST`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = manifest_path(dir);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        Manifest::decode(&bytes).with_context(|| format!("manifest {}", path.display()))
+    }
+
+    /// Atomically commit this manifest as `dir/MANIFEST`. This is the flip:
+    /// once it returns, the directory's current generation is this one.
+    pub fn commit(&self, dir: &Path) -> Result<()> {
+        atomic::commit_bytes(&manifest_path(dir), &self.encode())
+    }
+}
+
+/// Path of the manifest file inside `dir`.
+pub fn manifest_path(dir: &Path) -> PathBuf {
+    dir.join(MANIFEST_FILE)
+}
+
+/// Whether `dir` looks like a durable directory (has a manifest file).
+pub fn is_durable_dir(dir: &Path) -> bool {
+    dir.is_dir() && manifest_path(dir).is_file()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_get() {
+        let m = Manifest {
+            generation: 7,
+            entries: vec![
+                ("kind".into(), "dynamic".into()),
+                ("base".into(), "base-7.zann".into()),
+                ("wal".into(), "wal-7.log".into()),
+            ],
+        };
+        let enc = m.encode();
+        let back = Manifest::decode(&enc).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.get("base"), Some("base-7.zann"));
+        assert_eq!(back.get("missing"), None);
+    }
+
+    #[test]
+    fn every_flipped_byte_is_rejected() {
+        let m = Manifest {
+            generation: 1,
+            entries: vec![("kind".into(), "node".into())],
+        };
+        let enc = m.encode();
+        for i in 0..enc.len() {
+            let mut bad = enc.clone();
+            bad[i] ^= 0x20;
+            assert!(Manifest::decode(&bad).is_err(), "flip at byte {i} accepted");
+        }
+        for cut in 0..enc.len() {
+            assert!(Manifest::decode(&enc[..cut]).is_err(), "truncation at {cut} accepted");
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Crash-safe durability: write-ahead logging, atomic container commits,
+//! and versioned directory manifests.
+//!
+//! The static index formats (`api/persist.rs`) make corruption *detectable*
+//! (CRC-32C section framing, `ZEND` terminator); this module makes the write
+//! path *recoverable*. Three pieces compose:
+//!
+//! - [`atomic`] — `commit_bytes` writes a sibling temp file, fsyncs it,
+//!   renames it over the destination, and fsyncs the directory. A crash at
+//!   any point leaves either the old file or the new file, never a torn one.
+//! - [`wal`] — a CRC-32C-framed, fsync-on-append write-ahead log for
+//!   `DynamicIvf` adds and deletes. An operation is acknowledged only after
+//!   its record is on disk; replay truncates a torn tail back to the last
+//!   valid frame and reapplies exactly the acknowledged prefix.
+//! - [`manifest`] — a tiny generation-numbered key→file map, itself committed
+//!   atomically, so multi-file directories (a dynamic store's base+WAL, a
+//!   serving node's router+shards) flip between consistent generations.
+//!
+//! [`store::DurableDynamic`] ties the first two together for a single
+//! mutable index; [`node`] provides the manifest-driven directory layout for
+//! a sharded `ServeNode`. [`crash`] hosts the deterministic kill-point
+//! machinery the crash-injection harness (`eval/crashes.rs`) drives.
+
+pub mod atomic;
+pub mod crash;
+pub mod manifest;
+pub mod node;
+pub mod store;
+pub mod wal;

@@ -1,0 +1,197 @@
+//! Durable directory layout for a sharded serving node.
+//!
+//! ```text
+//! dir/MANIFEST              kind=node, router=ROUTER, shard<s>=<file>, gen g
+//! dir/ROUTER                routing table (see below), committed atomically
+//! dir/shard-<s>-g<g>.zann   one-shard KIND_SHARDED snapshot of shard s
+//! ```
+//!
+//! Every shard swap writes the *new* shard container under the next
+//! generation's name, then flips the manifest ([`commit_shard`]) — the flip
+//! is the only commit point, so a crash mid-swap leaves the previous
+//! generation fully intact and reachable; a half-swapped directory cannot
+//! exist. [`open_node_dir`] reassembles the node's `ShardedIndex` strictly
+//! through the manifest, so stale generations, commit temp files, and torn
+//! leftovers are never even opened.
+//!
+//! ROUTER file format (LE): `[b"ZRTR"][version: u32 = 1][dim: u32]`
+//! `[router: write_router bytes][crc: u32 = CRC-32C of all prior bytes]`.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::api::persist;
+use crate::serve::persist::{read_router, write_router};
+use crate::serve::sharded::{Router, ShardedIndex};
+use crate::util::crc32c::Crc32c;
+use crate::util::{ReadBuf, WriteBuf};
+
+use super::atomic;
+use super::crash;
+use super::manifest::{self, Manifest};
+
+/// Manifest `kind` value for a node directory.
+pub const KIND_NODE_DIR: &str = "node";
+/// File name of the routing table inside a node directory.
+pub const ROUTER_FILE: &str = "ROUTER";
+/// Magic prefix of the ROUTER file.
+pub const ROUTER_MAGIC: [u8; 4] = *b"ZRTR";
+/// ROUTER file format version.
+pub const ROUTER_VERSION: u32 = 1;
+
+fn shard_file(s: usize, generation: u64) -> String {
+    format!("shard-{s}-g{generation}.zann")
+}
+
+fn encode_router(router: &Router, dim: usize) -> Vec<u8> {
+    let mut w = WriteBuf::new();
+    w.bytes.extend_from_slice(&ROUTER_MAGIC);
+    w.put_u32(ROUTER_VERSION);
+    w.put_u32(dim as u32);
+    write_router(&mut w, router);
+    let mut crc = Crc32c::new();
+    crc.update(&w.bytes);
+    let sum = crc.finalize();
+    w.put_u32(sum);
+    w.bytes
+}
+
+fn decode_router(bytes: &[u8]) -> Result<(Router, usize)> {
+    ensure!(
+        bytes.len() >= 4 + 4 + 4 + 4 && bytes[..4] == ROUTER_MAGIC,
+        "router file: bad magic or short file ({} bytes)",
+        bytes.len()
+    );
+    let body = &bytes[..bytes.len() - 4];
+    let stored = u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+    let mut crc = Crc32c::new();
+    crc.update(body);
+    ensure!(crc.finalize() == stored, "router file: CRC mismatch");
+    let mut r = ReadBuf::new(&body[4..]);
+    let version = r.get_u32()?;
+    ensure!(version == ROUTER_VERSION, "router file: unsupported version {version}");
+    let dim = r.get_u32()? as usize;
+    ensure!(dim > 0, "router file: zero dim");
+    let router = read_router(&mut r, dim)?;
+    ensure!(r.remaining() == 0, "router file: trailing bytes");
+    Ok((router, dim))
+}
+
+fn node_manifest(generation: u64, shard_files: &[String]) -> Manifest {
+    let mut entries = vec![
+        ("kind".to_string(), KIND_NODE_DIR.to_string()),
+        ("router".to_string(), ROUTER_FILE.to_string()),
+    ];
+    for (s, f) in shard_files.iter().enumerate() {
+        entries.push((format!("shard{s}"), f.clone()));
+    }
+    Manifest { generation, entries }
+}
+
+/// Current shard file names (`shard0..shardN-1`) recorded in `m`.
+fn shard_files(m: &Manifest) -> Result<Vec<String>> {
+    let mut files = Vec::new();
+    while let Some(f) = m.get(&format!("shard{}", files.len())) {
+        files.push(f.to_string());
+    }
+    ensure!(!files.is_empty(), "node manifest lists no shards");
+    Ok(files)
+}
+
+/// Initialize `dir` as generation 0 of a node directory: router file plus
+/// one single-shard snapshot container per shard (as produced by
+/// `ServeNode::snapshot_shard`). The directory must not already hold a
+/// manifest.
+pub fn init_node_dir(
+    dir: &Path,
+    router: &Router,
+    dim: usize,
+    snapshots: &[Vec<u8>],
+) -> Result<()> {
+    ensure!(!snapshots.is_empty(), "node directory needs at least one shard");
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("create node dir {}", dir.display()))?;
+    ensure!(
+        !manifest::manifest_path(dir).exists(),
+        "node dir {} already has a manifest",
+        dir.display()
+    );
+    atomic::commit_bytes(&dir.join(ROUTER_FILE), &encode_router(router, dim))?;
+    let mut files = Vec::with_capacity(snapshots.len());
+    for (s, snap) in snapshots.iter().enumerate() {
+        let f = shard_file(s, 0);
+        atomic::commit_bytes(&dir.join(&f), snap)?;
+        files.push(f);
+    }
+    node_manifest(0, &files).commit(dir)
+}
+
+/// Swap shard `s`: commit `snapshot` under generation `g+1`'s file name,
+/// flip the manifest, then drop the superseded file. Crash-safe — before
+/// the flip, recovery sees generation `g` untouched.
+pub fn commit_shard(dir: &Path, s: usize, snapshot: &[u8]) -> Result<u64> {
+    let m = Manifest::load(dir)?;
+    ensure!(
+        m.get("kind") == Some(KIND_NODE_DIR),
+        "durable dir {}: manifest kind is {:?}, not a node directory",
+        dir.display(),
+        m.get("kind")
+    );
+    let mut files = shard_files(&m)?;
+    ensure!(s < files.len(), "shard {s} out of range ({} shards)", files.len());
+    let next = m.generation + 1;
+    let new_file = shard_file(s, next);
+    atomic::commit_bytes(&dir.join(&new_file), snapshot)?;
+    let old_file = std::mem::replace(&mut files[s], new_file);
+    crash::point("node.manifest")?;
+    node_manifest(next, &files).commit(dir)?;
+    // Manifest flipped: generation `next` is now the one recovery sees.
+    crash::point("node.cleanup")?;
+    if old_file != files[s] {
+        let _ = std::fs::remove_file(dir.join(old_file));
+    }
+    Ok(next)
+}
+
+/// Reopen a node directory into its current generation's `ShardedIndex`.
+/// Returns the index and the manifest generation. Only files named by the
+/// manifest are touched.
+pub fn open_node_dir(dir: &Path) -> Result<(ShardedIndex, u64)> {
+    let m = Manifest::load(dir)?;
+    ensure!(
+        m.get("kind") == Some(KIND_NODE_DIR),
+        "durable dir {}: manifest kind is {:?}, not a node directory",
+        dir.display(),
+        m.get("kind")
+    );
+    let router_file = m.get("router").context("node manifest missing 'router' entry")?;
+    let router_bytes = std::fs::read(dir.join(router_file))
+        .with_context(|| format!("read router file in {}", dir.display()))?;
+    let (router, dim) = decode_router(&router_bytes)?;
+
+    let files = shard_files(&m)?;
+    let mut shards = Vec::with_capacity(files.len());
+    let mut id_maps = Vec::with_capacity(files.len());
+    let mut checksummed = true;
+    for (s, f) in files.iter().enumerate() {
+        let snap = persist::open_sharded(&dir.join(f))
+            .with_context(|| format!("opening shard {s} of node dir {}", dir.display()))?;
+        ensure!(
+            snap.num_shards() == 1,
+            "shard {s} snapshot holds {} shards (expected 1)",
+            snap.num_shards()
+        );
+        ensure!(
+            snap.dim() == dim,
+            "shard {s} snapshot has dim {} (router says {dim})",
+            snap.dim()
+        );
+        checksummed &= snap.checksummed;
+        let (_, mut inner, mut maps, _) = snap.into_parts();
+        shards.push(inner.remove(0));
+        id_maps.push(maps.remove(0));
+    }
+    let idx = ShardedIndex::from_parts(router, shards, id_maps, dim, checksummed)?;
+    Ok((idx, m.generation))
+}

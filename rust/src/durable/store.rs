@@ -1,0 +1,267 @@
+//! [`DurableDynamic`]: a `DynamicIvf` whose adds and deletes survive kill -9.
+//!
+//! Directory layout (all names resolved through the manifest):
+//!
+//! ```text
+//! dir/MANIFEST          kind=dynamic, base=base-<g>.zann, wal=wal-<g>.log
+//! dir/base-<g>.zann     checkpointed KIND_DYNAMIC container (atomic commit)
+//! dir/wal-<g>.log       operations acknowledged since the checkpoint
+//! ```
+//!
+//! Write path: every `add`/`delete` appends one WAL record and fsyncs
+//! *before* touching the in-memory index — the WAL `Ok` is the
+//! acknowledgement. [`DurableDynamic::checkpoint`] compacts, commits a new
+//! base container and a fresh empty WAL under generation `g+1`, then flips
+//! the manifest; old-generation files are removed only after the flip, so a
+//! crash anywhere leaves one fully consistent generation reachable.
+//!
+//! Recovery ([`DurableDynamic::open`]): load the manifest, open the base
+//! container, replay the WAL's valid prefix onto it (bit-identical to the
+//! pre-crash index per the dynamic parity invariant), truncate any torn
+//! tail, and reopen the log for append. After *any* I/O error (injected or
+//! real) the handle must be dropped and the directory reopened — exactly
+//! the contract a crashed process is held to.
+
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::api::{persist, AnnIndex};
+use crate::dynamic::DynamicIvf;
+
+use super::atomic;
+use super::crash;
+use super::manifest::{self, Manifest};
+use super::wal::{self, Wal, WalRecord};
+
+/// Manifest `kind` value for a dynamic store directory.
+pub const KIND_DYNAMIC_DIR: &str = "dynamic";
+
+/// What [`DurableDynamic::open`] had to do to get back to a consistent state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Manifest generation the store opened into.
+    pub generation: u64,
+    /// WAL size after recovery (header + acknowledged records).
+    pub wal_bytes: u64,
+    /// Records replayed onto the base container.
+    pub replayed_records: usize,
+    /// Rows re-added during replay.
+    pub replayed_rows: usize,
+    /// Ids re-deleted during replay.
+    pub replayed_deletes: usize,
+    /// Torn-tail bytes truncated from the WAL (0 on a clean open).
+    pub torn_bytes: u64,
+    /// Wall-clock microseconds the open + replay took.
+    pub recovery_us: u64,
+}
+
+/// A crash-safe wrapper around [`DynamicIvf`] (see module docs).
+pub struct DurableDynamic {
+    dir: PathBuf,
+    index: DynamicIvf,
+    wal: Wal,
+    generation: u64,
+}
+
+fn base_name(generation: u64) -> String {
+    format!("base-{generation}.zann")
+}
+
+fn wal_name(generation: u64) -> String {
+    format!("wal-{generation}.log")
+}
+
+impl DurableDynamic {
+    /// Initialize `dir` as generation 0 of a durable store seeded with
+    /// `index`. The directory is created if needed and must not already
+    /// hold a manifest.
+    pub fn create(dir: &Path, index: DynamicIvf) -> Result<DurableDynamic> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create durable dir {}", dir.display()))?;
+        ensure!(
+            !manifest::manifest_path(dir).exists(),
+            "durable dir {} already has a manifest",
+            dir.display()
+        );
+        let bytes = index.to_bytes()?;
+        atomic::commit_bytes(&dir.join(base_name(0)), &bytes)?;
+        let wal = Wal::create(&dir.join(wal_name(0)))?;
+        let m = Manifest {
+            generation: 0,
+            entries: vec![
+                ("kind".into(), KIND_DYNAMIC_DIR.into()),
+                ("base".into(), base_name(0)),
+                ("wal".into(), wal_name(0)),
+            ],
+        };
+        m.commit(dir)?;
+        Ok(DurableDynamic { dir: dir.to_path_buf(), index, wal, generation: 0 })
+    }
+
+    /// Open `dir`, replaying acknowledged operations and truncating any
+    /// torn WAL tail (see module docs for the full recovery contract).
+    pub fn open(dir: &Path) -> Result<(DurableDynamic, RecoveryStats)> {
+        let t0 = std::time::Instant::now();
+        let m = Manifest::load(dir)?;
+        ensure!(
+            m.get("kind") == Some(KIND_DYNAMIC_DIR),
+            "durable dir {}: manifest kind is {:?}, not a dynamic store",
+            dir.display(),
+            m.get("kind")
+        );
+        let base = m.get("base").context("manifest missing 'base' entry")?;
+        let wal_file = m.get("wal").context("manifest missing 'wal' entry")?;
+        let mut index = persist::open_dynamic(&dir.join(base))?;
+
+        let wal_path = dir.join(wal_file);
+        let replayed = wal::replay(&wal_path)?;
+        let (mut rows_n, mut dels_n) = (0usize, 0usize);
+        for rec in &replayed.records {
+            apply(&mut index, rec)?;
+            match rec {
+                WalRecord::Add { dim, rows, .. } => rows_n += rows.len() / *dim as usize,
+                WalRecord::Delete { ids } => dels_n += ids.len(),
+            }
+        }
+        if replayed.torn_bytes > 0 {
+            wal::truncate_to(&wal_path, replayed.valid_bytes)?;
+        }
+        let wal = Wal::open_append(&wal_path, replayed.valid_bytes)?;
+
+        let stats = RecoveryStats {
+            generation: m.generation,
+            wal_bytes: wal.bytes(),
+            replayed_records: replayed.records.len(),
+            replayed_rows: rows_n,
+            replayed_deletes: dels_n,
+            torn_bytes: replayed.torn_bytes,
+            recovery_us: t0.elapsed().as_micros() as u64,
+        };
+        crate::obs::histogram("zann_recovery_us", &[]).observe(stats.recovery_us);
+        Ok((
+            DurableDynamic { dir: dir.to_path_buf(), index, wal, generation: m.generation },
+            stats,
+        ))
+    }
+
+    /// Append rows (row-major, `dim()` floats each). The WAL fsync happens
+    /// before the in-memory apply: when this returns `Ok`, the rows survive
+    /// any subsequent crash.
+    pub fn add(&mut self, rows: &[f32]) -> Result<Range<u32>> {
+        let dim = self.index.dim();
+        ensure!(!rows.is_empty(), "add: empty row batch");
+        ensure!(
+            rows.len() % dim == 0,
+            "add: {} floats is not a whole number of {dim}-dim rows",
+            rows.len()
+        );
+        let base = self.index.next_id();
+        // Mirror the index's own id-space check *before* logging, so the WAL
+        // never acknowledges a record the in-memory apply would reject.
+        ensure!(
+            base as u64 + (rows.len() / dim) as u64 <= u32::MAX as u64,
+            "add: id space exhausted"
+        );
+        self.wal.append(&wal::encode_add(base, dim as u32, rows))?;
+        self.index.add(rows)
+    }
+
+    /// Tombstone one id. A no-op delete (unknown or already-dead id) is not
+    /// logged; a real one is durable once this returns `Ok(true)`.
+    pub fn delete(&mut self, id: u32) -> Result<bool> {
+        if !self.index.is_live(id) {
+            return Ok(false);
+        }
+        self.wal.append(&wal::encode_delete(&[id]))?;
+        let deleted = self.index.delete(id)?;
+        debug_assert!(deleted, "live id {id} failed to delete after WAL ack");
+        Ok(deleted)
+    }
+
+    /// Compact the index and roll the directory to generation `g+1`: commit
+    /// the compacted container and a fresh empty WAL, flip the manifest,
+    /// then drop the old generation's files. Crash-safe at every boundary —
+    /// until the manifest flip the old generation (base + full WAL) is the
+    /// one recovery sees.
+    pub fn checkpoint(&mut self) -> Result<()> {
+        self.index.compact()?;
+        let bytes = self.index.to_bytes()?;
+        let next = self.generation + 1;
+        atomic::commit_bytes(&self.dir.join(base_name(next)), &bytes)?;
+        let new_wal = Wal::create(&self.dir.join(wal_name(next)))?;
+        crash::point("checkpoint.manifest")?;
+        let m = Manifest {
+            generation: next,
+            entries: vec![
+                ("kind".into(), KIND_DYNAMIC_DIR.into()),
+                ("base".into(), base_name(next)),
+                ("wal".into(), wal_name(next)),
+            ],
+        };
+        m.commit(&self.dir)?;
+        // The flip is the commit point; everything below is cleanup of the
+        // now-unreachable old generation and may be lost to a crash.
+        let old = self.generation;
+        self.generation = next;
+        self.wal = new_wal;
+        crash::point("checkpoint.cleanup")?;
+        let _ = std::fs::remove_file(self.dir.join(base_name(old)));
+        let _ = std::fs::remove_file(self.dir.join(wal_name(old)));
+        Ok(())
+    }
+
+    /// The underlying searchable index.
+    pub fn index(&self) -> &DynamicIvf {
+        &self.index
+    }
+
+    /// Current manifest generation.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Durable WAL size in bytes.
+    pub fn wal_bytes(&self) -> u64 {
+        self.wal.bytes()
+    }
+
+    /// Directory this store lives in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+/// Apply one replayed record to `index`, validating that the log and the
+/// base container agree on id assignment and dimensionality.
+pub fn apply(index: &mut DynamicIvf, rec: &WalRecord) -> Result<()> {
+    match rec {
+        WalRecord::Add { base, dim, rows } => {
+            ensure!(
+                *dim as usize == index.dim(),
+                "wal replay: record dim {dim} != index dim {}",
+                index.dim()
+            );
+            ensure!(
+                *base == index.next_id(),
+                "wal replay: add at base {base} but index next_id is {} \
+                 (log does not belong to this base container)",
+                index.next_id()
+            );
+            index.add(rows)?;
+        }
+        WalRecord::Delete { ids } => {
+            for &id in ids {
+                if id >= index.next_id() {
+                    bail!(
+                        "wal replay: delete of unassigned id {id} (next_id {})",
+                        index.next_id()
+                    );
+                }
+                index.delete(id)?;
+            }
+        }
+    }
+    Ok(())
+}

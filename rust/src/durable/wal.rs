@@ -1,0 +1,389 @@
+//! CRC-32C-framed write-ahead log for dynamic ingest.
+//!
+//! File layout:
+//!
+//! ```text
+//! [b"ZWAL"][version: u32 LE = 1]                      -- 8-byte header
+//! repeated records:
+//!   [len: u32 LE][crc: u32 LE = CRC-32C(payload)][payload: len bytes]
+//! ```
+//!
+//! Record payloads (first byte is the op tag):
+//!
+//! - `REC_ADD = 1`:    `[1][base: u32][dim: u32][nf32: u32][rows: nf32 × f32 LE]`
+//! - `REC_DELETE = 2`: `[2][count: u32][ids: count × u32 LE]`
+//!
+//! Discipline: [`Wal::append`] frames the payload, writes it, and fsyncs
+//! before returning — an `Ok` return *is* the acknowledgement. A crash
+//! mid-append leaves a torn tail: a short header, a short payload, or a
+//! CRC mismatch. [`replay`] is **pure** — it never modifies the file — and
+//! stops at the first invalid frame, reporting how many trailing bytes are
+//! torn; [`truncate_to`] chops the tail off when the owner decides to
+//! recover (so read-only inspection like `zann info` never mutates).
+
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::obs::StaticCounter;
+use crate::util::crc32c::Crc32c;
+use crate::util::{ReadBuf, WriteBuf};
+
+use super::{atomic, crash};
+
+/// Magic + version prefix of every WAL file.
+pub const WAL_MAGIC: [u8; 4] = *b"ZWAL";
+/// Current (and only) WAL format version.
+pub const WAL_VERSION: u32 = 1;
+/// Byte length of the file header.
+pub const WAL_HEADER: u64 = 8;
+
+/// Op tag for an add-rows record.
+pub const REC_ADD: u8 = 1;
+/// Op tag for a delete-ids record.
+pub const REC_DELETE: u8 = 2;
+
+static WAL_APPENDS: StaticCounter = StaticCounter::new("zann_wal_appends_total");
+static WAL_BYTES: StaticCounter = StaticCounter::new("zann_wal_bytes");
+static WAL_REPLAYED: StaticCounter = StaticCounter::new("zann_wal_replayed_records");
+
+/// A decoded WAL record.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalRecord {
+    /// Rows appended starting at id `base` (row-major, `dim` floats each).
+    Add { base: u32, dim: u32, rows: Vec<f32> },
+    /// Ids tombstoned by this operation.
+    Delete { ids: Vec<u32> },
+}
+
+/// Encode an add-rows payload. `rows.len()` must be a multiple of `dim`.
+pub fn encode_add(base: u32, dim: u32, rows: &[f32]) -> Vec<u8> {
+    debug_assert!(dim > 0 && rows.len() % dim as usize == 0);
+    let mut w = WriteBuf::new();
+    w.put_u8(REC_ADD);
+    w.put_u32(base);
+    w.put_u32(dim);
+    w.put_u32(rows.len() as u32);
+    for &v in rows {
+        w.put_f32(v);
+    }
+    w.bytes
+}
+
+/// Encode a delete-ids payload.
+pub fn encode_delete(ids: &[u32]) -> Vec<u8> {
+    let mut w = WriteBuf::new();
+    w.put_u8(REC_DELETE);
+    w.put_u32(ids.len() as u32);
+    for &id in ids {
+        w.put_u32(id);
+    }
+    w.bytes
+}
+
+/// Decode one record payload. A payload that framed correctly (length and
+/// CRC valid) but does not decode is a hard error, not a torn tail — it
+/// means the writer and reader disagree on the format.
+pub fn decode(payload: &[u8]) -> Result<WalRecord> {
+    let mut r = ReadBuf::new(payload);
+    let tag = r.get_u8().context("wal record: missing op tag")?;
+    match tag {
+        REC_ADD => {
+            let base = r.get_u32()?;
+            let dim = r.get_u32()?;
+            let nf32 = r.get_u32()? as usize;
+            ensure!(dim > 0, "wal add record: zero dim");
+            ensure!(
+                nf32 % dim as usize == 0,
+                "wal add record: {nf32} floats not divisible by dim {dim}"
+            );
+            ensure!(
+                r.remaining() == nf32 * 4,
+                "wal add record: payload holds {} bytes, expected {}",
+                r.remaining(),
+                nf32 * 4
+            );
+            let mut rows = Vec::with_capacity(nf32);
+            for _ in 0..nf32 {
+                rows.push(r.get_f32()?);
+            }
+            Ok(WalRecord::Add { base, dim, rows })
+        }
+        REC_DELETE => {
+            let count = r.get_u32()? as usize;
+            ensure!(
+                r.remaining() == count * 4,
+                "wal delete record: payload holds {} bytes, expected {}",
+                r.remaining(),
+                count * 4
+            );
+            let mut ids = Vec::with_capacity(count);
+            for _ in 0..count {
+                ids.push(r.get_u32()?);
+            }
+            Ok(WalRecord::Delete { ids })
+        }
+        other => bail!("wal record: unknown op tag {other}"),
+    }
+}
+
+/// An open, append-only WAL handle.
+pub struct Wal {
+    file: File,
+    path: PathBuf,
+    /// Bytes durably on disk (header + complete records).
+    bytes: u64,
+}
+
+impl Wal {
+    /// Create a fresh WAL at `path` (truncating any existing file), write the
+    /// header, and fsync file + parent directory so the empty log itself is
+    /// durable before any append is acknowledged against it.
+    pub fn create(path: &Path) -> Result<Wal> {
+        crash::point("wal.create")?;
+        let mut file = File::create(path)
+            .with_context(|| format!("create wal {}", path.display()))?;
+        let mut hdr = [0u8; WAL_HEADER as usize];
+        hdr[..4].copy_from_slice(&WAL_MAGIC);
+        hdr[4..].copy_from_slice(&WAL_VERSION.to_le_bytes());
+        file.write_all(&hdr)?;
+        file.sync_all()
+            .with_context(|| format!("fsync wal {}", path.display()))?;
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                atomic::fsync_dir(dir)?;
+            }
+        }
+        Ok(Wal { file, path: path.to_path_buf(), bytes: WAL_HEADER })
+    }
+
+    /// Open an existing WAL for appending. `valid_bytes` is the durable
+    /// prefix established by [`replay`] (+ [`truncate_to`] if the tail was
+    /// torn); appends continue from there.
+    pub fn open_append(path: &Path, valid_bytes: u64) -> Result<Wal> {
+        let file = OpenOptions::new()
+            .append(true)
+            .open(path)
+            .with_context(|| format!("open wal {} for append", path.display()))?;
+        let len = file.metadata()?.len();
+        ensure!(
+            len == valid_bytes,
+            "wal {}: file is {len} bytes but valid prefix is {valid_bytes}; truncate first",
+            path.display()
+        );
+        Ok(Wal { file, path: path.to_path_buf(), bytes: valid_bytes })
+    }
+
+    /// Append one record and fsync. When `Ok` returns, the record is durable:
+    /// this return is the acknowledgement the recovery contract protects. On
+    /// error the file may hold a torn tail; the handle must be discarded and
+    /// the log reopened through [`replay`].
+    pub fn append(&mut self, payload: &[u8]) -> Result<()> {
+        let mut frame = Vec::with_capacity(8 + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        let mut crc = Crc32c::new();
+        crc.update(payload);
+        frame.extend_from_slice(&crc.finalize().to_le_bytes());
+        frame.extend_from_slice(payload);
+
+        // Simulated torn append: a prefix of the frame reaches disk, then
+        // the "process dies". Replay must give back exactly the old prefix.
+        if let Err(e) = crash::point("wal.write") {
+            let _ = self.file.write_all(&frame[..frame.len() * 2 / 3]);
+            let _ = self.file.sync_all();
+            return Err(e.into());
+        }
+        self.file
+            .write_all(&frame)
+            .with_context(|| format!("append to wal {}", self.path.display()))?;
+        crash::point("wal.fsync")?;
+        self.file
+            .sync_all()
+            .with_context(|| format!("fsync wal {}", self.path.display()))?;
+        self.bytes += frame.len() as u64;
+        WAL_APPENDS.inc();
+        WAL_BYTES.add(frame.len() as u64);
+        Ok(())
+    }
+
+    /// Durable size of the log in bytes (header + acknowledged records).
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Path this WAL writes to.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Result of scanning a WAL file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Replay {
+    /// Records in the valid prefix, in append order.
+    pub records: Vec<WalRecord>,
+    /// Byte length of the valid prefix (header + complete records).
+    pub valid_bytes: u64,
+    /// Bytes past the valid prefix (a torn tail from an interrupted append).
+    pub torn_bytes: u64,
+}
+
+/// Scan `path` and decode its valid prefix. Pure: the file is never
+/// modified, so read-only consumers (`zann info`) can call this safely.
+/// Scanning stops at the first frame whose header is short, whose payload is
+/// short, or whose CRC mismatches — everything after that point is reported
+/// as `torn_bytes`. A corrupt *header* (bad magic/version) is an error, not
+/// a torn tail: the header is fsynced at create time, so it can only be
+/// wrong through external corruption.
+pub fn replay(path: &Path) -> Result<Replay> {
+    let buf = fs::read(path).with_context(|| format!("read wal {}", path.display()))?;
+    ensure!(
+        buf.len() as u64 >= WAL_HEADER && buf[..4] == WAL_MAGIC,
+        "wal {}: bad magic or short header",
+        path.display()
+    );
+    let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    ensure!(
+        version == WAL_VERSION,
+        "wal {}: unsupported version {version}",
+        path.display()
+    );
+
+    let mut records = Vec::new();
+    let mut pos = WAL_HEADER as usize;
+    loop {
+        if buf.len() - pos < 8 {
+            break; // short frame header => torn tail (or clean EOF)
+        }
+        let len = u32::from_le_bytes(buf[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(buf[pos + 4..pos + 8].try_into().unwrap());
+        if buf.len() - pos - 8 < len {
+            break; // short payload => torn tail
+        }
+        let payload = &buf[pos + 8..pos + 8 + len];
+        let mut c = Crc32c::new();
+        c.update(payload);
+        if c.finalize() != crc {
+            break; // CRC mismatch => torn tail
+        }
+        records.push(decode(payload)?);
+        pos += 8 + len;
+    }
+    WAL_REPLAYED.add(records.len() as u64);
+    Ok(Replay {
+        records,
+        valid_bytes: pos as u64,
+        torn_bytes: (buf.len() - pos) as u64,
+    })
+}
+
+/// Truncate `path` to its valid prefix, discarding a torn tail, and fsync.
+/// Called by owners (not read-only inspectors) before reopening for append.
+pub fn truncate_to(path: &Path, valid_bytes: u64) -> Result<()> {
+    let f = OpenOptions::new()
+        .write(true)
+        .open(path)
+        .with_context(|| format!("open wal {} for truncate", path.display()))?;
+    f.set_len(valid_bytes)
+        .with_context(|| format!("truncate wal {} to {valid_bytes}", path.display()))?;
+    f.sync_all()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("zann-wal-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_and_pure_replay() {
+        let d = tdir("rt");
+        let p = d.join("wal.log");
+        let mut w = Wal::create(&p).unwrap();
+        w.append(&encode_add(0, 2, &[1.0, 2.0, 3.0, 4.0])).unwrap();
+        w.append(&encode_delete(&[1])).unwrap();
+        let on_disk = w.bytes();
+        drop(w);
+
+        let r = replay(&p).unwrap();
+        assert_eq!(r.valid_bytes, on_disk);
+        assert_eq!(r.torn_bytes, 0);
+        assert_eq!(
+            r.records,
+            vec![
+                WalRecord::Add { base: 0, dim: 2, rows: vec![1.0, 2.0, 3.0, 4.0] },
+                WalRecord::Delete { ids: vec![1] },
+            ]
+        );
+        // Pure: the file is unchanged byte-for-byte.
+        let before = fs::read(&p).unwrap();
+        replay(&p).unwrap();
+        assert_eq!(before, fs::read(&p).unwrap());
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn torn_tail_at_every_offset_recovers_acknowledged_prefix() {
+        let d = tdir("torn");
+        let p = d.join("wal.log");
+        let mut w = Wal::create(&p).unwrap();
+        w.append(&encode_add(0, 3, &[0.5; 6])).unwrap();
+        let acked = w.bytes();
+        w.append(&encode_delete(&[0, 1, 2, 3])).unwrap();
+        let full = fs::read(&p).unwrap();
+        drop(w);
+
+        // Cut the file anywhere inside the *last* record: replay must hand
+        // back exactly the first record and flag the remainder as torn.
+        for cut in acked as usize..full.len() {
+            fs::write(&p, &full[..cut]).unwrap();
+            let r = replay(&p).unwrap();
+            assert_eq!(r.valid_bytes, acked, "cut at {cut}");
+            assert_eq!(r.torn_bytes, cut as u64 - acked, "cut at {cut}");
+            assert_eq!(r.records.len(), 1, "cut at {cut}");
+            // Owner-side recovery: truncate, then appends work again.
+            truncate_to(&p, r.valid_bytes).unwrap();
+            let mut w2 = Wal::open_append(&p, r.valid_bytes).unwrap();
+            w2.append(&encode_delete(&[9])).unwrap();
+            let r2 = replay(&p).unwrap();
+            assert_eq!(r2.records.len(), 2);
+            assert_eq!(r2.torn_bytes, 0);
+            fs::write(&p, &full).unwrap();
+        }
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn corrupt_payload_byte_is_a_torn_tail_not_garbage_rows() {
+        let d = tdir("flip");
+        let p = d.join("wal.log");
+        let mut w = Wal::create(&p).unwrap();
+        w.append(&encode_add(0, 2, &[1.0, 2.0])).unwrap();
+        drop(w);
+        let mut bytes = fs::read(&p).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        fs::write(&p, &bytes).unwrap();
+        let r = replay(&p).unwrap();
+        assert!(r.records.is_empty());
+        assert!(r.torn_bytes > 0);
+        let _ = fs::remove_dir_all(&d);
+    }
+
+    #[test]
+    fn bad_header_is_an_error() {
+        let d = tdir("hdr");
+        let p = d.join("wal.log");
+        fs::write(&p, b"NOPE\x01\x00\x00\x00").unwrap();
+        assert!(replay(&p).is_err());
+        let _ = fs::remove_dir_all(&d);
+    }
+}

@@ -104,6 +104,7 @@ pub(crate) fn to_container_bytes(idx: &DynamicIvf) -> Result<Vec<u8>> {
         sv.put_f32s(seg.vectors());
         persist::push_section(&mut file, &seg_tag(b'V', i), &sv.bytes);
     }
+    persist::finish_container(&mut file);
     Ok(file)
 }
 

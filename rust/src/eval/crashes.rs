@@ -1,0 +1,735 @@
+//! Crash-injection harness: a kill-point matrix over the durable write
+//! path. Five parts, all seeded and deterministic:
+//!
+//! - **A. ingest/checkpoint countdown sweep** — run a fixed op script
+//!   (adds, deletes, checkpoints) against a [`DurableDynamic`] copy with
+//!   the n-th crash point armed, for every n until the script survives.
+//!   The reopened store must answer queries bit-identically to a reference
+//!   state holding every acknowledged op (crashing *during* op j+1 may
+//!   legitimately recover to either side of that op — it was never acked).
+//! - **B. shard-swap countdown sweep** — same idea over a node directory's
+//!   `commit_shard`, crashing at every point of the snapshot-commit +
+//!   manifest-flip sequence.
+//! - **C. torn WAL tails** — truncate the log at (a stride of) every byte
+//!   offset; recovery must reconstruct exactly the acknowledged prefix and
+//!   disclose the torn bytes.
+//! - **D. child-process kills** (needs `exe`) — kill -9 a real `zann
+//!   crash-victim` ingest loop and a real `zann build` at seeded wall-clock
+//!   offsets, then verify recovery from the surviving files alone.
+//! - **E. boundary-torn containers** — every container prefix cut at a
+//!   section boundary must be rejected as a structured
+//!   `TruncatedContainer`, never opened.
+//!
+//! Each injection is classified [`CrashClass::Recovered`] /
+//! [`CrashClass::LostAck`] / [`CrashClass::TornOpen`] /
+//! [`CrashClass::NoRecover`]; the summary line is greppable and `ci.sh`
+//! gates on `verdict=PASS` with ≥ `min_injections` injections.
+
+use crate::api::{persist, AnnIndex, AnnScratch, QueryParams};
+use crate::datasets::{generate, Kind};
+use crate::durable::store::{apply, DurableDynamic};
+use crate::durable::{crash, node as dnode, wal};
+use crate::dynamic::{CompactionPolicy, DynamicBuildParams, DynamicIvf};
+use crate::index::{IvfBuildParams, IvfIndex};
+use crate::serve::sharded::{Router, RouterKind, ShardedBuildParams, ShardedIndex};
+use crate::util::Rng;
+use anyhow::{ensure, Context as _, Result};
+use std::path::{Path, PathBuf};
+
+/// Knobs of one crash sweep.
+pub struct CrashConfig {
+    pub seed: u64,
+    /// Path of the `zann` binary for part D's child-process kills; `None`
+    /// skips part D (unit tests; the CLI passes its own `current_exe`).
+    pub exe: Option<PathBuf>,
+    /// Kill -9 runs against the `crash-victim` ingest loop (part D).
+    pub victim_kills: usize,
+    /// Kill -9 runs against `zann build` mid-write (part D).
+    pub build_kills: usize,
+    /// Byte stride for part C's torn-tail offsets (1 = every offset).
+    pub tail_stride: usize,
+    /// The sweep fails when fewer injections than this were performed.
+    pub min_injections: usize,
+}
+
+impl Default for CrashConfig {
+    fn default() -> Self {
+        CrashConfig {
+            seed: 7,
+            exe: None,
+            victim_kills: 24,
+            build_kills: 8,
+            tail_stride: 1,
+            min_injections: 200,
+        }
+    }
+}
+
+/// What one injected crash led to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrashClass {
+    /// Reopen + replay reproduced every acknowledged write bit-identically
+    /// (and disclosed any torn tail).
+    Recovered,
+    /// An acknowledged write was missing after recovery. Always a failure.
+    LostAck,
+    /// A torn container opened successfully. Always a failure.
+    TornOpen,
+    /// The directory/file failed to reopen at all, or recovered into a
+    /// state matching no reference. Always a failure.
+    NoRecover,
+}
+
+/// Aggregated sweep result.
+#[derive(Default)]
+pub struct CrashReport {
+    pub injections: usize,
+    pub recovered: usize,
+    pub lost_ack: usize,
+    pub torn_open: usize,
+    pub no_recover: usize,
+    pub min_injections: usize,
+    /// One line per failing injection.
+    pub failures: Vec<String>,
+}
+
+impl CrashReport {
+    fn count(&mut self, what: &str, class: CrashClass) {
+        self.injections += 1;
+        match class {
+            CrashClass::Recovered => self.recovered += 1,
+            CrashClass::LostAck => self.lost_ack += 1,
+            CrashClass::TornOpen => self.torn_open += 1,
+            CrashClass::NoRecover => self.no_recover += 1,
+        }
+        if class != CrashClass::Recovered {
+            self.failures.push(format!("{what} -> {class:?}"));
+        }
+    }
+
+    pub fn passed(&self) -> bool {
+        self.lost_ack == 0
+            && self.torn_open == 0
+            && self.no_recover == 0
+            && self.injections >= self.min_injections
+    }
+
+    /// One machine-greppable line (ci.sh keys off `verdict=` and the
+    /// individual counters).
+    pub fn summary(&self) -> String {
+        format!(
+            "crash: injections={} recovered={} lost_ack={} torn_open={} no_recover={} \
+             verdict={}",
+            self.injections,
+            self.recovered,
+            self.lost_ack,
+            self.torn_open,
+            self.no_recover,
+            if self.passed() { "PASS" } else { "FAIL" },
+        )
+    }
+}
+
+/// Fixed probe workload: bit-exact (distance bits, id) signature over the
+/// dataset's query set.
+fn sig_of(idx: &dyn AnnIndex, queries: &[f32], dim: usize) -> Vec<(u32, u32)> {
+    let p = QueryParams { k: 5, nprobe: 4, ef: 16 };
+    let mut scratch = AnnScratch::default();
+    let mut out = Vec::new();
+    let mut sig = Vec::new();
+    for q in queries.chunks_exact(dim) {
+        idx.search_into(q, &p, &mut scratch, &mut out);
+        sig.extend(out.iter().map(|&(d, id)| (d.to_bits(), id)));
+    }
+    sig
+}
+
+/// Copy every regular file of `src` into a fresh `dst`.
+fn copy_dir(src: &Path, dst: &Path) -> Result<()> {
+    let _ = std::fs::remove_dir_all(dst);
+    std::fs::create_dir_all(dst)?;
+    for entry in std::fs::read_dir(src)? {
+        let p = entry?.path();
+        if p.is_file() {
+            std::fs::copy(&p, dst.join(p.file_name().context("file name")?))?;
+        }
+    }
+    Ok(())
+}
+
+/// One scripted durable-store operation (part A).
+#[derive(Clone)]
+enum Op {
+    /// Add rows `[start, end)` of the dataset (indices in rows).
+    Add(usize, usize),
+    /// Tombstone one id.
+    Del(u32),
+    /// Compact + roll the generation.
+    Ckpt,
+}
+
+fn apply_op(store: &mut DurableDynamic, ds_data: &[f32], dim: usize, op: &Op) -> Result<()> {
+    match op {
+        Op::Add(a, b) => store.add(&ds_data[a * dim..b * dim]).map(|_| ()),
+        Op::Del(id) => store.delete(*id).map(|_| ()),
+        Op::Ckpt => store.checkpoint(),
+    }
+}
+
+fn apply_op_ref(idx: &mut DynamicIvf, ds_data: &[f32], dim: usize, op: &Op) -> Result<()> {
+    match op {
+        Op::Add(a, b) => idx.add(&ds_data[a * dim..b * dim]).map(|_| ()),
+        Op::Del(id) => idx.delete(*id).map(|_| ()),
+        Op::Ckpt => idx.compact(),
+    }
+}
+
+/// Part A: arm crash point n = 0, 1, 2, ... and run the op script until a
+/// run completes with no point fired (the unarmed control). After each
+/// injected crash the reopened store must match the reference state with
+/// `completed` or `completed + 1` ops applied — anything less is lost
+/// acknowledged data, anything else is a failed recovery.
+fn sweep_dynamic_countdown(report: &mut CrashReport, root: &Path, seed: u64) -> Result<()> {
+    let ds = generate(Kind::DeepLike, 320, 8, 8, seed);
+    let dim = ds.dim;
+    let base = DynamicIvf::build(
+        &ds.data[..240 * dim],
+        dim,
+        &DynamicBuildParams {
+            ivf: IvfBuildParams { k: 4, id_codec: "roc".into(), threads: 2, ..Default::default() },
+            policy: CompactionPolicy { flush_rows: 24, auto: false, ..Default::default() },
+        },
+    )?;
+    let mut del_rng = Rng::new(seed ^ 0xdead);
+    let mut del = || del_rng.below(240) as u32;
+    let ops = vec![
+        Op::Add(240, 260),
+        Op::Del(del()),
+        Op::Del(del()),
+        Op::Add(260, 280),
+        Op::Ckpt,
+        Op::Del(del()),
+        Op::Del(del()),
+        Op::Add(280, 320),
+        Op::Ckpt,
+    ];
+
+    // Reference signatures: ref_sigs[j] = state after j ops.
+    let mut reference = base.clone();
+    let mut ref_sigs = vec![sig_of(&reference, &ds.queries, dim)];
+    for op in &ops {
+        apply_op_ref(&mut reference, &ds.data, dim, op)?;
+        ref_sigs.push(sig_of(&reference, &ds.queries, dim));
+    }
+
+    let template = root.join("dyn-template");
+    DurableDynamic::create(&template, base)?;
+
+    let work = root.join("dyn-work");
+    for nth in 0..10_000u64 {
+        copy_dir(&template, &work)?;
+        let (mut store, _) = DurableDynamic::open(&work)
+            .context("part A: clean template copy failed to open")?;
+        crash::arm(nth);
+        let mut completed = 0usize;
+        let mut failed = false;
+        for op in &ops {
+            if apply_op(&mut store, &ds.data, dim, op).is_err() {
+                failed = true;
+                break;
+            }
+            completed += 1;
+        }
+        let fired = crash::disarm();
+        drop(store);
+        match fired {
+            None => {
+                // Control run: the countdown outlived the script, so every
+                // op ran crash-free — verify and stop the sweep.
+                ensure!(!failed, "part A: op failed with no crash injected");
+                let (store, stats) = DurableDynamic::open(&work)?;
+                ensure!(stats.torn_bytes == 0, "control run left a torn tail");
+                ensure!(
+                    sig_of(store.index(), &ds.queries, dim) == ref_sigs[ops.len()],
+                    "control run diverged from the reference"
+                );
+                break;
+            }
+            Some(site) => {
+                let what = format!("ingest crash #{nth} at {site} (op {completed})");
+                let class = match DurableDynamic::open(&work) {
+                    Err(e) => {
+                        report.failures.push(format!("{what}: reopen failed: {e:#}"));
+                        CrashClass::NoRecover
+                    }
+                    Ok((store, _stats)) => {
+                        let got = sig_of(store.index(), &ds.queries, dim);
+                        if got == ref_sigs[completed]
+                            || ref_sigs.get(completed + 1) == Some(&got)
+                        {
+                            CrashClass::Recovered
+                        } else if ref_sigs[..completed].contains(&got) {
+                            CrashClass::LostAck
+                        } else {
+                            CrashClass::NoRecover
+                        }
+                    }
+                };
+                report.count(&what, class);
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&work);
+    let _ = std::fs::remove_dir_all(&template);
+    Ok(())
+}
+
+/// Part B: countdown sweep over node-directory shard swaps. The script
+/// commits a new snapshot into each of the two shards; a crash at any
+/// point must leave the directory opening into either the previous or the
+/// new generation — never a half-swapped mix.
+fn sweep_node_countdown(report: &mut CrashReport, root: &Path, seed: u64) -> Result<()> {
+    let ds = generate(Kind::DeepLike, 400, 8, 8, seed ^ 0x0de);
+    let dim = ds.dim;
+    let build = |rows: usize| -> Result<(Router, Vec<Vec<u8>>)> {
+        let sharded = ShardedIndex::build(
+            &ds.data[..rows * dim],
+            dim,
+            &ShardedBuildParams {
+                shards: 2,
+                router: RouterKind::Hash,
+                ivf: IvfBuildParams {
+                    k: 8,
+                    id_codec: "roc".into(),
+                    threads: 2,
+                    ..Default::default()
+                },
+            },
+        )?;
+        let (router, shards, id_maps, _) = sharded.into_parts();
+        let mut snaps = Vec::new();
+        for (shard, map) in shards.into_iter().zip(id_maps) {
+            let one = ShardedIndex::from_parts(
+                Router::Hash { seed: 0 },
+                vec![shard],
+                vec![map],
+                dim,
+                true,
+            )?;
+            snaps.push(one.to_bytes()?);
+        }
+        Ok((router, snaps))
+    };
+    let (router, old_snaps) = build(300)?;
+    let (_, new_snaps) = build(400)?;
+
+    let template = root.join("node-template");
+    dnode::init_node_dir(&template, &router, dim, &old_snaps)?;
+
+    // Reference signatures after 0, 1, 2 completed commits.
+    let work = root.join("node-work");
+    let mut ref_sigs = Vec::new();
+    copy_dir(&template, &work)?;
+    let probe = |dir: &Path| -> Result<Vec<(u32, u32)>> {
+        let (idx, _) = dnode::open_node_dir(dir)?;
+        Ok(sig_of(&idx, &ds.queries, dim))
+    };
+    ref_sigs.push(probe(&work)?);
+    dnode::commit_shard(&work, 0, &new_snaps[0])?;
+    ref_sigs.push(probe(&work)?);
+    dnode::commit_shard(&work, 1, &new_snaps[1])?;
+    ref_sigs.push(probe(&work)?);
+
+    for nth in 0..10_000u64 {
+        copy_dir(&template, &work)?;
+        crash::arm(nth);
+        let mut completed = 0usize;
+        for (s, snap) in new_snaps.iter().enumerate() {
+            if dnode::commit_shard(&work, s, snap).is_err() {
+                break;
+            }
+            completed += 1;
+        }
+        let fired = crash::disarm();
+        match fired {
+            None => {
+                ensure!(completed == 2, "part B: commit failed with no crash injected");
+                ensure!(
+                    probe(&work)? == ref_sigs[2],
+                    "part B: control run diverged from the reference"
+                );
+                break;
+            }
+            Some(site) => {
+                let what = format!("swap crash #{nth} at {site} (commit {completed})");
+                let class = match probe(&work) {
+                    Err(e) => {
+                        report.failures.push(format!("{what}: reopen failed: {e:#}"));
+                        CrashClass::NoRecover
+                    }
+                    Ok(got) => {
+                        if got == ref_sigs[completed]
+                            || ref_sigs.get(completed + 1) == Some(&got)
+                        {
+                            CrashClass::Recovered
+                        } else if ref_sigs[..completed].contains(&got) {
+                            CrashClass::LostAck
+                        } else {
+                            CrashClass::NoRecover
+                        }
+                    }
+                };
+                report.count(&what, class);
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&work);
+    let _ = std::fs::remove_dir_all(&template);
+    Ok(())
+}
+
+/// Part C: truncate the WAL at every `tail_stride`-th byte offset. Recovery
+/// must reproduce exactly the acknowledged records whose frames survived
+/// whole, and disclose the rest as torn bytes.
+fn sweep_torn_tails(
+    report: &mut CrashReport,
+    root: &Path,
+    seed: u64,
+    stride: usize,
+) -> Result<()> {
+    let ds = generate(Kind::DeepLike, 252, 8, 8, seed ^ 0x7ea);
+    let dim = ds.dim;
+    let base = DynamicIvf::build(
+        &ds.data[..240 * dim],
+        dim,
+        &DynamicBuildParams {
+            ivf: IvfBuildParams { k: 4, id_codec: "roc".into(), threads: 2, ..Default::default() },
+            policy: CompactionPolicy { flush_rows: 64, auto: false, ..Default::default() },
+        },
+    )?;
+    let template = root.join("tail-template");
+    let mut store = DurableDynamic::create(&template, base.clone())?;
+    store.add(&ds.data[240 * dim..246 * dim])?;
+    store.delete(3)?;
+    store.add(&ds.data[246 * dim..252 * dim])?;
+    drop(store);
+
+    // Frame boundaries of the intact WAL (cut exactly there = clean log).
+    let wal_path = template.join("wal-0.log");
+    let wal_bytes = std::fs::read(&wal_path)?;
+    let mut boundaries = vec![wal::WAL_HEADER as usize];
+    let mut pos = wal::WAL_HEADER as usize;
+    while pos < wal_bytes.len() {
+        let len = u32::from_le_bytes(wal_bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 8 + len;
+        boundaries.push(pos);
+    }
+    ensure!(pos == wal_bytes.len(), "part C: walked past the WAL end");
+    let records = wal::replay(&wal_path)?.records;
+    ensure!(records.len() + 1 == boundaries.len(), "part C: frame walk disagrees with replay");
+
+    // Reference signature with the first r records applied.
+    let mut ref_sigs = Vec::new();
+    let mut reference = base;
+    ref_sigs.push(sig_of(&reference, &ds.queries, dim));
+    for rec in &records {
+        apply(&mut reference, rec)?;
+        ref_sigs.push(sig_of(&reference, &ds.queries, dim));
+    }
+
+    let work = root.join("tail-work");
+    for cut in (wal::WAL_HEADER as usize..=wal_bytes.len()).step_by(stride.max(1)) {
+        copy_dir(&template, &work)?;
+        std::fs::write(work.join("wal-0.log"), &wal_bytes[..cut])?;
+        let acked = boundaries.iter().filter(|&&b| b <= cut).count() - 1;
+        let torn = cut - boundaries[acked];
+        let what = format!("torn wal tail at byte {cut}/{}", wal_bytes.len());
+        let class = match DurableDynamic::open(&work) {
+            Err(e) => {
+                report.failures.push(format!("{what}: reopen failed: {e:#}"));
+                CrashClass::NoRecover
+            }
+            Ok((store, stats)) => {
+                if stats.replayed_records != acked || stats.torn_bytes != torn as u64 {
+                    report.failures.push(format!(
+                        "{what}: recovery reported {} records / {} torn bytes, \
+                         expected {acked} / {torn}",
+                        stats.replayed_records, stats.torn_bytes
+                    ));
+                    CrashClass::NoRecover
+                } else {
+                    let got = sig_of(store.index(), &ds.queries, dim);
+                    if got == ref_sigs[acked] {
+                        CrashClass::Recovered
+                    } else if ref_sigs[..acked].contains(&got) {
+                        CrashClass::LostAck
+                    } else {
+                        CrashClass::NoRecover
+                    }
+                }
+            }
+        };
+        report.count(&what, class);
+    }
+    let _ = std::fs::remove_dir_all(&work);
+    let _ = std::fs::remove_dir_all(&template);
+    Ok(())
+}
+
+/// Part E: cut real containers at every section boundary; each prefix has
+/// flawless per-section framing, so only the v3 terminator stands between
+/// a torn file and a successful open.
+fn sweep_boundary_truncations(report: &mut CrashReport, seed: u64) -> Result<()> {
+    let ds = generate(Kind::DeepLike, 300, 4, 8, seed ^ 0xb0d);
+    let ivf = IvfIndex::build(
+        &ds.data,
+        ds.dim,
+        &IvfBuildParams { k: 8, id_codec: "roc".into(), threads: 2, ..Default::default() },
+    );
+    let dynamic = DynamicIvf::build(
+        &ds.data,
+        ds.dim,
+        &DynamicBuildParams {
+            ivf: IvfBuildParams { k: 6, id_codec: "roc".into(), threads: 2, ..Default::default() },
+            policy: CompactionPolicy::default(),
+        },
+    )?;
+    let sharded = ShardedIndex::build(
+        &ds.data,
+        ds.dim,
+        &ShardedBuildParams {
+            shards: 2,
+            router: RouterKind::Hash,
+            ivf: IvfBuildParams { k: 8, id_codec: "roc".into(), threads: 2, ..Default::default() },
+        },
+    )?;
+    let files: Vec<(&str, Vec<u8>)> = vec![
+        ("ivf", ivf.to_container_bytes()?),
+        ("dynamic", dynamic.to_bytes()?),
+        ("sharded", sharded.to_bytes()?),
+    ];
+    for (name, bytes) in files {
+        let mut pos = 8usize;
+        while pos < bytes.len() {
+            let what = format!("{name} container cut at section boundary {pos}/{}", bytes.len());
+            let class = match persist::open_bytes(bytes[..pos].to_vec()) {
+                Ok(_) => CrashClass::TornOpen,
+                Err(e) if persist::is_truncated(&e) => CrashClass::Recovered,
+                Err(e) => {
+                    report
+                        .failures
+                        .push(format!("{what}: unstructured rejection: {e:#}"));
+                    CrashClass::NoRecover
+                }
+            };
+            report.count(&what, class);
+            let len = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap()) as usize;
+            let len_hi = u32::from_le_bytes(bytes[pos + 8..pos + 12].try_into().unwrap());
+            ensure!(len_hi == 0, "part E: section at {pos} longer than 4 GiB?");
+            pos += 12 + len + 4;
+        }
+        ensure!(pos == bytes.len(), "part E: {name} section walk misaligned");
+    }
+    Ok(())
+}
+
+/// Part D1: kill -9 a real `zann crash-victim` ingest loop at a seeded
+/// wall-clock offset, then recover and compare against a reference built
+/// from the acknowledged batches alone.
+fn sweep_victim_kills(
+    report: &mut CrashReport,
+    root: &Path,
+    exe: &Path,
+    seed: u64,
+    kills: usize,
+) -> Result<()> {
+    let ds = generate(Kind::DeepLike, 240, 8, 8, seed ^ 0x514);
+    let dim = ds.dim;
+    let rows_per_batch = 8usize;
+    let base = DynamicIvf::build(
+        &ds.data,
+        dim,
+        &DynamicBuildParams {
+            ivf: IvfBuildParams { k: 4, id_codec: "roc".into(), threads: 2, ..Default::default() },
+            policy: CompactionPolicy { flush_rows: 64, auto: false, ..Default::default() },
+        },
+    )?;
+    let base_next = base.next_id();
+    let template = root.join("victim-template");
+    DurableDynamic::create(&template, base.clone())?;
+
+    let mut rng = Rng::new(seed ^ 0x6b11);
+    let work = root.join("victim-work");
+    for ki in 0..kills {
+        copy_dir(&template, &work)?;
+        let victim_seed = seed.wrapping_add(ki as u64);
+        let mut child = std::process::Command::new(exe)
+            .arg("crash-victim")
+            .arg(&work)
+            .args(["--seed", &victim_seed.to_string()])
+            .args(["--rows", &rows_per_batch.to_string()])
+            .args(["--batches", "512"])
+            .args(["--checkpoint-every", "16"])
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .context("spawn crash-victim")?;
+        let delay_ms = 1 + rng.below(40);
+        std::thread::sleep(std::time::Duration::from_millis(delay_ms));
+        let _ = child.kill();
+        let output = child.wait_with_output().context("wait for crash-victim")?;
+        let acked = String::from_utf8_lossy(&output.stdout)
+            .lines()
+            .filter(|l| l.starts_with("ack "))
+            .count();
+
+        let what = format!("kill -9 crash-victim #{ki} after {delay_ms}ms ({acked} acked)");
+        let class = match DurableDynamic::open(&work) {
+            Err(e) => {
+                report.failures.push(format!("{what}: reopen failed: {e:#}"));
+                CrashClass::NoRecover
+            }
+            Ok((store, _)) => {
+                let grew = store.index().next_id() - base_next;
+                if grew as usize % rows_per_batch != 0 {
+                    report.failures.push(format!(
+                        "{what}: {grew} recovered rows is a partial batch"
+                    ));
+                    CrashClass::LostAck
+                } else {
+                    let batches = grew as usize / rows_per_batch;
+                    if batches < acked {
+                        report.failures.push(format!(
+                            "{what}: only {batches} batches survived, {acked} were acked"
+                        ));
+                        CrashClass::LostAck
+                    } else {
+                        // Reference: the template index plus the recovered
+                        // number of seeded batches, no compaction (search
+                        // parity is segmentation-independent).
+                        let mut reference = base.clone();
+                        for b in 0..batches {
+                            reference.add(&victim_rows(victim_seed, b, rows_per_batch, dim))?;
+                        }
+                        if sig_of(store.index(), &ds.queries, dim)
+                            == sig_of(&reference, &ds.queries, dim)
+                        {
+                            CrashClass::Recovered
+                        } else {
+                            report.failures.push(format!(
+                                "{what}: recovered state diverges from the acked batches"
+                            ));
+                            CrashClass::NoRecover
+                        }
+                    }
+                }
+            }
+        };
+        report.count(&what, class);
+    }
+    let _ = std::fs::remove_dir_all(&work);
+    let _ = std::fs::remove_dir_all(&template);
+    Ok(())
+}
+
+/// Deterministic rows for `crash-victim` batch `b` — shared between the
+/// victim process (which writes them) and the harness (which rebuilds the
+/// reference), so both sides agree byte-for-byte.
+pub fn victim_rows(seed: u64, batch: usize, rows: usize, dim: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ (batch as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    (0..rows * dim).map(|_| rng.normal()).collect()
+}
+
+/// Part D2: kill -9 a real `zann build` mid-write; the destination file
+/// must keep opening (old bytes before the rename, new bytes after).
+fn sweep_build_kills(
+    report: &mut CrashReport,
+    root: &Path,
+    exe: &Path,
+    seed: u64,
+    kills: usize,
+) -> Result<()> {
+    let out = root.join("victim.zann");
+    let ds = generate(Kind::DeepLike, 500, 1, 8, seed ^ 0xb1d);
+    let seeded = IvfIndex::build(
+        &ds.data,
+        ds.dim,
+        &IvfBuildParams { k: 8, id_codec: "roc".into(), threads: 2, ..Default::default() },
+    );
+    persist::save(&seeded, &out)?;
+
+    let mut rng = Rng::new(seed ^ 0xbadbeef);
+    for ki in 0..kills {
+        let mut child = std::process::Command::new(exe)
+            .args(["build", "--out"])
+            .arg(&out)
+            .args(["--backend", "ivf", "--codec", "roc", "--n", "3000", "--dim", "8"])
+            .args(["--k", "16"])
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .context("spawn zann build")?;
+        let delay_ms = 5 + rng.below(120);
+        std::thread::sleep(std::time::Duration::from_millis(delay_ms));
+        let _ = child.kill();
+        let _ = child.wait();
+        let what = format!("kill -9 zann build #{ki} after {delay_ms}ms");
+        let class = match persist::open(&out) {
+            Ok(_) => CrashClass::Recovered,
+            Err(e) => {
+                report.failures.push(format!("{what}: {e:#}"));
+                CrashClass::TornOpen
+            }
+        };
+        report.count(&what, class);
+    }
+    Ok(())
+}
+
+/// Run every part of the crash matrix (see module docs).
+pub fn run_crash_sweep(cfg: &CrashConfig) -> Result<CrashReport> {
+    let tag = format!("zann-crash-{}-{:x}", std::process::id(), cfg.seed);
+    let root = std::env::temp_dir().join(tag);
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root)?;
+
+    let mut report = CrashReport { min_injections: cfg.min_injections, ..Default::default() };
+    sweep_dynamic_countdown(&mut report, &root, cfg.seed)?;
+    sweep_node_countdown(&mut report, &root, cfg.seed)?;
+    sweep_torn_tails(&mut report, &root, cfg.seed, cfg.tail_stride)?;
+    sweep_boundary_truncations(&mut report, cfg.seed)?;
+    if let Some(exe) = &cfg.exe {
+        sweep_victim_kills(&mut report, &root, exe, cfg.seed, cfg.victim_kills)?;
+        sweep_build_kills(&mut report, &root, exe, cfg.seed, cfg.build_kills)?;
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crash_sweep_recovers_everything() {
+        // Stride 5 keeps the torn-tail scan quick; the CLI gate runs
+        // stride 1 with child-process kills on top.
+        let cfg = CrashConfig {
+            seed: 13,
+            tail_stride: 5,
+            min_injections: 100,
+            ..Default::default()
+        };
+        let rep = run_crash_sweep(&cfg).unwrap();
+        assert!(
+            rep.passed(),
+            "crash sweep failed: {}\n{}",
+            rep.summary(),
+            rep.failures.join("\n")
+        );
+        assert!(rep.injections >= 100, "{}", rep.summary());
+        assert_eq!(rep.recovered, rep.injections, "{}", rep.summary());
+        assert!(rep.summary().contains("verdict=PASS"));
+    }
+}

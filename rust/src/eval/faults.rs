@@ -8,18 +8,21 @@
 
 use crate::api::{persist, AnnIndex, AnnScratch, GraphIndex, QueryParams};
 use crate::datasets::{generate, Kind};
+use crate::durable::store::DurableDynamic;
 use crate::dynamic::{CompactionPolicy, DynamicBuildParams, DynamicIvf};
 use crate::graph::hnsw::{Hnsw, HnswParams};
 use crate::graph::nsg::{Nsg, NsgParams};
 use crate::index::{IvfBuildParams, IvfIndex, VectorMode};
+use crate::serve::sharded::{Router, RouterKind, ShardedBuildParams, ShardedIndex};
 use crate::util::Rng;
 use anyhow::{ensure, Context as _, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::time::Duration;
 
-/// Knobs of one sweep. Defaults give 13 targets × 40 mutants = 520
-/// seeded corruptions, each bounded by `timeout`.
+/// Knobs of one sweep. Defaults give (15 file + 2 directory) targets × 40
+/// mutants = 680 seeded corruptions, each bounded by `timeout`.
 pub struct ChaosConfig {
     pub seed: u64,
     pub mutations_per_target: usize,
@@ -163,14 +166,90 @@ pub fn build_targets(seed: u64) -> Result<Vec<(String, Vec<u8>)>> {
     dynamic.add(&ds.data[200 * ds.dim..])?;
     out.push(("dynamic/roc".into(), dynamic.to_bytes()?));
 
+    // Sharded (kind 4) containers: routing header + embedded per-shard
+    // containers + id maps, under both router families.
+    for (label, router) in
+        [("sharded-hash/roc", RouterKind::Hash), ("sharded-kmeans/roc", RouterKind::Kmeans)]
+    {
+        let sharded = ShardedIndex::build(
+            &ds.data,
+            ds.dim,
+            &ShardedBuildParams {
+                shards: 2,
+                router,
+                ivf: IvfBuildParams {
+                    k: 8,
+                    id_codec: "roc".into(),
+                    threads: 2,
+                    ..Default::default()
+                },
+            },
+        )?;
+        out.push((label.to_string(), sharded.to_bytes()?));
+    }
+
     Ok(out)
 }
 
-/// Open a container and answer a fixed seeded probe workload; the
-/// returned signature is bit-exact ((distance bits, id) per rank), so
-/// any observable behavior change against the clean baseline shows up.
-fn probe(bytes: Vec<u8>) -> Result<Vec<(u32, u32)>> {
-    let idx = persist::open_bytes(bytes)?;
+/// Durable *directory* targets (a dynamic store and a sharded node dir),
+/// built under `root`. Complements [`build_targets`]: here the mutation
+/// surface is the multi-file layout — manifest, WAL, router, per-shard
+/// containers — rather than one container's bytes.
+pub fn build_dir_targets(seed: u64, root: &Path) -> Result<Vec<(String, PathBuf)>> {
+    let ds = generate(Kind::DeepLike, 300, 4, 8, seed);
+    let mut out = Vec::new();
+
+    // Dynamic store: checkpointed base plus live WAL records (adds and
+    // deletes) so every recovery surface is present on disk.
+    let idx = DynamicIvf::build(
+        &ds.data[..200 * ds.dim],
+        ds.dim,
+        &DynamicBuildParams {
+            ivf: IvfBuildParams { k: 6, id_codec: "roc".into(), threads: 2, ..Default::default() },
+            policy: CompactionPolicy { flush_rows: 50, auto: false, ..Default::default() },
+        },
+    )?;
+    let dyn_dir = root.join("dynamic-store");
+    let mut store = DurableDynamic::create(&dyn_dir, idx)?;
+    store.add(&ds.data[200 * ds.dim..280 * ds.dim])?;
+    let mut rng = Rng::new(seed ^ 0xd1e5);
+    for id in rng.sample_distinct(200, 20) {
+        store.delete(id as u32)?;
+    }
+    store.add(&ds.data[280 * ds.dim..])?;
+    drop(store);
+    out.push(("durable-dynamic-dir/roc".to_string(), dyn_dir));
+
+    // Node directory: router file + two single-shard snapshot containers
+    // behind a manifest, assembled exactly like `ServeNode::save_dir`.
+    let sharded = ShardedIndex::build(
+        &ds.data,
+        ds.dim,
+        &ShardedBuildParams {
+            shards: 2,
+            router: RouterKind::Hash,
+            ivf: IvfBuildParams { k: 8, id_codec: "roc".into(), threads: 2, ..Default::default() },
+        },
+    )?;
+    let dim = ds.dim;
+    let (router, shards, id_maps, _) = sharded.into_parts();
+    let mut snaps = Vec::with_capacity(shards.len());
+    for (shard, map) in shards.into_iter().zip(id_maps) {
+        let single =
+            ShardedIndex::from_parts(Router::Hash { seed: 0 }, vec![shard], vec![map], dim, true)?;
+        snaps.push(single.to_bytes()?);
+    }
+    let node_dir = root.join("node-dir");
+    crate::durable::node::init_node_dir(&node_dir, &router, dim, &snaps)?;
+    out.push(("durable-node-dir/roc".to_string(), node_dir));
+
+    Ok(out)
+}
+
+/// Answer a fixed seeded probe workload on an opened index; the returned
+/// signature is bit-exact ((distance bits, id) per rank), so any
+/// observable behavior change against the clean baseline shows up.
+fn probe_signature(idx: &dyn AnnIndex) -> Vec<(u32, u32)> {
     let dim = idx.dim();
     let p = QueryParams { k: 5, nprobe: 4, ef: 16 };
     let mut rng = Rng::new(123);
@@ -182,7 +261,34 @@ fn probe(bytes: Vec<u8>) -> Result<Vec<(u32, u32)>> {
         idx.search_into(&q, &p, &mut scratch, &mut out);
         sig.extend(out.iter().map(|&(d, id)| (d.to_bits(), id)));
     }
-    Ok(sig)
+    sig
+}
+
+/// Open a container and probe it.
+fn probe(bytes: Vec<u8>) -> Result<Vec<(u32, u32)>> {
+    let idx = persist::open_bytes(bytes)?;
+    Ok(probe_signature(idx.as_ref()))
+}
+
+/// Open a durable dynamic directory and probe it. Recovery that *discloses*
+/// an anomaly — a torn WAL tail, or a replayed-record count different from
+/// the clean directory's — is an error here (counted `Detected`): the store
+/// surfaced the damage instead of silently serving a diverged index.
+fn probe_dynamic_dir(dir: &Path, expect_records: usize) -> Result<Vec<(u32, u32)>> {
+    let (store, stats) = DurableDynamic::open(dir)?;
+    ensure!(stats.torn_bytes == 0, "recovery disclosed {} torn wal bytes", stats.torn_bytes);
+    ensure!(
+        stats.replayed_records == expect_records,
+        "recovery disclosed {} replayed records (expected {expect_records})",
+        stats.replayed_records
+    );
+    Ok(probe_signature(store.index()))
+}
+
+/// Open a durable node directory and probe it.
+fn probe_node_dir(dir: &Path) -> Result<Vec<(u32, u32)>> {
+    let (idx, _generation) = crate::durable::node::open_node_dir(dir)?;
+    Ok(probe_signature(&idx))
 }
 
 /// One seeded corruption of `base`; returns the mutant + a description.
@@ -230,14 +336,17 @@ fn mutate(rng: &mut Rng, base: &[u8]) -> (Vec<u8>, String) {
     }
 }
 
-/// Open + probe one mutant on a watchdog thread: a panic is `Crash`, a
+/// Run one probe closure on a watchdog thread: a panic is `Crash`, a
 /// structured error is `Detected`, exceeding `timeout` is `Hang` (the
 /// stuck thread is abandoned — this is a test harness, not a server).
-fn run_guarded(bytes: Vec<u8>, baseline: &[(u32, u32)], timeout: Duration) -> Outcome {
+fn run_guarded_with<F>(f: F, baseline: &[(u32, u32)], timeout: Duration) -> Outcome
+where
+    F: FnOnce() -> Result<Vec<(u32, u32)>> + Send + 'static,
+{
     let (tx, rx) = mpsc::channel();
     let base = baseline.to_vec();
     std::thread::spawn(move || {
-        let outcome = match catch_unwind(AssertUnwindSafe(|| probe(bytes))) {
+        let outcome = match catch_unwind(AssertUnwindSafe(f)) {
             Err(_) => Outcome::Crash,
             Ok(Err(_)) => Outcome::Detected,
             Ok(Ok(sig)) => {
@@ -251,6 +360,11 @@ fn run_guarded(bytes: Vec<u8>, baseline: &[(u32, u32)], timeout: Duration) -> Ou
         let _ = tx.send(outcome);
     });
     rx.recv_timeout(timeout).unwrap_or(Outcome::Hang)
+}
+
+/// Open + probe one mutated container (see [`run_guarded_with`]).
+fn run_guarded(bytes: Vec<u8>, baseline: &[(u32, u32)], timeout: Duration) -> Outcome {
+    run_guarded_with(move || probe(bytes), baseline, timeout)
 }
 
 /// Run the full sweep: every target container, `mutations_per_target`
@@ -271,6 +385,69 @@ pub fn run_chaos_sweep(cfg: &ChaosConfig) -> Result<FaultReport> {
             report.count(name, &desc, outcome);
         }
     }
+
+    // Directory targets: corrupt one manifest-reachable file at a time,
+    // probe the reopened directory, then restore the original bytes.
+    let root = std::env::temp_dir()
+        .join(format!("zann-chaos-{}-{:x}", std::process::id(), cfg.seed));
+    let _ = std::fs::remove_dir_all(&root);
+    let dir_targets = build_dir_targets(cfg.seed, &root)?;
+    report.targets += dir_targets.len();
+    for (ti, (name, dir)) in dir_targets.iter().enumerate() {
+        let is_dynamic = name.starts_with("durable-dynamic");
+        // The clean directory's replayed-record count anchors the
+        // "disclosed loss" check in `probe_dynamic_dir`.
+        let expect_records = if is_dynamic {
+            let (_, stats) = DurableDynamic::open(dir)
+                .with_context(|| format!("{name}: clean dir failed to open"))?;
+            stats.replayed_records
+        } else {
+            0
+        };
+        let baseline = if is_dynamic {
+            probe_dynamic_dir(dir, expect_records)
+        } else {
+            probe_node_dir(dir)
+        }
+        .with_context(|| format!("{name}: clean dir failed its own probe"))?;
+
+        let mut files: Vec<PathBuf> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.is_file())
+            .collect();
+        files.sort();
+        ensure!(!files.is_empty(), "{name}: directory target has no files");
+        let mut rng = Rng::new(
+            cfg.seed.wrapping_mul(0x51ed_2705).wrapping_add((1000 + ti) as u64),
+        );
+        for _ in 0..cfg.mutations_per_target {
+            let victim = files[rng.below(files.len() as u64) as usize].clone();
+            let orig = std::fs::read(&victim)?;
+            let (mutant, mdesc) = mutate(&mut rng, &orig);
+            std::fs::write(&victim, &mutant)?;
+            let desc = format!(
+                "{} in {}",
+                mdesc,
+                victim.file_name().unwrap_or_default().to_string_lossy()
+            );
+            let probe_dir = dir.clone();
+            let outcome = run_guarded_with(
+                move || {
+                    if is_dynamic {
+                        probe_dynamic_dir(&probe_dir, expect_records)
+                    } else {
+                        probe_node_dir(&probe_dir)
+                    }
+                },
+                &baseline,
+                cfg.timeout,
+            );
+            std::fs::write(&victim, &orig)?;
+            report.count(name, &desc, outcome);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&root);
     Ok(report)
 }
 
@@ -284,7 +461,11 @@ mod tests {
         // runs the full default sweep.
         let cfg = ChaosConfig { seed: 11, mutations_per_target: 6, ..Default::default() };
         let rep = run_chaos_sweep(&cfg).unwrap();
-        assert!(rep.targets >= 13, "expected the full codec × backend zoo, got {}", rep.targets);
+        assert!(
+            rep.targets >= 17,
+            "expected the codec × backend zoo plus sharded + directory targets, got {}",
+            rep.targets
+        );
         assert_eq!(rep.mutations, rep.targets * 6);
         assert!(
             rep.passed(),

@@ -6,6 +6,7 @@
 
 pub mod experiments;
 pub mod bench_entries;
+pub mod crashes;
 pub mod faults;
 pub mod recall;
 pub mod workload;

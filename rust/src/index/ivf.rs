@@ -785,6 +785,7 @@ impl IvfIndex {
                 persist::push_section(&mut file, b"PCBL", columns.payload());
             }
         }
+        persist::finish_container(&mut file);
         Ok(file)
     }
 

@@ -112,6 +112,7 @@ pub mod dynamic;
 pub mod graph;
 pub mod runtime;
 pub mod api;
+pub mod durable;
 pub mod coordinator;
 pub mod serve;
 pub mod eval;

@@ -43,6 +43,13 @@
 //!                         prove each one is detected (no panic, hang,
 //!                         or silently wrong answer); exits non-zero
 //!                         on any escape
+//!   inject-crashes      — durability gate: kill-point matrix over WAL
+//!                         ingest, checkpoints, shard swaps, atomic
+//!                         commits, torn WAL tails and boundary-torn
+//!                         containers (plus real kill -9 runs); every
+//!                         injection must recover all acknowledged
+//!                         writes bit-identically; exits non-zero on
+//!                         any loss
 //!   metrics             — run a small self-contained serving workload
 //!                         and print the observability registry
 //!                         (Prometheus text format, or JSON with --json)
@@ -95,6 +102,9 @@ fn main() {
         "serve" => serve_cmd(&args),
         "serve-demo" => serve_demo(&args),
         "inject-faults" => inject_faults_cmd(&args),
+        "inject-crashes" => inject_crashes_cmd(&args),
+        // Hidden helper: the crash harness's child-process ingest victim.
+        "crash-victim" => crash_victim_cmd(&args),
         "metrics" => metrics_cmd(&args),
         "bench-obs" => bench_entries::obs(&args),
         _ => {
@@ -109,7 +119,9 @@ fn main() {
                  serve PATH [--deadline-ms MS] [--queue-depth N] [--metrics-json PATH]\n\
                  \u{20}\u{20}[--metrics-prom PATH] [--trace-dump PATH]|\n\
                  serve-demo|metrics [--json] [--out PATH]|\n\
-                 inject-faults [--seed S] [--mutations M] [--timeout-ms MS]>\n\
+                 inject-faults [--seed S] [--mutations M] [--timeout-ms MS]|\n\
+                 inject-crashes [--seed S] [--tail-stride T] [--min-injections N]\n\
+                 \u{20}\u{20}[--victim-kills K] [--build-kills K]>\n\
                  [--n N] [--dataset sift|deep|ssnpp] [--codec NAME] ..."
             );
         }
@@ -576,7 +588,13 @@ fn info_cmd(args: &Args) {
     };
     let json = args.bool("json");
     if Path::new(&path).is_dir() {
-        return info_dir(Path::new(&path), json);
+        let dir = Path::new(&path);
+        // A durable directory (MANIFEST present) is reported through its
+        // manifest — WAL state included — never by opening every file.
+        if zann::durable::manifest::is_durable_dir(dir) {
+            return info_durable_dir(dir, json);
+        }
+        return info_dir(dir, json);
     }
     let file_bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
     let buf = match std::fs::read(&path) {
@@ -710,6 +728,138 @@ fn info_dir(dir: &Path, json: bool) {
     for (s, (p, st)) in shards.iter().enumerate() {
         print!("shard {s} ({}): ", p.file_name().unwrap_or_default().to_string_lossy());
         print_stats(st, std::fs::metadata(p).map(|m| m.len()).ok());
+    }
+}
+
+/// Total size of the regular files in `dir` (best-effort, for the
+/// `file_bytes` column of a durable-directory report).
+fn dir_bytes(dir: &Path) -> u64 {
+    std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter_map(|e| e.metadata().ok())
+                .filter(|m| m.is_file())
+                .map(|m| m.len())
+                .sum()
+        })
+        .unwrap_or(0)
+}
+
+/// `zann info` on a durable directory: report strictly through the
+/// manifest. A dynamic store additionally reports its WAL — size and the
+/// pending (not yet checkpointed) records that a restart would replay —
+/// without mutating anything on disk.
+fn info_durable_dir(dir: &Path, json: bool) {
+    use zann::durable::manifest::Manifest;
+    use zann::durable::{node as durable_node, store, wal};
+    let m = match Manifest::load(dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("info: {}: {e:?}", dir.display());
+            std::process::exit(1);
+        }
+    };
+    match m.get("kind") {
+        Some(store::KIND_DYNAMIC_DIR) => {
+            let (base, wal_file) = match (m.get("base"), m.get("wal")) {
+                (Some(b), Some(w)) => (b, w),
+                _ => {
+                    eprintln!("info: {}: manifest missing base/wal entries", dir.display());
+                    std::process::exit(1);
+                }
+            };
+            let mut index = match persist::open_dynamic(&dir.join(base)) {
+                Ok(i) => i,
+                Err(e) => {
+                    eprintln!("info: {}: {e:?}", dir.display());
+                    std::process::exit(1);
+                }
+            };
+            let replayed = match wal::replay(&dir.join(wal_file)) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("info: {}: {e:?}", dir.display());
+                    std::process::exit(1);
+                }
+            };
+            let (mut pending_rows, mut pending_deletes) = (0usize, 0usize);
+            for rec in &replayed.records {
+                if let Err(e) = store::apply(&mut index, rec) {
+                    eprintln!("info: {}: {e:?}", dir.display());
+                    std::process::exit(1);
+                }
+                match rec {
+                    wal::WalRecord::Add { dim, rows, .. } => {
+                        pending_rows += rows.len() / *dim as usize
+                    }
+                    wal::WalRecord::Delete { ids } => pending_deletes += ids.len(),
+                }
+            }
+            let wal_bytes = replayed.valid_bytes + replayed.torn_bytes;
+            if json {
+                println!(
+                    "{{\"durable\": {{\"kind\": \"dynamic\", \"generation\": {}, \
+                     \"wal_bytes\": {}, \"pending_records\": {}, \"pending_rows\": {}, \
+                     \"pending_deletes\": {}, \"torn_bytes\": {}}}, \"stats\": {}}}",
+                    m.generation,
+                    wal_bytes,
+                    replayed.records.len(),
+                    pending_rows,
+                    pending_deletes,
+                    replayed.torn_bytes,
+                    stats_json(&AnnIndex::stats(&index), Some(dir_bytes(dir))),
+                );
+                return;
+            }
+            print_stats(&AnnIndex::stats(&index), Some(dir_bytes(dir)));
+            println!(
+                "durable kind=dynamic generation={} wal_bytes={} pending_records={} \
+                 pending_rows={} pending_deletes={} torn_bytes={}",
+                m.generation,
+                wal_bytes,
+                replayed.records.len(),
+                pending_rows,
+                pending_deletes,
+                replayed.torn_bytes,
+            );
+        }
+        Some(durable_node::KIND_NODE_DIR) => {
+            let (idx, generation) = match durable_node::open_node_dir(dir) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("info: {}: {e:?}", dir.display());
+                    std::process::exit(1);
+                }
+            };
+            if json {
+                let shards: Vec<String> =
+                    idx.shard_stats().iter().map(|st| stats_json(st, None)).collect();
+                println!(
+                    "{{\"durable\": {{\"kind\": \"node\", \"generation\": {generation}}}, \
+                     \"router\": \"{}\", \"num_shards\": {}, \"aggregate\": {}, \
+                     \"shards\": [{}]}}",
+                    idx.router().kind_name(),
+                    idx.num_shards(),
+                    stats_json(&AnnIndex::stats(&idx), Some(dir_bytes(dir))),
+                    shards.join(", "),
+                );
+                return;
+            }
+            print_stats(&AnnIndex::stats(&idx), Some(dir_bytes(dir)));
+            println!(
+                "durable kind=node generation={generation} router={} shards={}",
+                idx.router().kind_name(),
+                idx.num_shards()
+            );
+            for (s, st) in idx.shard_stats().iter().enumerate() {
+                print!("shard {s}: ");
+                print_stats(st, None);
+            }
+        }
+        other => {
+            eprintln!("info: {}: unknown durable kind {:?}", dir.display(), other);
+            std::process::exit(1);
+        }
     }
 }
 
@@ -1023,5 +1173,118 @@ fn inject_faults_cmd(args: &Args) {
             eprintln!("inject-faults: ESCAPE {f}");
         }
         std::process::exit(1);
+    }
+}
+
+fn inject_crashes_cmd(args: &Args) {
+    let cfg = zann::eval::crashes::CrashConfig {
+        seed: args.u64("seed", 7),
+        // Kill -9 children are `zann crash-victim` / `zann build` runs of
+        // this very binary.
+        exe: std::env::current_exe().ok(),
+        victim_kills: args.usize("victim-kills", 24),
+        build_kills: args.usize("build-kills", 8),
+        tail_stride: args.usize("tail-stride", 1),
+        min_injections: args.usize("min-injections", 200),
+    };
+    println!(
+        "inject-crashes: seed={} tail_stride={} victim_kills={} build_kills={} \
+         min_injections={}",
+        cfg.seed, cfg.tail_stride, cfg.victim_kills, cfg.build_kills, cfg.min_injections
+    );
+    let report = match zann::eval::crashes::run_crash_sweep(&cfg) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("inject-crashes: sweep could not run: {e:?}");
+            std::process::exit(1);
+        }
+    };
+    println!("{}", report.summary());
+    if !report.passed() {
+        for f in &report.failures {
+            eprintln!("inject-crashes: FAILURE {f}");
+        }
+        std::process::exit(1);
+    }
+}
+
+/// Hidden helper for the crash harness: open (or seed) a durable dynamic
+/// directory and ingest seeded batches until killed, printing `ack
+/// <batch> <start> <end>` only after the WAL fsync acknowledged the
+/// batch. The harness kill -9s this process at a random point and
+/// verifies that recovery retains every acked line.
+fn crash_victim_cmd(args: &Args) {
+    use std::io::Write as _;
+    let dir = match args.positional.get(1) {
+        Some(d) => std::path::PathBuf::from(d),
+        None => {
+            eprintln!(
+                "usage: zann crash-victim DIR [--seed S] [--rows R] [--batches B] \
+                 [--checkpoint-every C] [--dim D]"
+            );
+            std::process::exit(2);
+        }
+    };
+    let seed = args.u64("seed", 7);
+    let rows = args.usize("rows", 8);
+    let batches = args.usize("batches", 512);
+    let every = args.usize("checkpoint-every", 16);
+    if !zann::durable::manifest::is_durable_dir(&dir) {
+        // Fresh directory: seed generation 0 with a small built base so
+        // ci.sh can drive the WAL path without a separate init command.
+        let dim = args.usize("dim", 8);
+        let ds = generate(zann::datasets::Kind::DeepLike, 64, 1, dim, seed);
+        let base = DynamicIvf::build(
+            &ds.data,
+            dim,
+            &DynamicBuildParams {
+                ivf: IvfBuildParams {
+                    k: 4,
+                    id_codec: "roc".into(),
+                    threads: 2,
+                    ..Default::default()
+                },
+                policy: CompactionPolicy { flush_rows: 64, auto: false, ..Default::default() },
+            },
+        );
+        let base = match base {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("crash-victim: seeding base index: {e:?}");
+                std::process::exit(1);
+            }
+        };
+        if let Err(e) = zann::durable::store::DurableDynamic::create(&dir, base) {
+            eprintln!("crash-victim: creating {}: {e:?}", dir.display());
+            std::process::exit(1);
+        }
+    }
+    let (mut store, _) = match zann::durable::store::DurableDynamic::open(&dir) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("crash-victim: {e:?}");
+            std::process::exit(1);
+        }
+    };
+    let dim = store.index().dim();
+    for b in 0..batches {
+        let data = zann::eval::crashes::victim_rows(seed, b, rows, dim);
+        let r = match store.add(&data) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("crash-victim: add: {e:?}");
+                std::process::exit(1);
+            }
+        };
+        // Stdout is block-buffered into the harness's pipe: flush so the
+        // ack is observable strictly after the fsync, never before.
+        println!("ack {b} {} {}", r.start, r.end);
+        let _ = std::io::stdout().flush();
+        if every > 0 && (b + 1) % every == 0 {
+            if let Err(e) = store.checkpoint() {
+                eprintln!("crash-victim: checkpoint: {e:?}");
+                std::process::exit(1);
+            }
+        }
     }
 }

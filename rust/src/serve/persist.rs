@@ -17,7 +17,7 @@
 //! inner container's own per-section CRCs — corruption is caught at the
 //! outer parse before any shard decoder runs.
 
-use crate::api::persist::{file_header, push_section, Container, KIND_SHARDED};
+use crate::api::persist::{file_header, finish_container, push_section, Container, KIND_SHARDED};
 use crate::api::AnnIndex;
 use crate::serve::sharded::{Router, ShardedIndex};
 use crate::util::serialize::{ReadBuf, WriteBuf};
@@ -34,6 +34,38 @@ fn shard_tag(part: u8, s: usize) -> [u8; 4] {
     [b'X', part, (s >> 8) as u8, (s & 0xff) as u8]
 }
 
+/// Encode a router (kind byte + parameters) — shared by the SHRD header
+/// and the durable node directory's ROUTER file.
+pub(crate) fn write_router(w: &mut WriteBuf, router: &Router) {
+    match router {
+        Router::Hash { seed } => {
+            w.put_u8(0);
+            w.put_u64(*seed);
+        }
+        Router::Kmeans { centroids, .. } => {
+            w.put_u8(1);
+            w.put_f32s(centroids);
+        }
+    }
+}
+
+/// Decode a router written by [`write_router`].
+pub(crate) fn read_router(rb: &mut ReadBuf, dim: usize) -> Result<Router> {
+    match rb.get_u8()? {
+        0 => Ok(Router::Hash { seed: rb.get_u64()? }),
+        1 => {
+            let centroids = rb.get_f32s()?;
+            ensure!(
+                dim > 0 && centroids.len() % dim == 0,
+                "kmeans router holds {} floats, not a multiple of dim {dim}",
+                centroids.len()
+            );
+            Ok(Router::Kmeans { centroids, dim })
+        }
+        other => bail!("unknown router kind byte {other}"),
+    }
+}
+
 /// Serialize a sharded index: routing table, then each shard's container
 /// bytes and id map.
 pub fn to_bytes(idx: &ShardedIndex) -> Result<Vec<u8>> {
@@ -47,16 +79,7 @@ pub fn to_bytes(idx: &ShardedIndex) -> Result<Vec<u8>> {
     hdr.put_u32(LAYOUT_VERSION);
     hdr.put_u32(idx.dim() as u32);
     hdr.put_u32(idx.num_shards() as u32);
-    match idx.router() {
-        Router::Hash { seed } => {
-            hdr.put_u8(0);
-            hdr.put_u64(*seed);
-        }
-        Router::Kmeans { centroids, .. } => {
-            hdr.put_u8(1);
-            hdr.put_f32s(centroids);
-        }
-    }
+    write_router(&mut hdr, idx.router());
     push_section(&mut out, b"SHRD", &hdr.bytes);
     for s in 0..idx.num_shards() {
         let shard_bytes = idx.shard(s).to_bytes()?;
@@ -65,6 +88,7 @@ pub fn to_bytes(idx: &ShardedIndex) -> Result<Vec<u8>> {
         map.put_u32s(idx.id_map(s));
         push_section(&mut out, &shard_tag(b'M', s), &map.bytes);
     }
+    finish_container(&mut out);
     Ok(out)
 }
 
@@ -91,14 +115,7 @@ pub fn from_container(c: &Container) -> Result<ShardedIndex> {
         (1..=u16::MAX as usize + 1).contains(&nshards),
         "sharded header declares {nshards} shards"
     );
-    let router = match rb.get_u8()? {
-        0 => Router::Hash { seed: rb.get_u64()? },
-        1 => {
-            let centroids = rb.get_f32s()?;
-            Router::Kmeans { centroids, dim }
-        }
-        other => bail!("unknown router kind byte {other} in sharded header"),
-    };
+    let router = read_router(&mut rb, dim)?;
     ensure!(rb.remaining() == 0, "trailing bytes after the sharded header");
 
     let mut shards: Vec<Arc<dyn AnnIndex>> = Vec::with_capacity(nshards);
@@ -229,6 +246,7 @@ mod tests {
         let mut map = WriteBuf::new();
         map.put_u32s(&(0..AnnIndex::len(&idx) as u32).collect::<Vec<u32>>());
         push_section(&mut out, &shard_tag(b'M', 0), &map.bytes);
+        finish_container(&mut out);
         let err = crate::api::persist::open_sharded_bytes(out).unwrap_err();
         assert!(format!("{err:#}").contains("nesting"), "{err:#}");
     }

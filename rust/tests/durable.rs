@@ -1,0 +1,247 @@
+//! Durability acceptance: the WAL + atomic-commit contract end to end.
+//!
+//! - Torn-tail truncation at **every byte offset** of the WAL's last
+//!   record recovers exactly the acknowledged prefix — no more, no less —
+//!   and discloses the torn bytes.
+//! - Replay-then-search is bit-identical to the uncrashed store across
+//!   all per-list id codecs (the same invariant `inject-crashes` gates at
+//!   larger scale in CI).
+//! - An injected crash at every point of the atomic container commit
+//!   leaves the destination opening as a complete old or new index,
+//!   never a torn one.
+//! - Checkpoints roll the manifest generation, reset the WAL, and drop
+//!   the superseded generation's files.
+
+use std::path::{Path, PathBuf};
+
+use zann::api::{persist, AnnIndex, AnnScratch, QueryParams};
+use zann::datasets::{generate, Kind};
+use zann::durable::store::{apply, DurableDynamic};
+use zann::durable::{crash, wal};
+use zann::dynamic::{CompactionPolicy, DynamicBuildParams, DynamicIvf};
+use zann::index::{IvfBuildParams, IvfIndex};
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("zann-durable-test-{}-{name}", std::process::id()))
+}
+
+fn sig(idx: &dyn AnnIndex, queries: &[f32], dim: usize) -> Vec<(u32, u32)> {
+    let p = QueryParams { k: 5, nprobe: 4, ef: 16 };
+    let mut scratch = AnnScratch::default();
+    let mut out = Vec::new();
+    let mut sig = Vec::new();
+    for q in queries.chunks_exact(dim) {
+        idx.search_into(q, &p, &mut scratch, &mut out);
+        sig.extend(out.iter().map(|&(d, id)| (d.to_bits(), id)));
+    }
+    sig
+}
+
+fn build_dynamic(data: &[f32], dim: usize, codec: &str) -> DynamicIvf {
+    DynamicIvf::build(
+        data,
+        dim,
+        &DynamicBuildParams {
+            ivf: IvfBuildParams { k: 4, id_codec: codec.into(), threads: 2, ..Default::default() },
+            policy: CompactionPolicy { flush_rows: 32, auto: false, ..Default::default() },
+        },
+    )
+    .unwrap()
+}
+
+fn copy_dir(src: &Path, dst: &Path) {
+    let _ = std::fs::remove_dir_all(dst);
+    std::fs::create_dir_all(dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap() {
+        let p = entry.unwrap().path();
+        if p.is_file() {
+            std::fs::copy(&p, dst.join(p.file_name().unwrap())).unwrap();
+        }
+    }
+}
+
+#[test]
+fn torn_tail_truncation_recovers_exactly_the_acked_prefix() {
+    let ds = generate(Kind::DeepLike, 140, 6, 8, 11);
+    let dim = ds.dim;
+    let base = build_dynamic(&ds.data[..120 * dim], dim, "roc");
+    let root = tmp("torn-tail");
+    let _ = std::fs::remove_dir_all(&root);
+    let template = root.join("template");
+    let mut store = DurableDynamic::create(&template, base.clone()).unwrap();
+    store.add(&ds.data[120 * dim..130 * dim]).unwrap();
+    assert!(store.delete(7).unwrap());
+    store.add(&ds.data[130 * dim..]).unwrap();
+    drop(store);
+
+    let wal_path = template.join("wal-0.log");
+    let wal_bytes = std::fs::read(&wal_path).unwrap();
+    let replay = wal::replay(&wal_path).unwrap();
+    assert_eq!(replay.records.len(), 3);
+    assert_eq!(replay.torn_bytes, 0);
+
+    // Reference signatures with 0..=3 records applied.
+    let mut ref_sigs = Vec::new();
+    let mut reference = base;
+    ref_sigs.push(sig(&reference, &ds.queries, dim));
+    for rec in &replay.records {
+        apply(&mut reference, rec).unwrap();
+        ref_sigs.push(sig(&reference, &ds.queries, dim));
+    }
+
+    // Frame boundaries of the intact log.
+    let mut boundaries = vec![wal::WAL_HEADER as usize];
+    let mut pos = wal::WAL_HEADER as usize;
+    while pos < wal_bytes.len() {
+        let len = u32::from_le_bytes(wal_bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 8 + len;
+        boundaries.push(pos);
+    }
+    assert_eq!(pos, wal_bytes.len());
+    assert_eq!(boundaries.len(), 4);
+
+    // Truncate at every byte offset of the last record (from its first
+    // byte through the intact file). Each cut must recover exactly the
+    // records whose frames survived whole.
+    let work = root.join("work");
+    for cut in boundaries[2]..=wal_bytes.len() {
+        copy_dir(&template, &work);
+        std::fs::write(work.join("wal-0.log"), &wal_bytes[..cut]).unwrap();
+        let (store, stats) = DurableDynamic::open(&work).unwrap();
+        let acked = boundaries.iter().filter(|&&b| b <= cut).count() - 1;
+        assert_eq!(stats.replayed_records, acked, "cut at byte {cut}");
+        assert_eq!(stats.torn_bytes as usize, cut - boundaries[acked], "cut at byte {cut}");
+        assert_eq!(
+            sig(store.index(), &ds.queries, dim),
+            ref_sigs[acked],
+            "recovered state diverged at cut {cut}"
+        );
+        drop(store);
+    }
+
+    // After a torn-tail recovery the log accepts appends again.
+    copy_dir(&template, &work);
+    std::fs::write(work.join("wal-0.log"), &wal_bytes[..wal_bytes.len() - 1]).unwrap();
+    let (mut store, stats) = DurableDynamic::open(&work).unwrap();
+    assert_eq!(stats.replayed_records, 2);
+    assert!(stats.torn_bytes > 0);
+    store.add(&ds.data[..dim]).unwrap();
+    drop(store);
+    let (_, stats) = DurableDynamic::open(&work).unwrap();
+    assert_eq!(stats.replayed_records, 3);
+    assert_eq!(stats.torn_bytes, 0);
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn replay_then_search_is_bit_identical_across_all_codecs() {
+    let ds = generate(Kind::DeepLike, 160, 6, 8, 17);
+    let dim = ds.dim;
+    for codec in zann::codecs::PER_LIST_CODECS {
+        let root = tmp(&format!("codec-{codec}"));
+        let _ = std::fs::remove_dir_all(&root);
+        let base = build_dynamic(&ds.data[..120 * dim], dim, codec);
+        let mut store = DurableDynamic::create(&root, base).unwrap();
+        store.add(&ds.data[120 * dim..150 * dim]).unwrap();
+        for id in [3u32, 60, 125] {
+            assert!(store.delete(id).unwrap(), "{codec}: delete {id}");
+        }
+        store.add(&ds.data[150 * dim..]).unwrap();
+        let live_sig = sig(store.index(), &ds.queries, dim);
+        drop(store);
+
+        let (store, stats) = DurableDynamic::open(&root).unwrap();
+        assert_eq!(stats.replayed_records, 5, "{codec}");
+        assert_eq!(stats.torn_bytes, 0, "{codec}");
+        assert!(stats.replayed_rows == 40 && stats.replayed_deletes == 3, "{codec}");
+        assert_eq!(
+            sig(store.index(), &ds.queries, dim),
+            live_sig,
+            "replay diverged from the uncrashed store for codec {codec}"
+        );
+        drop(store);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}
+
+#[test]
+fn injected_commit_crashes_never_tear_a_saved_container() {
+    let ds = generate(Kind::DeepLike, 200, 4, 8, 23);
+    let dim = ds.dim;
+    let old = IvfIndex::build(
+        &ds.data[..150 * dim],
+        dim,
+        &IvfBuildParams { k: 4, id_codec: "roc".into(), threads: 2, ..Default::default() },
+    );
+    let new = IvfIndex::build(
+        &ds.data,
+        dim,
+        &IvfBuildParams { k: 6, id_codec: "roc".into(), threads: 2, ..Default::default() },
+    );
+    let root = tmp("atomic-save");
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let path = root.join("index.zann");
+    persist::save(&old, &path).unwrap();
+    let old_n = persist::open(&path).unwrap().stats().n;
+
+    let mut fired_any = false;
+    for nth in 0..64u64 {
+        crash::arm(nth);
+        let res = persist::save(&new, &path);
+        match crash::disarm() {
+            None => {
+                res.unwrap();
+                break;
+            }
+            Some(site) => {
+                fired_any = true;
+                assert!(res.is_err(), "save returned Ok though a crash fired at {site}");
+                let got = persist::open(&path).unwrap_or_else(|e| {
+                    panic!("container torn after injected crash at {site}: {e:?}")
+                });
+                let n = got.stats().n;
+                assert!(
+                    n == old_n || n == new.stats().n,
+                    "crash at {site} left a mixed container (n={n})"
+                );
+            }
+        }
+    }
+    assert!(fired_any, "no crash point was ever reached by persist::save");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn checkpoint_rolls_the_generation_and_resets_the_wal() {
+    let ds = generate(Kind::DeepLike, 140, 4, 8, 29);
+    let dim = ds.dim;
+    let root = tmp("ckpt");
+    let _ = std::fs::remove_dir_all(&root);
+    let mut store =
+        DurableDynamic::create(&root, build_dynamic(&ds.data[..120 * dim], dim, "roc")).unwrap();
+    store.add(&ds.data[120 * dim..]).unwrap();
+    assert!(store.delete(5).unwrap());
+    assert!(store.wal_bytes() > wal::WAL_HEADER);
+    let live_sig = sig(store.index(), &ds.queries, dim);
+
+    store.checkpoint().unwrap();
+    assert_eq!(store.generation(), 1);
+    assert_eq!(store.wal_bytes(), wal::WAL_HEADER);
+    assert!(root.join("base-1.zann").exists());
+    assert!(root.join("wal-1.log").exists());
+    assert!(!root.join("base-0.zann").exists(), "old generation not cleaned up");
+    assert!(!root.join("wal-0.log").exists(), "old wal not cleaned up");
+    // Compaction + generation roll never changes answers.
+    assert_eq!(sig(store.index(), &ds.queries, dim), live_sig);
+    drop(store);
+
+    let (store, stats) = DurableDynamic::open(&root).unwrap();
+    assert_eq!(stats.generation, 1);
+    assert_eq!(stats.replayed_records, 0);
+    assert_eq!(stats.torn_bytes, 0);
+    assert_eq!(sig(store.index(), &ds.queries, dim), live_sig);
+    drop(store);
+    let _ = std::fs::remove_dir_all(&root);
+}
